@@ -1,0 +1,64 @@
+//! Figure 15 reproduction as a runnable example: scale all four CNNs from
+//! 1 to 16 FPGAs and print latency / speedup / energy-efficiency curves.
+//!
+//! Run: `cargo run --release --example multi_fpga_scaling`
+
+use superlip::analytic::{check_feasible, Design, XferMode};
+use superlip::dse;
+use superlip::energy::{self, PowerModel};
+use superlip::model::zoo;
+use superlip::platform::FpgaSpec;
+use superlip::report::{self, Table};
+use superlip::sim::{simulate_network, SimConfig};
+
+fn main() {
+    let fpga = FpgaSpec::zcu102();
+    let cfg = SimConfig::zcu102(&fpga);
+    let sizes = [1u64, 2, 3, 4, 6, 8, 9, 12, 16];
+
+    // Figure 15's tilings: ⟨Tm,Tn⟩ per network (fx16), with the
+    // cross-layer row tiles ⟨7,14⟩ (Table 1).
+    let tilings = [
+        ("AlexNet", Design::fixed16(128, 10, 7, 14)),
+        ("SqueezeNet", Design::fixed16(64, 16, 7, 14)),
+        ("VGG16", Design::fixed16(64, 25, 7, 14)),
+        ("YOLO", Design::fixed16(64, 25, 7, 14)),
+    ];
+
+    for (name, d) in tilings {
+        let net = zoo::by_name(name).unwrap();
+        let k_max = net.conv_layers().map(|l| l.k).max().unwrap();
+        let usage = check_feasible(&d, &fpga, k_max).expect("figure-15 tiling feasible");
+        let total_ops: u64 = net.conv_layers().map(|l| l.ops()).sum();
+
+        let mut t = Table::new(&["FPGAs", "Partition", "ms", "Speedup", "GOPS", "GOPS/W", "EE vs 1"]);
+        let mut single_cycles = 0u64;
+        let mut single_ee = 0.0f64;
+        for &n in &sizes {
+            let (f, _) = dse::best_factors(&net, &d, &fpga, n, XferMode::Xfer);
+            let sim = simulate_network(&net, &d, &f, &fpga, &cfg, XferMode::Xfer);
+            if n == 1 {
+                single_cycles = sim.cycles;
+            }
+            let gops = energy::gops(total_ops, sim.cycles, d.precision);
+            let watts = PowerModel::new(n).watts(&d, &usage);
+            let ee = gops / watts;
+            if n == 1 {
+                single_ee = ee;
+            }
+            t.row(&[
+                n.to_string(),
+                f.to_string(),
+                report::ms(d.precision.cycles_to_ms(sim.cycles)),
+                report::speedup(single_cycles as f64 / sim.cycles as f64),
+                report::gops(gops),
+                format!("{ee:.2}"),
+                report::pct(ee / single_ee - 1.0),
+            ]);
+        }
+        println!("== {name} (fx16, design {d}) ==");
+        println!("{}", t.render());
+    }
+    println!("Paper reference points (Figure 15): AlexNet 5.63 ms → 0.31 ms (17.95x @16);");
+    println!("SqueezeNet 6.69 → 0.45 ms (14.75x); YOLO 126.6 → 4.53 ms (27.93x @16).");
+}

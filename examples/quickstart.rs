@@ -1,0 +1,75 @@
+//! Quickstart: model one CNN layer, search its design space, detect the
+//! bottleneck, and plan a 2-FPGA XFER deployment.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use superlip::analytic::{detect, layer_latency, Design};
+use superlip::coordinator::SuperLip;
+use superlip::dse;
+use superlip::model::zoo;
+use superlip::platform::{FpgaSpec, Precision};
+
+fn main() -> superlip::Result<()> {
+    // 1. A workload: AlexNet conv3 = ⟨B,M,N,R,C,K⟩ = ⟨1,384,256,13,13,3⟩.
+    let net = zoo::alexnet();
+    let layer = &net.layers[2];
+    println!(
+        "layer {}: {} MACs, {} weights",
+        layer.name,
+        layer.macs(),
+        layer.weight_elems()
+    );
+
+    // 2. Evaluate a hand-written design with the paper's model (eqs 8–14).
+    let d = Design::fixed16(64, 24, 13, 13);
+    let ll = layer_latency(layer, &d);
+    println!(
+        "design {d}: Lat1={} Lat2={} total={} cycles ({:.3} ms) — bottleneck: {}",
+        ll.lat1,
+        ll.lat2,
+        ll.lat,
+        d.precision.cycles_to_ms(ll.lat),
+        detect(&ll).label()
+    );
+
+    // 3. Let the DSE find the per-layer optimum on a ZCU102.
+    let fpga = FpgaSpec::zcu102();
+    let (best, best_ll, stats) = dse::best_layer_design(layer, &fpga, Precision::Fixed16);
+    println!(
+        "DSE optimum {best}: {} cycles ({} designs evaluated, {} pruned)",
+        best_ll.lat, stats.evaluated, stats.infeasible
+    );
+
+    // 4. Plan the full network on 1 vs 2 FPGAs (XFER).
+    let slip = SuperLip::default();
+    let p1 = slip.plan(&net, Precision::Fixed16, 1)?;
+    let p2 = slip.plan(&net, Precision::Fixed16, 2)?;
+    println!("\n--- 1 FPGA (best single design) ---\n{}", p1.summary());
+    println!("--- 2 FPGAs (XFER, co-optimized) ---\n{}", p2.summary());
+
+    // The paper's Figure 15 protocol measures speedup with the SAME design
+    // at both cluster sizes; against independently re-optimized designs the
+    // bar is higher (a well-tuned single FPGA is compute-bound).
+    let p1_same = slip.plan_with_design(&net, p2.design, 1)?;
+    let paper_protocol = p1_same.sim_cycles as f64 / p2.sim_cycles as f64;
+    let strict = p1.sim_cycles as f64 / p2.sim_cycles as f64;
+    println!(
+        "\nspeedup with 2 FPGAs, same design (paper's Fig.15 protocol): {paper_protocol:.2}x ({})",
+        if paper_protocol > 2.0 { "SUPER-linear" } else { "sub-linear" }
+    );
+    println!(
+        "speedup vs independently re-optimized single FPGA:           {strict:.2}x"
+    );
+
+    // With the paper's published Figure 15(a) tiling (⟨128,10⟩, weight-
+    // bound on one FPGA) the same-design speedup is super-linear — XFER
+    // relieves the weight stream while the trips halve.
+    let fig15 = Design::fixed16(128, 10, 7, 14);
+    let f1 = slip.plan_with_design(&net, fig15, 1)?;
+    let f2 = slip.plan_with_design(&net, fig15, 2)?;
+    println!(
+        "speedup with the paper's Fig.15 tiling <128,10>:              {:.2}x (paper: 2.54x)",
+        f1.sim_cycles as f64 / f2.sim_cycles as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! END-TO-END DRIVER: real-time DNN inference through the full three-layer
+//! stack — the deliverable that proves all layers compose.
+//!
+//!   L1  Pallas tiled conv kernel  ┐ compiled once by `make artifacts`
+//!   L2  JAX TinyCNN forward       ┘ into artifacts/*.hlo.txt
+//!   L3  this binary: PJRT-loads the artifacts, routes a Poisson stream of
+//!       image requests through the deadline-aware batcher to a worker
+//!       pool, and reports latency percentiles + throughput. It also
+//!       plans the same model's AlexNet-class big sibling on the simulated
+//!       2-FPGA ZCU102 cluster to show the deployment path.
+//!
+//! Requires `make artifacts` first (skips gracefully if missing).
+//!
+//! Run: `cargo run --release --example realtime_serving`
+
+use std::time::{Duration, Instant};
+use superlip::coordinator::SuperLip;
+use superlip::model::zoo;
+use superlip::platform::Precision;
+use superlip::runtime::{ModelExecutor, PjrtRuntime};
+use superlip::serving::{BackendFactory, InferBackend, Server, ServerConfig};
+use superlip::util::SplitMix64;
+
+const IMAGE_ELEMS: usize = 3 * 32 * 32;
+
+fn main() -> superlip::Result<()> {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        return Ok(());
+    }
+
+    // --- Functional check: PJRT output matches across batch sizes.
+    let rt = PjrtRuntime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let exec = ModelExecutor::load(&rt, &dir)?;
+    let mut rng = SplitMix64::new(7);
+    let img: Vec<f32> = (0..IMAGE_ELEMS).map(|_| rng.signed_unit()).collect();
+    let single = exec.infer(&img, 1)?;
+    let mut two = img.clone();
+    two.extend_from_slice(&img);
+    let batched = exec.infer(&two, 2)?;
+    let classes = exec.classes;
+    let dev: f32 = (0..classes)
+        .map(|c| (single[c] - batched[c]).abs())
+        .fold(0.0, f32::max);
+    println!(
+        "batch-consistency check: max |logit(b1) - logit(b2)| = {dev:.2e} (classes: {classes})"
+    );
+    assert!(dev < 1e-3, "batching must not change results");
+    drop(exec);
+    drop(rt);
+
+    // --- Serve a Poisson request stream through the batcher + worker pool.
+    let replicas = 2usize;
+    let factories: Vec<BackendFactory> = (0..replicas)
+        .map(|_| {
+            let dir = dir.clone();
+            Box::new(move || {
+                let rt = PjrtRuntime::cpu()?;
+                Ok(Box::new(ModelExecutor::load(&rt, &dir)?) as Box<dyn InferBackend>)
+            }) as BackendFactory
+        })
+        .collect();
+    let mut cfg = ServerConfig::default();
+    cfg.batcher.max_batch = 4;
+    cfg.batcher.window = Duration::from_millis(2);
+    cfg.default_deadline = Duration::from_millis(50);
+    let server = Server::start(factories, cfg);
+
+    // Warmup (PJRT compiles lazily in each worker), then measure.
+    server.submit(vec![0.0; IMAGE_ELEMS])?.recv().unwrap();
+    server.metrics().reset();
+
+    let n_requests = 400usize;
+    let rate_rps = 400.0;
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(n_requests);
+    for _ in 0..n_requests {
+        let img: Vec<f32> = (0..IMAGE_ELEMS).map(|_| rng.signed_unit()).collect();
+        rxs.push(server.submit(img)?);
+        std::thread::sleep(Duration::from_secs_f64(rng.exp(1.0 / rate_rps)));
+    }
+    for rx in rxs {
+        rx.recv().expect("response");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = server.shutdown();
+    let s = m.latency_summary().unwrap();
+    println!("\n=== end-to-end serving (TinyCNN over PJRT, {replicas} replicas) ===");
+    println!("  requests:        {}", m.completed());
+    println!("  offered load:    {rate_rps:.0} req/s (Poisson)");
+    println!("  throughput:      {:.1} req/s", m.completed() as f64 / wall);
+    println!("  latency p50/p99: {:.2} / {:.2} ms", s.p50(), s.p99());
+    println!("  mean batch:      {:.2}", m.mean_batch());
+    println!("  deadline misses: {}/{}", m.deadline_misses(), m.completed());
+
+    // --- Deployment path: the production-size sibling on the simulated
+    //     ZCU102 cluster (what the paper's testbed would run).
+    let slip = SuperLip::default();
+    let plan = slip.plan(&zoo::alexnet(), Precision::Fixed16, 2)?;
+    println!("\n=== simulated 2-FPGA ZCU102 deployment of AlexNet (fx16) ===");
+    println!("{}", plan.summary());
+    Ok(())
+}

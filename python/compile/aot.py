@@ -1,0 +1,101 @@
+"""AOT compile path: lower the L2 model (with L1 Pallas kernels inlined) to
+HLO **text** artifacts the rust runtime loads via PJRT.
+
+HLO text — NOT ``lowered.compile()``/``.serialize()`` — is the interchange
+format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids, which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifacts (written to ``--outdir``, default ``../artifacts``):
+  model_b1.hlo.txt   TinyCNN forward, batch 1:  f32[1,3,32,32]  -> f32[1,10]
+  model_b2.hlo.txt   TinyCNN forward, batch 2:  f32[2,3,32,32]  -> f32[2,10]
+  model_b4.hlo.txt   TinyCNN forward, batch 4:  f32[4,3,32,32]  -> f32[4,10]
+  conv_tile.hlo.txt  standalone conv1 layer:    f32[3,32,32]    -> f32[16,14,14]
+  manifest.txt       one line per artifact: name, input shape, output shape
+
+Weights are baked as constants (deterministic seed 0), so python never
+runs at request time. Run via ``make artifacts`` (no-op when up to date).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    ``print_large_constants=True`` is essential: the default printer elides
+    big literals as ``constant({...})``, which the text parser then reads
+    back as ZEROS — silently wiping the baked model weights.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def build_artifacts():
+    """Yield (name, lowered) for every artifact."""
+    params = model.init_params(seed=0)
+
+    for b in (1, 2, 4):
+        spec = jax.ShapeDtypeStruct((b,) + model.IN_SHAPE, jnp.float32)
+        fn = lambda xs: (model.forward_batch(params, xs),)
+        yield (
+            f"model_b{b}",
+            jax.jit(fn).lower(spec),
+            (b,) + model.IN_SHAPE,
+            (b, model.NUM_CLASSES),
+        )
+
+    spec = jax.ShapeDtypeStruct(model.IN_SHAPE, jnp.float32)
+    fn1 = lambda x: (model.conv_layer_single(params, x),)
+    yield ("conv_tile", jax.jit(fn1).lower(spec), model.IN_SHAPE, (16, 14, 14))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default=os.path.join("..", "artifacts"))
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    manifest = []
+    for name, lowered, in_shape, out_shape in build_artifacts():
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        shape_s = "x".join(map(str, in_shape))
+        out_s = "x".join(map(str, out_shape))
+        manifest.append(f"{name} in={shape_s} out={out_s}")
+        print(f"wrote {path} ({len(text)} chars)  {shape_s} -> {out_s}")
+
+    # Golden cross-language check: a deterministic image and its oracle
+    # logits, so the rust runtime can verify end-to-end numerics.
+    import numpy as np
+
+    params = model.init_params(seed=0)
+    n_elems = int(np.prod(model.IN_SHAPE))
+    x = (np.arange(n_elems, dtype=np.float32) % 17 - 8.0) / 8.0
+    x = jnp.asarray(x.reshape((1,) + model.IN_SHAPE))
+    golden = np.asarray(model.forward_batch(params, x, use_pallas=False))[0]
+    with open(os.path.join(args.outdir, "golden.txt"), "w") as f:
+        f.write("# input: ((arange(3*32*32) % 17) - 8) / 8, reshaped 1x3x32x32\n")
+        f.write(" ".join(f"{v:.8e}" for v in golden) + "\n")
+    print(f"wrote {os.path.join(args.outdir, 'golden.txt')}")
+
+    with open(os.path.join(args.outdir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {os.path.join(args.outdir, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

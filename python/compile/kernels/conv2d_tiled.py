@@ -1,0 +1,133 @@
+"""L1: the paper's tiled convolution engine as a Pallas kernel.
+
+The accelerator of §3 ② is a ``Tm×Tn`` MAC array fed from double-buffered
+BRAM tiles, iterated by the loop nest of Figure 5(a): OFM channels (D),
+IFM channels (C, the accumulation loop), rows/cols (E). The Pallas mapping
+(DESIGN.md §Hardware-Adaptation):
+
+* loop D → grid axis 0 (``⌈M/Tm⌉``), loop C → grid axis 1 (``⌈N/Tn⌉``,
+  the innermost / reduction axis, exactly like Figure 5's inner loop);
+* BRAM tile buffers → VMEM blocks via BlockSpec: the weight block is
+  ``(Tm, Tn, K, K)`` (the paper's ``W[Tm][Tn][K][K]``), the OFM block is
+  ``(Tm, R, C)`` — i.e. ``Tr = R, Tc = C``: the artifact models are small
+  enough that a full row-plane fits VMEM, collapsing loop E (the rust-side
+  analytic model and simulator keep the general Tr/Tc);
+* the ``Tm×Tn`` DSP array → the MXU: each (kh, kw) tap contracts the Tn
+  axis with a ``(Tm, Tn) × (Tn, R·C)`` matmul — MXU-systolic-shaped work
+  instead of the paper's DSP broadcast tree;
+* the double buffer → the Pallas grid pipeline (automatic on real TPUs;
+  under ``interpret=True`` we validate structure + numerics only).
+
+The kernel MUST be lowered with ``interpret=True`` here: real-TPU lowering
+emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, *, k: int, stride: int, r: int, c: int):
+    """One grid step: accumulate a (Tm, Tn) tile-pair into the OFM block.
+
+    x_ref: (Tn, H, W) IFM tile      — the paper's I[Tn][Tr][Tc] buffer
+    w_ref: (Tm, Tn, K, K) weights   — the paper's W[Tm][Tn][K][K] buffer
+    o_ref: (Tm, R, C) OFM tile      — the paper's O[Tm][Tr][Tc] buffer
+    """
+    # Loop C is the reduction axis: zero the accumulator on its first trip.
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    w = w_ref[...]
+    tm = w.shape[0]
+    acc = jnp.zeros((tm, r, c), dtype=jnp.float32)
+    # K×K tap loop (the engine's tComp = K·K·Tr·Tc schedule, eq 11): each
+    # tap is a Tn-contraction — an MXU matmul of (Tm,Tn)·(Tn,R·C).
+    for kh in range(k):
+        for kw in range(k):
+            # Static strided slice: (Tn, R, C) patch for this tap.
+            patch = jax.lax.slice(
+                x,
+                (0, kh, kw),
+                (x.shape[0], kh + (r - 1) * stride + 1, kw + (c - 1) * stride + 1),
+                (1, stride, stride),
+            )
+            tap = w[:, :, kh, kw]  # (Tm, Tn)
+            acc = acc + jax.lax.dot_general(
+                tap,
+                patch.reshape(patch.shape[0], r * c),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ).reshape(tm, r, c)
+    o_ref[...] += acc.astype(o_ref.dtype)
+
+
+def conv2d_tiled(x, w, *, tm: int, tn: int, stride: int = 1, interpret: bool = True):
+    """Tiled 2D convolution via Pallas (VALID padding, NCHW-sans-batch).
+
+    Args:
+      x: ``[N, H, W]`` IFM.
+      w: ``[M, N, K, K]`` weights.
+      tm, tn: the paper's OFM/IFM channel tiling parameters.
+      stride: spatial stride.
+      interpret: run the kernel in interpret mode (required on CPU).
+
+    Returns:
+      ``[M, R, C]`` OFM, same dtype as ``x``.
+    """
+    n_in, h, w_in = x.shape
+    m, n_w, k, k2 = w.shape
+    assert k == k2, "square kernels only"
+    assert n_w == n_in, f"channel mismatch: {n_w} != {n_in}"
+    assert 1 <= tm and 1 <= tn, "tiles must be positive"
+    r = (h - k) // stride + 1
+    c = (w_in - k) // stride + 1
+    assert r > 0 and c > 0, "kernel larger than input"
+
+    # Pad channels up to tile multiples so every block is full (the HLS
+    # engine pads tiles the same way — see sim::engine).
+    m_pad = math.ceil(m / tm) * tm
+    n_pad = math.ceil(n_in / tn) * tn
+    if n_pad != n_in:
+        x = jnp.pad(x, ((0, n_pad - n_in), (0, 0), (0, 0)))
+        w = jnp.pad(w, ((0, 0), (0, n_pad - n_in), (0, 0), (0, 0)))
+    if m_pad != m:
+        w = jnp.pad(w, ((0, m_pad - m), (0, 0), (0, 0), (0, 0)))
+
+    grid = (m_pad // tm, n_pad // tn)  # (loop D, loop C)
+    out = pl.pallas_call(
+        functools.partial(_conv_kernel, k=k, stride=stride, r=r, c=c),
+        grid=grid,
+        in_specs=[
+            # IFM tile: Tn channels, full plane (Tr=R, Tc=C).
+            pl.BlockSpec((tn, h, w_in), lambda i, j: (j, 0, 0)),
+            # Weight tile: (Tm, Tn, K, K).
+            pl.BlockSpec((tm, tn, k, k), lambda i, j: (i, j, 0, 0)),
+        ],
+        # OFM tile revisited across the reduction axis j.
+        out_specs=pl.BlockSpec((tm, r, c), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, r, c), x.dtype),
+        interpret=interpret,
+    )(x, w)
+    return out[:m]
+
+
+def vmem_footprint_bytes(tm: int, tn: int, h: int, w: int, k: int, r: int, c: int,
+                         dtype_bytes: int = 4) -> int:
+    """Estimated VMEM bytes per grid step (the L1 §Perf metric): IFM block +
+    weight block + OFM accumulator (×2 for the pipeline's double buffer)."""
+    ifm = tn * h * w
+    wei = tm * tn * k * k
+    ofm = tm * r * c
+    return 2 * (ifm + wei + ofm) * dtype_bytes
+
+
+def mxu_utilization_estimate(tm: int, tn: int) -> float:
+    """Fraction of a 128×128 MXU a (Tm, Tn) tap-matmul occupies (the L1
+    §Perf structural target: ≥ 0.5 wants Tm·Tn ≥ 8192)."""
+    return min(tm, 128) * min(tn, 128) / (128.0 * 128.0)

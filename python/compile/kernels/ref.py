@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for the Pallas kernels (the L1 correctness signal).
+
+Every Pallas kernel in this package is checked against these references by
+``python/tests/test_kernel.py`` (hypothesis sweeps over shapes/dtypes).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_ref(x, w, stride=1):
+    """Plain 2D convolution (no padding / 'VALID'), NCHW-without-batch.
+
+    Args:
+      x: ``[N, H, W]`` input feature map (IFM channels first).
+      w: ``[M, N, K, K]`` weights.
+      stride: spatial stride.
+
+    Returns:
+      ``[M, R, C]`` output feature map with ``R = (H-K)//stride + 1``.
+    """
+    out = jax.lax.conv_general_dilated(
+        x[None],  # add batch dim
+        w,
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        preferred_element_type=jnp.float32,
+    )
+    return out[0].astype(x.dtype)
+
+
+def relu_ref(x):
+    """ReLU."""
+    return jnp.maximum(x, 0)
+
+
+def maxpool2_ref(x):
+    """2x2 max pooling with stride 2 over the trailing two dims of [N,H,W].
+
+    Odd trailing rows/cols are dropped (floor semantics), matching the
+    accelerator's streaming pooler.
+    """
+    n, h, w = x.shape
+    h2, w2 = h // 2, w // 2
+    x = x[:, : h2 * 2, : w2 * 2]
+    x = x.reshape(n, h2, 2, w2, 2)
+    return x.max(axis=(2, 4))
+
+
+def global_avgpool_ref(x):
+    """Global average pooling [N, H, W] -> [N]."""
+    return x.mean(axis=(1, 2))

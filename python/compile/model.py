@@ -1,0 +1,89 @@
+"""L2: the CNN forward pass in JAX, calling the L1 Pallas kernel.
+
+The AOT artifact model is **TinyCNN** — an AlexNet-shaped conv stack scaled
+to run fast under interpret-mode Pallas on CPU (the full-size networks are
+modeled and simulated on the rust side; the artifact proves the three-layer
+stack composes and carries real numerics end-to-end). Weights are generated
+deterministically (seed 0) at AOT time and baked into the HLO as constants,
+so the rust request path feeds images only.
+
+Layer stack (32×32×3 input, 10 classes):
+  conv1: 16×3×5×5 /s2 → ReLU          (Pallas, tm=8,  tn=3)
+  pool /2
+  conv2: 32×16×3×3    → ReLU          (Pallas, tm=16, tn=8)
+  pool /2
+  conv3: 10×32×1×1                    (Pallas, tm=10, tn=16)
+  global average pool → logits [10]
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.conv2d_tiled import conv2d_tiled
+from .kernels import ref
+
+#: Image input shape (channels, height, width).
+IN_SHAPE = (3, 32, 32)
+#: Number of classes.
+NUM_CLASSES = 10
+
+#: (name, out_ch, in_ch, k, stride, tm, tn) per conv layer.
+LAYERS = (
+    ("conv1", 16, 3, 5, 2, 8, 3),
+    ("conv2", 32, 16, 3, 1, 16, 8),
+    ("conv3", 10, 32, 1, 1, 10, 16),
+)
+
+
+def init_params(seed: int = 0):
+    """He-style deterministic init for the three conv layers."""
+    params = {}
+    key = jax.random.PRNGKey(seed)
+    for name, m, n, k, _s, _tm, _tn in LAYERS:
+        key, sub = jax.random.split(key)
+        fan_in = n * k * k
+        params[name] = jax.random.normal(sub, (m, n, k, k), jnp.float32) * (
+            2.0 / fan_in
+        ) ** 0.5
+    return params
+
+
+def forward_single(params, x, *, use_pallas: bool = True, interpret: bool = True):
+    """Forward one image ``[3, 32, 32] -> [10]`` logits.
+
+    ``use_pallas=False`` swaps every conv for the pure-jnp oracle — the L2
+    correctness reference.
+    """
+    conv = (
+        (lambda x, w, s, tm, tn: conv2d_tiled(x, w, tm=tm, tn=tn, stride=s,
+                                              interpret=interpret))
+        if use_pallas
+        else (lambda x, w, s, tm, tn: ref.conv2d_ref(x, w, stride=s))
+    )
+    (n1, _, _, _, s1, tm1, tn1) = LAYERS[0]
+    h = conv(x, params["conv1"], s1, tm1, tn1)
+    h = ref.relu_ref(h)
+    h = ref.maxpool2_ref(h)
+    (_, _, _, _, s2, tm2, tn2) = LAYERS[1]
+    h = conv(h, params["conv2"], s2, tm2, tn2)
+    h = ref.relu_ref(h)
+    h = ref.maxpool2_ref(h)
+    (_, _, _, _, s3, tm3, tn3) = LAYERS[2]
+    h = conv(h, params["conv3"], s3, tm3, tn3)
+    return ref.global_avgpool_ref(h)
+
+
+def forward_batch(params, xs, **kw):
+    """Forward ``[B, 3, 32, 32] -> [B, 10]`` (the serving entry point).
+
+    The batch loop is unrolled at trace time (B is static) — the FPGA
+    engine's loop F of Figure 5(a).
+    """
+    return jnp.stack([forward_single(params, xs[i], **kw) for i in range(xs.shape[0])])
+
+
+def conv_layer_single(params, x, *, interpret: bool = True):
+    """Standalone conv1 (the per-layer artifact): [3,32,32] -> [16,14,14]."""
+    (_, _, _, _, s1, tm1, tn1) = LAYERS[0]
+    return conv2d_tiled(x, params["conv1"], tm=tm1, tn=tn1, stride=s1,
+                        interpret=interpret)

@@ -1,0 +1,110 @@
+"""L1 correctness: Pallas tiled conv kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, tilings, strides and dtypes; every case asserts
+allclose against ``ref.conv2d_ref`` — the core correctness signal of the
+compile path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.conv2d_tiled import (
+    conv2d_tiled,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels import ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def _check(n, h, w, m, k, stride, tm, tn, dtype=jnp.float32, tol=1e-4):
+    x = _rand(0, (n, h, w), dtype)
+    wt = _rand(1, (m, n, k, k), dtype)
+    got = conv2d_tiled(x, wt, tm=tm, tn=tn, stride=stride)
+    want = ref.conv2d_ref(x, wt, stride=stride)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+# ---- deterministic cases mirroring the paper's layer shapes (scaled) ----
+
+def test_basic_3x3():
+    _check(n=8, h=12, w=12, m=16, k=3, stride=1, tm=8, tn=4)
+
+
+def test_one_by_one_kernel():
+    # SqueezeNet-style 1x1 conv (the Figure 15(b) compute-bound case).
+    _check(n=16, h=9, w=9, m=12, k=1, stride=1, tm=4, tn=8)
+
+
+def test_strided_like_alexnet_conv1():
+    # AlexNet conv1 shape family: large K, stride > 1, N=3.
+    _check(n=3, h=19, w=19, m=8, k=5, stride=2, tm=8, tn=3)
+
+
+def test_tiles_not_dividing_channels():
+    # Padding path: Tm/Tn not dividing M/N.
+    _check(n=7, h=10, w=10, m=9, k=3, stride=1, tm=4, tn=3)
+
+
+def test_tile_larger_than_dim():
+    _check(n=3, h=8, w=8, m=5, k=3, stride=1, tm=16, tn=16)
+
+
+def test_single_channel_tiles():
+    _check(n=4, h=8, w=8, m=4, k=3, stride=1, tm=1, tn=1)
+
+
+def test_rectangular_input():
+    x = _rand(0, (4, 9, 15), jnp.float32)
+    wt = _rand(1, (6, 4, 3, 3), jnp.float32)
+    got = conv2d_tiled(x, wt, tm=3, tn=2)
+    np.testing.assert_allclose(got, ref.conv2d_ref(x, wt), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-4), (jnp.bfloat16, 5e-2)])
+def test_dtypes(dtype, tol):
+    _check(n=4, h=10, w=10, m=8, k=3, stride=1, tm=4, tn=2, dtype=dtype, tol=tol)
+
+
+# ---- hypothesis sweep ----
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 12),
+    m=st.integers(1, 12),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.integers(1, 2),
+    extra=st.integers(0, 6),
+    tm=st.integers(1, 16),
+    tn=st.integers(1, 16),
+    data=st.data(),
+)
+def test_kernel_matches_ref_swept(n, m, k, stride, extra, tm, tn, data):
+    h = k + stride * data.draw(st.integers(1, 5)) + extra
+    _check(n=n, h=h, w=h, m=m, k=k, stride=stride, tm=tm, tn=tn)
+
+
+# ---- structural (§Perf/L1) helpers ----
+
+def test_vmem_footprint_monotone_in_tiles():
+    a = vmem_footprint_bytes(8, 8, 32, 32, 3, 30, 30)
+    b = vmem_footprint_bytes(16, 8, 32, 32, 3, 30, 30)
+    assert b > a
+    assert a > 0
+
+
+def test_mxu_utilization_estimate_bounds():
+    assert mxu_utilization_estimate(128, 128) == 1.0
+    assert mxu_utilization_estimate(8, 3) == pytest.approx(24 / 16384)
+    assert mxu_utilization_estimate(256, 256) == 1.0  # capped

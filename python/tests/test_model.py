@@ -1,0 +1,69 @@
+"""L2 correctness: TinyCNN forward — Pallas path vs pure-jnp oracle path,
+shape contracts, and determinism of the baked parameters."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def _img(seed, batch=None):
+    shape = ((batch,) if batch else ()) + model.IN_SHAPE
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+def test_params_deterministic():
+    a = model.init_params(seed=0)
+    b = model.init_params(seed=0)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    c = model.init_params(seed=1)
+    assert any(not np.array_equal(a[k], c[k]) for k in a)
+
+
+def test_param_shapes_match_layer_table():
+    p = model.init_params()
+    for name, m, n, k, _s, _tm, _tn in model.LAYERS:
+        assert p[name].shape == (m, n, k, k)
+
+
+def test_forward_single_shape_and_finite():
+    p = model.init_params()
+    y = model.forward_single(p, _img(3))
+    assert y.shape == (model.NUM_CLASSES,)
+    assert np.all(np.isfinite(y))
+
+
+def test_pallas_path_matches_ref_path():
+    # The L2 signal: swapping Pallas convs for oracle convs is a no-op.
+    p = model.init_params()
+    x = _img(7)
+    got = model.forward_single(p, x, use_pallas=True)
+    want = model.forward_single(p, x, use_pallas=False)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_forward_batch_equals_per_image():
+    p = model.init_params()
+    xs = _img(11, batch=3)
+    ys = model.forward_batch(p, xs, use_pallas=False)
+    assert ys.shape == (3, model.NUM_CLASSES)
+    for i in range(3):
+        np.testing.assert_allclose(
+            ys[i], model.forward_single(p, xs[i], use_pallas=False),
+            rtol=1e-5, atol=1e-5,
+        )
+
+
+def test_conv_layer_single_shape():
+    p = model.init_params()
+    y = model.conv_layer_single(p, _img(5))
+    assert y.shape == (16, 14, 14)  # (32-5)//2+1 = 14
+
+
+def test_batch_jit_traces():
+    p = model.init_params()
+    fn = jax.jit(lambda xs: model.forward_batch(p, xs, use_pallas=False))
+    y = fn(_img(9, batch=2))
+    assert y.shape == (2, model.NUM_CLASSES)

@@ -1,0 +1,120 @@
+//! Ablation studies for the design choices DESIGN.md calls out:
+//!   1. adaptive offload (XFER falls back to replication) vs forced modes;
+//!   2. interleaved (Fig 11b) vs blocked (Fig 11a) inter-layer placement;
+//!   3. simulator sync-overhead sensitivity (model-accuracy driver);
+//!   4. stream-preset pruning (maximal-only) vs the full ladder;
+//!   5. heterogeneous cluster (§7 future work) vs its members.
+
+use superlip::analytic::{layer_latency, Design, XferMode};
+use superlip::bench::Harness;
+use superlip::dse;
+use superlip::model::zoo;
+use superlip::partition::hetero::{hetero_row_partition, HeteroNode};
+use superlip::partition::{interlayer_traffic_elems, Factors, PlacementPolicy};
+use superlip::platform::{FpgaSpec, Precision};
+use superlip::report::Table;
+use superlip::sim::{simulate_network, SimConfig};
+
+fn main() {
+    let mut h = Harness::new("ablations");
+    let fpga = FpgaSpec::zcu102();
+    let cfg = SimConfig::zcu102(&fpga);
+    let net = zoo::alexnet();
+
+    // --- 1. Adaptive offload: XFER with fallback vs pure baseline.
+    // (A forced-offload mode is what the raw eqs 16–21 would do; adaptive
+    // equals it when offload helps and beats it when it would not.)
+    let d = Design::fixed16(128, 10, 7, 14);
+    let mut t = Table::new(&["Factors", "Baseline kcyc", "XFER(adaptive) kcyc", "Gain"]);
+    for f in [Factors::new(1, 2, 1, 1), Factors::new(1, 2, 1, 2), Factors::new(1, 4, 1, 1)] {
+        let base = simulate_network(&net, &d, &f, &fpga, &cfg, XferMode::Baseline).cycles;
+        let xfer = simulate_network(&net, &d, &f, &fpga, &cfg, XferMode::Xfer).cycles;
+        t.row(&[
+            f.to_string(),
+            (base / 1000).to_string(),
+            (xfer / 1000).to_string(),
+            format!("{:.2}%", (1.0 - xfer as f64 / base as f64) * 100.0),
+        ]);
+    }
+    h.table("Ablation 1: traffic offload (adaptive XFER) vs replication", &t.render());
+
+    // --- 2. Placement policy: inter-layer traffic volumes.
+    let f = Factors::new(1, 1, 1, 2);
+    let conv: Vec<_> = net.conv_layers().collect();
+    let mut blocked = 0u64;
+    let mut interleaved = 0u64;
+    for w in conv.windows(2) {
+        blocked += interlayer_traffic_elems(w[0], w[1], &f, PlacementPolicy::Blocked);
+        interleaved += interlayer_traffic_elems(w[0], w[1], &f, PlacementPolicy::Interleaved);
+    }
+    h.record("blocked placement traffic (Fig 11a)", blocked as f64, "elems");
+    h.record("interleaved placement traffic (Fig 11b)", interleaved as f64, "elems (paper: 0)");
+
+    // --- 3. Sync-overhead sensitivity: how far can the handshake grow
+    // before the model's ~2.5% accuracy story breaks?
+    let dval = Design::float32(10, 22, 13, 13);
+    let model = superlip::analytic::network_latency(&net, &dval);
+    let mut t = Table::new(&["sync_cycles", "sim kcyc", "model deviation"]);
+    for sync in [0u64, 6, 12, 24, 48, 96] {
+        let mut c = cfg;
+        c.sync_cycles = sync;
+        let sim = simulate_network(&net, &dval, &Factors::single(), &fpga, &c, XferMode::Xfer)
+            .cycles;
+        t.row(&[
+            sync.to_string(),
+            (sim / 1000).to_string(),
+            format!("{:.2}%", (sim as f64 - model as f64).abs() / sim as f64 * 100.0),
+        ]);
+    }
+    h.table("Ablation 3: double-buffer handshake cost vs model accuracy", &t.render());
+
+    // --- 4. Stream-preset pruning: maximal-only presets must not lose
+    // quality vs a dense ladder (they provably cannot — latency is
+    // monotone in each width), while shrinking the search.
+    let presets = dse::stream_presets(Precision::Fixed16, &fpga);
+    h.record("maximal stream presets (fx16)", presets.len() as f64, "combos (full ladder: 125)");
+    let (best_d, best_ll, stats) =
+        dse::best_layer_design(&net.layers[2], &fpga, Precision::Fixed16);
+    h.record("conv3 optimum with pruned presets", best_ll.lat as f64, "cycles");
+    h.record("conv3 designs evaluated", stats.evaluated as f64, "");
+    let _ = best_d;
+
+    // --- 5. Heterogeneous cluster (§7): big + half-size board.
+    let big = HeteroNode {
+        fpga: FpgaSpec::zcu102(),
+        design: Design::fixed16(128, 10, 7, 14),
+    };
+    let small = HeteroNode {
+        fpga: {
+            let mut f = FpgaSpec::zcu102();
+            f.dsp /= 2;
+            f.bram18k /= 2;
+            f
+        },
+        design: Design::fixed16(64, 10, 7, 14),
+    };
+    let l = net.layers[2].clone();
+    let solo_ms = big
+        .design
+        .precision
+        .cycles_to_ms(layer_latency(&l, &big.design).lat);
+    let (rows, hetero_ms) = hetero_row_partition(&l, &[big, small]);
+    h.record("conv3 solo big-board", solo_ms, "ms");
+    h.record("conv3 hetero big+half", hetero_ms, "ms");
+    h.record("hetero row split", rows[0] as f64, &format!("rows of {} (small gets {})", l.r, rows[1]));
+
+    h.measure("hetero partition of all conv layers", || {
+        let big = HeteroNode {
+            fpga: FpgaSpec::zcu102(),
+            design: Design::fixed16(128, 10, 7, 14),
+        };
+        let small = HeteroNode {
+            fpga: FpgaSpec::zcu102(),
+            design: Design::fixed16(64, 10, 7, 14),
+        };
+        for l in net.conv_layers() {
+            std::hint::black_box(hetero_row_partition(l, &[big.clone(), small.clone()]));
+        }
+    });
+    h.finish();
+}

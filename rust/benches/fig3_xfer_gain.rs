@@ -1,0 +1,48 @@
+//! Figure 3: XFER on a weight-shared 2-FPGA partition reduces the pipeline
+//! cycle time Lat2 (paper: 2953 → 1782 cycles, 39.65%).
+
+use superlip::analytic::{xfer_layer_latency, Design, XferMode};
+use superlip::bench::Harness;
+use superlip::model::zoo;
+use superlip::partition::Factors;
+use superlip::platform::FpgaSpec;
+use superlip::report::Table;
+
+fn main() {
+    let mut h = Harness::new("fig3_xfer_gain");
+    let fpga = FpgaSpec::zcu102();
+    let net = zoo::alexnet();
+    let f = Factors::new(1, 2, 1, 1); // weight-shared row partition
+
+    let mut t = Table::new(&["Layer", "Base Lat2", "XFER Lat2", "Gain"]);
+    let mut best_gain = 0.0f64;
+    for l in net.conv_layers() {
+        // A deliberately weight-bound design family (narrow Wp), as in the
+        // Figure 3 example.
+        let d = Design::fixed16(128, 10, 7, 14).with_streams(4, 2, 4);
+        let base = xfer_layer_latency(l, &d, &f, &fpga, XferMode::Baseline);
+        let xfer = xfer_layer_latency(l, &d, &f, &fpga, XferMode::Xfer);
+        let gain = 1.0 - xfer.worst.lat2 as f64 / base.worst.lat2 as f64;
+        best_gain = best_gain.max(gain);
+        t.row(&[
+            l.name.clone(),
+            base.worst.lat2.to_string(),
+            xfer.worst.lat2.to_string(),
+            format!("{:.2}%", gain * 100.0),
+        ]);
+    }
+    h.table(
+        "Figure 3: Lat2 (pipeline cycle time) baseline vs XFER, Pr=2",
+        &t.render(),
+    );
+    h.record("best per-layer Lat2 gain", best_gain * 100.0, "% (paper: 39.65%)");
+
+    let d = Design::fixed16(128, 10, 7, 14).with_streams(4, 2, 4);
+    h.measure("xfer_layer_latency (5 layers, 2 modes)", || {
+        for l in net.conv_layers() {
+            std::hint::black_box(xfer_layer_latency(l, &d, &f, &fpga, XferMode::Baseline));
+            std::hint::black_box(xfer_layer_latency(l, &d, &f, &fpga, XferMode::Xfer));
+        }
+    });
+    h.finish();
+}

@@ -1,0 +1,36 @@
+//! §2 micro-benchmark: inter-FPGA link vs off-chip DDR transfer time across
+//! packet sizes — the measurement that motivates XFER (3× at 1 KB, 1.6× at
+//! 64–128 KB).
+
+use superlip::bench::Harness;
+use superlip::platform::{FpgaSpec, LinkSpec};
+use superlip::report::Table;
+
+fn main() {
+    let mut h = Harness::new("link_microbench");
+    let link = LinkSpec::from_fpga(&FpgaSpec::zcu102());
+
+    let mut t = Table::new(&["Packet", "DDR cycles", "Link cycles", "b2b speedup"]);
+    for kb in [1u64, 2, 4, 8, 16, 32, 64, 128] {
+        let bytes = kb * 1024;
+        t.row(&[
+            format!("{kb} KB"),
+            link.ddr_cycles(bytes).to_string(),
+            link.link_cycles(bytes).to_string(),
+            format!("{:.2}x", link.b2b_speedup(bytes)),
+        ]);
+    }
+    h.table("§2: inter-FPGA vs DDR transfer time", &t.render());
+    h.record("speedup @ 1KB", link.b2b_speedup(1024), "x (paper: 3x)");
+    h.record("speedup @ 64KB", link.b2b_speedup(64 * 1024), "x (paper: 1.6x)");
+    h.record("speedup @ 128KB", link.b2b_speedup(128 * 1024), "x (paper: 1.6x)");
+
+    h.measure("1M transfer-time evaluations", || {
+        let mut acc = 0u64;
+        for i in 0..1_000_000u64 {
+            acc = acc.wrapping_add(link.ddr_cycles(64 + (i % 4096)));
+        }
+        std::hint::black_box(acc);
+    });
+    h.finish();
+}

@@ -1,0 +1,114 @@
+//! §Perf: the L3 hot paths — analytic-model evaluation, cluster
+//! simulation, DSE, and the serving fast path (batcher throughput).
+//! Baselines and targets live in EXPERIMENTS.md §Perf.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+use superlip::analytic::{layer_latency, network_latency, Design, XferMode};
+use superlip::bench::Harness;
+use superlip::dse;
+use superlip::model::zoo;
+use superlip::partition::Factors;
+use superlip::platform::{FpgaSpec, Precision};
+use superlip::serving::{Batcher, BatcherConfig, InferenceRequest};
+use superlip::sim::{simulate_network, SimConfig};
+
+fn main() {
+    let mut h = Harness::new("perf_hotpaths");
+    let fpga = FpgaSpec::zcu102();
+    let cfg = SimConfig::zcu102(&fpga);
+    let alexnet = zoo::alexnet();
+    let vgg = zoo::vgg16();
+    let d = Design::fixed16(128, 10, 7, 14);
+
+    // --- Analytic model evaluation rate (the DSE inner loop).
+    let conv3 = alexnet.layers[2].clone();
+    let t0 = Instant::now();
+    let n_eval = 2_000_000u64;
+    let mut acc = 0u64;
+    for i in 0..n_eval {
+        let dd = Design::fixed16(1 + (i % 128), 1 + (i % 24), 7, 14);
+        acc = acc.wrapping_add(layer_latency(&conv3, &dd).lat);
+    }
+    let rate = n_eval as f64 / t0.elapsed().as_secs_f64();
+    std::hint::black_box(acc);
+    h.record("analytic model eval rate", rate / 1e6, "M evals/s");
+
+    h.measure("network_latency AlexNet", || {
+        std::hint::black_box(network_latency(&alexnet, &d));
+    });
+
+    // --- Cluster simulation throughput.
+    h.measure("simulate AlexNet 1 FPGA", || {
+        std::hint::black_box(simulate_network(
+            &alexnet,
+            &d,
+            &Factors::single(),
+            &fpga,
+            &cfg,
+            XferMode::Xfer,
+        ));
+    });
+    h.measure("simulate VGG16 16-FPGA XFER", || {
+        std::hint::black_box(simulate_network(
+            &vgg,
+            &Design::fixed16(64, 25, 7, 14),
+            &Factors::new(1, 4, 1, 4),
+            &fpga,
+            &cfg,
+            XferMode::Xfer,
+        ));
+    });
+
+    // --- DSE end-to-end (the paper's "3 min/layer" / "13 min cross-layer").
+    h.measure("per-layer DSE (AlexNet conv3, fx16)", || {
+        std::hint::black_box(dse::best_layer_design(&conv3, &fpga, Precision::Fixed16));
+    });
+    h.measure("cross-layer DSE (AlexNet, fx16)", || {
+        std::hint::black_box(dse::best_uniform_design(&alexnet, &fpga, Precision::Fixed16));
+    });
+    h.measure("partition search (YOLO, 16 FPGAs)", || {
+        let yolo = zoo::yolov1();
+        std::hint::black_box(dse::best_factors(
+            &yolo,
+            &Design::fixed16(64, 25, 7, 14),
+            &fpga,
+            16,
+            XferMode::Xfer,
+        ));
+    });
+
+    // --- Serving fast path: batcher push/pop throughput (no compute).
+    let n_req = 20_000usize;
+    let t0 = Instant::now();
+    let b = Batcher::new(BatcherConfig {
+        max_batch: 4,
+        window: Duration::from_micros(0),
+        deadline_margin: Duration::from_micros(0),
+    });
+    let now = Instant::now();
+    let mut popped = 0usize;
+    let mut keep = Vec::new();
+    for i in 0..n_req {
+        let (tx, rx) = mpsc::channel();
+        keep.push(rx);
+        b.push(InferenceRequest {
+            id: i as u64,
+            image: Vec::new(),
+            enqueued: now,
+            deadline: now + Duration::from_secs(3600),
+            reply: tx,
+        })
+        .unwrap();
+        if i % 4 == 3 {
+            popped += b.next_batch().unwrap().len();
+        }
+    }
+    while popped < n_req {
+        popped += b.next_batch().unwrap().len();
+    }
+    let rps = n_req as f64 / t0.elapsed().as_secs_f64();
+    h.record("batcher push+batch rate", rps / 1e6, "M req/s");
+
+    h.finish();
+}

@@ -1,0 +1,102 @@
+//! Table 3: FPGA15 (re-implemented on one ZCU102) vs Super-LIP (2 ZCU102s),
+//! per AlexNet conv layer, for both precisions — the 2.25× (f32) and 3.48×
+//! (fx16) speedups and the energy-efficiency improvements.
+
+use superlip::analytic::{check_feasible, Design, XferMode};
+use superlip::bench::Harness;
+use superlip::dse;
+use superlip::energy::{self, PowerModel};
+use superlip::model::zoo;
+use superlip::partition::Factors;
+use superlip::platform::FpgaSpec;
+use superlip::report::{self, Table};
+use superlip::sim::{simulate_cluster, simulate_network, SimConfig};
+
+fn main() {
+    let mut h = Harness::new("table3_zcu102");
+    let fpga = FpgaSpec::zcu102();
+    let cfg = SimConfig::zcu102(&fpga);
+    let net = zoo::alexnet();
+    let total_ops: u64 = net.conv_layers().map(|l| l.ops()).sum();
+
+    // (precision label, FPGA15 design, Super-LIP design)
+    let setups = [
+        (
+            "32bits float",
+            Design::float32(64, 7, 7, 14),
+            Design::float32(64, 7, 7, 14),
+        ),
+        (
+            "16bits fixed",
+            Design::fixed16(64, 24, 7, 14),
+            Design::fixed16(128, 10, 7, 14),
+        ),
+    ];
+
+    for (plabel, d_single, d_dual) in setups {
+        let (f2, _) = dse::best_factors(&net, &d_dual, &fpga, 2, XferMode::Xfer);
+        let mut t = Table::new(&[
+            "Layer", "FPGA15 ms", "FPGA15 GOPS", "SuperLIP ms", "SuperLIP GOPS",
+        ]);
+        let mut tot1 = 0u64;
+        let mut tot2 = 0u64;
+        for l in net.conv_layers() {
+            let (s1, _) =
+                simulate_cluster(l, &d_single, &Factors::single(), &fpga, &cfg, XferMode::Xfer);
+            let (s2, _) = simulate_cluster(l, &d_dual, &f2, &fpga, &cfg, XferMode::Xfer);
+            tot1 += s1.cycles;
+            tot2 += s2.cycles;
+            t.row(&[
+                l.name.clone(),
+                report::ms(d_single.precision.cycles_to_ms(s1.cycles)),
+                report::gops(energy::gops(l.ops(), s1.cycles, d_single.precision)),
+                report::ms(d_dual.precision.cycles_to_ms(s2.cycles)),
+                report::gops(energy::gops(l.ops(), s2.cycles, d_dual.precision)),
+            ]);
+        }
+        let sim1 = simulate_network(&net, &d_single, &Factors::single(), &fpga, &cfg, XferMode::Xfer);
+        let sim2 = simulate_network(&net, &d_dual, &f2, &fpga, &cfg, XferMode::Xfer);
+        t.row(&[
+            "overall".into(),
+            report::ms(d_single.precision.cycles_to_ms(sim1.cycles)),
+            report::gops(energy::gops(total_ops, sim1.cycles, d_single.precision)),
+            report::ms(d_dual.precision.cycles_to_ms(sim2.cycles)),
+            report::gops(energy::gops(total_ops, sim2.cycles, d_dual.precision)),
+        ]);
+        h.table(&format!("Table 3 ({plabel})"), &t.render());
+
+        let k_max = net.conv_layers().map(|l| l.k).max().unwrap();
+        let u1 = check_feasible(&d_single, &fpga, k_max).unwrap();
+        let u2 = check_feasible(&d_dual, &fpga, k_max).unwrap();
+        let g1 = energy::gops(total_ops, sim1.cycles, d_single.precision);
+        let g2 = energy::gops(total_ops, sim2.cycles, d_dual.precision);
+        let ee1 = g1 / PowerModel::new(1).watts(&d_single, &u1);
+        let ee2 = g2 / PowerModel::new(2).watts(&d_dual, &u2);
+        let speedup = sim1.cycles as f64 * d_dual.precision.freq_mhz() as f64
+            / (sim2.cycles as f64 * d_single.precision.freq_mhz() as f64);
+        h.record(
+            &format!("{plabel}: speedup"),
+            speedup,
+            "x (paper: 2.25x f32 / 3.48x fx16)",
+        );
+        h.record(
+            &format!("{plabel}: EE improvement"),
+            (ee2 / ee1 - 1.0) * 100.0,
+            "% (paper: 9.21% f32 / 39.86% fx16)",
+        );
+        println!(
+            "  super-linear (>2x on 2 FPGAs): {}",
+            if speedup > 2.0 { "REPRODUCED" } else { "NOT reproduced" }
+        );
+        assert!(tot1 > 0 && tot2 > 0);
+    }
+
+    let d = Design::fixed16(128, 10, 7, 14);
+    h.measure("per-layer cluster sim (fx16, 2 FPGAs)", || {
+        let (f2, _) = dse::best_factors(&net, &d, &fpga, 2, XferMode::Xfer);
+        for l in net.conv_layers() {
+            std::hint::black_box(simulate_cluster(l, &d, &f2, &fpga, &cfg, XferMode::Xfer));
+        }
+    });
+    h.finish();
+}

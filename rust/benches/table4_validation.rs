@@ -1,0 +1,93 @@
+//! Table 4: model validation + bottleneck detection/alleviation. For the
+//! four designs A–D: our model's cycles/BRAM/DSP vs the "on-board"
+//! (simulated) values, the Corollary-1 bound, and the XFER speedups
+//! (paper: 3.30× and 3.43×).
+
+use superlip::analytic::{
+    self, check_feasible, detect, network_latency, xfer_network_latency, Design, XferMode,
+};
+use superlip::bench::Harness;
+use superlip::model::zoo;
+use superlip::partition::Factors;
+use superlip::platform::FpgaSpec;
+use superlip::report::{self, Table};
+use superlip::sim::{simulate_network, SimConfig};
+
+fn main() {
+    let mut h = Harness::new("table4_validation");
+    let fpga = FpgaSpec::zcu102();
+    let cfg = SimConfig::zcu102(&fpga);
+    let net = zoo::alexnet();
+
+    // Designs A–D of Table 4 (IFM-bound f32; weight-bound fx16; each with
+    // its XFER partner partition).
+    let a = Design::float32(8, 32, 13, 13);
+    let c = Design::fixed16(64, 20, 13, 13).with_streams(8, 2, 8);
+    let rows: [(&str, Design, Factors); 4] = [
+        ("A (single)", a, Factors::single()),
+        ("B (XFER Pm=2)", a, Factors::new(1, 1, 1, 2)),
+        ("C (single)", c, Factors::single()),
+        ("D (XFER Pr=2)", c, Factors::new(1, 2, 1, 1)),
+    ];
+
+    let mut t = Table::new(&[
+        "Design", "Bound", "Model kcyc", "Sim kcyc", "Cyc dev", "BRAM", "DSP", "Speedup",
+    ]);
+    let mut sim_cycles = [0u64; 4];
+    for (i, (label, d, f)) in rows.iter().enumerate() {
+        let model = if f.num_fpgas() == 1 {
+            network_latency(&net, d)
+        } else {
+            xfer_network_latency(&net, d, f, &fpga, XferMode::Xfer)
+        };
+        let sim = simulate_network(&net, d, f, &fpga, &cfg, XferMode::Xfer).cycles;
+        sim_cycles[i] = sim;
+        let k_max = net.conv_layers().map(|l| l.k).max().unwrap();
+        let usage = check_feasible(d, &fpga, k_max).unwrap();
+        let worst = net
+            .conv_layers()
+            .map(|l| analytic::xfer_layer_latency(l, d, f, &fpga, XferMode::Xfer))
+            .max_by_key(|x| x.worst.lat)
+            .unwrap();
+        let speedup = if i % 2 == 1 {
+            format!("{:.2}x", sim_cycles[i - 1] as f64 / sim as f64)
+        } else {
+            "baseline".into()
+        };
+        t.row(&[
+            label.to_string(),
+            detect(&worst.worst).label().into(),
+            (model / 1000).to_string(),
+            (sim / 1000).to_string(),
+            report::pct((sim as f64 - model as f64).abs() / sim as f64),
+            usage.bram_total().to_string(),
+            usage.dsp.to_string(),
+            speedup,
+        ]);
+    }
+    h.table("Table 4: validation + bottleneck alleviation (AlexNet)", &t.render());
+
+    let dev_a = {
+        let model = network_latency(&net, &a) as f64;
+        let sim = sim_cycles[0] as f64;
+        (sim - model).abs() / sim
+    };
+    h.record("design A cycle deviation", dev_a * 100.0, "% (paper: ~3%)");
+    h.record(
+        "B vs A speedup",
+        sim_cycles[0] as f64 / sim_cycles[1] as f64,
+        "x (paper: 3.30x)",
+    );
+    h.record(
+        "D vs C speedup",
+        sim_cycles[2] as f64 / sim_cycles[3] as f64,
+        "x (paper: 3.43x)",
+    );
+
+    h.measure("validate all four designs (model+sim)", || {
+        for (_, d, f) in rows.iter() {
+            std::hint::black_box(simulate_network(&net, d, f, &fpga, &cfg, XferMode::Xfer));
+        }
+    });
+    h.finish();
+}

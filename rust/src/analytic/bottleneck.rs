@@ -1,0 +1,102 @@
+//! Performance-bottleneck detection (§3 ③, Corollary 1).
+
+use super::LayerLatency;
+
+/// Where a design's time goes, per Corollary 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bottleneck {
+    /// `Lat2` dominated by `tO` — OFM store bound.
+    OfmStore,
+    /// `Lat1` dominated by `tI` — IFM load bound.
+    IfmLoad,
+    /// `Lat1` dominated by `tW` — weight load bound.
+    WeightLoad,
+    /// `Lat1` dominated by an inter-FPGA ring (XFER only).
+    InterFpga,
+    /// `Lat1` dominated by `tComp` — "we have fully utilized the involved
+    /// computation resource".
+    Compute,
+}
+
+impl Bottleneck {
+    /// Human-readable label matching Table 4's "Bound" column.
+    pub fn label(self) -> &'static str {
+        match self {
+            Bottleneck::OfmStore => "OFM",
+            Bottleneck::IfmLoad => "IFM",
+            Bottleneck::WeightLoad => "Weight",
+            Bottleneck::InterFpga => "Inter-FPGA",
+            Bottleneck::Compute => "Comp.",
+        }
+    }
+}
+
+/// Apply Corollary 1 to a latency breakdown. Priority order follows the
+/// corollary: check `Lat2`'s OFM domination first, then the `Lat1` terms.
+pub fn detect(ll: &LayerLatency) -> Bottleneck {
+    if ll.lat2 == ll.t_o && ll.t_o > ll.trips_n * ll.lat1 {
+        return Bottleneck::OfmStore;
+    }
+    // Within Lat1, report the largest term; compute wins ties (a fully
+    // overlapped design is compute-bound by construction).
+    let max = ll.lat1;
+    if ll.t_comp == max {
+        Bottleneck::Compute
+    } else if ll.t_i == max {
+        Bottleneck::IfmLoad
+    } else if ll.t_w == max {
+        Bottleneck::WeightLoad
+    } else {
+        Bottleneck::InterFpga
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytic::{layer_latency, Design};
+    use crate::model::ConvLayer;
+
+    fn layer() -> ConvLayer {
+        ConvLayer::conv("x", 1, 256, 256, 26, 26, 3)
+    }
+
+    #[test]
+    fn compute_bound() {
+        let d = Design::fixed16(16, 8, 13, 13); // small array, default streams
+        let b = detect(&layer_latency(&layer(), &d));
+        assert_eq!(b, Bottleneck::Compute);
+    }
+
+    #[test]
+    fn weight_bound() {
+        // Big array, starved weight stream.
+        let d = Design::fixed16(128, 16, 13, 13).with_streams(8, 1, 8);
+        let b = detect(&layer_latency(&layer(), &d));
+        assert_eq!(b, Bottleneck::WeightLoad);
+    }
+
+    #[test]
+    fn ifm_bound() {
+        // 1×1 kernel: tComp = Tr·Tc tiny; starve the IFM stream.
+        let l = ConvLayer::conv("x", 1, 64, 512, 26, 26, 1);
+        let d = Design::fixed16(16, 64, 13, 13).with_streams(1, 8, 8);
+        let b = detect(&layer_latency(&l, &d));
+        assert_eq!(b, Bottleneck::IfmLoad);
+    }
+
+    #[test]
+    fn ofm_bound() {
+        // Few input channels (1 inner trip), starved output stream.
+        let l = ConvLayer::conv("x", 1, 512, 4, 26, 26, 1);
+        let d = Design::fixed16(128, 4, 13, 13).with_streams(8, 8, 1);
+        let b = detect(&layer_latency(&l, &d));
+        assert_eq!(b, Bottleneck::OfmStore);
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(Bottleneck::Compute.label(), "Comp.");
+        assert_eq!(Bottleneck::WeightLoad.label(), "Weight");
+    }
+}

@@ -1,0 +1,105 @@
+//! An accelerator design point: loop tiling ⟨Tm,Tn,Tr,Tc⟩ (§3 ②-1) plus
+//! AXI-stream widths ⟨Ip,Wp,Op⟩ (§3 ②-2).
+
+use crate::platform::Precision;
+
+/// One point in the accelerator design space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Design {
+    /// OFM-channel tile.
+    pub tm: u64,
+    /// IFM-channel tile.
+    pub tn: u64,
+    /// Row tile.
+    pub tr: u64,
+    /// Column tile.
+    pub tc: u64,
+    /// AXI streams moving IFM pixels per cycle.
+    pub ip: u64,
+    /// AXI streams moving weights per cycle.
+    pub wp: u64,
+    /// AXI streams moving OFM pixels per cycle.
+    pub op: u64,
+    /// Datapath precision (fixes DSP cost, bit width and clock).
+    pub precision: Precision,
+}
+
+impl Design {
+    /// The paper's §5A float configuration: ⟨Ip,Wp,Op⟩ = ⟨2,2,2⟩.
+    pub fn float32(tm: u64, tn: u64, tr: u64, tc: u64) -> Self {
+        Design {
+            tm,
+            tn,
+            tr,
+            tc,
+            ip: 2,
+            wp: 2,
+            op: 2,
+            precision: Precision::Float32,
+        }
+    }
+
+    /// The paper's §5A fixed configuration: ⟨Ip,Wp,Op⟩ = ⟨4,8,4⟩.
+    pub fn fixed16(tm: u64, tn: u64, tr: u64, tc: u64) -> Self {
+        Design {
+            tm,
+            tn,
+            tr,
+            tc,
+            ip: 4,
+            wp: 8,
+            op: 4,
+            precision: Precision::Fixed16,
+        }
+    }
+
+    /// Override stream widths.
+    pub fn with_streams(mut self, ip: u64, wp: u64, op: u64) -> Self {
+        self.ip = ip;
+        self.wp = wp;
+        self.op = op;
+        self
+    }
+
+    /// Parallel MAC units instantiated (`Tm × Tn`).
+    pub fn macs(&self) -> u64 {
+        self.tm * self.tn
+    }
+
+    /// Peak GOPS of the MAC array at the design's clock.
+    pub fn peak_gops(&self) -> f64 {
+        2.0 * self.macs() as f64 * self.precision.freq_mhz() as f64 / 1e3
+    }
+}
+
+impl std::fmt::Display for Design {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "<Tm={},Tn={},Tr={},Tc={},Ip={},Wp={},Op={},{}>",
+            self.tm,
+            self.tn,
+            self.tr,
+            self.tc,
+            self.ip,
+            self.wp,
+            self.op,
+            self.precision.name()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_gops() {
+        // ⟨64,7⟩ f32 @100 MHz: 448 MACs → 89.6 GOPS peak.
+        let d = Design::float32(64, 7, 13, 13);
+        assert!((d.peak_gops() - 89.6).abs() < 1e-9);
+        // ⟨128,10⟩ fx16 @200 MHz: 1280 MACs → 512 GOPS peak.
+        let d = Design::fixed16(128, 10, 13, 13);
+        assert!((d.peak_gops() - 512.0).abs() < 1e-9);
+    }
+}

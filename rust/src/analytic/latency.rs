@@ -1,0 +1,198 @@
+//! The single-FPGA latency model (Formulas 8–15, Figure 6).
+//!
+//! The accelerator is a tiled, double-buffered engine: per inner trip it
+//! loads an IFM tile and a weight tile while computing on the previous pair
+//! (`Lat1 = max{tComp, tI, tW}`, eq 12); OFM write-back overlaps the
+//! ⌈N/Tn⌉-trip accumulation (`Lat2 = max{⌈N/Tn⌉·Lat1, tO}`, eq 13); the
+//! outer loops multiply (eq 14).
+
+use super::Design;
+use crate::model::ConvLayer;
+
+/// Full latency breakdown of one layer under one design.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerLatency {
+    /// Clamped tile dims actually in play for this layer.
+    pub tm: u64,
+    pub tn: u64,
+    pub tr: u64,
+    pub tc: u64,
+    /// IFM tile load cycles (eq 8).
+    pub t_i: u64,
+    /// Weight tile load cycles (eq 9, or 16 under XFER).
+    pub t_w: u64,
+    /// OFM tile store cycles (eq 10).
+    pub t_o: u64,
+    /// Compute cycles of one engine invocation (eq 11).
+    pub t_comp: u64,
+    /// Worst inter-FPGA channel latency folded into Lat1 (eqs 17/19; 0 when
+    /// XFER is off).
+    pub t_b2b: u64,
+    /// Eq 12 (18/21 under XFER).
+    pub lat1: u64,
+    /// Eq 13.
+    pub lat2: u64,
+    /// Inner trip count ⌈N/Tn⌉.
+    pub trips_n: u64,
+    /// Outer trip count B·⌈R/Tr⌉·⌈C/Tc⌉·⌈M/Tm⌉ (× groups).
+    pub trips_outer: u64,
+    /// Eq 14 — total layer cycles.
+    pub lat: u64,
+}
+
+impl LayerLatency {
+    /// Effective GOPS this layer achieves under the design.
+    pub fn gops(&self, layer: &ConvLayer, freq_mhz: u64) -> f64 {
+        layer.ops() as f64 / (self.lat as f64 / (freq_mhz as f64 * 1e6)) / 1e9
+    }
+}
+
+/// Evaluate eqs 8–14 for `layer` under `design` (single FPGA, no XFER).
+pub fn layer_latency(layer: &ConvLayer, d: &Design) -> LayerLatency {
+    layer_latency_scaled(layer, d, 1, 1, 0)
+}
+
+/// Core evaluation shared with the XFER model (`analytic::xfer`):
+/// `w_div` divides the weight-load latency (eq 16's `Pb·Pr·Pc`),
+/// `i_div` divides the IFM-load latency (eq 20's `Pm`),
+/// `t_b2b` is the worst inter-FPGA channel term entering Lat1 (eqs 18/21).
+pub(super) fn layer_latency_scaled(
+    layer: &ConvLayer,
+    d: &Design,
+    w_div: u64,
+    i_div: u64,
+    t_b2b: u64,
+) -> LayerLatency {
+    let (m, n) = (layer.m_per_group(), layer.n_per_group());
+    // Tiles never exceed the layer dims they tile.
+    let tm = d.tm.min(m).max(1);
+    let tn = d.tn.min(n).max(1);
+    let tr = d.tr.min(layer.r).max(1);
+    let tc = d.tc.min(layer.c).max(1);
+    let k2 = layer.k * layer.k;
+
+    // Eqs 8–11 (eq 16/20 generalization via the divisors).
+    let t_i = (tn * tr * tc).div_ceil(d.ip * i_div);
+    let t_w = (tm * tn * k2).div_ceil(d.wp * w_div);
+    let t_o = (tm * tr * tc).div_ceil(d.op);
+    let t_comp = k2 * tr * tc;
+
+    // Eq 12 / 18 / 21.
+    let lat1 = t_comp.max(t_i).max(t_w).max(t_b2b);
+    // Eq 13.
+    let trips_n = n.div_ceil(tn);
+    let lat2 = (trips_n * lat1).max(t_o);
+    // Eq 14 — outer trips; grouped convs run the engine once per group.
+    let trips_outer = layer.b
+        * layer.r.div_ceil(tr)
+        * layer.c.div_ceil(tc)
+        * m.div_ceil(tm)
+        * layer.groups;
+    let lat = trips_outer * lat2 + t_o + lat1;
+
+    LayerLatency {
+        tm,
+        tn,
+        tr,
+        tc,
+        t_i,
+        t_w,
+        t_o,
+        t_comp,
+        t_b2b,
+        lat1,
+        lat2,
+        trips_n,
+        trips_outer,
+        lat,
+    }
+}
+
+/// Sum of eq 14 over all conv layers of a network (uniform design, §4.6).
+pub fn network_latency(net: &crate::model::Network, d: &Design) -> u64 {
+    net.conv_layers().map(|l| layer_latency(l, d).lat).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    /// AlexNet conv5 as a free-standing layer (the Figure 2 workload).
+    fn conv5() -> ConvLayer {
+        zoo::alexnet().layers[4].clone()
+    }
+
+    #[test]
+    fn tiles_clamped_to_layer() {
+        let l = conv5(); // grouped: m=128, n=192 per group
+        let d = Design::float32(256, 256, 64, 64);
+        let ll = layer_latency(&l, &d);
+        assert_eq!(ll.tm, 128);
+        assert_eq!(ll.tn, 192);
+        assert_eq!(ll.tr, 13);
+        assert_eq!(ll.tc, 13);
+    }
+
+    #[test]
+    fn compute_bound_design_dominated_by_tcomp() {
+        // Small stream widths but tiny tiles → compute dominates.
+        let l = ConvLayer::conv("x", 1, 64, 64, 32, 32, 3);
+        let d = Design::fixed16(8, 8, 32, 32);
+        let ll = layer_latency(&l, &d);
+        assert_eq!(ll.t_comp, 9 * 32 * 32);
+        assert!(ll.t_comp >= ll.t_i && ll.t_comp >= ll.t_w);
+        assert_eq!(ll.lat1, ll.t_comp);
+    }
+
+    #[test]
+    fn comm_bound_design_dominated_by_memory() {
+        // Huge MAC array, narrow streams → weight load dominates Lat1.
+        let l = ConvLayer::conv("x", 1, 256, 256, 13, 13, 3);
+        let d = Design::fixed16(128, 16, 13, 13).with_streams(1, 1, 1);
+        let ll = layer_latency(&l, &d);
+        assert!(ll.t_w > ll.t_comp, "{:?}", ll);
+        assert_eq!(ll.lat1, ll.t_w);
+    }
+
+    #[test]
+    fn eq14_structure() {
+        let l = ConvLayer::conv("x", 2, 100, 50, 26, 26, 3);
+        let d = Design::fixed16(32, 16, 13, 13);
+        let ll = layer_latency(&l, &d);
+        assert_eq!(ll.trips_n, 50u64.div_ceil(16));
+        assert_eq!(ll.trips_outer, 2 * 2 * 2 * 100u64.div_ceil(32));
+        assert_eq!(ll.lat, ll.trips_outer * ll.lat2 + ll.t_o + ll.lat1);
+    }
+
+    #[test]
+    fn latency_monotone_in_stream_width() {
+        // More AXI streams can never hurt.
+        let l = conv5();
+        let d1 = Design::fixed16(64, 24, 13, 13).with_streams(2, 2, 2);
+        let d2 = Design::fixed16(64, 24, 13, 13).with_streams(8, 8, 8);
+        assert!(layer_latency(&l, &d2).lat <= layer_latency(&l, &d1).lat);
+    }
+
+    #[test]
+    fn network_latency_sums_layers() {
+        let net = zoo::alexnet();
+        let d = Design::fixed16(64, 24, 13, 13);
+        let total = network_latency(&net, &d);
+        let by_hand: u64 = net.conv_layers().map(|l| layer_latency(l, &d).lat).sum();
+        assert_eq!(total, by_hand);
+        assert!(total > 0);
+    }
+
+    #[test]
+    fn grouped_layer_runs_engine_per_group() {
+        let full = ConvLayer::conv("x", 1, 256, 96, 27, 27, 5);
+        let grp = ConvLayer::conv("x", 1, 256, 96, 27, 27, 5).grouped(2);
+        let d = Design::fixed16(64, 24, 13, 13);
+        // Grouped variant halves per-group channels but doubles engine runs;
+        // latency should be within 2× of full either way, not wildly off.
+        let lf = layer_latency(&full, &d).lat as f64;
+        let lg = layer_latency(&grp, &d).lat as f64;
+        assert!(lg / lf < 1.5 && lf / lg < 2.5, "lf={lf} lg={lg}");
+    }
+}

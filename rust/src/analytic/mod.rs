@@ -1,0 +1,21 @@
+//! The paper's accurate analytic accelerator model (§3, Formulas 1–15), the
+//! XFER modifications (§4, Formulas 16–22), bottleneck detection
+//! (Corollary 1), and the optimistic roofline baseline model of
+//! Zhang et al. FPGA'15 [14] used for the accuracy comparisons
+//! (Figures 2 and 14).
+//!
+//! All latencies are in **accelerator clock cycles** (100 MHz for f32,
+//! 200 MHz for fx16 — `Precision::cycles_to_ms` converts).
+
+pub mod baseline;
+mod bottleneck;
+mod design;
+mod latency;
+mod resources;
+mod xfer;
+
+pub use bottleneck::{detect, Bottleneck};
+pub use design::Design;
+pub use latency::{layer_latency, network_latency, LayerLatency};
+pub use resources::{check_feasible, is_feasible, ResourceUsage};
+pub use xfer::{xfer_layer_latency, xfer_network_latency, XferMode};

@@ -1,0 +1,154 @@
+//! Resource-usage model and feasibility constraints (Formulas 1–7).
+
+use super::Design;
+use crate::platform::FpgaSpec;
+use crate::{Error, Result};
+
+/// Resource usage of a design on one FPGA.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResourceUsage {
+    /// DSP slices (eqs 1–2): `dsp_per_mac × Tm × Tn`.
+    pub dsp: u64,
+    /// BRAM18K blocks for the IFM buffer (eq 3).
+    pub bram_ifm: u64,
+    /// BRAM18K blocks for the OFM buffer (eq 4).
+    pub bram_ofm: u64,
+    /// BRAM18K blocks for the weight buffer (eq 5).
+    pub bram_wei: u64,
+    /// Memory-bus bits consumed by the AXI streams (eq 7).
+    pub bus_bits: u64,
+}
+
+impl ResourceUsage {
+    /// Total BRAM18K blocks (left side of eq 6).
+    pub fn bram_total(&self) -> u64 {
+        self.bram_ifm + self.bram_ofm + self.bram_wei
+    }
+}
+
+/// Evaluate eqs 1–7 for a design. `k` is the kernel size the weight buffer
+/// must accommodate (the max K over the layers the accelerator will run).
+pub fn usage(d: &Design, k: u64) -> ResourceUsage {
+    let bits = d.precision.bits();
+    // 18 Kb per BRAM block.
+    let br = |elems: u64| (elems * bits).div_ceil(18 * 1024);
+    ResourceUsage {
+        dsp: d.precision.dsp_per_mac() * d.tm * d.tn,
+        // The leading 2× is the double-buffer (eqs 3–4). Buffers are
+        // completely partitioned along channel dims, so each partition is
+        // its own (set of) BRAM block(s).
+        bram_ifm: 2 * d.tn * br(d.tr * d.tc),
+        bram_ofm: 2 * d.tm * br(d.tr * d.tc),
+        // Eq 5 written literally (2·Tm·Tn·⌈K·K·BITs/18K⌉) would reject the
+        // paper's own fx16 ⟨128,10⟩ ZCU102 design (2560 > 1824 blocks at
+        // 92.43% reported utilization): the K×K weight slices are tiny, so
+        // the synthesized design packs each partition's two ping-pong
+        // copies into one block when they fit — Tm·Tn·⌈2·K·K·BITs/18K⌉.
+        bram_wei: d.tm * d.tn * br(2 * k * k),
+        bus_bits: bits * (d.ip + d.wp + d.op),
+    }
+}
+
+/// Allocation-free feasibility test for the DSE inner loop (same
+/// constraints as `check_feasible`, no diagnostic formatting — §Perf/L3:
+/// the formatted-error path cost ~35% of cross-layer DSE time).
+#[inline]
+pub fn is_feasible(d: &Design, fpga: &FpgaSpec, k: u64) -> bool {
+    let bits = d.precision.bits();
+    if d.precision.dsp_per_mac() * d.tm * d.tn > fpga.dsp {
+        return false;
+    }
+    if bits * (d.ip + d.wp + d.op) > fpga.mem_bus_bits {
+        return false;
+    }
+    let br = |elems: u64| (elems * bits).div_ceil(18 * 1024);
+    let bram = 2 * d.tn * br(d.tr * d.tc)
+        + 2 * d.tm * br(d.tr * d.tc)
+        + d.tm * d.tn * br(2 * k * k);
+    bram <= fpga.bram18k
+}
+
+/// Check all per-FPGA constraints (eqs 1–2, 6, 7); `Err(Infeasible)` with a
+/// reason when violated.
+pub fn check_feasible(d: &Design, fpga: &FpgaSpec, k: u64) -> Result<ResourceUsage> {
+    let u = usage(d, k);
+    if u.dsp > fpga.dsp {
+        return Err(Error::Infeasible(format!(
+            "DSP: {} needed > {} available (eq {})",
+            u.dsp,
+            fpga.dsp,
+            if d.precision.dsp_per_mac() == 5 { 1 } else { 2 }
+        )));
+    }
+    if u.bram_total() > fpga.bram18k {
+        return Err(Error::Infeasible(format!(
+            "BRAM: {} needed > {} available (eq 6)",
+            u.bram_total(),
+            fpga.bram18k
+        )));
+    }
+    if u.bus_bits > fpga.mem_bus_bits {
+        return Err(Error::Infeasible(format!(
+            "bus width: {} bits needed > {} available (eq 7)",
+            u.bus_bits, fpga.mem_bus_bits
+        )));
+    }
+    Ok(u)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::Precision;
+
+    #[test]
+    fn dsp_equation() {
+        // f32 ⟨64,7⟩ → 5·448 = 2240 DSPs (fits ZCU102's 2520).
+        let d = Design::float32(64, 7, 7, 14);
+        assert_eq!(usage(&d, 5).dsp, 2240);
+        assert!(check_feasible(&d, &FpgaSpec::zcu102(), 5).is_ok());
+    }
+
+    #[test]
+    fn fx16_128x10_feasible_on_zcu102() {
+        // The paper's Super-LIP fx16 design ⟨128,10⟩ (Table 3).
+        let d = Design::fixed16(128, 10, 13, 13);
+        let u = check_feasible(&d, &FpgaSpec::zcu102(), 5).unwrap();
+        assert_eq!(u.dsp, 1280);
+        // Paper reports 55.87% DSP utilization for this design → 1408/2520.
+        // Our MAC-array count is 1280/2520 = 50.8%; the remainder is
+        // control/addressing overhead (Table 4 discussion).
+        assert!(u.bram_total() <= 1824);
+    }
+
+    #[test]
+    fn bram_equation_matches_hand_calc() {
+        // fx16, Tn=10, Tr=Tc=13: 169 elems × 16 b = 2704 b → 1 block; ×2×10.
+        let d = Design::fixed16(128, 10, 13, 13);
+        let u = usage(&d, 3);
+        assert_eq!(u.bram_ifm, 2 * 10);
+        assert_eq!(u.bram_ofm, 2 * 128);
+        // weights: 2 ping-pong copies × 9 × 16 b « 18 Kb → 1 block per
+        // (Tm,Tn) partition → 128·10.
+        assert_eq!(u.bram_wei, 128 * 10);
+    }
+
+    #[test]
+    fn infeasible_when_too_big() {
+        let d = Design::fixed16(512, 64, 13, 13); // 32768 MACs
+        assert!(check_feasible(&d, &FpgaSpec::zcu102(), 3).is_err());
+        // Bus overflow: 33 fx16 streams > 512 bits.
+        let d = Design::fixed16(8, 8, 13, 13).with_streams(16, 16, 1);
+        assert!(matches!(
+            check_feasible(&d, &FpgaSpec::zcu102(), 3),
+            Err(Error::Infeasible(msg)) if msg.contains("bus")
+        ));
+    }
+
+    #[test]
+    fn f32_big_design_exceeds_dsp() {
+        let d = Design::float32(128, 10, 13, 13); // 5·1280 = 6400 > 2520
+        assert!(check_feasible(&d, &FpgaSpec::zcu102(), 3).is_err());
+        let _ = Precision::Float32;
+    }
+}

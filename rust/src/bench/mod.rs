@@ -1,0 +1,92 @@
+//! Hand-rolled micro-benchmark harness (the offline image has no criterion
+//! crate): warmup, timed iterations, mean ± σ reporting, and a `--quick`
+//! mode for CI. Used by every `rust/benches/*` target.
+
+use crate::util::Summary;
+use std::time::Instant;
+
+/// A bench runner collecting named measurements.
+pub struct Harness {
+    name: String,
+    quick: bool,
+    results: Vec<(String, Summary)>,
+}
+
+impl Harness {
+    /// Reads `SUPERLIP_BENCH_QUICK=1` (or `--quick` in argv) to shrink
+    /// iteration counts.
+    pub fn new(name: &str) -> Self {
+        let quick = std::env::var("SUPERLIP_BENCH_QUICK").ok().as_deref() == Some("1")
+            || std::env::args().any(|a| a == "--quick");
+        println!("=== bench: {name}{} ===", if quick { " (quick)" } else { "" });
+        Harness {
+            name: name.to_string(),
+            quick,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn is_quick(&self) -> bool {
+        self.quick
+    }
+
+    /// Time `f` over `iters` iterations (after `warmup` runs); records and
+    /// prints mean ± σ in ms.
+    pub fn measure<F: FnMut()>(&mut self, label: &str, mut f: F) {
+        let (warmup, iters) = if self.quick { (1, 3) } else { (3, 15) };
+        for _ in 0..warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        let s = Summary::of(&samples);
+        println!(
+            "  {label:<44} {:>10.3} ms ± {:>7.3} (n={})",
+            s.mean,
+            s.stddev,
+            s.len()
+        );
+        self.results.push((label.to_string(), s));
+    }
+
+    /// Record an externally computed scalar (e.g. simulated cycles) so it
+    /// appears in the bench output stream.
+    pub fn record(&mut self, label: &str, value: f64, unit: &str) {
+        println!("  {label:<44} {value:>12.3} {unit}");
+    }
+
+    /// Print a free-form block (a reproduced table) into the bench output.
+    pub fn table(&mut self, caption: &str, body: &str) {
+        println!("\n--- {caption} ---\n{body}");
+    }
+
+    /// Footer.
+    pub fn finish(self) {
+        println!("=== end bench: {} ===\n", self.name);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_runs_and_records() {
+        std::env::set_var("SUPERLIP_BENCH_QUICK", "1");
+        let mut h = Harness::new("self-test");
+        let mut count = 0u64;
+        h.measure("noop", || {
+            count += 1;
+        });
+        // 1 warmup + 3 iters in quick mode.
+        assert_eq!(count, 4);
+        assert_eq!(h.results.len(), 1);
+        h.record("cycles", 123.0, "kcyc");
+        h.finish();
+        std::env::remove_var("SUPERLIP_BENCH_QUICK");
+    }
+}

@@ -1,0 +1,136 @@
+//! Hand-rolled CLI argument parsing (no clap in the offline image).
+//!
+//! Grammar: `superlip <command> [--flag value]... [--switch]...`
+
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self> {
+        let mut it = args.into_iter().peekable();
+        let command = it.next().unwrap_or_default();
+        let mut flags = BTreeMap::new();
+        let mut switches = Vec::new();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // `--key value` or `--key=value` or bare switch.
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    switches.push(name.to_string());
+                }
+            } else {
+                return Err(Error::InvalidArg(format!("unexpected argument: {a}")));
+            }
+        }
+        Ok(Args {
+            command,
+            flags,
+            switches,
+        })
+    }
+
+    /// From the process's argv.
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+
+    pub fn flag_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::InvalidArg(format!("--{name} {v}: {e}"))),
+        }
+    }
+
+    pub fn flag_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::InvalidArg(format!("--{name} {v}: {e}"))),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+/// Parse a precision flag value.
+pub fn parse_precision(s: &str) -> Result<crate::platform::Precision> {
+    match s.to_ascii_lowercase().as_str() {
+        "f32" | "float32" | "float" => Ok(crate::platform::Precision::Float32),
+        "fx16" | "fixed16" | "fixed" | "int16" => Ok(crate::platform::Precision::Fixed16),
+        other => Err(Error::InvalidArg(format!("unknown precision: {other}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::Precision;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_flags_and_switches() {
+        let a = parse("scale --net yolo --max-fpgas 16 --quiet");
+        assert_eq!(a.command, "scale");
+        assert_eq!(a.flag("net"), Some("yolo"));
+        assert_eq!(a.flag_u64("max-fpgas", 4).unwrap(), 16);
+        assert!(a.has("quiet"));
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("plan --net=vgg16 --fpgas=4");
+        assert_eq!(a.flag("net"), Some("vgg16"));
+        assert_eq!(a.flag_u64("fpgas", 1).unwrap(), 4);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("plan");
+        assert_eq!(a.flag_or("net", "alexnet"), "alexnet");
+        assert_eq!(a.flag_u64("fpgas", 2).unwrap(), 2);
+        assert!((a.flag_f64("rate", 1.5).unwrap() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bad_input_rejected() {
+        assert!(Args::parse(vec!["plan".into(), "stray".into()]).is_err());
+        let a = parse("plan --fpgas x");
+        assert!(a.flag_u64("fpgas", 1).is_err());
+    }
+
+    #[test]
+    fn precision_parse() {
+        assert_eq!(parse_precision("f32").unwrap(), Precision::Float32);
+        assert_eq!(parse_precision("FIXED16").unwrap(), Precision::Fixed16);
+        assert!(parse_precision("int8").is_err());
+    }
+}

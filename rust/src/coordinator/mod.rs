@@ -1,0 +1,199 @@
+//! The Super-LIP coordinator (Figure 1 end-to-end): given a DNN and a
+//! cluster size, explore the accelerator design space (①–③), choose the
+//! partition + XFER deployment (④–⑥), and report the predicted/simulated
+//! latency, throughput and energy efficiency. The serving path
+//! (`serving::Server`) is wired to this plan in the examples/CLI.
+
+use crate::analytic::{self, check_feasible, detect, Bottleneck, Design, XferMode};
+use crate::dse;
+use crate::energy::{self, PowerModel};
+use crate::model::Network;
+use crate::partition::Factors;
+use crate::platform::{FpgaSpec, Precision};
+use crate::sim::{self, SimConfig};
+use crate::Result;
+
+/// A complete deployment plan for one network on one cluster.
+#[derive(Debug, Clone)]
+pub struct DeploymentPlan {
+    pub network: String,
+    pub precision: Precision,
+    pub n_fpgas: u64,
+    /// Uniform accelerator design (cross-layer, §4.6).
+    pub design: Design,
+    /// Partition factors (§4.2/§4.4).
+    pub factors: Factors,
+    /// Analytic latency (cycles / ms), eqs 8–22.
+    pub model_cycles: u64,
+    pub model_ms: f64,
+    /// Simulated ("on-board") latency.
+    pub sim_cycles: u64,
+    pub sim_ms: f64,
+    /// Throughput at batch 1 (GOPS).
+    pub gops: f64,
+    /// Cluster power (W) and energy efficiency (GOPS/W).
+    pub watts: f64,
+    pub gops_per_watt: f64,
+    /// Dominant bottleneck of the worst layer under the plan.
+    pub bottleneck: Bottleneck,
+    /// Eq 22 satisfied on every layer (always true for emitted plans).
+    pub bandwidth_ok: bool,
+}
+
+/// The Super-LIP framework entry point.
+pub struct SuperLip {
+    pub fpga: FpgaSpec,
+    pub sim_cfg: SimConfig,
+}
+
+impl Default for SuperLip {
+    fn default() -> Self {
+        let fpga = FpgaSpec::zcu102();
+        let sim_cfg = SimConfig::zcu102(&fpga);
+        SuperLip { fpga, sim_cfg }
+    }
+}
+
+impl SuperLip {
+    /// Full planning pipeline: cross-layer DSE → partition search → XFER →
+    /// simulate → energy.
+    ///
+    /// The design and partition are **co-optimized** for the target cluster
+    /// size: the single-FPGA optimum is usually compute-bound (nothing for
+    /// XFER to relieve, ~linear scaling), while a slightly slower
+    /// memory-bound sibling scales super-linearly. We therefore rank the
+    /// top cross-layer designs by single-FPGA latency and pick the one with
+    /// the best *cluster* latency at `n_fpgas`.
+    pub fn plan(&self, net: &Network, p: Precision, n_fpgas: u64) -> Result<DeploymentPlan> {
+        let (top, _stats, _elapsed) = dse::top_uniform_designs(net, &self.fpga, p, 32);
+        let mut best: Option<(Design, u64)> = None;
+        for (d, _single) in &top {
+            let (_, cycles) = dse::best_factors(net, d, &self.fpga, n_fpgas, XferMode::Xfer);
+            if best.map(|(_, b)| cycles < b).unwrap_or(true) {
+                best = Some((*d, cycles));
+            }
+        }
+        let (design, _) = best.expect("top designs non-empty");
+        self.plan_with_design(net, design, n_fpgas)
+    }
+
+    /// Planning with a fixed accelerator design (the Figure 15 protocol:
+    /// keep the single-FPGA-optimal tiling, scale partitions).
+    pub fn plan_with_design(
+        &self,
+        net: &Network,
+        design: Design,
+        n_fpgas: u64,
+    ) -> Result<DeploymentPlan> {
+        let k_max = net.conv_layers().map(|l| l.k).max().unwrap_or(1);
+        let usage = check_feasible(&design, &self.fpga, k_max)?;
+
+        let (factors, model_cycles) =
+            dse::best_factors(net, &design, &self.fpga, n_fpgas, XferMode::Xfer);
+
+        let simr = sim::simulate_network(
+            net,
+            &design,
+            &factors,
+            &self.fpga,
+            &self.sim_cfg,
+            XferMode::Xfer,
+        );
+
+        let p = design.precision;
+        let total_ops: u64 = net.conv_layers().map(|l| l.ops()).sum();
+        let gops = energy::gops(total_ops, simr.cycles, p);
+        let power = PowerModel::new(n_fpgas);
+        let watts = power.watts(&design, &usage);
+
+        // Worst layer's bottleneck under the final plan.
+        let bottleneck = net
+            .conv_layers()
+            .map(|l| analytic::xfer_layer_latency(l, &design, &factors, &self.fpga, XferMode::Xfer))
+            .max_by_key(|c| c.worst.lat)
+            .map(|c| detect(&c.worst))
+            .unwrap_or(Bottleneck::Compute);
+
+        Ok(DeploymentPlan {
+            network: net.name.clone(),
+            precision: p,
+            n_fpgas,
+            design,
+            factors,
+            model_cycles,
+            model_ms: p.cycles_to_ms(model_cycles),
+            sim_cycles: simr.cycles,
+            sim_ms: p.cycles_to_ms(simr.cycles),
+            gops,
+            watts,
+            gops_per_watt: gops / watts,
+            bottleneck,
+            bandwidth_ok: simr.bandwidth_ok,
+        })
+    }
+}
+
+impl DeploymentPlan {
+    /// One-paragraph human summary (CLI / examples).
+    pub fn summary(&self) -> String {
+        format!(
+            "{} [{}] on {} FPGA(s): design {}, partition {}\n  model: {} cycles ({:.2} ms)  sim: {} cycles ({:.2} ms)\n  {:.1} GOPS @ {:.1} W = {:.2} GOPS/W; bottleneck: {}; eq22 ok: {}",
+            self.network,
+            self.precision.name(),
+            self.n_fpgas,
+            self.design,
+            self.factors,
+            self.model_cycles,
+            self.model_ms,
+            self.sim_cycles,
+            self.sim_ms,
+            self.gops,
+            self.watts,
+            self.gops_per_watt,
+            self.bottleneck.label(),
+            self.bandwidth_ok,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn plan_with_design_end_to_end() {
+        let slip = SuperLip::default();
+        let net = zoo::alexnet();
+        let d = Design::fixed16(128, 10, 7, 14);
+        let p1 = slip.plan_with_design(&net, d, 1).unwrap();
+        let p2 = slip.plan_with_design(&net, d, 2).unwrap();
+        assert!(p2.sim_cycles < p1.sim_cycles);
+        // Headline: super-linear at 2 FPGAs.
+        let speedup = p1.sim_cycles as f64 / p2.sim_cycles as f64;
+        assert!(speedup > 2.0, "speedup = {speedup}");
+        // Model within a few % of sim.
+        let dev = (p1.sim_cycles as f64 - p1.model_cycles as f64).abs() / p1.sim_cycles as f64;
+        assert!(dev < 0.06, "model-vs-sim dev = {dev}");
+        assert!(p2.bandwidth_ok);
+        assert!(p2.gops_per_watt > 0.0);
+        assert!(!p2.summary().is_empty());
+    }
+
+    #[test]
+    fn infeasible_design_rejected() {
+        let slip = SuperLip::default();
+        let net = zoo::alexnet();
+        let d = Design::fixed16(512, 64, 13, 13);
+        assert!(slip.plan_with_design(&net, d, 2).is_err());
+    }
+
+    #[test]
+    fn full_plan_runs_dse() {
+        let slip = SuperLip::default();
+        let net = zoo::alexnet();
+        let plan = slip.plan(&net, Precision::Fixed16, 2).unwrap();
+        assert_eq!(plan.n_fpgas, 2);
+        assert!(plan.sim_ms < 10.0, "AlexNet fx16 2-FPGA should be fast: {} ms", plan.sim_ms);
+    }
+}

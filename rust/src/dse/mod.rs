@@ -1,0 +1,14 @@
+//! Design-space exploration (Figure 1 ①–⑥): per-layer and cross-layer
+//! tiling search (the INLP of eq 15, solved by pruned enumeration over
+//! ceil-efficient candidates), partition-factor search per cluster size,
+//! and the Figure 2 roofline scatter.
+
+mod cross_layer;
+mod pareto;
+mod partition_search;
+mod tiling;
+
+pub use cross_layer::{best_uniform_design, top_uniform_designs, CrossLayerResult};
+pub use pareto::{roofline_scatter, ScatterPoint};
+pub use partition_search::{best_factors, scaling_curve, ScalePoint};
+pub use tiling::{best_layer_design, candidate_tiles, stream_presets, SearchStats};

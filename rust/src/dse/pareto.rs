@@ -1,0 +1,91 @@
+//! The Figure 2 roofline scatter: for each design point, the [14] model's
+//! predicted performance vs the accurate model's (and, via `sim`, the
+//! "on-board" measurement the paper overlays).
+
+use super::tiling::candidate_tiles;
+use crate::analytic::{baseline, check_feasible, layer_latency, Design};
+use crate::model::ConvLayer;
+use crate::platform::{FpgaSpec, Precision};
+
+/// One design point in the Figure 2 scatter.
+#[derive(Debug, Clone, Copy)]
+pub struct ScatterPoint {
+    pub design: Design,
+    /// Computation-to-communication ratio (x-axis of [14]'s roofline).
+    pub ctc: f64,
+    /// [14]'s attainable GOPS (the model the paper calls inaccurate).
+    pub roofline_gops: f64,
+    /// Our accurate model's GOPS.
+    pub accurate_gops: f64,
+}
+
+/// Enumerate the roofline scatter for one layer, fixed streams per the
+/// paper's §5A presets.
+pub fn roofline_scatter(layer: &ConvLayer, fpga: &FpgaSpec, p: Precision) -> Vec<ScatterPoint> {
+    let bus_words = fpga.mem_bus_bits / p.bits();
+    let mut out = Vec::new();
+    for &tm in &candidate_tiles(layer.m_per_group()) {
+        for &tn in &candidate_tiles(layer.n_per_group()) {
+            let d = match p {
+                Precision::Float32 => Design::float32(tm, tn, layer.r, layer.c),
+                Precision::Fixed16 => Design::fixed16(tm, tn, layer.r, layer.c),
+            };
+            if check_feasible(&d, fpga, layer.k).is_err() {
+                continue;
+            }
+            let pred = baseline::fpga15_latency(layer, &d, bus_words);
+            let ours = layer_latency(layer, &d);
+            let secs_theirs = p.cycles_to_s(pred.cycles);
+            let secs_ours = p.cycles_to_s(ours.lat);
+            out.push(ScatterPoint {
+                design: d,
+                ctc: pred.ctc,
+                roofline_gops: layer.ops() as f64 / secs_theirs / 1e9,
+                accurate_gops: layer.ops() as f64 / secs_ours / 1e9,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    fn conv5() -> ConvLayer {
+        zoo::alexnet().layers[4].clone()
+    }
+
+    #[test]
+    fn scatter_nonempty_and_bounded() {
+        let pts = roofline_scatter(&conv5(), &FpgaSpec::zcu102(), Precision::Float32);
+        assert!(pts.len() > 20, "{} points", pts.len());
+        for p in &pts {
+            assert!(p.roofline_gops >= p.accurate_gops * 0.999,
+                "roofline is an upper bound: {:?}", p);
+            assert!(p.accurate_gops > 0.0);
+        }
+    }
+
+    #[test]
+    fn best_roofline_point_differs_from_best_accurate() {
+        // Figure 2's observation: design A (best under [14]'s model) is
+        // inferior to design B in real performance — i.e. the two models
+        // rank the frontier differently.
+        let pts = roofline_scatter(&conv5(), &FpgaSpec::zcu102(), Precision::Float32);
+        let best_roof = pts
+            .iter()
+            .max_by(|a, b| a.roofline_gops.total_cmp(&b.roofline_gops))
+            .unwrap();
+        let best_acc = pts
+            .iter()
+            .max_by(|a, b| a.accurate_gops.total_cmp(&b.accurate_gops))
+            .unwrap();
+        // The roofline's favourite must be over-promised: its accurate GOPS
+        // is strictly below its roofline GOPS.
+        assert!(best_roof.accurate_gops < best_roof.roofline_gops * 0.99
+            || best_roof.design != best_acc.design,
+            "roofline and accurate model agree everywhere — Figure 2 shape lost");
+    }
+}

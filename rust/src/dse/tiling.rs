@@ -1,0 +1,178 @@
+//! Per-layer tiling search: minimize eq 14 subject to eqs 1–7.
+//!
+//! The search space is pruned to **ceil-efficient** tile candidates: for a
+//! dimension of size `D`, only tiles `t = ⌈D/k⌉` for each possible trip
+//! count `k` matter — any tile strictly between two such values wastes
+//! resources without reducing any trip count. This collapses the INLP to
+//! ~(2√D)⁴ cheap evaluations, which is why the paper's "3 minutes per
+//! layer" becomes milliseconds here (EXPERIMENTS.md §Perf).
+
+use crate::analytic::{is_feasible, layer_latency, Design, LayerLatency};
+use crate::model::ConvLayer;
+use crate::platform::{FpgaSpec, Precision};
+
+/// Search effort statistics (the paper's Table 1 "Elap." column analog).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SearchStats {
+    /// Candidate designs evaluated.
+    pub evaluated: u64,
+    /// Candidates rejected by eqs 1–7 before latency evaluation.
+    pub infeasible: u64,
+}
+
+/// Ceil-efficient tile candidates for a dimension of size `d`.
+pub fn candidate_tiles(d: u64) -> Vec<u64> {
+    let mut c: Vec<u64> = (1..=d).map(|k| d.div_ceil(k)).collect();
+    c.sort_unstable();
+    c.dedup();
+    c
+}
+
+/// Stream-width presets ⟨Ip,Wp,Op⟩ explored per precision.
+///
+/// Latency is monotone non-increasing in each stream width (eqs 8–10) and
+/// eq 7 is the only coupling, so only the **maximal** elements of the
+/// power-of-two ladder under the bus budget can be optimal; dominated
+/// combinations are pruned (EXPERIMENTS.md §Perf/L3 quantifies the win).
+pub fn stream_presets(p: Precision, fpga: &FpgaSpec) -> Vec<(u64, u64, u64)> {
+    let max_streams = fpga.max_streams(p);
+    let ladder = [1u64, 2, 4, 8, 16];
+    let mut all = Vec::new();
+    for &ip in &ladder {
+        for &wp in &ladder {
+            for &op in &ladder {
+                if ip + wp + op <= max_streams {
+                    all.push((ip, wp, op));
+                }
+            }
+        }
+    }
+    // Keep only non-dominated combinations.
+    let mut out: Vec<(u64, u64, u64)> = all
+        .iter()
+        .copied()
+        .filter(|&(i, w, o)| {
+            !all.iter().any(|&(i2, w2, o2)| {
+                (i2, w2, o2) != (i, w, o) && i2 >= i && w2 >= w && o2 >= o
+            })
+        })
+        .collect();
+    out.sort_unstable();
+    out
+}
+
+/// Exhaustive pruned search for the best design for one layer.
+/// Returns the design, its latency breakdown, and search statistics.
+pub fn best_layer_design(
+    layer: &ConvLayer,
+    fpga: &FpgaSpec,
+    p: Precision,
+) -> (Design, LayerLatency, SearchStats) {
+    let tm_c = candidate_tiles(layer.m_per_group());
+    let tn_c = candidate_tiles(layer.n_per_group());
+    let tr_c = candidate_tiles(layer.r);
+    let tc_c = candidate_tiles(layer.c);
+    let streams = stream_presets(p, fpga);
+    let max_macs = fpga.max_macs(p);
+
+    let mut stats = SearchStats::default();
+    let mut best: Option<(Design, LayerLatency)> = None;
+
+    for &tm in &tm_c {
+        for &tn in &tn_c {
+            if tm * tn > max_macs {
+                stats.infeasible += 1;
+                continue; // eq 1/2 — prune before inner loops
+            }
+            for &tr in &tr_c {
+                for &tc in &tc_c {
+                    for &(ip, wp, op) in &streams {
+                        let d = Design {
+                            tm,
+                            tn,
+                            tr,
+                            tc,
+                            ip,
+                            wp,
+                            op,
+                            precision: p,
+                        };
+                        if !is_feasible(&d, fpga, layer.k) {
+                            stats.infeasible += 1;
+                            continue;
+                        }
+                        stats.evaluated += 1;
+                        let ll = layer_latency(layer, &d);
+                        if best.as_ref().map(|(_, b)| ll.lat < b.lat).unwrap_or(true) {
+                            best = Some((d, ll));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    let (d, ll) = best.expect("search space non-empty");
+    (d, ll, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytic::{check_feasible, detect, Bottleneck};
+    use crate::model::zoo;
+
+    #[test]
+    fn candidates_are_ceil_efficient() {
+        let c = candidate_tiles(13);
+        assert_eq!(c, vec![1, 2, 3, 4, 5, 7, 13]);
+        // Every candidate is ⌈13/k⌉ for some k, and 13 itself is included.
+        assert!(c.contains(&13));
+    }
+
+    #[test]
+    fn stream_presets_respect_bus_and_are_maximal() {
+        let f = FpgaSpec::zcu102();
+        for p in [Precision::Float32, Precision::Fixed16] {
+            let presets = stream_presets(p, &f);
+            assert!(!presets.is_empty());
+            for &(ip, wp, op) in &presets {
+                assert!((ip + wp + op) * p.bits() <= f.mem_bus_bits, "eq 7");
+                // No preset dominates another (they'd be redundant).
+                assert!(!presets.iter().any(|&(i2, w2, o2)| {
+                    (i2, w2, o2) != (ip, wp, op) && i2 >= ip && w2 >= wp && o2 >= op
+                }));
+            }
+            // A weight-heavy maximal combo exists (the paper's Wp-rich
+            // ⟨4,8,4⟩ direction survives as its dominating ⟨8,16,8⟩ /
+            // ⟨4,8,4⟩-style point).
+            assert!(presets.iter().any(|&(i, w, _)| w > i));
+        }
+    }
+
+    #[test]
+    fn best_design_feasible_and_beats_naive() {
+        let l = zoo::alexnet().layers[4].clone(); // conv5
+        let f = FpgaSpec::zcu102();
+        let (d, ll, stats) = best_layer_design(&l, &f, Precision::Fixed16);
+        assert!(check_feasible(&d, &f, l.k).is_ok());
+        assert!(stats.evaluated > 100);
+        // Must beat a deliberately poor design.
+        let naive = layer_latency(&l, &Design::fixed16(4, 4, 4, 4));
+        assert!(ll.lat < naive.lat);
+    }
+
+    #[test]
+    fn optimal_design_is_compute_bound_or_frontier() {
+        // On a well-provisioned platform the optimum should have no slack:
+        // it is compute-bound, or every resource direction is exhausted.
+        let l = zoo::alexnet().layers[2].clone(); // conv3
+        let f = FpgaSpec::zcu102();
+        let (_, ll, _) = best_layer_design(&l, &f, Precision::Fixed16);
+        let b = detect(&ll);
+        assert!(
+            b == Bottleneck::Compute || ll.lat1 > ll.t_comp,
+            "unexpected slack: {b:?} {ll:?}"
+        );
+    }
+}

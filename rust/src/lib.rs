@@ -1,0 +1,68 @@
+//! # Super-LIP — Super-Linear Speedup across Multi-FPGA for Real-Time DNN Inference
+//!
+//! A full reproduction of Jiang et al., *"Achieving Super-Linear Speedup across
+//! Multi-FPGA for Real-Time DNN Inference"* (CODES+ISSS / ACM TECS 2019,
+//! DOI 10.1145/3358192), built as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the Super-LIP framework: the paper's accurate
+//!   analytic accelerator model (§3, eqs 1–15), the XFER multi-FPGA partition
+//!   and traffic-offload design (§4, eqs 16–22), design-space exploration, a
+//!   cycle-level multi-FPGA cluster simulator standing in for the ZCU102
+//!   testbed, an energy model, and a real-time serving coordinator
+//!   (router → low-batch batcher → PJRT worker pool).
+//! * **L2 (python/compile/model.py)** — the CNN forward pass in JAX, lowered
+//!   once (AOT) to HLO text artifacts.
+//! * **L1 (python/compile/kernels/)** — the tiled convolution hot-spot as a
+//!   Pallas kernel whose BlockSpec grid mirrors the paper's ⟨Tm,Tn,Tr,Tc⟩
+//!   accelerator tiling.
+//!
+//! Python never runs on the request path: `runtime` loads the AOT artifacts
+//! through the PJRT C API (`xla` crate) and the rust coordinator owns the
+//! event loop.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index
+//! mapping every table/figure of the paper to a bench target.
+
+pub mod analytic;
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod dse;
+pub mod energy;
+pub mod model;
+pub mod partition;
+pub mod platform;
+pub mod report;
+pub mod runtime;
+pub mod serving;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// A design violates a platform resource constraint (eqs 1–7, 22).
+    #[error("infeasible design: {0}")]
+    Infeasible(String),
+    /// Bad user/config input.
+    #[error("invalid argument: {0}")]
+    InvalidArg(String),
+    /// PJRT / XLA runtime failure.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    /// Serving-path failure (queue closed, worker died, ...).
+    #[error("serving error: {0}")]
+    Serving(String),
+    /// I/O failure (artifacts, reports).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}

@@ -1,0 +1,249 @@
+//! `superlip` — the Super-LIP leader binary.
+//!
+//! Commands:
+//!   plan      plan a deployment (DSE → partition → XFER → sim → energy)
+//!   dse       per-layer + cross-layer design-space exploration
+//!   scale     Figure 15 scaling sweep for one network
+//!   validate  model-vs-simulator accuracy (Figure 14 / Table 4 style)
+//!   serve     end-to-end real-time serving over the PJRT artifacts
+//!   tables    regenerate the paper's headline comparisons quickly
+
+use std::time::{Duration, Instant};
+use superlip::analytic::{detect, Design, XferMode};
+use superlip::cli::{parse_precision, Args};
+use superlip::coordinator::SuperLip;
+use superlip::model::zoo;
+use superlip::platform::Precision;
+use superlip::report::{self, Table};
+use superlip::runtime::{ModelExecutor, PjrtRuntime};
+use superlip::serving::{Server, ServerConfig};
+use superlip::util::SplitMix64;
+use superlip::{dse, Error, Result};
+
+fn main() {
+    let code = match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_str() {
+        "plan" => cmd_plan(&args),
+        "dse" => cmd_dse(&args),
+        "scale" => cmd_scale(&args),
+        "validate" => cmd_validate(),
+        "serve" => cmd_serve(&args),
+        "tables" => cmd_tables(),
+        "" | "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => Err(Error::InvalidArg(format!(
+            "unknown command `{other}` (see `superlip help`)"
+        ))),
+    }
+}
+
+const HELP: &str = "superlip — Super-LIP multi-FPGA DNN inference framework
+
+USAGE: superlip <command> [--flags]
+
+COMMANDS:
+  plan      --net <alexnet|squeezenet|vgg16|yolo> --fpgas N --precision <f32|fx16>
+  dse       --net <name> --precision <f32|fx16>
+  scale     --net <name> --max-fpgas N [--precision fx16]
+  validate
+  serve     --artifacts <dir> --requests N --rate RPS --replicas N
+  tables
+";
+
+fn net_arg(args: &Args) -> Result<superlip::model::Network> {
+    let name = args.flag_or("net", "alexnet");
+    zoo::by_name(name).ok_or_else(|| Error::InvalidArg(format!("unknown network: {name}")))
+}
+
+fn precision_arg(args: &Args) -> Result<Precision> {
+    parse_precision(args.flag_or("precision", "fx16"))
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let net = net_arg(args)?;
+    let p = precision_arg(args)?;
+    let n = args.flag_u64("fpgas", 2)?;
+    let slip = SuperLip::default();
+    let plan = slip.plan(&net, p, n)?;
+    println!("{}", plan.summary());
+    Ok(())
+}
+
+fn cmd_dse(args: &Args) -> Result<()> {
+    let net = net_arg(args)?;
+    let p = precision_arg(args)?;
+    let slip = SuperLip::default();
+    let mut t = Table::new(&["Layer", "Tm", "Tn", "Tr", "Tc", "kcycles", "Bound"]);
+    let t0 = Instant::now();
+    for l in net.conv_layers() {
+        let (d, ll, _) = dse::best_layer_design(l, &slip.fpga, p);
+        t.row(&[
+            l.name.clone(),
+            d.tm.to_string(),
+            d.tn.to_string(),
+            d.tr.to_string(),
+            d.tc.to_string(),
+            report::kcycles(ll.lat),
+            detect(&ll).label().to_string(),
+        ]);
+    }
+    let uni = dse::best_uniform_design(&net, &slip.fpga, p);
+    println!("{}", t.render());
+    println!(
+        "cross-layer uniform: {} — {} kcycles (elapsed {:.2}s; per-layer+uniform total {:.2}s)",
+        uni.design,
+        uni.cycles / 1000,
+        uni.elapsed_s,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_scale(args: &Args) -> Result<()> {
+    let net = net_arg(args)?;
+    let p = precision_arg(args)?;
+    let max = args.flag_u64("max-fpgas", 16)?;
+    let slip = SuperLip::default();
+    let uni = dse::best_uniform_design(&net, &slip.fpga, p);
+    let sizes: Vec<u64> = (1..=max).filter(|n| max % n == 0 || *n <= 4).collect();
+    let mut t = Table::new(&["FPGAs", "Partition", "kcycles", "ms", "Speedup"]);
+    for pt in dse::scaling_curve(&net, &uni.design, &slip.fpga, &sizes, XferMode::Xfer) {
+        t.row(&[
+            pt.n_fpgas.to_string(),
+            pt.factors.to_string(),
+            report::kcycles(pt.cycles),
+            report::ms(p.cycles_to_ms(pt.cycles)),
+            report::speedup(pt.speedup),
+        ]);
+    }
+    println!("{} ({}, design {})", net.name, p.name(), uni.design);
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_validate() -> Result<()> {
+    let slip = SuperLip::default();
+    let net = zoo::alexnet();
+    let mut t = Table::new(&["Design", "Model kcyc", "Sim kcyc", "Deviation"]);
+    for (tm, tn) in [(12u64, 16u64), (10, 22), (8, 32)] {
+        let d = Design::float32(tm, tn, 13, 13);
+        let model: u64 = superlip::analytic::network_latency(&net, &d);
+        let sim = superlip::sim::simulate_network(
+            &net,
+            &d,
+            &superlip::partition::Factors::single(),
+            &slip.fpga,
+            &slip.sim_cfg,
+            XferMode::Xfer,
+        )
+        .cycles;
+        t.row(&[
+            format!("<{tm},{tn}>"),
+            report::kcycles(model),
+            report::kcycles(sim),
+            report::pct((sim as f64 - model as f64).abs() / sim as f64),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.flag_or("artifacts", "artifacts"));
+    let n_requests = args.flag_u64("requests", 200)? as usize;
+    let rate = args.flag_f64("rate", 200.0)?;
+    let replicas = args.flag_u64("replicas", 2)? as usize;
+
+    // Probe the runtime + artifacts up front for a friendly error, then
+    // hand each worker a factory (PJRT handles are not Send).
+    let rt = PjrtRuntime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    drop(ModelExecutor::load(&rt, &dir)?);
+    drop(rt);
+    let factories: Vec<superlip::serving::BackendFactory> = (0..replicas)
+        .map(|_| {
+            let dir = dir.clone();
+            Box::new(move || {
+                let rt = PjrtRuntime::cpu()?;
+                Ok(Box::new(ModelExecutor::load(&rt, &dir)?)
+                    as Box<dyn superlip::serving::InferBackend>)
+            }) as superlip::serving::BackendFactory
+        })
+        .collect();
+    let image_elems = 3 * 32 * 32;
+    let server = Server::start(factories, ServerConfig::default());
+
+    // Warmup barrier: workers compile their executables lazily; wait until
+    // one answers before starting the measured run (the paper likewise
+    // measures "after the process of the first image", §5B).
+    let warm = server.submit(vec![0.0; image_elems])?;
+    warm.recv()
+        .map_err(|e| Error::Serving(format!("warmup failed: {e}")))?;
+    server.metrics().reset();
+    println!("warmup complete; starting measured run");
+
+    let mut rng = SplitMix64::new(2026);
+    let mut rxs = Vec::with_capacity(n_requests);
+    let t0 = Instant::now();
+    for _ in 0..n_requests {
+        let img: Vec<f32> = (0..image_elems).map(|_| rng.signed_unit()).collect();
+        rxs.push(server.submit(img)?);
+        std::thread::sleep(Duration::from_secs_f64(rng.exp(1.0 / rate)));
+    }
+    for rx in rxs {
+        rx.recv()
+            .map_err(|e| Error::Serving(format!("worker dropped: {e}")))?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = server.shutdown();
+    let s = m.latency_summary().expect("served requests");
+    println!(
+        "served {} requests in {:.2}s ({:.1} req/s): p50 {:.2} ms  p99 {:.2} ms  mean batch {:.2}  deadline misses {}",
+        m.completed(),
+        wall,
+        m.completed() as f64 / wall,
+        s.p50(),
+        s.p99(),
+        m.mean_batch(),
+        m.deadline_misses()
+    );
+    Ok(())
+}
+
+fn cmd_tables() -> Result<()> {
+    // Quick headline reproduction: Table 3's speedup + EE improvements.
+    let slip = SuperLip::default();
+    let net = zoo::alexnet();
+    let mut t = Table::new(&["Design", "Precision", "FPGAs", "Lat(ms)", "GOPS", "GOPS/W"]);
+    for (label, d, n) in [
+        ("FPGA15", Design::float32(64, 7, 7, 14), 1u64),
+        ("Super-LIP", Design::float32(64, 7, 7, 14), 2),
+        ("FPGA15", Design::fixed16(64, 24, 7, 14), 1),
+        ("Super-LIP", Design::fixed16(128, 10, 7, 14), 2),
+    ] {
+        let plan = slip.plan_with_design(&net, d, n)?;
+        t.row(&[
+            label.to_string(),
+            d.precision.name().to_string(),
+            n.to_string(),
+            report::ms(plan.sim_ms),
+            report::gops(plan.gops),
+            format!("{:.2}", plan.gops_per_watt),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,144 @@
+//! The layer model (paper §3 ①).
+
+/// What a layer computes. Only convolutions occupy the accelerator's MAC
+/// array; pooling/activation are streamed on the fly (as in [14] and the
+/// paper's testbed) and charged zero accelerator cycles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Standard (possibly grouped) convolution.
+    Conv,
+    /// Fully-connected layer expressed as a 1×1 convolution over a 1×1 map.
+    FullyConnected,
+}
+
+/// A convolutional layer `L = ⟨B, M, N, R, C, K⟩` (Figure 4) plus stride and
+/// groups.
+///
+/// * `b` — batch size (real-time inference uses `b = 1`).
+/// * `m` — number of OFM channels.
+/// * `n` — number of IFM channels.
+/// * `r`, `c` — rows/columns of the **output** feature map.
+/// * `k` — kernel size (K×K).
+/// * `s` — stride.
+/// * `groups` — convolution groups (AlexNet conv2/4/5 are 2-group).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConvLayer {
+    pub name: String,
+    pub kind: LayerKind,
+    pub b: u64,
+    pub m: u64,
+    pub n: u64,
+    pub r: u64,
+    pub c: u64,
+    pub k: u64,
+    pub s: u64,
+    pub groups: u64,
+}
+
+impl ConvLayer {
+    /// Plain stride-1 ungrouped conv layer.
+    pub fn conv(name: &str, b: u64, m: u64, n: u64, r: u64, c: u64, k: u64) -> Self {
+        Self::strided(name, b, m, n, r, c, k, 1)
+    }
+
+    /// Conv layer with explicit stride.
+    #[allow(clippy::too_many_arguments)]
+    pub fn strided(name: &str, b: u64, m: u64, n: u64, r: u64, c: u64, k: u64, s: u64) -> Self {
+        ConvLayer {
+            name: name.to_string(),
+            kind: LayerKind::Conv,
+            b,
+            m,
+            n,
+            r,
+            c,
+            k,
+            s,
+            groups: 1,
+        }
+    }
+
+    /// Grouped variant (`n` is the FULL input channel count; each group sees
+    /// `n / groups` channels).
+    pub fn grouped(mut self, groups: u64) -> Self {
+        assert!(groups > 0 && self.n % groups == 0 && self.m % groups == 0);
+        self.groups = groups;
+        self
+    }
+
+    /// IFM channels seen by one group — the `N` that enters the tiling loops.
+    pub fn n_per_group(&self) -> u64 {
+        self.n / self.groups
+    }
+
+    /// OFM channels produced by one group — the `M` that enters the tiling
+    /// loops.
+    pub fn m_per_group(&self) -> u64 {
+        self.m / self.groups
+    }
+
+    /// Number of input rows/cols needed (for IFM size accounting).
+    pub fn input_rows(&self) -> u64 {
+        (self.r - 1) * self.s + self.k
+    }
+    pub fn input_cols(&self) -> u64 {
+        (self.c - 1) * self.s + self.k
+    }
+
+    /// Multiply-accumulate count for the whole layer (all groups, all
+    /// batches).
+    pub fn macs(&self) -> u64 {
+        self.b * self.m * self.n_per_group() * self.r * self.c * self.k * self.k
+    }
+
+    /// Operation count as commonly reported (2 ops per MAC).
+    pub fn ops(&self) -> u64 {
+        2 * self.macs()
+    }
+
+    /// Total weights (elements).
+    pub fn weight_elems(&self) -> u64 {
+        self.m * self.n_per_group() * self.k * self.k
+    }
+
+    /// Total OFM elements.
+    pub fn ofm_elems(&self) -> u64 {
+        self.b * self.m * self.r * self.c
+    }
+
+    /// Total IFM elements (with halo per stride/kernel).
+    pub fn ifm_elems(&self) -> u64 {
+        self.b * self.n * self.input_rows() * self.input_cols()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alexnet_conv1_counts() {
+        // conv1: 96×3×55×55, K=11, S=4 — the classic 105M MACs.
+        let l = ConvLayer::strided("conv1", 1, 96, 3, 55, 55, 11, 4);
+        assert_eq!(l.macs(), 96 * 3 * 55 * 55 * 11 * 11);
+        assert_eq!(l.ops(), 2 * l.macs());
+        assert_eq!(l.input_rows(), 54 * 4 + 11);
+    }
+
+    #[test]
+    fn grouped_conv_halves_macs() {
+        let full = ConvLayer::conv("x", 1, 256, 96, 27, 27, 5);
+        let grp = ConvLayer::conv("x", 1, 256, 96, 27, 27, 5).grouped(2);
+        assert_eq!(grp.macs() * 2, full.macs());
+        assert_eq!(grp.n_per_group(), 48);
+        assert_eq!(grp.m_per_group(), 128);
+    }
+
+    #[test]
+    fn fc_as_conv() {
+        let mut l = ConvLayer::conv("fc6", 1, 4096, 9216, 1, 1, 1);
+        l.kind = LayerKind::FullyConnected;
+        assert_eq!(l.macs(), 4096 * 9216);
+        assert_eq!(l.weight_elems(), 4096 * 9216);
+    }
+}

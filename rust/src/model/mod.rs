@@ -1,0 +1,13 @@
+//! CNN workload descriptions (paper §3 ①, Figure 4).
+//!
+//! A CNN layer is `L = ⟨B, M, N, R, C, K⟩`: batch, OFM channels, IFM
+//! channels, OFM rows, OFM columns, kernel size. We extend the paper's tuple
+//! with stride and groups so the standard networks of the evaluation
+//! (AlexNet, SqueezeNet, VGG16, YOLOv1) can be described exactly.
+
+mod layer;
+mod network;
+pub mod zoo;
+
+pub use layer::{ConvLayer, LayerKind};
+pub use network::Network;

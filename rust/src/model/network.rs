@@ -1,0 +1,100 @@
+//! A network = an ordered stack of conv layers (the accelerator workload).
+
+use super::{ConvLayer, LayerKind};
+
+/// An ordered CNN conv-layer stack with workload accounting.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<ConvLayer>,
+}
+
+impl Network {
+    pub fn new(name: &str, layers: Vec<ConvLayer>) -> Self {
+        Network {
+            name: name.to_string(),
+            layers,
+        }
+    }
+
+    /// Total MACs across all layers.
+    pub fn macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Total ops (2/MAC), in GOP.
+    pub fn gops(&self) -> f64 {
+        self.layers.iter().map(|l| l.ops()).sum::<u64>() as f64 / 1e9
+    }
+
+    /// Only the convolution layers (the accelerator's work; FC layers are
+    /// small on these nets and the paper's tables cover conv1–conv5 etc.).
+    pub fn conv_layers(&self) -> impl Iterator<Item = &ConvLayer> {
+        self.layers.iter().filter(|l| l.kind == LayerKind::Conv)
+    }
+
+    /// Rescale the batch size on all layers (the paper runs B = 1).
+    pub fn with_batch(mut self, b: u64) -> Self {
+        for l in &mut self.layers {
+            l.b = b;
+        }
+        self
+    }
+
+    /// Largest IFM channel count — upper bound for the Tn search space.
+    pub fn max_n(&self) -> u64 {
+        self.layers.iter().map(|l| l.n_per_group()).max().unwrap_or(1)
+    }
+
+    /// Largest OFM channel count — upper bound for the Tm search space.
+    pub fn max_m(&self) -> u64 {
+        self.layers.iter().map(|l| l.m_per_group()).max().unwrap_or(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::model::zoo;
+
+    #[test]
+    fn alexnet_gops_in_expected_range() {
+        // AlexNet conv1–5 is ≈1.33 GOP; with FC layers ≈1.45 GOP. The paper's
+        // 149.54 GOPS at 10.13 ms implies it counts ≈1.51 GOP.
+        let net = zoo::alexnet();
+        let conv_gops: f64 = net.conv_layers().map(|l| l.ops() as f64).sum::<f64>() / 1e9;
+        assert!(
+            (1.2..1.5).contains(&conv_gops),
+            "alexnet conv gops = {conv_gops}"
+        );
+        assert!((1.3..1.6).contains(&net.gops()), "total = {}", net.gops());
+    }
+
+    #[test]
+    fn vgg16_gops() {
+        // VGG16 convs ≈ 30.7 GOP at 224×224.
+        let net = zoo::vgg16();
+        assert!((28.0..32.0).contains(&net.gops()), "vgg gops = {}", net.gops());
+    }
+
+    #[test]
+    fn yolov1_gops() {
+        // YOLOv1 is ≈ 40 GOP per 448×448 image (conv part dominates).
+        let net = zoo::yolov1();
+        assert!((35.0..45.0).contains(&net.gops()), "yolo gops = {}", net.gops());
+    }
+
+    #[test]
+    fn squeezenet_small() {
+        // SqueezeNet v1.0 ≈ 1.7 GOP; tiny weights (≈1.2M params).
+        let net = zoo::squeezenet();
+        assert!((1.2..2.2).contains(&net.gops()), "sq gops = {}", net.gops());
+        let w: u64 = net.layers.iter().map(|l| l.weight_elems()).sum();
+        assert!(w < 2_000_000, "squeezenet weights = {w}");
+    }
+
+    #[test]
+    fn batch_rescale() {
+        let net = zoo::alexnet().with_batch(4);
+        assert!(net.layers.iter().all(|l| l.b == 4));
+    }
+}

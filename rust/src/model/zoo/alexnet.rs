@@ -1,0 +1,51 @@
+//! AlexNet (Krizhevsky et al., NIPS'12) — the paper's primary workload
+//! (Tables 1–3). Single-tower layout, 227×227 input, grouped conv2/4/5.
+
+use crate::model::{ConvLayer, LayerKind, Network};
+
+/// AlexNet with batch size 1 (the real-time inference configuration).
+pub fn alexnet() -> Network {
+    let mut fc6 = ConvLayer::conv("fc6", 1, 4096, 9216, 1, 1, 1);
+    fc6.kind = LayerKind::FullyConnected;
+    let mut fc7 = ConvLayer::conv("fc7", 1, 4096, 4096, 1, 1, 1);
+    fc7.kind = LayerKind::FullyConnected;
+    let mut fc8 = ConvLayer::conv("fc8", 1, 1000, 4096, 1, 1, 1);
+    fc8.kind = LayerKind::FullyConnected;
+
+    Network::new(
+        "AlexNet",
+        vec![
+            ConvLayer::strided("conv1", 1, 96, 3, 55, 55, 11, 4),
+            ConvLayer::conv("conv2", 1, 256, 96, 27, 27, 5).grouped(2),
+            ConvLayer::conv("conv3", 1, 384, 256, 13, 13, 3),
+            ConvLayer::conv("conv4", 1, 384, 384, 13, 13, 3).grouped(2),
+            ConvLayer::conv("conv5", 1, 256, 384, 13, 13, 3).grouped(2),
+            fc6,
+            fc7,
+            fc8,
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_layer_macs_match_literature() {
+        let net = alexnet();
+        let macs: Vec<u64> = net.layers.iter().map(|l| l.macs()).collect();
+        // Classic per-layer MAC counts (±exactness): conv1 105.4M,
+        // conv2 223.9M, conv3 149.5M, conv4 112.1M, conv5 74.8M.
+        assert_eq!(macs[0], 105_415_200);
+        assert_eq!(macs[1], 223_948_800);
+        assert_eq!(macs[2], 149_520_384);
+        assert_eq!(macs[3], 112_140_288);
+        assert_eq!(macs[4], 74_760_192);
+    }
+
+    #[test]
+    fn conv_count() {
+        assert_eq!(alexnet().conv_layers().count(), 5);
+    }
+}

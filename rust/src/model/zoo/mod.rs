@@ -1,0 +1,51 @@
+//! The four CNNs of the paper's evaluation (Figure 15): AlexNet, SqueezeNet,
+//! VGG16, and YOLOv1, with their real layer dimensions.
+
+mod alexnet;
+mod squeezenet;
+mod vgg;
+mod yolo;
+
+pub use alexnet::alexnet;
+pub use squeezenet::squeezenet;
+pub use vgg::vgg16;
+pub use yolo::yolov1;
+
+use super::Network;
+
+/// Look a network up by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<Network> {
+    match name.to_ascii_lowercase().as_str() {
+        "alexnet" => Some(alexnet()),
+        "squeezenet" => Some(squeezenet()),
+        "vgg" | "vgg16" => Some(vgg16()),
+        "yolo" | "yolov1" => Some(yolov1()),
+        _ => None,
+    }
+}
+
+/// All four evaluation networks, in the order of Figure 15.
+pub fn all() -> Vec<Network> {
+    vec![alexnet(), squeezenet(), vgg16(), yolov1()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_resolves_all() {
+        for n in ["AlexNet", "squeezenet", "VGG16", "yolo"] {
+            assert!(by_name(n).is_some(), "{n}");
+        }
+        assert!(by_name("resnet").is_none());
+    }
+
+    #[test]
+    fn all_have_layers() {
+        for net in all() {
+            assert!(!net.layers.is_empty(), "{}", net.name);
+            assert!(net.macs() > 0);
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! SqueezeNet v1.0 (Iandola et al.) — the paper's compute-bound outlier in
+//! Figure 15(b): many 1×1 convolutions make it computation- rather than
+//! bandwidth-bound, which is why its multi-FPGA speedup stays (sub-)linear.
+
+use crate::model::{ConvLayer, Network};
+
+/// One fire module: squeeze 1×1 → expand 1×1 ∥ expand 3×3.
+fn fire(layers: &mut Vec<ConvLayer>, idx: u32, n_in: u64, s1: u64, e1: u64, e3: u64, rc: u64) {
+    layers.push(ConvLayer::conv(
+        &format!("fire{idx}_squeeze1x1"),
+        1,
+        s1,
+        n_in,
+        rc,
+        rc,
+        1,
+    ));
+    layers.push(ConvLayer::conv(
+        &format!("fire{idx}_expand1x1"),
+        1,
+        e1,
+        s1,
+        rc,
+        rc,
+        1,
+    ));
+    layers.push(ConvLayer::conv(
+        &format!("fire{idx}_expand3x3"),
+        1,
+        e3,
+        s1,
+        rc,
+        rc,
+        3,
+    ));
+}
+
+/// SqueezeNet v1.0 conv stack, batch size 1, 224×224 input.
+pub fn squeezenet() -> Network {
+    let mut layers = Vec::new();
+    layers.push(ConvLayer::strided("conv1", 1, 96, 3, 111, 111, 7, 2));
+    // maxpool/2 → 55×55
+    fire(&mut layers, 2, 96, 16, 64, 64, 55);
+    fire(&mut layers, 3, 128, 16, 64, 64, 55);
+    fire(&mut layers, 4, 128, 32, 128, 128, 55);
+    // maxpool/2 → 27×27
+    fire(&mut layers, 5, 256, 32, 128, 128, 27);
+    fire(&mut layers, 6, 256, 48, 192, 192, 27);
+    fire(&mut layers, 7, 384, 48, 192, 192, 27);
+    fire(&mut layers, 8, 384, 64, 256, 256, 27);
+    // maxpool/2 → 13×13
+    fire(&mut layers, 9, 512, 64, 256, 256, 13);
+    layers.push(ConvLayer::conv("conv10", 1, 1000, 512, 13, 13, 1));
+    Network::new("SqueezeNet", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structure() {
+        let net = squeezenet();
+        // conv1 + 8 fires × 3 + conv10 = 26 conv layers.
+        assert_eq!(net.layers.len(), 26);
+    }
+
+    #[test]
+    fn one_by_one_dominates_layer_count() {
+        // The Figure 15(b) discussion: "many convolution operations with the
+        // kernel size of 1".
+        let net = squeezenet();
+        let ones = net.layers.iter().filter(|l| l.k == 1).count();
+        assert!(ones * 2 > net.layers.len(), "{ones} of {}", net.layers.len());
+    }
+
+    #[test]
+    fn params_about_1m2() {
+        let w: u64 = squeezenet().layers.iter().map(|l| l.weight_elems()).sum();
+        // SqueezeNet v1.0 has ≈1.25M parameters.
+        assert!((1_100_000..1_400_000).contains(&w), "params = {w}");
+    }
+}

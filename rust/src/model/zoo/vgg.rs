@@ -1,0 +1,48 @@
+//! VGG16 (Simonyan & Zisserman) — 13 conv layers, 224×224 input.
+
+use crate::model::{ConvLayer, Network};
+
+/// VGG16 conv stack, batch size 1. The paper's Figure 15(c) runs this with
+/// the tiling ⟨Tm, Tn⟩ = ⟨64, 26⟩. FC layers are omitted from the conv
+/// benchmark stack (as in the paper's per-layer tables) — their GOP share at
+/// 224×224 is <1%.
+pub fn vgg16() -> Network {
+    let mut layers = Vec::new();
+    // (m, n, r=c) per conv block; stride 1, K = 3 throughout.
+    let cfg: &[(u64, u64, u64, &str)] = &[
+        (64, 3, 224, "conv1_1"),
+        (64, 64, 224, "conv1_2"),
+        (128, 64, 112, "conv2_1"),
+        (128, 128, 112, "conv2_2"),
+        (256, 128, 56, "conv3_1"),
+        (256, 256, 56, "conv3_2"),
+        (256, 256, 56, "conv3_3"),
+        (512, 256, 28, "conv4_1"),
+        (512, 512, 28, "conv4_2"),
+        (512, 512, 28, "conv4_3"),
+        (512, 512, 14, "conv5_1"),
+        (512, 512, 14, "conv5_2"),
+        (512, 512, 14, "conv5_3"),
+    ];
+    for &(m, n, rc, name) in cfg {
+        layers.push(ConvLayer::conv(name, 1, m, n, rc, rc, 3));
+    }
+    Network::new("VGG16", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thirteen_convs() {
+        assert_eq!(vgg16().layers.len(), 13);
+    }
+
+    #[test]
+    fn total_macs() {
+        // VGG16 convs ≈ 15.35 GMAC.
+        let g = vgg16().macs() as f64 / 1e9;
+        assert!((15.0..15.7).contains(&g), "gmacs = {g}");
+    }
+}

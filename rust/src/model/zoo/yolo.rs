@@ -1,0 +1,57 @@
+//! YOLOv1 (Redmon et al., CVPR'16) — the paper's largest workload:
+//! Figure 15(d) reduces its single-FPGA 126.6 ms to 4.53 ms on 16 FPGAs
+//! (27.93× speedup).
+
+use crate::model::{ConvLayer, Network};
+
+/// YOLOv1's 24-conv-layer detection network, 448×448 input, batch size 1.
+pub fn yolov1() -> Network {
+    let mut layers: Vec<ConvLayer> = Vec::new();
+    let mut push = |name: &str, m: u64, n: u64, rc: u64, k: u64, s: u64| {
+        layers.push(ConvLayer::strided(name, 1, m, n, rc, rc, k, s));
+    };
+
+    push("conv1", 64, 3, 224, 7, 2); // 448 → 224
+    // maxpool/2 → 112
+    push("conv2", 192, 64, 112, 3, 1);
+    // maxpool/2 → 56
+    push("conv3", 128, 192, 56, 1, 1);
+    push("conv4", 256, 128, 56, 3, 1);
+    push("conv5", 256, 256, 56, 1, 1);
+    push("conv6", 512, 256, 56, 3, 1);
+    // maxpool/2 → 28
+    for i in 0..4 {
+        push(&format!("conv{}", 7 + 2 * i), 256, 512, 28, 1, 1);
+        push(&format!("conv{}", 8 + 2 * i), 512, 256, 28, 3, 1);
+    }
+    push("conv15", 512, 512, 28, 1, 1);
+    push("conv16", 1024, 512, 28, 3, 1);
+    // maxpool/2 → 14
+    for i in 0..2 {
+        push(&format!("conv{}", 17 + 2 * i), 512, 1024, 14, 1, 1);
+        push(&format!("conv{}", 18 + 2 * i), 1024, 512, 14, 3, 1);
+    }
+    push("conv21", 1024, 1024, 14, 3, 1);
+    push("conv22", 1024, 1024, 7, 3, 2); // stride 2 → 7
+    push("conv23", 1024, 1024, 7, 3, 1);
+    push("conv24", 1024, 1024, 7, 3, 1);
+
+    Network::new("YOLO", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twenty_four_convs() {
+        assert_eq!(yolov1().layers.len(), 24);
+    }
+
+    #[test]
+    fn macs_about_20g() {
+        // YOLOv1 conv stack ≈ 20 GMAC (40 GOP).
+        let g = yolov1().macs() as f64 / 1e9;
+        assert!((18.0..22.5).contains(&g), "gmacs = {g}");
+    }
+}

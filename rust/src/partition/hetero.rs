@@ -1,0 +1,176 @@
+//! Heterogeneous-cluster extension (the paper's §7 future work: "the
+//! platform is evolving to compose heterogeneous (different types) FPGAs.
+//! ... the accurate models and the XFER design will be the base for the
+//! cluster with heterogeneous FPGAs").
+//!
+//! Principle P1 (balanced workloads) generalizes: instead of equal slices,
+//! each FPGA receives a share of the partitioned dimension proportional to
+//! its *achievable rate* under the (per-board) design — so all boards
+//! finish a layer at the same time and none idles.
+
+use crate::analytic::{layer_latency, Design};
+use crate::model::ConvLayer;
+use crate::platform::FpgaSpec;
+
+/// One member of a heterogeneous cluster: its board and the accelerator
+/// design instantiated on it (each board gets its own eq 1–7-feasible
+/// design).
+#[derive(Debug, Clone)]
+pub struct HeteroNode {
+    pub fpga: FpgaSpec,
+    pub design: Design,
+}
+
+/// Split `total` units over `weights` proportionally (largest-remainder
+/// rounding; every unit assigned, total preserved).
+pub fn proportional_split(total: u64, weights: &[f64]) -> Vec<u64> {
+    assert!(!weights.is_empty());
+    let sum: f64 = weights.iter().sum();
+    assert!(sum > 0.0, "at least one positive weight");
+    // Ideal shares and floors.
+    let ideal: Vec<f64> = weights.iter().map(|w| total as f64 * w / sum).collect();
+    let mut out: Vec<u64> = ideal.iter().map(|x| x.floor() as u64).collect();
+    let mut rem: u64 = total - out.iter().sum::<u64>();
+    // Assign remainders to the largest fractional parts.
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by(|&a, &b| {
+        (ideal[b] - ideal[b].floor())
+            .partial_cmp(&(ideal[a] - ideal[a].floor()))
+            .unwrap()
+    });
+    while rem > 0 {
+        for &i in &order {
+            if rem == 0 {
+                break;
+            }
+            out[i] += 1;
+            rem -= 1;
+        }
+    }
+    out
+}
+
+/// Row-partition a layer over a heterogeneous cluster: each node's share of
+/// OFM rows is proportional to its standalone throughput on the layer.
+/// Returns (rows per node, cluster latency = max over nodes' slice
+/// latencies in *time* (ns), since boards may run at different clocks).
+pub fn hetero_row_partition(layer: &ConvLayer, nodes: &[HeteroNode]) -> (Vec<u64>, f64) {
+    assert!(!nodes.is_empty());
+    // Rate of node i = layer MACs / standalone latency (in seconds).
+    let rates: Vec<f64> = nodes
+        .iter()
+        .map(|n| {
+            let lat = layer_latency(layer, &n.design).lat;
+            let secs = n.design.precision.cycles_to_s(lat);
+            layer.macs() as f64 / secs
+        })
+        .collect();
+    let rows = proportional_split(layer.r, &rates);
+
+    // Cluster latency: the slowest node on its slice (in milliseconds).
+    let mut worst_ms = 0.0f64;
+    for (node, &r) in nodes.iter().zip(rows.iter()) {
+        if r == 0 {
+            continue;
+        }
+        let mut sub = layer.clone();
+        sub.r = r;
+        let lat = layer_latency(&sub, &node.design).lat;
+        worst_ms = worst_ms.max(node.design.precision.cycles_to_ms(lat));
+    }
+    (rows, worst_ms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::platform::Precision;
+
+    fn big() -> HeteroNode {
+        HeteroNode {
+            fpga: FpgaSpec::zcu102(),
+            design: Design::fixed16(128, 10, 7, 14),
+        }
+    }
+
+    /// A half-size board: half the DSPs/BRAM → a half-size design.
+    fn small() -> HeteroNode {
+        let mut f = FpgaSpec::zcu102();
+        f.dsp /= 2;
+        f.bram18k /= 2;
+        HeteroNode {
+            fpga: f,
+            design: Design::fixed16(64, 10, 7, 14),
+        }
+    }
+
+    #[test]
+    fn proportional_split_exact_and_ordered() {
+        assert_eq!(proportional_split(10, &[1.0, 1.0]), vec![5, 5]);
+        let s = proportional_split(10, &[2.0, 1.0]);
+        assert_eq!(s.iter().sum::<u64>(), 10);
+        assert!(s[0] > s[1]);
+        // Degenerate: one node takes all.
+        assert_eq!(proportional_split(7, &[3.0]), vec![7]);
+    }
+
+    #[test]
+    fn hetero_beats_worst_homogeneous_member() {
+        // A big+small pair must beat the small board alone and the big
+        // board alone (more silicon in play, balanced by rate).
+        let l = zoo::alexnet().layers[2].clone();
+        let (rows, ms) = hetero_row_partition(&l, &[big(), small()]);
+        assert_eq!(rows.iter().sum::<u64>(), l.r);
+        assert!(rows[0] > rows[1], "big board takes more rows: {rows:?}");
+        let solo_big = {
+            let n = big();
+            n.design
+                .precision
+                .cycles_to_ms(layer_latency(&l, &n.design).lat)
+        };
+        assert!(ms < solo_big, "hetero {ms} !< solo big {solo_big}");
+    }
+
+    #[test]
+    fn equal_nodes_reduce_to_even_split() {
+        let l = zoo::alexnet().layers[3].clone();
+        let (rows, _) = hetero_row_partition(&l, &[big(), big()]);
+        assert!((rows[0] as i64 - rows[1] as i64).abs() <= 1, "{rows:?}");
+    }
+
+    #[test]
+    fn zero_row_nodes_allowed() {
+        // A node so slow it gets (almost) nothing must not panic.
+        let l = {
+            let mut l = zoo::alexnet().layers[4].clone();
+            l.r = 2; // fewer rows than nodes deserve
+            l
+        };
+        let tiny = HeteroNode {
+            fpga: FpgaSpec::zcu102(),
+            design: Design::fixed16(1, 1, 1, 1),
+        };
+        let (rows, ms) = hetero_row_partition(&l, &[big(), tiny]);
+        assert_eq!(rows.iter().sum::<u64>(), 2);
+        assert!(ms > 0.0);
+    }
+
+    #[test]
+    fn rate_model_uses_each_nodes_clock() {
+        // A float board (100 MHz) vs fixed board (200 MHz): shares must
+        // reflect wall-clock rate, not cycle counts.
+        let l = zoo::alexnet().layers[2].clone();
+        let f32_node = HeteroNode {
+            fpga: FpgaSpec::zcu102(),
+            design: Design::float32(64, 7, 7, 14),
+        };
+        let fx_node = HeteroNode {
+            fpga: FpgaSpec::zcu102(),
+            design: Design::fixed16(128, 10, 7, 14),
+        };
+        let (rows, _) = hetero_row_partition(&l, &[fx_node, f32_node]);
+        assert!(rows[0] > rows[1], "fx16 board is faster in time: {rows:?}");
+        let _ = Precision::Float32;
+    }
+}

@@ -1,0 +1,14 @@
+//! Layer partitioning across FPGAs (paper §4.2–§4.5): partition factors,
+//! shared-data classification, the per-FPGA layer slicer, the 2D-torus
+//! cluster topology, and the §4.5 inter-layer data-placement rules.
+
+pub mod hetero;
+mod placement;
+mod scheme;
+mod slicer;
+mod topology;
+
+pub use placement::{interlayer_traffic_elems, PlacementPolicy};
+pub use scheme::{Factors, SharedData};
+pub use slicer::{slice_layer, LayerSlice};
+pub use topology::{Torus, TorusNode};

@@ -1,0 +1,142 @@
+//! Partition factors and shared-data classification (§4.2, Figure 7).
+
+/// Partition factors `⟨Pb, Pr, Pc, Pm⟩` (§4.2). `Pn` (IFM-channel
+/// partition) is excluded by design principle P3: it makes the OFM shared,
+/// forcing intermediate-data exchange through off-chip memory
+/// (Figure 7(h)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Factors {
+    /// Batch partition factor.
+    pub pb: u64,
+    /// Row partition factor.
+    pub pr: u64,
+    /// Column partition factor.
+    pub pc: u64,
+    /// OFM-channel partition factor.
+    pub pm: u64,
+}
+
+/// Which data the partitions of a scheme share (§4.2's three categories).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SharedData {
+    /// Single FPGA — nothing shared.
+    None,
+    /// Batch/row/column partitions share the weights (Figure 7(a)-(c)).
+    Weights,
+    /// OFM-channel partitions share the IFM (Figure 7(d)).
+    Ifm,
+    /// Hybrid: a 2D array sharing weights along columns and IFM along rows
+    /// (§4.4, Property 2).
+    Both,
+}
+
+impl Factors {
+    pub fn single() -> Self {
+        Factors {
+            pb: 1,
+            pr: 1,
+            pc: 1,
+            pm: 1,
+        }
+    }
+
+    pub fn new(pb: u64, pr: u64, pc: u64, pm: u64) -> Self {
+        assert!(pb > 0 && pr > 0 && pc > 0 && pm > 0, "factors must be ≥ 1");
+        Factors { pb, pr, pc, pm }
+    }
+
+    /// Number of FPGAs the scheme occupies: `N = Pb·Pr·Pc·Pm` (§5A).
+    pub fn num_fpgas(&self) -> u64 {
+        self.pb * self.pr * self.pc * self.pm
+    }
+
+    /// The weight-sharing group size (rows of the 2D array, §4.4).
+    pub fn weight_share(&self) -> u64 {
+        self.pb * self.pr * self.pc
+    }
+
+    /// The IFM-sharing group size (columns of the 2D array).
+    pub fn ifm_share(&self) -> u64 {
+        self.pm
+    }
+
+    /// Classify per §4.2 / §4.4.
+    pub fn shared_data(&self) -> SharedData {
+        match (self.weight_share() > 1, self.pm > 1) {
+            (false, false) => SharedData::None,
+            (true, false) => SharedData::Weights,
+            (false, true) => SharedData::Ifm,
+            (true, true) => SharedData::Both,
+        }
+    }
+
+    /// Enumerate every factorization of exactly `n` FPGAs into
+    /// `⟨Pb,Pr,Pc,Pm⟩` with `Pb ≤ max_b` (batch can't be split beyond B).
+    pub fn enumerate(n: u64, max_b: u64) -> Vec<Factors> {
+        let mut out = Vec::new();
+        for pb in divisors(n) {
+            if pb > max_b {
+                continue;
+            }
+            for pr in divisors(n / pb) {
+                for pc in divisors(n / pb / pr) {
+                    let pm = n / pb / pr / pc;
+                    out.push(Factors::new(pb, pr, pc, pm));
+                }
+            }
+        }
+        out
+    }
+}
+
+impl std::fmt::Display for Factors {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "<Pb={},Pr={},Pc={},Pm={}>",
+            self.pb, self.pr, self.pc, self.pm
+        )
+    }
+}
+
+fn divisors(n: u64) -> Vec<u64> {
+    (1..=n).filter(|d| n % d == 0).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classification_matches_figure7() {
+        assert_eq!(Factors::single().shared_data(), SharedData::None);
+        assert_eq!(
+            Factors::new(2, 1, 1, 1).shared_data(),
+            SharedData::Weights
+        );
+        assert_eq!(Factors::new(1, 2, 1, 1).shared_data(), SharedData::Weights);
+        assert_eq!(Factors::new(1, 1, 1, 2).shared_data(), SharedData::Ifm);
+        assert_eq!(Factors::new(1, 2, 1, 2).shared_data(), SharedData::Both);
+    }
+
+    #[test]
+    fn enumerate_covers_all_factorizations() {
+        let all = Factors::enumerate(4, 4);
+        assert!(all.iter().all(|f| f.num_fpgas() == 4));
+        // 4 = product of 4 ordered factors: compositions of (1,1,1,4),(1,1,2,2),...
+        assert!(all.contains(&Factors::new(1, 1, 1, 4)));
+        assert!(all.contains(&Factors::new(2, 1, 1, 2)));
+        assert!(all.contains(&Factors::new(4, 1, 1, 1)));
+        // With B = 1 no batch partition may appear.
+        let b1 = Factors::enumerate(4, 1);
+        assert!(b1.iter().all(|f| f.pb == 1));
+        assert!(!b1.is_empty());
+    }
+
+    #[test]
+    fn num_fpgas_product() {
+        assert_eq!(Factors::new(2, 2, 1, 4).num_fpgas(), 16);
+        assert_eq!(Factors::new(2, 2, 1, 4).weight_share(), 4);
+        assert_eq!(Factors::new(2, 2, 1, 4).ifm_share(), 4);
+    }
+}

@@ -1,0 +1,144 @@
+//! Per-FPGA layer slicing: turn `layer × Factors` into the sub-layer each
+//! FPGA computes, with exact (non-uniform) bounds so the union of slices
+//! covers the layer exactly — the workload-balance base design of §4.2.
+
+use super::Factors;
+use crate::model::ConvLayer;
+
+/// The sub-layer assigned to one FPGA: its index in the partition grid and
+/// the half-open ranges of the original layer it owns.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerSlice {
+    /// Flat FPGA id in `0..factors.num_fpgas()`.
+    pub fpga: u64,
+    /// Position in the (batch, row, col, ofm-channel) partition grid.
+    pub grid: (u64, u64, u64, u64),
+    /// Owned batch range `[b0, b1)`.
+    pub b_range: (u64, u64),
+    /// Owned OFM row range.
+    pub r_range: (u64, u64),
+    /// Owned OFM column range.
+    pub c_range: (u64, u64),
+    /// Owned OFM channel range.
+    pub m_range: (u64, u64),
+    /// The sub-layer as a standalone `ConvLayer` (for the latency model).
+    pub sub: ConvLayer,
+}
+
+impl LayerSlice {
+    /// MACs this slice computes.
+    pub fn macs(&self) -> u64 {
+        self.sub.macs()
+    }
+}
+
+/// Split `0..total` into `parts` contiguous chunks, sizes differing by ≤1.
+fn ranges(total: u64, parts: u64) -> Vec<(u64, u64)> {
+    let base = total / parts;
+    let extra = total % parts;
+    let mut out = Vec::with_capacity(parts as usize);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + u64::from(i < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+/// Slice a layer by partition factors. Slices with an empty range (more
+/// parts than elements) still appear with zero extent — callers can skip
+/// them; they model FPGAs left idle when a factor exceeds a layer dim
+/// (the Figure 15 saturation discussion).
+pub fn slice_layer(layer: &ConvLayer, f: &Factors) -> Vec<LayerSlice> {
+    let bs = ranges(layer.b, f.pb);
+    let rs = ranges(layer.r, f.pr);
+    let cs = ranges(layer.c, f.pc);
+    let ms = ranges(layer.m, f.pm);
+    let mut out = Vec::with_capacity(f.num_fpgas() as usize);
+    let mut id = 0;
+    for (bi, &b) in bs.iter().enumerate() {
+        for (ri, &r) in rs.iter().enumerate() {
+            for (ci, &c) in cs.iter().enumerate() {
+                for (mi, &m) in ms.iter().enumerate() {
+                    let mut sub = layer.clone();
+                    sub.b = b.1 - b.0;
+                    sub.r = r.1 - r.0;
+                    sub.c = c.1 - c.0;
+                    sub.m = m.1 - m.0;
+                    // Grouped layers: OFM-channel partitioning splits within
+                    // groups; keep the group structure only if it divides.
+                    if sub.groups > 1 && (sub.m % sub.groups != 0) {
+                        sub.n /= sub.groups; // each slice sees one group's inputs
+                        sub.groups = 1;
+                    }
+                    out.push(LayerSlice {
+                        fpga: id,
+                        grid: (bi as u64, ri as u64, ci as u64, mi as u64),
+                        b_range: b,
+                        r_range: r,
+                        c_range: c,
+                        m_range: m,
+                        sub,
+                    });
+                    id += 1;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer() -> ConvLayer {
+        ConvLayer::conv("x", 2, 100, 64, 27, 27, 3)
+    }
+
+    #[test]
+    fn slices_cover_layer_exactly() {
+        let l = layer();
+        for f in Factors::enumerate(8, 2) {
+            let slices = slice_layer(&l, &f);
+            assert_eq!(slices.len(), f.num_fpgas() as usize);
+            // Row partition covers all rows exactly once.
+            let total_macs: u64 = slices.iter().map(|s| s.macs()).sum();
+            assert_eq!(total_macs, l.macs(), "factors {f}");
+        }
+    }
+
+    #[test]
+    fn balanced_within_one_unit() {
+        let l = layer();
+        let f = Factors::new(1, 2, 1, 4); // 100 channels / 4, 27 rows / 2
+        let slices = slice_layer(&l, &f);
+        let max = slices.iter().map(|s| s.macs()).max().unwrap();
+        let min = slices.iter().map(|s| s.macs()).min().unwrap();
+        // Work differs only by the ±1 row/channel remainder.
+        assert!((max - min) as f64 / (max as f64) < 0.12, "max={max} min={min}");
+    }
+
+    #[test]
+    fn overpartition_yields_zero_extent_slices() {
+        let l = ConvLayer::conv("tiny", 1, 2, 3, 4, 4, 1);
+        let f = Factors::new(1, 1, 1, 4); // 2 channels into 4 parts
+        let slices = slice_layer(&l, &f);
+        assert_eq!(slices.iter().filter(|s| s.sub.m == 0).count(), 2);
+        let total: u64 = slices.iter().map(|s| s.macs()).sum();
+        assert_eq!(total, l.macs());
+    }
+
+    #[test]
+    fn grid_indices_consistent() {
+        let l = layer();
+        let f = Factors::new(2, 2, 1, 2);
+        let slices = slice_layer(&l, &f);
+        for s in &slices {
+            assert!(s.grid.0 < 2 && s.grid.1 < 2 && s.grid.2 < 1 && s.grid.3 < 2);
+            assert_eq!(s.sub.b, s.b_range.1 - s.b_range.0);
+            assert_eq!(s.sub.m, s.m_range.1 - s.m_range.0);
+        }
+    }
+}

@@ -1,0 +1,181 @@
+//! 2D-torus cluster topology (§4.4, Figure 10).
+//!
+//! FPGAs are organized as a `Pm`-column × `(Pb·Pr·Pc)`-row array: all FPGAs
+//! in one **column** share (a part of) the weights, all FPGAs in one **row**
+//! share (a part of) the IFM (Property 2). Each node has two incoming and
+//! two outgoing links (one per dimension); weight exchange rotates along
+//! columns, IFM exchange along rows, so traffic is balanced (principle P2).
+
+use super::Factors;
+
+/// One node of the torus.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TorusNode {
+    pub id: u64,
+    pub row: u64,
+    pub col: u64,
+}
+
+/// A `rows × cols` 2D torus.
+#[derive(Debug, Clone)]
+pub struct Torus {
+    pub rows: u64,
+    pub cols: u64,
+}
+
+impl Torus {
+    /// Build the torus for a partition scheme: rows = `Pb·Pr·Pc`,
+    /// cols = `Pm` (§4.4 "Organization").
+    pub fn for_factors(f: &Factors) -> Self {
+        Torus {
+            rows: f.weight_share(),
+            cols: f.ifm_share(),
+        }
+    }
+
+    pub fn num_nodes(&self) -> u64 {
+        self.rows * self.cols
+    }
+
+    pub fn node(&self, id: u64) -> TorusNode {
+        assert!(id < self.num_nodes());
+        TorusNode {
+            id,
+            row: id / self.cols,
+            col: id % self.cols,
+        }
+    }
+
+    /// Outgoing neighbor along the column (weight-exchange ring).
+    pub fn down(&self, n: TorusNode) -> TorusNode {
+        let row = (n.row + 1) % self.rows;
+        self.node(row * self.cols + n.col)
+    }
+
+    /// Outgoing neighbor along the row (IFM-exchange ring).
+    pub fn right(&self, n: TorusNode) -> TorusNode {
+        let col = (n.col + 1) % self.cols;
+        self.node(n.row * self.cols + col)
+    }
+
+    /// Out-degree of every node: 2 (one link per dimension), matching
+    /// "each FPGA has two incoming links and two outgoing links". Collapsed
+    /// dimensions (1 row or 1 col) contribute no real link.
+    pub fn out_degree(&self) -> u64 {
+        u64::from(self.rows > 1) + u64::from(self.cols > 1)
+    }
+
+    /// Ring schedule for distributing shared data within a ring of `p`
+    /// peers: `p - 1` steps, at step `s` node `i` forwards the chunk it
+    /// received at step `s-1` (its own chunk at step 0). Returns, for each
+    /// step, the list of `(from, to, chunk)` transfers.
+    pub fn ring_schedule(p: u64) -> Vec<Vec<(u64, u64, u64)>> {
+        let mut steps = Vec::new();
+        for s in 0..p.saturating_sub(1) {
+            let mut transfers = Vec::with_capacity(p as usize);
+            for i in 0..p {
+                let to = (i + 1) % p;
+                // chunk that node i forwards at step s originated at i - s.
+                let chunk = (i + p - s % p.max(1)) % p;
+                transfers.push((i, to, chunk));
+            }
+            steps.push(transfers);
+        }
+        steps
+    }
+
+    /// Data volume (elements) each node must PUSH on its row ring for IFM
+    /// sharing, per eq 22's `D_row = (Pm-1)·bI/Pm` — with `tile_i` the IFM
+    /// tile size in elements.
+    pub fn d_row(&self, tile_i: u64) -> u64 {
+        if self.cols <= 1 {
+            0
+        } else {
+            (self.cols - 1) * tile_i.div_ceil(self.cols)
+        }
+    }
+
+    /// Column-ring volume for weight sharing, eq 22's
+    /// `D_col = (Pb·Pr·Pc - 1)·bW/(Pb·Pr·Pc)`.
+    pub fn d_col(&self, tile_w: u64) -> u64 {
+        if self.rows <= 1 {
+            0
+        } else {
+            (self.rows - 1) * tile_w.div_ceil(self.rows)
+        }
+    }
+
+    /// Eq 22: can the per-node ring traffic complete within one `Lat1`
+    /// window given `nb` words/cycle of one-direction link bandwidth?
+    pub fn bandwidth_ok(&self, tile_i: u64, tile_w: u64, nb: u64, lat1: u64) -> bool {
+        self.d_row(tile_i) + self.d_col(tile_w) <= nb * lat1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure10_shape() {
+        // Figure 10: Pm = 4 columns, Pb·Pr·Pc = 3 rows.
+        let f = Factors::new(3, 1, 1, 4);
+        let t = Torus::for_factors(&f);
+        assert_eq!((t.rows, t.cols), (3, 4));
+        assert_eq!(t.num_nodes(), 12);
+        assert_eq!(t.out_degree(), 2);
+    }
+
+    #[test]
+    fn neighbors_wrap() {
+        let t = Torus { rows: 3, cols: 4 };
+        let n = t.node(11); // row 2, col 3
+        assert_eq!(t.down(n).row, 0);
+        assert_eq!(t.right(n).col, 0);
+        assert_eq!(t.down(n).col, 3);
+        assert_eq!(t.right(n).row, 2);
+    }
+
+    #[test]
+    fn ring_schedule_delivers_every_chunk_everywhere() {
+        let p = 4;
+        let steps = Torus::ring_schedule(p);
+        assert_eq!(steps.len() as u64, p - 1);
+        // Track chunk ownership: own[i] = set of chunks node i holds.
+        let mut own: Vec<Vec<bool>> = (0..p)
+            .map(|i| (0..p).map(|c| c == i).collect())
+            .collect();
+        for step in &steps {
+            let snapshot = own.clone();
+            for &(from, to, chunk) in step {
+                assert!(
+                    snapshot[from as usize][chunk as usize],
+                    "node {from} forwarded chunk {chunk} it doesn't hold"
+                );
+                own[to as usize][chunk as usize] = true;
+            }
+        }
+        for (i, holds) in own.iter().enumerate() {
+            assert!(holds.iter().all(|&h| h), "node {i} missing a chunk");
+        }
+    }
+
+    #[test]
+    fn ring_volume_matches_eq22() {
+        let t = Torus { rows: 3, cols: 4 };
+        // D_row = (4-1)·bI/4, D_col = (3-1)·bW/3.
+        assert_eq!(t.d_row(400), 300);
+        assert_eq!(t.d_col(300), 200);
+        // Degenerate dims carry nothing.
+        let line = Torus { rows: 1, cols: 4 };
+        assert_eq!(line.d_col(300), 0);
+    }
+
+    #[test]
+    fn bandwidth_constraint() {
+        let t = Torus { rows: 2, cols: 2 };
+        // tile_i=1000 → d_row=500; tile_w=1000 → d_col=500; need ≤ nb·lat1.
+        assert!(t.bandwidth_ok(1000, 1000, 8, 125));
+        assert!(!t.bandwidth_ok(1000, 1000, 8, 124));
+    }
+}

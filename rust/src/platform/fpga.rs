@@ -1,0 +1,101 @@
+//! FPGA board resource model (paper §3 ② constraints).
+
+use super::Precision;
+
+/// Resources of one FPGA board that constrain the accelerator design:
+/// DSP slices (eqs 1–2), BRAM18K blocks (eqs 3–6), memory-bus width
+/// (eq 7) and inter-FPGA ("board-to-board") link width (eq 22).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FpgaSpec {
+    pub name: &'static str,
+    /// DSP48 slices (`𝔻` in eqs 1–2).
+    pub dsp: u64,
+    /// 18 Kb BRAM blocks (`𝔹` in eq 6).
+    pub bram18k: u64,
+    /// Off-chip memory bus width in bits (`𝕎` in eq 7).
+    pub mem_bus_bits: u64,
+    /// Aggregate inter-FPGA link width in bits/cycle one direction
+    /// (`ℕ𝔹` in eq 22 is this divided by BITs). ZCU102: 4 SFP+ × 64 b.
+    pub b2b_bits: u64,
+    /// Effective DDR streaming bandwidth in bytes per accelerator cycle at
+    /// 100 MHz (cluster-sim / link-microbench calibration, §2).
+    pub ddr_bytes_per_cycle: u64,
+    /// DDR access setup latency in cycles (burst open + AXI handshake).
+    pub ddr_setup_cycles: u64,
+    /// Inter-FPGA serial-link setup latency in cycles (Aurora framing).
+    pub link_setup_cycles: u64,
+}
+
+impl FpgaSpec {
+    /// Xilinx ZCU102 (Zynq UltraScale+ ZU9EG) — the paper's testbed board.
+    pub fn zcu102() -> Self {
+        FpgaSpec {
+            name: "ZCU102",
+            dsp: 2520,
+            // ZU9EG: 912 BRAM36 = 1824 BRAM18 blocks.
+            bram18k: 1824,
+            // Aggregated HP-port AXI width available to the accelerator.
+            mem_bus_bits: 512,
+            // "4 SFP+ ports with 64 bits wide each" → 256 bits/cycle (§5E).
+            b2b_bits: 256,
+            // Calibrated so that inter-FPGA transfer is 3× faster than DDR
+            // at 1 KB packets and 1.6× at 64–128 KB (§2) — see
+            // `platform::link` tests.
+            ddr_bytes_per_cycle: 20,
+            ddr_setup_cycles: 57,
+            link_setup_cycles: 4,
+        }
+    }
+
+    /// ZCU102 with the §5E link upgrade: "we can add 4 QSFP ports for
+    /// additional bandwidth of 4×256 = 1024 bits/cycle for even larger
+    /// clusters". Needed for ≥8-FPGA tori to keep the weight rings off the
+    /// critical path (the stock 256-bit SFP+ aggregate saturates there).
+    pub fn zcu102_qsfp() -> Self {
+        FpgaSpec {
+            b2b_bits: 1024,
+            ..Self::zcu102()
+        }
+    }
+
+    /// Max parallel MAC units for a precision (from eqs 1–2).
+    pub fn max_macs(&self, p: Precision) -> u64 {
+        self.dsp / p.dsp_per_mac()
+    }
+
+    /// Max total AXI streams `Ip + Wp + Op` for a precision (eq 7).
+    pub fn max_streams(&self, p: Precision) -> u64 {
+        self.mem_bus_bits / p.bits()
+    }
+
+    /// Inter-FPGA ports available in units of one word per cycle (one
+    /// direction), i.e. `b2b_bits / BITs`.
+    pub fn b2b_ports(&self, p: Precision) -> u64 {
+        self.b2b_bits / p.bits()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zcu102_resources() {
+        let f = FpgaSpec::zcu102();
+        assert_eq!(f.dsp, 2520);
+        assert_eq!(f.bram18k, 1824);
+        // f32: at most 504 MACs; fx16: 2520 MACs.
+        assert_eq!(f.max_macs(Precision::Float32), 504);
+        assert_eq!(f.max_macs(Precision::Fixed16), 2520);
+    }
+
+    #[test]
+    fn paper_designs_fit_stream_budget() {
+        let f = FpgaSpec::zcu102();
+        // §5A: f32 uses Ip=Wp=Op=2 (6 streams), fx16 uses 4+8+4 = 16.
+        assert!(6 <= f.max_streams(Precision::Float32));
+        assert!(16 <= f.max_streams(Precision::Fixed16));
+        // fx16 b2b: Wp=8 → width 128 ≤ 256 bits.
+        assert!(f.b2b_ports(Precision::Fixed16) >= 8);
+    }
+}

@@ -1,0 +1,119 @@
+//! External comparison points of Table 2.
+//!
+//! These numbers are **measurements published in the paper** (and in the
+//! cited works [12, 14, 15]) for platforms we do not possess — per the
+//! substitution rule they are carried as cited constants, not re-measured.
+
+/// One competitor column of Table 2.
+#[derive(Debug, Clone, Copy)]
+pub struct ExternalBaseline {
+    pub name: &'static str,
+    pub device: &'static str,
+    pub precision: &'static str,
+    pub freq_mhz: f64,
+    /// Run-time power in watts (`None` = not reported in the source).
+    pub power_w: Option<f64>,
+    /// AlexNet B=1 latency in ms (min, max) — GPUs jitter, FPGAs don't.
+    pub latency_ms: (f64, f64),
+    /// Throughput in GOPS.
+    pub gops: f64,
+    /// Energy efficiency in GOPS/W (`None` = not derivable).
+    pub ee_gops_per_w: Option<f64>,
+}
+
+/// Jetson TX2 (mobile GPU) column.
+pub const MGPU_JETSON_TX2: ExternalBaseline = ExternalBaseline {
+    name: "mGPU",
+    device: "Jetson TX2",
+    precision: "32bits float",
+    freq_mhz: 1300.0,
+    power_w: Some(16.0),
+    latency_ms: (11.1, 13.2),
+    gops: 110.75,
+    ee_gops_per_w: Some(6.88),
+};
+
+/// Titan X (desktop GPU) column.
+pub const GPU_TITAN_X: ExternalBaseline = ExternalBaseline {
+    name: "GPU",
+    device: "Titan X",
+    precision: "32bits float",
+    freq_mhz: 1139.0,
+    power_w: Some(162.0),
+    latency_ms: (5.1, 6.4),
+    gops: 235.55,
+    ee_gops_per_w: Some(1.45),
+};
+
+/// Zhang et al. FPGA'15 [14] — the single-FPGA state of the art the paper
+/// benchmarks against (VX485T original publication numbers).
+pub const FPGA15_VX485T: ExternalBaseline = ExternalBaseline {
+    name: "FPGA15",
+    device: "VX485T",
+    precision: "32bits float",
+    freq_mhz: 100.0,
+    power_w: Some(18.61),
+    latency_ms: (21.62, 21.62),
+    gops: 69.09,
+    ee_gops_per_w: Some(3.71),
+};
+
+/// Shen et al. ISCA'17 [12] (resource-partitioned multi-CLP).
+pub const ISCA17_VX485T: ExternalBaseline = ExternalBaseline {
+    name: "ISCA17",
+    device: "VX485T",
+    precision: "32bits float",
+    freq_mhz: 100.0,
+    power_w: None,
+    latency_ms: (60.13, 60.13),
+    gops: 85.47,
+    ee_gops_per_w: None,
+};
+
+/// Zhang et al. ISLPED'16 [15] (deeply pipelined 4-FPGA cluster).
+pub const ISLPED16_4XVX690T: ExternalBaseline = ExternalBaseline {
+    name: "ISLPED16",
+    device: "4xVX690t",
+    precision: "16bits fixed",
+    freq_mhz: 150.0,
+    power_w: Some(126.0),
+    latency_ms: (30.6, 30.6),
+    gops: 128.8,
+    ee_gops_per_w: Some(1.02),
+};
+
+/// All competitor columns in Table 2 order.
+pub fn table2_baselines() -> Vec<ExternalBaseline> {
+    vec![
+        MGPU_JETSON_TX2,
+        GPU_TITAN_X,
+        FPGA15_VX485T,
+        ISCA17_VX485T,
+        ISLPED16_4XVX690T,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ee_consistent_with_power_and_gops() {
+        for b in table2_baselines() {
+            if let (Some(p), Some(ee)) = (b.power_w, b.ee_gops_per_w) {
+                let derived = b.gops / p;
+                assert!(
+                    (derived - ee).abs() / ee < 0.05,
+                    "{}: {derived} vs {ee}",
+                    b.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gpu_latency_jitters_fpga_does_not() {
+        assert!(MGPU_JETSON_TX2.latency_ms.0 < MGPU_JETSON_TX2.latency_ms.1);
+        assert_eq!(FPGA15_VX485T.latency_ms.0, FPGA15_VX485T.latency_ms.1);
+    }
+}

@@ -1,0 +1,90 @@
+//! Inter-FPGA link vs DDR transfer-time model (paper §2 micro-benchmark).
+//!
+//! The XFER idea rests on one measurement: on two SFP+-connected ZCU102s,
+//! moving a packet board-to-board is **3× faster than reading it from
+//! off-chip DDR at 1 KB packets and 1.6× faster at 64–128 KB**. The serial
+//! links stream at line rate with negligible setup, while every DDR access
+//! pays burst-open/arbitration latency and is bounded by the accelerator's
+//! AXI configuration.
+
+use super::FpgaSpec;
+
+/// Transfer-time model for one memory channel and one inter-FPGA channel.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkSpec {
+    /// DDR: effective payload bytes per cycle once streaming.
+    pub ddr_bytes_per_cycle: u64,
+    /// DDR: fixed access setup cycles per packet.
+    pub ddr_setup_cycles: u64,
+    /// Link: payload bytes per cycle (256-bit aggregate → 32 B).
+    pub link_bytes_per_cycle: u64,
+    /// Link: fixed framing setup cycles per packet.
+    pub link_setup_cycles: u64,
+}
+
+impl LinkSpec {
+    pub fn from_fpga(f: &FpgaSpec) -> Self {
+        LinkSpec {
+            ddr_bytes_per_cycle: f.ddr_bytes_per_cycle,
+            ddr_setup_cycles: f.ddr_setup_cycles,
+            link_bytes_per_cycle: f.b2b_bits / 8,
+            link_setup_cycles: f.link_setup_cycles,
+        }
+    }
+
+    /// Cycles to fetch `bytes` from off-chip DDR as one packet.
+    pub fn ddr_cycles(&self, bytes: u64) -> u64 {
+        self.ddr_setup_cycles + bytes.div_ceil(self.ddr_bytes_per_cycle)
+    }
+
+    /// Cycles to move `bytes` across the inter-FPGA link as one packet.
+    pub fn link_cycles(&self, bytes: u64) -> u64 {
+        self.link_setup_cycles + bytes.div_ceil(self.link_bytes_per_cycle)
+    }
+
+    /// Speedup of board-to-board over DDR for a packet size (the §2 ratio).
+    pub fn b2b_speedup(&self, bytes: u64) -> f64 {
+        self.ddr_cycles(bytes) as f64 / self.link_cycles(bytes) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::FpgaSpec;
+
+    fn spec() -> LinkSpec {
+        LinkSpec::from_fpga(&FpgaSpec::zcu102())
+    }
+
+    #[test]
+    fn three_x_at_1kb() {
+        // §2: "inter-FPGA communication is 3 times faster than accessing
+        // off-chip memory when the packet size is 1KB".
+        let s = spec().b2b_speedup(1024);
+        assert!((2.7..3.3).contains(&s), "1KB speedup = {s}");
+    }
+
+    #[test]
+    fn one_point_six_x_at_64kb_and_128kb() {
+        // §2: "1.6 times when the packet size increases to 64KB and 128KB".
+        for kb in [64u64, 128] {
+            let s = spec().b2b_speedup(kb * 1024);
+            assert!((1.5..1.75).contains(&s), "{kb}KB speedup = {s}");
+        }
+    }
+
+    #[test]
+    fn speedup_monotonically_decreases_to_bw_ratio() {
+        let l = spec();
+        let mut prev = f64::MAX;
+        for bytes in [256u64, 1024, 4096, 16384, 65536, 1 << 20] {
+            let s = l.b2b_speedup(bytes);
+            assert!(s <= prev + 1e-9);
+            prev = s;
+        }
+        // Asymptote = bandwidth ratio 32/20 = 1.6.
+        let asymptote = l.b2b_speedup(1 << 26);
+        assert!((asymptote - 1.6).abs() < 0.02, "asymptote = {asymptote}");
+    }
+}

@@ -1,0 +1,12 @@
+//! Hardware platform descriptions: the ZCU102 FPGA board, its DDR memory
+//! system, the SFP+/Aurora inter-FPGA links, and the GPU comparison points
+//! of Table 2.
+
+mod fpga;
+pub mod gpu;
+mod link;
+mod precision;
+
+pub use fpga::FpgaSpec;
+pub use link::LinkSpec;
+pub use precision::Precision;

@@ -1,0 +1,71 @@
+//! Numeric precision of the accelerator datapath (paper §3 ②-2 and §5A).
+
+/// Datapath precision. The paper evaluates both.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// 32-bit IEEE float: 5 DSP slices per MAC (eq 1), 100 MHz.
+    Float32,
+    /// 16-bit fixed point: 1 DSP slice per MAC (eq 2), 200 MHz.
+    Fixed16,
+}
+
+impl Precision {
+    /// Data width in bits (the `BITs` of eqs 3–7).
+    pub fn bits(self) -> u64 {
+        match self {
+            Precision::Float32 => 32,
+            Precision::Fixed16 => 16,
+        }
+    }
+
+    /// DSP slices consumed by one MAC unit (eqs 1–2).
+    pub fn dsp_per_mac(self) -> u64 {
+        match self {
+            Precision::Float32 => 5,
+            Precision::Fixed16 => 1,
+        }
+    }
+
+    /// Accelerator clock (paper §5A "Design Parameters").
+    pub fn freq_mhz(self) -> u64 {
+        match self {
+            Precision::Float32 => 100,
+            Precision::Fixed16 => 200,
+        }
+    }
+
+    /// Convert accelerator cycles to milliseconds at this precision's clock.
+    pub fn cycles_to_ms(self, cycles: u64) -> f64 {
+        cycles as f64 / (self.freq_mhz() as f64 * 1e3)
+    }
+
+    /// Convert accelerator cycles to seconds.
+    pub fn cycles_to_s(self, cycles: u64) -> f64 {
+        cycles as f64 / (self.freq_mhz() as f64 * 1e6)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Float32 => "32bits float",
+            Precision::Fixed16 => "16bits fixed",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycle_conversion() {
+        // 100 MHz → 1M cycles = 10 ms; 200 MHz → 5 ms.
+        assert!((Precision::Float32.cycles_to_ms(1_000_000) - 10.0).abs() < 1e-9);
+        assert!((Precision::Fixed16.cycles_to_ms(1_000_000) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dsp_cost() {
+        assert_eq!(Precision::Float32.dsp_per_mac(), 5);
+        assert_eq!(Precision::Fixed16.dsp_per_mac(), 1);
+    }
+}

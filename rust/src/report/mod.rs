@@ -1,0 +1,199 @@
+//! Plain-text table/figure rendering shared by the benches, examples and
+//! CLI — markdown tables and simple ASCII series plots, so every paper
+//! artifact regenerates as text.
+
+/// A markdown table builder.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = width[i]));
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = line(&self.header);
+        out.push('|');
+        for w in &width {
+            out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r));
+        }
+        out
+    }
+}
+
+/// Format helpers.
+pub fn ms(x: f64) -> String {
+    format!("{x:.2}")
+}
+pub fn gops(x: f64) -> String {
+    format!("{x:.1}")
+}
+pub fn pct(x: f64) -> String {
+    format!("{:.2}%", x * 100.0)
+}
+pub fn speedup(x: f64) -> String {
+    format!("{x:.2}x")
+}
+pub fn kcycles(c: u64) -> String {
+    format!("{}", c / 1000)
+}
+
+/// ASCII line plot of (x, y) series — the Figure 15 curves as text.
+pub fn ascii_plot(title: &str, series: &[(String, Vec<(f64, f64)>)], height: usize) -> String {
+    let mut out = format!("== {title} ==\n");
+    let all: Vec<(f64, f64)> = series.iter().flat_map(|(_, p)| p.iter().copied()).collect();
+    if all.is_empty() {
+        return out;
+    }
+    let (ymin, ymax) = all
+        .iter()
+        .fold((f64::MAX, f64::MIN), |(lo, hi), &(_, y)| (lo.min(y), hi.max(y)));
+    let span = (ymax - ymin).max(1e-12);
+    for (name, pts) in series {
+        out.push_str(&format!("{name:>12}: "));
+        for &(x, y) in pts {
+            let level = ((y - ymin) / span * (height - 1) as f64).round() as usize;
+            out.push_str(&format!("({x:.0},{})", "▁▂▃▄▅▆▇█".chars().nth(level.min(7)).unwrap()));
+        }
+        out.push('\n');
+    }
+    out.push_str(&format!("   y ∈ [{ymin:.3e}, {ymax:.3e}]\n"));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["Design", "Lat(ms)", "Thr(GOPS)"]);
+        t.row(&["FPGA15".into(), "22.75".into(), "66.6".into()]);
+        t.row(&["Super-LIP".into(), "10.13".into(), "149.5".into()]);
+        let s = t.render();
+        assert!(s.contains("| Design    |"));
+        assert_eq!(s.lines().count(), 4);
+        // All lines equal length.
+        let lens: Vec<usize> = s.lines().map(|l| l.len()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "{s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn wrong_arity_panics() {
+        Table::new(&["a", "b"]).row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn plot_contains_series() {
+        let s = ascii_plot(
+            "scaling",
+            &[("AlexNet".into(), vec![(1.0, 5.63), (2.0, 2.21), (4.0, 1.16)])],
+            8,
+        );
+        assert!(s.contains("AlexNet"));
+        assert!(s.contains("(1,"));
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(ms(10.126), "10.13");
+        assert_eq!(speedup(3.481), "3.48x");
+        assert_eq!(pct(0.3986), "39.86%");
+        assert_eq!(kcycles(2_953_000), "2953");
+    }
+}
+
+/// Write a CSV file (header + rows) under `dir`, creating it if needed.
+/// Returns the written path. Used by the figure benches so the series can
+/// be re-plotted outside the terminal.
+pub fn write_csv(
+    dir: &std::path::Path,
+    name: &str,
+    header: &[&str],
+    rows: &[Vec<String>],
+) -> std::io::Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.csv"));
+    let mut out = String::new();
+    out.push_str(&header.join(","));
+    out.push('\n');
+    for r in rows {
+        assert_eq!(r.len(), header.len(), "column count mismatch");
+        // Quote cells containing commas.
+        let cells: Vec<String> = r
+            .iter()
+            .map(|c| {
+                if c.contains(',') || c.contains('"') {
+                    format!("\"{}\"", c.replace('"', "\"\""))
+                } else {
+                    c.clone()
+                }
+            })
+            .collect();
+        out.push_str(&cells.join(","));
+        out.push('\n');
+    }
+    std::fs::write(&path, out)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod csv_tests {
+    use super::*;
+
+    #[test]
+    fn csv_round_trip() {
+        let dir = std::env::temp_dir().join("superlip-csv-test");
+        let rows = vec![
+            vec!["1".to_string(), "2.70".to_string()],
+            vec!["a,b".to_string(), "x\"y".to_string()],
+        ];
+        let p = write_csv(&dir, "t", &["n", "speedup"], &rows).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("n,speedup\n1,2.70\n"));
+        assert!(text.contains("\"a,b\",\"x\"\"y\""));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn csv_arity_checked() {
+        let dir = std::env::temp_dir().join("superlip-csv-test2");
+        let _ = write_csv(&dir, "t", &["a", "b"], &[vec!["only".into()]]);
+    }
+}

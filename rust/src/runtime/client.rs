@@ -1,0 +1,66 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+
+use crate::{Error, Result};
+use std::path::Path;
+
+/// A PJRT client owning compiled artifact executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled HLO artifact ready to execute.
+pub struct ArtifactExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact name (manifest key), for diagnostics.
+    pub name: String,
+}
+
+impl PjrtRuntime {
+    /// Create the CPU PJRT client (the simulated cluster's compute
+    /// substrate — on the paper's testbed this would be the FPGA fabric).
+    pub fn cpu() -> Result<Self> {
+        Ok(PjrtRuntime {
+            client: xla::PjRtClient::cpu()?,
+        })
+    }
+
+    /// Platform string, e.g. "cpu" (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    pub fn load_artifact(&self, path: &Path) -> Result<ArtifactExecutable> {
+        if !path.exists() {
+            return Err(Error::Runtime(format!(
+                "artifact {} not found — run `make artifacts` first",
+                path.display()
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default()
+            .replace(".hlo", "");
+        Ok(ArtifactExecutable { exe, name })
+    }
+}
+
+impl ArtifactExecutable {
+    /// Execute with one f32 input tensor of the given dims; returns the
+    /// flattened f32 output. Artifacts are lowered with
+    /// `return_tuple=True`, so the result is a 1-tuple.
+    pub fn run_f32(&self, input: &[f32], dims: &[i64]) -> Result<Vec<f32>> {
+        let lit = xla::Literal::vec1(input).reshape(dims)?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?;
+        let out = result[0][0].to_literal_sync()?;
+        let tuple = out.to_tuple1()?;
+        Ok(tuple.to_vec::<f32>()?)
+    }
+}

@@ -1,0 +1,184 @@
+//! Model executor: manifest parsing + batch-size-aware artifact dispatch.
+
+use super::{ArtifactExecutable, PjrtRuntime};
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One line of `artifacts/manifest.txt`: `name in=AxBxC out=DxE`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub in_dims: Vec<i64>,
+    pub out_dims: Vec<i64>,
+}
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: BTreeMap<String, ManifestEntry>,
+}
+
+impl Manifest {
+    /// Parse the manifest text (one artifact per line).
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = BTreeMap::new();
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let mut parts = line.split_whitespace();
+            let name = parts
+                .next()
+                .ok_or_else(|| Error::InvalidArg(format!("bad manifest line: {line}")))?
+                .to_string();
+            let mut in_dims = Vec::new();
+            let mut out_dims = Vec::new();
+            for p in parts {
+                let (key, dims) = p
+                    .split_once('=')
+                    .ok_or_else(|| Error::InvalidArg(format!("bad manifest field: {p}")))?;
+                let parsed: std::result::Result<Vec<i64>, _> =
+                    dims.split('x').map(|d| d.parse::<i64>()).collect();
+                let parsed =
+                    parsed.map_err(|e| Error::InvalidArg(format!("bad dims {dims}: {e}")))?;
+                match key {
+                    "in" => in_dims = parsed,
+                    "out" => out_dims = parsed,
+                    _ => return Err(Error::InvalidArg(format!("unknown field {key}"))),
+                }
+            }
+            entries.insert(
+                name.clone(),
+                ManifestEntry {
+                    name,
+                    in_dims,
+                    out_dims,
+                },
+            );
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// Load from `dir/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))?;
+        Self::parse(&text)
+    }
+
+    /// Model artifacts (`model_b{B}`) sorted by batch size.
+    pub fn model_batches(&self) -> Vec<(u64, &ManifestEntry)> {
+        let mut out: Vec<(u64, &ManifestEntry)> = self
+            .entries
+            .values()
+            .filter_map(|e| {
+                e.name
+                    .strip_prefix("model_b")
+                    .and_then(|b| b.parse::<u64>().ok())
+                    .map(|b| (b, e))
+            })
+            .collect();
+        out.sort_by_key(|(b, _)| *b);
+        out
+    }
+}
+
+/// A TinyCNN executor holding one compiled executable per batch size.
+/// Inference requests of any batch ≤ max are served by dispatching to the
+/// smallest artifact batch that fits (padding the remainder).
+pub struct ModelExecutor {
+    exes: Vec<(u64, ArtifactExecutable)>,
+    pub image_elems: usize,
+    pub classes: usize,
+    pub manifest: Manifest,
+}
+
+impl ModelExecutor {
+    /// Load every `model_b*` artifact in `dir`.
+    pub fn load(rt: &PjrtRuntime, dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let batches = manifest.model_batches();
+        if batches.is_empty() {
+            return Err(Error::Runtime(format!(
+                "no model_b* artifacts in {}",
+                dir.display()
+            )));
+        }
+        let mut exes = Vec::new();
+        let mut image_elems = 0;
+        let mut classes = 0;
+        for (b, entry) in &batches {
+            let path: PathBuf = dir.join(format!("{}.hlo.txt", entry.name));
+            let exe = rt.load_artifact(&path)?;
+            let in_elems: i64 = entry.in_dims.iter().product();
+            image_elems = (in_elems / entry.in_dims[0]) as usize;
+            classes = (entry.out_dims.iter().product::<i64>() / entry.out_dims[0]) as usize;
+            exes.push((*b, exe));
+        }
+        Ok(ModelExecutor {
+            exes,
+            image_elems,
+            classes,
+            manifest,
+        })
+    }
+
+    /// Largest artifact batch size available.
+    pub fn max_batch(&self) -> u64 {
+        self.exes.last().map(|(b, _)| *b).unwrap_or(1)
+    }
+
+    /// Infer logits for `n` images packed contiguously in `images`
+    /// (`n × image_elems` f32s). Returns `n × classes` logits.
+    pub fn infer(&self, images: &[f32], n: usize) -> Result<Vec<f32>> {
+        assert_eq!(images.len(), n * self.image_elems, "input size mismatch");
+        // Smallest artifact batch ≥ n (pad), else the largest (chunk).
+        let (b, exe) = self
+            .exes
+            .iter()
+            .find(|(b, _)| *b as usize >= n)
+            .unwrap_or_else(|| self.exes.last().unwrap());
+        let b = *b as usize;
+        if n > b {
+            // Chunk recursively.
+            let mut out = Vec::with_capacity(n * self.classes);
+            for chunk in images.chunks(b * self.image_elems) {
+                let cn = chunk.len() / self.image_elems;
+                out.extend(self.infer(chunk, cn)?);
+            }
+            return Ok(out);
+        }
+        let mut padded = images.to_vec();
+        padded.resize(b * self.image_elems, 0.0);
+        let entry = &self.manifest.entries[&format!("model_b{b}")];
+        let logits = exe.run_f32(&padded, &entry.in_dims)?;
+        Ok(logits[..n * self.classes].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(
+            "model_b1 in=1x3x32x32 out=1x10\nmodel_b4 in=4x3x32x32 out=4x10\nconv_tile in=3x32x32 out=16x14x14\n",
+        )
+        .unwrap();
+        assert_eq!(m.entries.len(), 3);
+        assert_eq!(m.entries["model_b1"].in_dims, vec![1, 3, 32, 32]);
+        assert_eq!(m.entries["conv_tile"].out_dims, vec![16, 14, 14]);
+        let batches = m.model_batches();
+        assert_eq!(batches.iter().map(|(b, _)| *b).collect::<Vec<_>>(), vec![1, 4]);
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(Manifest::parse("name in=1xZx3 out=1").is_err());
+        assert!(Manifest::parse("name foo=1").is_err());
+    }
+
+    #[test]
+    fn manifest_empty_ok() {
+        let m = Manifest::parse("").unwrap();
+        assert!(m.model_batches().is_empty());
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from the rust request path.
+//!
+//! Python never runs here — the artifacts are self-contained HLO modules
+//! with the model weights baked in as constants. The interchange is HLO
+//! **text** (see aot.py / /opt/xla-example/README.md: xla_extension 0.5.1
+//! rejects jax ≥ 0.5's 64-bit-id serialized protos; the text parser
+//! reassigns ids).
+
+mod client;
+mod executor;
+
+pub use client::{ArtifactExecutable, PjrtRuntime};
+pub use executor::{Manifest, ManifestEntry, ModelExecutor};

@@ -1,0 +1,258 @@
+//! Deadline-aware low-batch dynamic batcher.
+//!
+//! Real-time inference runs at "low or even no batching" (§1): batches are
+//! capped small (the artifact set tops out at B = 4), formed by earliest-
+//! deadline-first order, and a batch closes as soon as (a) it is full,
+//! (b) the batching window expires, or (c) the earliest deadline would be
+//! at risk by waiting longer.
+
+use super::InferenceRequest;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Batcher tuning.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// Hard cap on batch size (≤ backend max batch).
+    pub max_batch: usize,
+    /// How long to wait for more requests after the first arrives.
+    pub window: Duration,
+    /// Safety margin: close the batch early if the earliest deadline is
+    /// within this margin.
+    pub deadline_margin: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 4,
+            window: Duration::from_millis(2),
+            deadline_margin: Duration::from_millis(5),
+        }
+    }
+}
+
+struct Queue {
+    items: VecDeque<InferenceRequest>,
+    closed: bool,
+}
+
+/// Thread-safe request queue + batch former shared by all worker threads.
+pub struct Batcher {
+    cfg: BatcherConfig,
+    q: Mutex<Queue>,
+    cv: Condvar,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        assert!(cfg.max_batch >= 1);
+        Batcher {
+            cfg,
+            q: Mutex::new(Queue {
+                items: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn config(&self) -> BatcherConfig {
+        self.cfg
+    }
+
+    /// Poison-resilient lock: a panicking client thread must not wedge the
+    /// whole serving queue (the queue data stays consistent — every
+    /// mutation is a single insert/drain/flag write).
+    fn locked(&self) -> std::sync::MutexGuard<'_, Queue> {
+        self.q.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Enqueue a request in earliest-deadline-first position.
+    pub fn push(&self, req: InferenceRequest) -> crate::Result<()> {
+        let mut q = self.locked();
+        if q.closed {
+            return Err(crate::Error::Serving("batcher closed".into()));
+        }
+        // EDF insertion (queues are short — linear scan is the fast path).
+        let pos = q
+            .items
+            .iter()
+            .position(|r| r.deadline > req.deadline)
+            .unwrap_or(q.items.len());
+        q.items.insert(pos, req);
+        drop(q);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Number of queued requests (diagnostics).
+    pub fn depth(&self) -> usize {
+        self.locked().items.len()
+    }
+
+    /// Close the queue; blocked workers drain remaining items then get
+    /// `None`.
+    pub fn close(&self) {
+        self.locked().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Blocking: form the next batch (≥1 request) or `None` if closed and
+    /// drained. Safe under multiple workers: a sibling may drain the queue
+    /// while this worker sits in the batching window, in which case we go
+    /// back to waiting instead of returning an empty batch.
+    pub fn next_batch(&self) -> Option<Vec<InferenceRequest>> {
+        let mut q = self.locked();
+        'restart: loop {
+            // Wait for the first request.
+            loop {
+                if !q.items.is_empty() {
+                    break;
+                }
+                if q.closed {
+                    return None;
+                }
+                q = self
+                    .cv
+                    .wait(q)
+                    .unwrap_or_else(|e| e.into_inner());
+            }
+            // Window: wait (bounded) for the batch to fill.
+            let window_end = Instant::now() + self.cfg.window;
+            while q.items.len() < self.cfg.max_batch && !q.closed {
+                let now = Instant::now();
+                if now >= window_end {
+                    break;
+                }
+                // A sibling worker may have taken everything while we
+                // waited — restart from the empty-queue wait.
+                let Some(urgent) = q.items.front().map(|r| r.deadline) else {
+                    continue 'restart;
+                };
+                // Close early if the most urgent deadline is at risk.
+                if urgent <= now + self.cfg.deadline_margin {
+                    break;
+                }
+                let wait = (window_end - now).min(urgent.saturating_duration_since(now));
+                let (guard, _timeout) = self
+                    .cv
+                    .wait_timeout(q, wait)
+                    .unwrap_or_else(|e| e.into_inner());
+                q = guard;
+            }
+            if q.items.is_empty() {
+                if q.closed {
+                    return None;
+                }
+                continue 'restart;
+            }
+            let n = q.items.len().min(self.cfg.max_batch);
+            return Some(q.items.drain(..n).collect());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn req(id: u64, deadline_ms: u64) -> (InferenceRequest, mpsc::Receiver<super::super::InferenceResponse>) {
+        let (tx, rx) = mpsc::channel();
+        let now = Instant::now();
+        (
+            InferenceRequest {
+                id,
+                image: vec![0.0; 4],
+                enqueued: now,
+                deadline: now + Duration::from_millis(deadline_ms),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn batches_cap_at_max() {
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 2,
+            window: Duration::from_millis(1),
+            deadline_margin: Duration::from_millis(0),
+        });
+        let mut rxs = Vec::new();
+        for i in 0..5 {
+            let (r, rx) = req(i, 1000);
+            b.push(r).unwrap();
+            rxs.push(rx);
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(b.depth(), 3);
+    }
+
+    #[test]
+    fn edf_ordering() {
+        let b = Batcher::new(BatcherConfig::default());
+        let (r1, _x1) = req(1, 500);
+        let (r2, _x2) = req(2, 100); // more urgent
+        let (r3, _x3) = req(3, 300);
+        b.push(r1).unwrap();
+        b.push(r2).unwrap();
+        b.push(r3).unwrap();
+        let batch = b.next_batch().unwrap();
+        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let b = Batcher::new(BatcherConfig::default());
+        let (r, _x) = req(1, 100);
+        b.push(r).unwrap();
+        b.close();
+        assert_eq!(b.next_batch().unwrap().len(), 1);
+        assert!(b.next_batch().is_none());
+        let (r2, _x2) = req(2, 100);
+        assert!(b.push(r2).is_err());
+    }
+
+    #[test]
+    fn waits_for_window_to_fill() {
+        let b = Arc::new(Batcher::new(BatcherConfig {
+            max_batch: 4,
+            window: Duration::from_millis(50),
+            deadline_margin: Duration::from_millis(0),
+        }));
+        let b2 = b.clone();
+        let (r, _x) = req(1, 10_000);
+        b.push(r).unwrap();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            let (r, x) = req(2, 10_000);
+            b2.push(r).unwrap();
+            std::mem::forget(x);
+        });
+        let batch = b.next_batch().unwrap();
+        h.join().unwrap();
+        assert_eq!(batch.len(), 2, "second request should join the window");
+    }
+
+    #[test]
+    fn urgent_deadline_closes_early() {
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 4,
+            window: Duration::from_secs(5), // huge window...
+            deadline_margin: Duration::from_millis(50),
+        });
+        let (r, _x) = req(1, 10); // ...but a deadline inside the margin
+        b.push(r).unwrap();
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() < Duration::from_secs(1), "must not wait the window");
+    }
+}

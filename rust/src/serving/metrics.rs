@@ -1,0 +1,129 @@
+//! Serving metrics: latency distribution, throughput, deadline misses.
+
+use crate::util::Summary;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Thread-safe metrics collector.
+#[derive(Debug)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug)]
+struct Inner {
+    latencies_ms: Vec<f64>,
+    batch_sizes: Vec<usize>,
+    deadline_misses: u64,
+    started: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            inner: Mutex::new(Inner {
+                latencies_ms: Vec::new(),
+                batch_sizes: Vec::new(),
+                deadline_misses: 0,
+                started: Instant::now(),
+            }),
+        }
+    }
+
+    /// Record one served request.
+    pub fn record(&self, latency: Duration, batch: usize, deadline_met: bool) {
+        let mut m = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        m.latencies_ms.push(latency.as_secs_f64() * 1e3);
+        m.batch_sizes.push(batch);
+        if !deadline_met {
+            m.deadline_misses += 1;
+        }
+    }
+
+    /// Clear all recorded samples (e.g. after a warmup phase) and restart
+    /// the throughput clock.
+    pub fn reset(&self) {
+        let mut m = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        m.latencies_ms.clear();
+        m.batch_sizes.clear();
+        m.deadline_misses = 0;
+        m.started = Instant::now();
+    }
+
+    /// Requests served so far.
+    pub fn completed(&self) -> usize {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).latencies_ms.len()
+    }
+
+    pub fn deadline_misses(&self) -> u64 {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).deadline_misses
+    }
+
+    /// Latency summary (ms). `None` if nothing served yet.
+    pub fn latency_summary(&self) -> Option<Summary> {
+        let m = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if m.latencies_ms.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&m.latencies_ms))
+        }
+    }
+
+    /// Mean batch size actually served (batching effectiveness).
+    pub fn mean_batch(&self) -> f64 {
+        let m = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if m.batch_sizes.is_empty() {
+            0.0
+        } else {
+            m.batch_sizes.iter().sum::<usize>() as f64 / m.batch_sizes.len() as f64
+        }
+    }
+
+    /// Requests/second since collector creation.
+    pub fn throughput_rps(&self) -> f64 {
+        let m = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let secs = m.started.elapsed().as_secs_f64().max(1e-9);
+        m.latencies_ms.len() as f64 / secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let m = Metrics::new();
+        m.record(Duration::from_millis(10), 2, true);
+        m.record(Duration::from_millis(20), 4, false);
+        assert_eq!(m.completed(), 2);
+        assert_eq!(m.deadline_misses(), 1);
+        assert!((m.mean_batch() - 3.0).abs() < 1e-9);
+        let s = m.latency_summary().unwrap();
+        assert!((s.mean - 15.0).abs() < 1e-9);
+        assert!(m.throughput_rps() > 0.0);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let m = Metrics::new();
+        m.record(Duration::from_millis(10), 1, false);
+        m.reset();
+        assert_eq!(m.completed(), 0);
+        assert_eq!(m.deadline_misses(), 0);
+        assert!(m.latency_summary().is_none());
+    }
+
+    #[test]
+    fn empty_metrics() {
+        let m = Metrics::new();
+        assert!(m.latency_summary().is_none());
+        assert_eq!(m.mean_batch(), 0.0);
+    }
+}

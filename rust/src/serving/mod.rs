@@ -1,0 +1,19 @@
+//! Real-time inference serving (the paper's §1 use case: ultra-low batch,
+//! deadline-bound requests): request types, a deadline-aware low-batch
+//! dynamic batcher, a replica router, a worker-pool server, and metrics.
+//!
+//! Rust owns the whole request path; compute dispatches either to the PJRT
+//! runtime (`runtime::ModelExecutor`) or to any `InferBackend` (tests use
+//! a stub).
+
+mod batcher;
+mod metrics;
+mod request;
+mod router;
+mod server;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use metrics::Metrics;
+pub use request::{InferBackend, InferenceRequest, InferenceResponse};
+pub use router::{Router, RoutePolicy};
+pub use server::{BackendFactory, Server, ServerConfig};

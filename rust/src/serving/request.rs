@@ -1,0 +1,64 @@
+//! Request/response types and the compute-backend abstraction.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// One inference request: an image plus its real-time deadline.
+pub struct InferenceRequest {
+    pub id: u64,
+    /// Flattened f32 image (`image_elems` values).
+    pub image: Vec<f32>,
+    /// Enqueue timestamp (set by the server on submit).
+    pub enqueued: Instant,
+    /// Absolute deadline; the batcher orders by earliest deadline first.
+    pub deadline: Instant,
+    /// Where to deliver the response.
+    pub reply: mpsc::Sender<InferenceResponse>,
+}
+
+/// The served result.
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    pub id: u64,
+    /// Class logits.
+    pub logits: Vec<f32>,
+    /// End-to-end latency (enqueue → reply).
+    pub latency: Duration,
+    /// Batch size this request was served in.
+    pub batch: usize,
+    /// Whether the deadline was met.
+    pub deadline_met: bool,
+}
+
+/// Compute backend abstraction: the PJRT executor in production, a stub in
+/// tests.
+///
+/// Not `Send`: the xla crate's PJRT handles are `Rc`-based, so each worker
+/// thread constructs its own backend from a `Send` factory
+/// (`Server::start`).
+pub trait InferBackend {
+    /// Flattened input size per image.
+    fn image_elems(&self) -> usize;
+    /// Output logits per image.
+    fn classes(&self) -> usize;
+    /// Largest batch the backend accepts at once.
+    fn max_batch(&self) -> usize;
+    /// Run a batch: `images.len() == n * image_elems()`; returns
+    /// `n * classes()` logits.
+    fn infer(&self, images: &[f32], n: usize) -> crate::Result<Vec<f32>>;
+}
+
+impl InferBackend for crate::runtime::ModelExecutor {
+    fn image_elems(&self) -> usize {
+        self.image_elems
+    }
+    fn classes(&self) -> usize {
+        self.classes
+    }
+    fn max_batch(&self) -> usize {
+        crate::runtime::ModelExecutor::max_batch(self) as usize
+    }
+    fn infer(&self, images: &[f32], n: usize) -> crate::Result<Vec<f32>> {
+        crate::runtime::ModelExecutor::infer(self, images, n)
+    }
+}

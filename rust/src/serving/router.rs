@@ -1,0 +1,103 @@
+//! Replica router: spreads requests across independent serving replicas
+//! (e.g. two 2-FPGA XFER clusters serving the same model).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Cycle through replicas.
+    RoundRobin,
+    /// Pick the replica with the fewest outstanding requests.
+    LeastOutstanding,
+}
+
+/// Router state over `n` replicas.
+pub struct Router {
+    policy: RoutePolicy,
+    rr: AtomicU64,
+    outstanding: Vec<AtomicU64>,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy, replicas: usize) -> Self {
+        assert!(replicas > 0);
+        Router {
+            policy,
+            rr: AtomicU64::new(0),
+            outstanding: (0..replicas).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.outstanding.len()
+    }
+
+    /// Choose a replica for the next request and account it outstanding.
+    pub fn route(&self) -> usize {
+        let idx = match self.policy {
+            RoutePolicy::RoundRobin => {
+                (self.rr.fetch_add(1, Ordering::Relaxed) % self.outstanding.len() as u64) as usize
+            }
+            RoutePolicy::LeastOutstanding => self
+                .outstanding
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, o)| o.load(Ordering::Relaxed))
+                .map(|(i, _)| i)
+                .unwrap(),
+        };
+        self.outstanding[idx].fetch_add(1, Ordering::Relaxed);
+        idx
+    }
+
+    /// Mark a request complete on a replica.
+    pub fn complete(&self, replica: usize) {
+        self.outstanding[replica].fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Outstanding count per replica (diagnostics / tests).
+    pub fn load(&self) -> Vec<u64> {
+        self.outstanding
+            .iter()
+            .map(|o| o.load(Ordering::Relaxed))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles() {
+        let r = Router::new(RoutePolicy::RoundRobin, 3);
+        let picks: Vec<usize> = (0..6).map(|_| r.route()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_outstanding_balances() {
+        let r = Router::new(RoutePolicy::LeastOutstanding, 2);
+        let a = r.route();
+        let b = r.route();
+        assert_ne!(a, b, "second request goes to the idle replica");
+        r.complete(a);
+        // Now replica a is idle again; next goes there.
+        assert_eq!(r.route(), a);
+    }
+
+    #[test]
+    fn conservation_of_outstanding() {
+        // Property: total outstanding = routes − completes.
+        let r = Router::new(RoutePolicy::LeastOutstanding, 4);
+        let mut routed = Vec::new();
+        for _ in 0..100 {
+            routed.push(r.route());
+        }
+        for &i in routed.iter().take(60) {
+            r.complete(i);
+        }
+        assert_eq!(r.load().iter().sum::<u64>(), 40);
+    }
+}

@@ -1,0 +1,270 @@
+//! The serving server: a shared deadline-aware batcher feeding a pool of
+//! worker threads, each owning one compute backend (one simulated FPGA
+//! cluster / one PJRT executor).
+
+use super::{Batcher, BatcherConfig, InferBackend, InferenceRequest, InferenceResponse, Metrics};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Server tuning.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerConfig {
+    pub batcher: BatcherConfig,
+    /// Default deadline applied when the client does not set one.
+    pub default_deadline: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            batcher: BatcherConfig::default(),
+            default_deadline: Duration::from_millis(50),
+        }
+    }
+}
+
+/// Constructs a backend inside its worker thread (PJRT handles are not
+/// `Send`, so backends cannot cross threads — factories can).
+pub type BackendFactory = Box<dyn FnOnce() -> crate::Result<Box<dyn InferBackend>> + Send>;
+
+/// A running server (drop or `shutdown()` to stop).
+pub struct Server {
+    batcher: Arc<Batcher>,
+    metrics: Arc<Metrics>,
+    workers: Vec<JoinHandle<()>>,
+    next_id: AtomicU64,
+    cfg: ServerConfig,
+}
+
+impl Server {
+    /// Start one worker thread per backend factory.
+    pub fn start(factories: Vec<BackendFactory>, cfg: ServerConfig) -> Self {
+        assert!(!factories.is_empty());
+        let batcher = Arc::new(Batcher::new(cfg.batcher));
+        let metrics = Arc::new(Metrics::new());
+        let workers = factories
+            .into_iter()
+            .enumerate()
+            .map(|(wid, factory)| {
+                let b = batcher.clone();
+                let m = metrics.clone();
+                std::thread::Builder::new()
+                    .name(format!("superlip-worker-{wid}"))
+                    .spawn(move || match factory() {
+                        Ok(backend) => worker_loop(&*backend, &b, &m),
+                        Err(e) => eprintln!("worker {wid}: backend init failed: {e}"),
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Server {
+            batcher,
+            metrics,
+            workers,
+            next_id: AtomicU64::new(0),
+            cfg,
+        }
+    }
+
+    /// Submit one image; returns the receiver for its response.
+    pub fn submit(&self, image: Vec<f32>) -> crate::Result<mpsc::Receiver<InferenceResponse>> {
+        self.submit_with_deadline(image, self.cfg.default_deadline)
+    }
+
+    /// Submit with an explicit relative deadline.
+    pub fn submit_with_deadline(
+        &self,
+        image: Vec<f32>,
+        deadline: Duration,
+    ) -> crate::Result<mpsc::Receiver<InferenceResponse>> {
+        let (tx, rx) = mpsc::channel();
+        let now = Instant::now();
+        self.batcher.push(InferenceRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            image,
+            enqueued: now,
+            deadline: now + deadline,
+            reply: tx,
+        })?;
+        Ok(rx)
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Stop accepting requests, drain the queue, join workers.
+    pub fn shutdown(mut self) -> Arc<Metrics> {
+        self.batcher.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.metrics.clone()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.batcher.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(backend: &dyn InferBackend, batcher: &Batcher, metrics: &Metrics) {
+    let elems = backend.image_elems();
+    let classes = backend.classes();
+    let max_batch = backend.max_batch().max(1);
+    // Reused batch buffer — no allocation in the steady state.
+    let mut images: Vec<f32> = Vec::with_capacity(max_batch * elems);
+    while let Some(batch) = batcher.next_batch() {
+        // Respect the backend's batch cap (batcher may be configured wider).
+        for chunk in batch.chunks(max_batch) {
+            images.clear();
+            for req in chunk {
+                debug_assert_eq!(req.image.len(), elems);
+                images.extend_from_slice(&req.image);
+            }
+            let n = chunk.len();
+            match backend.infer(&images, n) {
+                Ok(logits) => {
+                    let now = Instant::now();
+                    for (i, req) in chunk.iter().enumerate() {
+                        let latency = now - req.enqueued;
+                        let deadline_met = now <= req.deadline;
+                        metrics.record(latency, n, deadline_met);
+                        let _ = req.reply.send(InferenceResponse {
+                            id: req.id,
+                            logits: logits[i * classes..(i + 1) * classes].to_vec(),
+                            latency,
+                            batch: n,
+                            deadline_met,
+                        });
+                    }
+                }
+                Err(_) => {
+                    // Backend failure: drop replies (receivers observe a
+                    // closed channel). Metrics record nothing.
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic stub backend: logits[c] = sum(image) + c.
+    struct Stub {
+        elems: usize,
+        classes: usize,
+        max_batch: usize,
+        delay: Duration,
+    }
+
+    impl InferBackend for Stub {
+        fn image_elems(&self) -> usize {
+            self.elems
+        }
+        fn classes(&self) -> usize {
+            self.classes
+        }
+        fn max_batch(&self) -> usize {
+            self.max_batch
+        }
+        fn infer(&self, images: &[f32], n: usize) -> crate::Result<Vec<f32>> {
+            std::thread::sleep(self.delay);
+            let mut out = Vec::with_capacity(n * self.classes);
+            for i in 0..n {
+                let s: f32 = images[i * self.elems..(i + 1) * self.elems].iter().sum();
+                for c in 0..self.classes {
+                    out.push(s + c as f32);
+                }
+            }
+            Ok(out)
+        }
+    }
+
+    fn stub(delay_ms: u64) -> super::BackendFactory {
+        Box::new(move || {
+            Ok(Box::new(Stub {
+                elems: 4,
+                classes: 3,
+                max_batch: 4,
+                delay: Duration::from_millis(delay_ms),
+            }) as Box<dyn InferBackend>)
+        })
+    }
+
+    #[test]
+    fn serves_correct_results() {
+        let srv = Server::start(vec![stub(0)], ServerConfig::default());
+        let rx = srv.submit(vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.logits, vec![10.0, 11.0, 12.0]);
+        assert!(resp.deadline_met);
+        let m = srv.shutdown();
+        assert_eq!(m.completed(), 1);
+    }
+
+    #[test]
+    fn batches_multiple_requests() {
+        let mut cfg = ServerConfig::default();
+        cfg.batcher.window = Duration::from_millis(20);
+        cfg.batcher.max_batch = 4;
+        let srv = Server::start(vec![stub(1)], cfg);
+        let rxs: Vec<_> = (0..8)
+            .map(|i| srv.submit(vec![i as f32; 4]).unwrap())
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(r.logits[0], 4.0 * i as f32);
+        }
+        let m = srv.shutdown();
+        assert_eq!(m.completed(), 8);
+        assert!(m.mean_batch() > 1.0, "batching should engage: {}", m.mean_batch());
+    }
+
+    #[test]
+    fn multiple_workers_share_queue() {
+        let mut cfg = ServerConfig::default();
+        cfg.batcher.max_batch = 1; // force per-request dispatch
+        let srv = Server::start(vec![stub(5), stub(5)], cfg);
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..6).map(|_| srv.submit(vec![0.0; 4]).unwrap()).collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        // 6 × 5 ms on one worker would be ≥30 ms; two workers halve it.
+        // Allow generous slack for CI jitter — just require overlap.
+        assert!(t0.elapsed() < Duration::from_millis(28), "{:?}", t0.elapsed());
+        srv.shutdown();
+    }
+
+    #[test]
+    fn deadline_miss_recorded() {
+        let srv = Server::start(vec![stub(20)], ServerConfig::default());
+        let rx = srv
+            .submit_with_deadline(vec![0.0; 4], Duration::from_millis(1))
+            .unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(!resp.deadline_met);
+        let m = srv.shutdown();
+        assert_eq!(m.deadline_misses(), 1);
+    }
+
+    #[test]
+    fn shutdown_drains_queue() {
+        let srv = Server::start(vec![stub(1)], ServerConfig::default());
+        let rxs: Vec<_> = (0..5).map(|_| srv.submit(vec![0.0; 4]).unwrap()).collect();
+        let m = srv.shutdown();
+        assert_eq!(m.completed(), 5);
+        for rx in rxs {
+            assert!(rx.try_recv().is_ok());
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! Cycle-level simulation of the tiled, double-buffered accelerator and of
+//! multi-FPGA clusters — the stand-in for the paper's on-board ZCU102
+//! measurements (axi-timer + power meter).
+//!
+//! The simulator executes the same phase structure the hardware does
+//! (Figure 6): per inner trip, IFM-tile and weight-tile loads run
+//! concurrently with the previous trip's compute; OFM write-back overlaps
+//! the inner accumulation loop. On top of the closed-form eqs 8–14 it
+//! charges the real-world costs the analytic models abstract away:
+//!
+//! * per-phase double-buffer swap / AXI re-arm handshake (`sync_cycles`);
+//! * DDR burst-setup latency per tile transfer, amortized over the tile;
+//! * aggregate DDR bandwidth contention when concurrent streams exceed the
+//!   memory system's words/cycle;
+//! * Aurora framing setup on every inter-FPGA ring step (XFER);
+//! * inter-layer halo / placement traffic on the cluster (§4.5).
+//!
+//! These are exactly the effects that make the FPGA15 [14] roofline model
+//! optimistic on communication-bound designs (Figure 2 / Figure 14) while
+//! the paper's model stays within a few percent.
+
+mod cluster;
+mod engine;
+
+pub use cluster::{simulate_cluster, simulate_network, ClusterSim};
+pub use engine::{simulate_layer, SimConfig, SimResult};

@@ -1,0 +1,13 @@
+//! Supporting substrates built in-crate (the offline image vendors no
+//! general-purpose crates): a deterministic PRNG, summary statistics,
+//! fixed-point quantization helpers, and a miniature property-testing
+//! harness.
+
+mod prng;
+pub mod proptest;
+mod quant;
+mod stats;
+
+pub use prng::SplitMix64;
+pub use quant::{dequantize_fx16, quantize_fx16, FX16_FRAC_BITS};
+pub use stats::Summary;

@@ -1,0 +1,105 @@
+//! A miniature property-testing harness (the offline image has no proptest
+//! crate). `forall` draws `n` random cases from a generator, checks a
+//! property, and on failure greedily shrinks the case before panicking with
+//! a reproducible seed.
+
+use super::SplitMix64;
+
+/// Run `prop` on `n` cases drawn by `gen`. On failure, `shrink` proposes
+/// smaller candidates (tried in order; first that still fails is recursed
+/// on) until a local minimum is reached, then panics with the seed and the
+/// minimal case.
+pub fn forall_shrink<T, G, S, P>(seed: u64, n: usize, gen: G, shrink: S, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: Fn(&mut SplitMix64) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> bool,
+{
+    let mut rng = SplitMix64::new(seed);
+    for case_idx in 0..n {
+        let case = gen(&mut rng);
+        if prop(&case) {
+            continue;
+        }
+        // Shrink.
+        let mut minimal = case.clone();
+        'outer: loop {
+            for candidate in shrink(&minimal) {
+                if !prop(&candidate) {
+                    minimal = candidate;
+                    continue 'outer;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property failed (seed={seed}, case #{case_idx})\n  original: {case:?}\n  minimal:  {minimal:?}"
+        );
+    }
+}
+
+/// `forall` without shrinking.
+pub fn forall<T, G, P>(seed: u64, n: usize, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: Fn(&mut SplitMix64) -> T,
+    P: Fn(&T) -> bool,
+{
+    forall_shrink(seed, n, gen, |_| Vec::new(), prop);
+}
+
+/// Shrink helper: halve-and-decrement candidates for a u64 toward `lo`.
+pub fn shrink_u64(v: u64, lo: u64) -> Vec<u64> {
+    let mut out = Vec::new();
+    if v > lo {
+        out.push(lo);
+        let mid = lo + (v - lo) / 2;
+        if mid != lo && mid != v {
+            out.push(mid);
+        }
+        out.push(v - 1);
+    }
+    out.dedup();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_quiet() {
+        forall(1, 200, |r| r.range(0, 100), |&x| x <= 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        forall(2, 200, |r| r.range(0, 100), |&x| x < 90);
+    }
+
+    #[test]
+    fn shrinking_finds_minimal_counterexample() {
+        let caught = std::panic::catch_unwind(|| {
+            forall_shrink(
+                3,
+                200,
+                |r| r.range(0, 1000),
+                |&v| shrink_u64(v, 0),
+                |&x| x < 500,
+            );
+        });
+        let msg = *caught.unwrap_err().downcast::<String>().unwrap();
+        // Greedy shrink must land exactly on the boundary 500.
+        assert!(msg.contains("minimal:  500"), "{msg}");
+    }
+
+    #[test]
+    fn shrink_u64_proposals() {
+        assert!(shrink_u64(10, 0).contains(&0));
+        assert!(shrink_u64(10, 0).contains(&5));
+        assert!(shrink_u64(10, 0).contains(&9));
+        assert!(shrink_u64(0, 0).is_empty());
+    }
+}

@@ -1,0 +1,44 @@
+//! 16-bit fixed-point quantization (the paper's fx16 datapath, Q7.8-style).
+//!
+//! The fx16 designs in Tables 2–4 use 16-bit fixed point; the serving
+//! example quantizes activations/weights with these helpers to mimic the
+//! precision the accelerator would see.
+
+/// Fractional bits of the Q7.8 format (1 sign + 7 integer + 8 fraction).
+pub const FX16_FRAC_BITS: u32 = 8;
+
+/// Quantize an f32 to fx16 (saturating).
+pub fn quantize_fx16(x: f32) -> i16 {
+    let scaled = (x * (1 << FX16_FRAC_BITS) as f32).round();
+    scaled.clamp(i16::MIN as f32, i16::MAX as f32) as i16
+}
+
+/// Back to f32.
+pub fn dequantize_fx16(q: i16) -> f32 {
+    q as f32 / (1 << FX16_FRAC_BITS) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_error_bounded() {
+        for x in [-3.75f32, -0.004, 0.0, 0.5, 1.0, 27.126, 100.0] {
+            let err = (dequantize_fx16(quantize_fx16(x)) - x).abs();
+            assert!(err <= 0.5 / (1 << FX16_FRAC_BITS) as f32 + 1e-6, "x={x} err={err}");
+        }
+    }
+
+    #[test]
+    fn saturates() {
+        assert_eq!(quantize_fx16(1e9), i16::MAX);
+        assert_eq!(quantize_fx16(-1e9), i16::MIN);
+    }
+
+    #[test]
+    fn zero_exact() {
+        assert_eq!(quantize_fx16(0.0), 0);
+        assert_eq!(dequantize_fx16(0), 0.0);
+    }
+}

