@@ -1,10 +1,17 @@
 //! §Perf: the L3 hot paths — analytic-model evaluation, cluster
 //! simulation, DSE, and the serving fast path (batcher throughput).
 //! Baselines and targets live in EXPERIMENTS.md §Perf.
+//!
+//! The XFER/partition measurements print BOTH the closed-form fast path
+//! and the retained naive reference (`*_ref`), so before/after speedups
+//! come from one run on one machine. Set `RAYON_NUM_THREADS=1` for
+//! deterministic single-core timing runs.
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
-use superlip::analytic::{layer_latency, network_latency, Design, XferMode};
+use superlip::analytic::{
+    layer_latency, network_latency, xfer_layer_latency, xfer_layer_latency_ref, Design, XferMode,
+};
 use superlip::bench::Harness;
 use superlip::dse;
 use superlip::model::zoo;
@@ -12,6 +19,7 @@ use superlip::partition::Factors;
 use superlip::platform::{FpgaSpec, Precision};
 use superlip::serving::{Batcher, BatcherConfig, InferenceRequest};
 use superlip::sim::{simulate_network, SimConfig};
+use superlip::util::par;
 
 fn main() {
     let mut h = Harness::new("perf_hotpaths");
@@ -19,12 +27,16 @@ fn main() {
     let cfg = SimConfig::zcu102(&fpga);
     let alexnet = zoo::alexnet();
     let vgg = zoo::vgg16();
+    // Hoisted out of every measured closure: network construction is not
+    // part of any hot path being measured.
+    let yolo = zoo::yolov1();
     let d = Design::fixed16(128, 10, 7, 14);
+    h.record("worker threads (RAYON_NUM_THREADS)", par::num_threads() as f64, "threads");
 
     // --- Analytic model evaluation rate (the DSE inner loop).
     let conv3 = alexnet.layers[2].clone();
     let t0 = Instant::now();
-    let n_eval = 2_000_000u64;
+    let n_eval = if h.is_quick() { 100_000u64 } else { 2_000_000u64 };
     let mut acc = 0u64;
     for i in 0..n_eval {
         let dd = Design::fixed16(1 + (i % 128), 1 + (i % 24), 7, 14);
@@ -33,6 +45,32 @@ fn main() {
     let rate = n_eval as f64 / t0.elapsed().as_secs_f64();
     std::hint::black_box(acc);
     h.record("analytic model eval rate", rate / 1e6, "M evals/s");
+
+    // --- XFER cluster-model evaluation rate: closed-form corners vs the
+    // naive slice-materializing reference (the tentpole's core win).
+    let f16 = Factors::new(1, 4, 1, 4);
+    let n_xfer = if h.is_quick() { 2_000u64 } else { 50_000u64 };
+    let t0 = Instant::now();
+    let mut acc = 0u64;
+    for i in 0..n_xfer {
+        let dd = Design::fixed16(1 + (i % 128), 1 + (i % 24), 7, 14);
+        let r = xfer_layer_latency(&conv3, &dd, &f16, &fpga, XferMode::Xfer);
+        acc = acc.wrapping_add(r.worst.lat);
+    }
+    let fast = n_xfer as f64 / t0.elapsed().as_secs_f64();
+    std::hint::black_box(acc);
+    let t0 = Instant::now();
+    let mut acc = 0u64;
+    for i in 0..n_xfer {
+        let dd = Design::fixed16(1 + (i % 128), 1 + (i % 24), 7, 14);
+        let r = xfer_layer_latency_ref(&conv3, &dd, &f16, &fpga, XferMode::Xfer);
+        acc = acc.wrapping_add(r.worst.lat);
+    }
+    let naive = n_xfer as f64 / t0.elapsed().as_secs_f64();
+    std::hint::black_box(acc);
+    h.record("xfer eval rate (closed-form, 16 FPGAs)", fast / 1e6, "M evals/s");
+    h.record("xfer eval rate (naive ref, 16 FPGAs)", naive / 1e6, "M evals/s");
+    h.record("xfer eval speedup (fast/ref)", fast / naive, "x");
 
     h.measure("network_latency AlexNet", || {
         std::hint::black_box(network_latency(&alexnet, &d));
@@ -68,7 +106,6 @@ fn main() {
         std::hint::black_box(dse::best_uniform_design(&alexnet, &fpga, Precision::Fixed16));
     });
     h.measure("partition search (YOLO, 16 FPGAs)", || {
-        let yolo = zoo::yolov1();
         std::hint::black_box(dse::best_factors(
             &yolo,
             &Design::fixed16(64, 25, 7, 14),
@@ -79,19 +116,25 @@ fn main() {
     });
 
     // --- Serving fast path: batcher push/pop throughput (no compute).
+    // Channel construction is NOT part of the batcher hot path — build all
+    // reply channels before starting the clock.
     let n_req = 20_000usize;
-    let t0 = Instant::now();
     let b = Batcher::new(BatcherConfig {
         max_batch: 4,
         window: Duration::from_micros(0),
         deadline_margin: Duration::from_micros(0),
     });
     let now = Instant::now();
-    let mut popped = 0usize;
-    let mut keep = Vec::new();
-    for i in 0..n_req {
+    let mut chans = Vec::with_capacity(n_req);
+    let mut keep = Vec::with_capacity(n_req);
+    for _ in 0..n_req {
         let (tx, rx) = mpsc::channel();
+        chans.push(tx);
         keep.push(rx);
+    }
+    let t0 = Instant::now();
+    let mut popped = 0usize;
+    for (i, tx) in chans.into_iter().enumerate() {
         b.push(InferenceRequest {
             id: i as u64,
             image: Vec::new(),

@@ -47,15 +47,54 @@ impl LayerLatency {
     }
 }
 
+/// Everything eqs 8–14 need of a (sub-)layer, as a plain copyable value.
+///
+/// The DSE hot path evaluates millions of candidate × slice shapes; a
+/// `ConvLayer` clone per evaluation (String name included) would dominate
+/// the search time, so the closed-form paths route through this type and
+/// never touch the heap.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SliceDims {
+    pub b: u64,
+    pub m: u64,
+    pub n: u64,
+    pub r: u64,
+    pub c: u64,
+    pub k: u64,
+    pub groups: u64,
+}
+
+impl SliceDims {
+    /// The dims of a full (un-sliced) layer.
+    pub fn of(layer: &ConvLayer) -> Self {
+        SliceDims {
+            b: layer.b,
+            m: layer.m,
+            n: layer.n,
+            r: layer.r,
+            c: layer.c,
+            k: layer.k,
+            groups: layer.groups,
+        }
+    }
+
+    /// OFM channels produced by one group (cf. `ConvLayer::m_per_group`).
+    pub fn m_per_group(&self) -> u64 {
+        self.m / self.groups
+    }
+
+    /// IFM channels seen by one group (cf. `ConvLayer::n_per_group`).
+    pub fn n_per_group(&self) -> u64 {
+        self.n / self.groups
+    }
+}
+
 /// Evaluate eqs 8–14 for `layer` under `design` (single FPGA, no XFER).
 pub fn layer_latency(layer: &ConvLayer, d: &Design) -> LayerLatency {
     layer_latency_scaled(layer, d, 1, 1, 0)
 }
 
-/// Core evaluation shared with the XFER model (`analytic::xfer`):
-/// `w_div` divides the weight-load latency (eq 16's `Pb·Pr·Pc`),
-/// `i_div` divides the IFM-load latency (eq 20's `Pm`),
-/// `t_b2b` is the worst inter-FPGA channel term entering Lat1 (eqs 18/21).
+/// `slice_latency_scaled` on a full layer's dims (see `analytic::xfer`).
 pub(super) fn layer_latency_scaled(
     layer: &ConvLayer,
     d: &Design,
@@ -63,13 +102,27 @@ pub(super) fn layer_latency_scaled(
     i_div: u64,
     t_b2b: u64,
 ) -> LayerLatency {
-    let (m, n) = (layer.m_per_group(), layer.n_per_group());
+    slice_latency_scaled(&SliceDims::of(layer), d, w_div, i_div, t_b2b)
+}
+
+/// Core evaluation shared with the XFER model (`analytic::xfer`):
+/// `w_div` divides the weight-load latency (eq 16's `Pb·Pr·Pc`),
+/// `i_div` divides the IFM-load latency (eq 20's `Pm`),
+/// `t_b2b` is the worst inter-FPGA channel term entering Lat1 (eqs 18/21).
+pub(super) fn slice_latency_scaled(
+    s: &SliceDims,
+    d: &Design,
+    w_div: u64,
+    i_div: u64,
+    t_b2b: u64,
+) -> LayerLatency {
+    let (m, n) = (s.m_per_group(), s.n_per_group());
     // Tiles never exceed the layer dims they tile.
     let tm = d.tm.min(m).max(1);
     let tn = d.tn.min(n).max(1);
-    let tr = d.tr.min(layer.r).max(1);
-    let tc = d.tc.min(layer.c).max(1);
-    let k2 = layer.k * layer.k;
+    let tr = d.tr.min(s.r).max(1);
+    let tc = d.tc.min(s.c).max(1);
+    let k2 = s.k * s.k;
 
     // Eqs 8–11 (eq 16/20 generalization via the divisors).
     let t_i = (tn * tr * tc).div_ceil(d.ip * i_div);
@@ -83,11 +136,7 @@ pub(super) fn layer_latency_scaled(
     let trips_n = n.div_ceil(tn);
     let lat2 = (trips_n * lat1).max(t_o);
     // Eq 14 — outer trips; grouped convs run the engine once per group.
-    let trips_outer = layer.b
-        * layer.r.div_ceil(tr)
-        * layer.c.div_ceil(tc)
-        * m.div_ceil(tm)
-        * layer.groups;
+    let trips_outer = s.b * s.r.div_ceil(tr) * s.c.div_ceil(tc) * m.div_ceil(tm) * s.groups;
     let lat = trips_outer * lat2 + t_o + lat1;
 
     LayerLatency {
@@ -109,8 +158,14 @@ pub(super) fn layer_latency_scaled(
 }
 
 /// Sum of eq 14 over all conv layers of a network (uniform design, §4.6).
+/// Repeated layer shapes (VGG16's stacked 3×3 blocks) are evaluated once
+/// and multiplied — u64 sums are exact, so the value is bit-identical to
+/// the naive per-layer sum.
 pub fn network_latency(net: &crate::model::Network, d: &Design) -> u64 {
-    net.conv_layers().map(|l| layer_latency(l, d).lat).sum()
+    net.conv_shape_classes()
+        .iter()
+        .map(|&(l, count)| count * layer_latency(l, d).lat)
+        .sum()
 }
 
 #[cfg(test)]

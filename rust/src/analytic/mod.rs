@@ -16,6 +16,9 @@ mod xfer;
 
 pub use bottleneck::{detect, Bottleneck};
 pub use design::Design;
-pub use latency::{layer_latency, network_latency, LayerLatency};
+pub use latency::{layer_latency, network_latency, LayerLatency, SliceDims};
 pub use resources::{check_feasible, is_feasible, ResourceUsage};
-pub use xfer::{xfer_layer_latency, xfer_network_latency, XferMode};
+pub use xfer::{
+    xfer_layer_latency, xfer_layer_latency_ref, xfer_network_latency, xfer_network_latency_ref,
+    ClusterLayerLatency, XferMode,
+};

@@ -66,15 +66,17 @@ impl SuperLip {
     /// the best *cluster* latency at `n_fpgas`.
     pub fn plan(&self, net: &Network, p: Precision, n_fpgas: u64) -> Result<DeploymentPlan> {
         let (top, _stats, _elapsed) = dse::top_uniform_designs(net, &self.fpga, p, 32);
-        let mut best: Option<(Design, u64)> = None;
+        let mut best: Option<(Design, Factors, u64)> = None;
         for (d, _single) in &top {
-            let (_, cycles) = dse::best_factors(net, d, &self.fpga, n_fpgas, XferMode::Xfer);
-            if best.map(|(_, b)| cycles < b).unwrap_or(true) {
-                best = Some((*d, cycles));
+            let (f, cycles) = dse::best_factors(net, d, &self.fpga, n_fpgas, XferMode::Xfer);
+            if best.map(|(_, _, b)| cycles < b).unwrap_or(true) {
+                best = Some((*d, f, cycles));
             }
         }
-        let (design, _) = best.expect("top designs non-empty");
-        self.plan_with_design(net, design, n_fpgas)
+        // §Perf: the winning (factors, cycles) pair is reused — the seed
+        // re-ran the whole partition search inside plan_with_design.
+        let (design, factors, model_cycles) = best.expect("top designs non-empty");
+        self.plan_inner(net, design, n_fpgas, Some((factors, model_cycles)))
     }
 
     /// Planning with a fixed accelerator design (the Figure 15 protocol:
@@ -85,11 +87,23 @@ impl SuperLip {
         design: Design,
         n_fpgas: u64,
     ) -> Result<DeploymentPlan> {
+        self.plan_inner(net, design, n_fpgas, None)
+    }
+
+    fn plan_inner(
+        &self,
+        net: &Network,
+        design: Design,
+        n_fpgas: u64,
+        precomputed: Option<(Factors, u64)>,
+    ) -> Result<DeploymentPlan> {
         let k_max = net.conv_layers().map(|l| l.k).max().unwrap_or(1);
         let usage = check_feasible(&design, &self.fpga, k_max)?;
 
-        let (factors, model_cycles) =
-            dse::best_factors(net, &design, &self.fpga, n_fpgas, XferMode::Xfer);
+        let (factors, model_cycles) = match precomputed {
+            Some(fc) => fc,
+            None => dse::best_factors(net, &design, &self.fpga, n_fpgas, XferMode::Xfer),
+        };
 
         let simr = sim::simulate_network(
             net,

@@ -2,11 +2,25 @@
 //! for the whole network, avoiding per-layer FPGA reconfiguration and
 //! inter-layer re-shuffles. The paper accepts ≤5% latency loss vs
 //! layer-customized designs in exchange.
+//!
+//! §Perf: the search runs the 5-deep candidate nest across all cores
+//! (`util::par`), with a **shared atomic branch-and-bound cutoff** — the
+//! current k-th-best total — so an early winner on one worker prunes the
+//! layer-accumulation loop on every other worker. Candidates are ranked by
+//! the total order (cycles, sequential-visit rank), which makes the result
+//! bit-identical to the single-threaded search regardless of thread
+//! interleaving (ties can never flip to a later candidate). Repeated layer
+//! shapes are collapsed once up front (`conv_shape_classes`) and
+//! multiplied back in, so VGG-style stacks cost one evaluation per
+//! distinct shape per candidate.
 
 use super::tiling::{candidate_tiles, stream_presets, SearchStats};
 use crate::analytic::{is_feasible, Design};
 use crate::model::Network;
 use crate::platform::{FpgaSpec, Precision};
+use crate::util::par;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 /// Result of the uniform search.
 #[derive(Debug, Clone)]
@@ -42,6 +56,15 @@ pub fn best_uniform_design(net: &Network, fpga: &FpgaSpec, p: Precision) -> Cros
     }
 }
 
+/// A top-k entry under the deterministic total order.
+struct Entry {
+    d: Design,
+    cycles: u64,
+    /// Position in the sequential candidate visit order — the tie-breaker
+    /// that keeps parallel results bit-identical to the sequential search.
+    rank: u64,
+}
+
 /// The `k` best uniform designs by single-FPGA latency (ascending). Used by
 /// the coordinator to co-optimize design × partition for a target cluster
 /// size: the single-FPGA optimum is usually compute-bound, while a slightly
@@ -67,69 +90,101 @@ pub fn top_uniform_designs(
     let max_macs = fpga.max_macs(p);
     // The weight buffer must hold the largest kernel in the network.
     let k_max = net.conv_layers().map(|l| l.k).max().unwrap_or(1);
+    // §Perf: one evaluation per distinct layer shape, multiplied back.
+    let classes = net.conv_shape_classes();
 
-    let mut stats = SearchStats::default();
-    // Bounded top-k kept sorted ascending by cycles.
-    let mut top: Vec<(Design, u64)> = Vec::with_capacity(k + 1);
-    // §Perf/L3: accumulate per-layer latency with branch-and-bound — once
-    // the partial sum exceeds the current k-th best, the candidate cannot
-    // enter the top-k and the remaining layers are skipped.
-    let conv: Vec<&crate::model::ConvLayer> = net.conv_layers().collect();
+    // Shared branch-and-bound state. `cutoff` caches the k-th-best cycles
+    // so workers prune with a relaxed load instead of taking the lock; it
+    // is always ≥ the final k-th-best, so stale reads only weaken pruning,
+    // never correctness.
+    let top: Mutex<Vec<Entry>> = Mutex::new(Vec::with_capacity(k + 1));
+    let cutoff = AtomicU64::new(u64::MAX);
+    let evaluated = AtomicU64::new(0);
+    let infeasible = AtomicU64::new(0);
 
-    for &tm in &tm_c {
-        for &tn in &tn_c {
-            if tm * tn > max_macs {
-                stats.infeasible += 1;
-                continue;
-            }
-            for &tr in &tr_c {
-                for &tc in &tc_c {
-                    // Latency is monotone non-increasing in stream widths, so
-                    // only frontier presets can win; still cheap to scan all.
-                    for &(ip, wp, op) in &streams {
-                        let d = Design {
-                            tm,
-                            tn,
-                            tr,
-                            tc,
-                            ip,
-                            wp,
-                            op,
-                            precision: p,
-                        };
-                        if !is_feasible(&d, fpga, k_max) {
-                            stats.infeasible += 1;
-                            continue;
+    // Work items: one (tm, tn) pair per claim; the tr/tc/stream nest runs
+    // inside the worker. Rank encodes the sequential nest order.
+    let dims = [
+        tm_c.len(),
+        tn_c.len(),
+        tr_c.len(),
+        tc_c.len(),
+        streams.len(),
+    ];
+    par::par_for(tm_c.len() * tn_c.len(), &|idx| {
+        let tm_i = idx / tn_c.len();
+        let tn_i = idx % tn_c.len();
+        let (tm, tn) = (tm_c[tm_i], tn_c[tn_i]);
+        if tm * tn > max_macs {
+            infeasible.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        for (tr_i, &tr) in tr_c.iter().enumerate() {
+            for (tc_i, &tc) in tc_c.iter().enumerate() {
+                // Latency is monotone non-increasing in stream widths, so
+                // only frontier presets can win; still cheap to scan all.
+                for (s_i, &(ip, wp, op)) in streams.iter().enumerate() {
+                    let d = Design {
+                        tm,
+                        tn,
+                        tr,
+                        tc,
+                        ip,
+                        wp,
+                        op,
+                        precision: p,
+                    };
+                    if !is_feasible(&d, fpga, k_max) {
+                        infeasible.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    }
+                    evaluated.fetch_add(1, Ordering::Relaxed);
+                    // §Perf/L3: accumulate per-shape latency with
+                    // branch-and-bound — once the partial sum exceeds the
+                    // shared cutoff, the candidate cannot enter the top-k.
+                    let cut = cutoff.load(Ordering::Relaxed);
+                    let mut cycles = 0u64;
+                    let mut complete = true;
+                    for &(l, count) in &classes {
+                        cycles += count * crate::analytic::layer_latency(l, &d).lat;
+                        if cycles > cut {
+                            complete = false;
+                            break;
                         }
-                        stats.evaluated += 1;
-                        let cutoff = if top.len() < k {
-                            u64::MAX
-                        } else {
-                            top.last().unwrap().1
-                        };
-                        let mut cycles = 0u64;
-                        for l in &conv {
-                            cycles += crate::analytic::layer_latency(l, &d).lat;
-                            if cycles >= cutoff {
-                                break; // bounded — cannot enter top-k
-                            }
-                        }
-                        if cycles < cutoff {
-                            let pos = top
-                                .iter()
-                                .position(|(_, c)| cycles < *c)
-                                .unwrap_or(top.len());
-                            top.insert(pos, (d, cycles));
-                            top.truncate(k);
+                    }
+                    if !complete {
+                        continue;
+                    }
+                    let rank = super::visit_rank(&[tm_i, tn_i, tr_i, tc_i, s_i], &dims);
+                    let mut t = top.lock().unwrap();
+                    let admit = t.len() < k
+                        || t.last()
+                            .map(|e| (cycles, rank) < (e.cycles, e.rank))
+                            .unwrap_or(true);
+                    if admit {
+                        let pos = t
+                            .iter()
+                            .position(|e| (cycles, rank) < (e.cycles, e.rank))
+                            .unwrap_or(t.len());
+                        t.insert(pos, Entry { d, cycles, rank });
+                        t.truncate(k);
+                        if t.len() == k {
+                            cutoff.store(t.last().unwrap().cycles, Ordering::Relaxed);
                         }
                     }
                 }
             }
         }
-    }
+    });
 
+    let top = top.into_inner().unwrap();
     assert!(!top.is_empty(), "non-empty search space");
-    (top, stats, start.elapsed().as_secs_f64())
+    let stats = SearchStats {
+        evaluated: evaluated.load(Ordering::Relaxed),
+        infeasible: infeasible.load(Ordering::Relaxed),
+    };
+    let result = top.iter().map(|e| (e.d, e.cycles)).collect();
+    (result, stats, start.elapsed().as_secs_f64())
 }
 
 #[cfg(test)]
@@ -169,5 +224,37 @@ mod tests {
             .map(|l| layer_latency(l, &r.design).lat)
             .sum();
         assert_eq!(r.cycles, by_layer);
+    }
+
+    #[test]
+    fn parallel_search_is_schedule_independent() {
+        // The (cycles, rank) total order must make the parallel result
+        // identical to the single-threaded one. A compact net keeps the
+        // candidate space small; the repeated layer exercises the dedup.
+        let a = crate::model::ConvLayer::conv("a", 1, 32, 24, 14, 14, 3);
+        let b = crate::model::ConvLayer::conv("b", 1, 48, 16, 7, 7, 5);
+        let net = Network::new("toy", vec![a.clone(), b, a]);
+        let fpga = FpgaSpec::zcu102();
+        let seq_run = crate::util::par::override_threads(1);
+        let (seq, seq_stats, _) = top_uniform_designs(&net, &fpga, Precision::Fixed16, 8);
+        drop(seq_run);
+        let par_run = crate::util::par::override_threads(4);
+        let (part, par_stats, _) = top_uniform_designs(&net, &fpga, Precision::Fixed16, 8);
+        drop(par_run);
+        assert_eq!(seq, part);
+        assert_eq!(seq_stats.evaluated, par_stats.evaluated);
+        assert_eq!(seq_stats.infeasible, par_stats.infeasible);
+    }
+
+    #[test]
+    fn top_k_sorted_and_distinct() {
+        let net = zoo::alexnet();
+        let fpga = FpgaSpec::zcu102();
+        let (top, _, _) = top_uniform_designs(&net, &fpga, Precision::Fixed16, 16);
+        assert_eq!(top.len(), 16);
+        for w in top.windows(2) {
+            assert!(w[0].1 <= w[1].1, "top-k must ascend: {w:?}");
+            assert_ne!(w[0].0, w[1].0, "duplicate design in top-k");
+        }
     }
 }

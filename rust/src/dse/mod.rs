@@ -2,6 +2,12 @@
 //! tiling search (the INLP of eq 15, solved by pruned enumeration over
 //! ceil-efficient candidates), partition-factor search per cluster size,
 //! and the Figure 2 roofline scatter.
+//!
+//! §Perf: all three searches run across cores (`util::par`) with shared
+//! atomic branch-and-bound cutoffs and a deterministic (cycles, rank)
+//! total order — parallel results are bit-identical to the sequential
+//! scans (`tests/equivalence.rs`). Layer shapes are deduplicated once per
+//! search via `Network::conv_shape_classes`.
 
 mod cross_layer;
 mod pareto;
@@ -12,3 +18,37 @@ pub use cross_layer::{best_uniform_design, top_uniform_designs, CrossLayerResult
 pub use pareto::{roofline_scatter, ScatterPoint};
 pub use partition_search::{best_factors, scaling_curve, ScalePoint};
 pub use tiling::{best_layer_design, candidate_tiles, stream_presets, SearchStats};
+
+/// Mixed-radix rank of a candidate's index tuple in the sequential
+/// nested-loop visit order (most-significant dimension first). This is the
+/// deterministic tie-breaker that keeps the parallel searches bit-identical
+/// to their sequential scans — shared so the encoding cannot drift between
+/// `top_uniform_designs` and `best_layer_design`.
+pub(crate) fn visit_rank(idx: &[usize], dims: &[usize]) -> u64 {
+    debug_assert_eq!(idx.len(), dims.len());
+    let mut r = 0u64;
+    for (i, d) in idx.iter().zip(dims) {
+        debug_assert!(i < d);
+        r = r * (*d as u64) + (*i as u64);
+    }
+    r
+}
+
+#[cfg(test)]
+mod rank_tests {
+    use super::visit_rank;
+
+    #[test]
+    fn matches_nested_loop_order() {
+        let dims = [3usize, 2, 4];
+        let mut expect = 0u64;
+        for a in 0..dims[0] {
+            for b in 0..dims[1] {
+                for c in 0..dims[2] {
+                    assert_eq!(visit_rank(&[a, b, c], &dims), expect);
+                    expect += 1;
+                }
+            }
+        }
+    }
+}

@@ -1,9 +1,21 @@
 //! Partition-factor search per cluster size (Figure 15's x-axis sweep).
+//!
+//! §Perf: candidates are scored in parallel (`util::par`) with a shared
+//! atomic best-so-far cutoff; each candidate runs ONE pass over the
+//! network's distinct layer shapes (`conv_shape_classes`), checking eq 22
+//! and accumulating cycles from the same `xfer_layer_latency` call —
+//! the seed code evaluated every layer twice (bandwidth pass + latency
+//! pass) and re-materialized `Vec<LayerSlice>` clones inside both. The
+//! (cycles, enumeration-rank) total order keeps the winner bit-identical
+//! to the sequential scan.
 
-use crate::analytic::{xfer_network_latency, Design, XferMode};
+use crate::analytic::{xfer_layer_latency, xfer_network_latency, Design, XferMode};
 use crate::model::Network;
 use crate::partition::Factors;
 use crate::platform::FpgaSpec;
+use crate::util::par;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 /// One point of the Figure 15 scaling curves.
 #[derive(Debug, Clone, Copy)]
@@ -26,26 +38,48 @@ pub fn best_factors(
     mode: XferMode,
 ) -> (Factors, u64) {
     let max_b = net.layers.first().map(|l| l.b).unwrap_or(1);
-    let mut best: Option<(Factors, u64)> = None;
-    for f in Factors::enumerate(n, max_b) {
-        if mode == XferMode::Xfer {
-            let all_ok = net.conv_layers().all(|l| {
-                crate::analytic::xfer_layer_latency(l, d, &f, fpga, mode).bandwidth_ok
-            });
-            if !all_ok {
-                continue;
+    let cands = Factors::enumerate(n, max_b);
+    let classes = net.conv_shape_classes();
+
+    let best: Mutex<Option<(Factors, u64, u64)>> = Mutex::new(None);
+    let cutoff = AtomicU64::new(u64::MAX);
+
+    par::par_for(cands.len(), &|i| {
+        let f = cands[i];
+        let cut = cutoff.load(Ordering::Relaxed);
+        let mut cycles = 0u64;
+        for &(l, count) in &classes {
+            let r = xfer_layer_latency(l, d, &f, fpga, mode);
+            if mode == XferMode::Xfer && !r.bandwidth_ok {
+                return; // eq 22 violated — scheme inadmissible
+            }
+            cycles += count * r.worst.lat;
+            if cycles > cut {
+                return; // bounded — cannot beat the shared best
             }
         }
-        let cycles = xfer_network_latency(net, d, &f, fpga, mode);
-        if best.as_ref().map(|(_, b)| cycles < *b).unwrap_or(true) {
-            best = Some((f, cycles));
+        let rank = i as u64;
+        let mut b = best.lock().unwrap();
+        if b.as_ref()
+            .map(|&(_, c, r)| (cycles, rank) < (c, r))
+            .unwrap_or(true)
+        {
+            *b = Some((f, cycles, rank));
+            cutoff.store(cycles, Ordering::Relaxed);
         }
-    }
-    best.expect("at least the trivial factorization is admissible")
+    });
+
+    let (f, cycles, _) = best
+        .into_inner()
+        .unwrap()
+        .expect("at least the trivial factorization is admissible");
+    (f, cycles)
 }
 
 /// The Figure 15 sweep: best factors at each cluster size, with speedups
-/// relative to single-FPGA.
+/// relative to single-FPGA. Each size's factor search is internally
+/// parallel, so the sweep itself stays sequential (no nested thread
+/// scopes).
 pub fn scaling_curve(
     net: &Network,
     d: &Design,
@@ -121,6 +155,22 @@ mod tests {
         for n in [2u64, 3, 6, 9] {
             let (f, _) = best_factors(&net, &d, &fpga, n, XferMode::Xfer);
             assert_eq!(f.num_fpgas(), n);
+        }
+    }
+
+    #[test]
+    fn parallel_factor_search_is_schedule_independent() {
+        let net = zoo::yolov1();
+        let d = Design::fixed16(64, 25, 7, 14);
+        let fpga = FpgaSpec::zcu102();
+        for n in [4u64, 16] {
+            let seq_run = crate::util::par::override_threads(1);
+            let seq = best_factors(&net, &d, &fpga, n, XferMode::Xfer);
+            drop(seq_run);
+            let par_run = crate::util::par::override_threads(4);
+            let par = best_factors(&net, &d, &fpga, n, XferMode::Xfer);
+            drop(par_run);
+            assert_eq!(seq, par, "n={n}");
         }
     }
 }

@@ -10,6 +10,9 @@
 use crate::analytic::{is_feasible, layer_latency, Design, LayerLatency};
 use crate::model::ConvLayer;
 use crate::platform::{FpgaSpec, Precision};
+use crate::util::par;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 /// Search effort statistics (the paper's Table 1 "Elap." column analog).
 #[derive(Debug, Clone, Copy, Default)]
@@ -61,7 +64,9 @@ pub fn stream_presets(p: Precision, fpga: &FpgaSpec) -> Vec<(u64, u64, u64)> {
     out
 }
 
-/// Exhaustive pruned search for the best design for one layer.
+/// Exhaustive pruned search for the best design for one layer, run across
+/// all cores (`util::par`) with the deterministic (lat, visit-rank) total
+/// order — the parallel result is bit-identical to the sequential scan.
 /// Returns the design, its latency breakdown, and search statistics.
 pub fn best_layer_design(
     layer: &ConvLayer,
@@ -75,44 +80,77 @@ pub fn best_layer_design(
     let streams = stream_presets(p, fpga);
     let max_macs = fpga.max_macs(p);
 
-    let mut stats = SearchStats::default();
-    let mut best: Option<(Design, LayerLatency)> = None;
+    let evaluated = AtomicU64::new(0);
+    let infeasible = AtomicU64::new(0);
+    let best: Mutex<Option<(Design, LayerLatency, u64)>> = Mutex::new(None);
+    let dims = [
+        tm_c.len(),
+        tn_c.len(),
+        tr_c.len(),
+        tc_c.len(),
+        streams.len(),
+    ];
 
-    for &tm in &tm_c {
-        for &tn in &tn_c {
-            if tm * tn > max_macs {
-                stats.infeasible += 1;
-                continue; // eq 1/2 — prune before inner loops
-            }
-            for &tr in &tr_c {
-                for &tc in &tc_c {
-                    for &(ip, wp, op) in &streams {
-                        let d = Design {
-                            tm,
-                            tn,
-                            tr,
-                            tc,
-                            ip,
-                            wp,
-                            op,
-                            precision: p,
-                        };
-                        if !is_feasible(&d, fpga, layer.k) {
-                            stats.infeasible += 1;
-                            continue;
-                        }
-                        stats.evaluated += 1;
-                        let ll = layer_latency(layer, &d);
-                        if best.as_ref().map(|(_, b)| ll.lat < b.lat).unwrap_or(true) {
-                            best = Some((d, ll));
-                        }
+    par::par_for(tm_c.len() * tn_c.len(), &|idx| {
+        let tm_i = idx / tn_c.len();
+        let tn_i = idx % tn_c.len();
+        let (tm, tn) = (tm_c[tm_i], tn_c[tn_i]);
+        if tm * tn > max_macs {
+            infeasible.fetch_add(1, Ordering::Relaxed);
+            return; // eq 1/2 — prune before inner loops
+        }
+        // Worker-local best, merged once per (tm, tn) block to keep the
+        // lock off the inner loop.
+        let mut local: Option<(Design, LayerLatency, u64)> = None;
+        for (tr_i, &tr) in tr_c.iter().enumerate() {
+            for (tc_i, &tc) in tc_c.iter().enumerate() {
+                for (s_i, &(ip, wp, op)) in streams.iter().enumerate() {
+                    let d = Design {
+                        tm,
+                        tn,
+                        tr,
+                        tc,
+                        ip,
+                        wp,
+                        op,
+                        precision: p,
+                    };
+                    if !is_feasible(&d, fpga, layer.k) {
+                        infeasible.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    }
+                    evaluated.fetch_add(1, Ordering::Relaxed);
+                    let ll = layer_latency(layer, &d);
+                    let rank = super::visit_rank(&[tm_i, tn_i, tr_i, tc_i, s_i], &dims);
+                    if local
+                        .as_ref()
+                        .map(|(_, b, r)| (ll.lat, rank) < (b.lat, *r))
+                        .unwrap_or(true)
+                    {
+                        local = Some((d, ll, rank));
                     }
                 }
             }
         }
-    }
+        if let Some((d, ll, rank)) = local {
+            let mut b = best.lock().unwrap();
+            if b.as_ref()
+                .map(|(_, cur, r)| (ll.lat, rank) < (cur.lat, *r))
+                .unwrap_or(true)
+            {
+                *b = Some((d, ll, rank));
+            }
+        }
+    });
 
-    let (d, ll) = best.expect("search space non-empty");
+    let stats = SearchStats {
+        evaluated: evaluated.load(Ordering::Relaxed),
+        infeasible: infeasible.load(Ordering::Relaxed),
+    };
+    let (d, ll, _) = best
+        .into_inner()
+        .unwrap()
+        .expect("search space non-empty");
     (d, ll, stats)
 }
 
@@ -160,6 +198,24 @@ mod tests {
         // Must beat a deliberately poor design.
         let naive = layer_latency(&l, &Design::fixed16(4, 4, 4, 4));
         assert!(ll.lat < naive.lat);
+    }
+
+    #[test]
+    fn parallel_layer_search_is_schedule_independent() {
+        // (lat, rank) total order: parallel result == sequential result,
+        // including the stats (which count every feasible candidate).
+        let l = zoo::alexnet().layers[4].clone();
+        let f = FpgaSpec::zcu102();
+        let seq_run = crate::util::par::override_threads(1);
+        let (d1, ll1, s1) = best_layer_design(&l, &f, Precision::Fixed16);
+        drop(seq_run);
+        let par_run = crate::util::par::override_threads(4);
+        let (d2, ll2, s2) = best_layer_design(&l, &f, Precision::Fixed16);
+        drop(par_run);
+        assert_eq!(d1, d2);
+        assert_eq!(ll1, ll2);
+        assert_eq!(s1.evaluated, s2.evaluated);
+        assert_eq!(s1.infeasible, s2.infeasible);
     }
 
     #[test]

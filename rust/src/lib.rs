@@ -41,26 +41,50 @@ pub mod util;
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
-/// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Crate-wide error type (hand-impl'd: the offline image vendors no
+/// thiserror).
+#[derive(Debug)]
 pub enum Error {
     /// A design violates a platform resource constraint (eqs 1–7, 22).
-    #[error("infeasible design: {0}")]
     Infeasible(String),
     /// Bad user/config input.
-    #[error("invalid argument: {0}")]
     InvalidArg(String),
     /// PJRT / XLA runtime failure.
-    #[error("runtime error: {0}")]
     Runtime(String),
     /// Serving-path failure (queue closed, worker died, ...).
-    #[error("serving error: {0}")]
     Serving(String),
     /// I/O failure (artifacts, reports).
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Infeasible(m) => write!(f, "infeasible design: {m}"),
+            Error::InvalidArg(m) => write!(f, "invalid argument: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Serving(m) => write!(f, "serving error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Runtime(e.to_string())

@@ -3,7 +3,7 @@
 /// What a layer computes. Only convolutions occupy the accelerator's MAC
 /// array; pooling/activation are streamed on the fly (as in [14] and the
 /// paper's testbed) and charged zero accelerator cycles.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum LayerKind {
     /// Standard (possibly grouped) convolution.
     Conv,
@@ -109,6 +109,25 @@ impl ConvLayer {
     /// Total IFM elements (with halo per stride/kernel).
     pub fn ifm_elems(&self) -> u64 {
         self.b * self.n * self.input_rows() * self.input_cols()
+    }
+
+    /// Every field that enters the analytic/simulated cost models —
+    /// everything but the name. Layers with equal keys are interchangeable
+    /// to the latency models, which the DSE dedup layer exploits (VGG16's
+    /// repeated 3×3 blocks collapse to one evaluation per distinct shape).
+    #[allow(clippy::type_complexity)]
+    pub fn shape_key(&self) -> (LayerKind, u64, u64, u64, u64, u64, u64, u64, u64) {
+        (
+            self.kind,
+            self.b,
+            self.m,
+            self.n,
+            self.r,
+            self.c,
+            self.k,
+            self.s,
+            self.groups,
+        )
     }
 }
 

@@ -33,6 +33,23 @@ impl Network {
         self.layers.iter().filter(|l| l.kind == LayerKind::Conv)
     }
 
+    /// Distinct conv-layer shapes with multiplicities, in first-appearance
+    /// order — the memo layer of the DSE hot path (§Perf): every latency
+    /// model is a pure function of `ConvLayer::shape_key`, so a network
+    /// with repeated shapes is evaluated once per distinct shape and the
+    /// result multiplied. Networks are small (≤ a few dozen layers), so a
+    /// linear scan beats hashing.
+    pub fn conv_shape_classes(&self) -> Vec<(&ConvLayer, u64)> {
+        let mut out: Vec<(&ConvLayer, u64)> = Vec::new();
+        for l in self.conv_layers() {
+            match out.iter().position(|(rep, _)| rep.shape_key() == l.shape_key()) {
+                Some(i) => out[i].1 += 1,
+                None => out.push((l, 1)),
+            }
+        }
+        out
+    }
+
     /// Rescale the batch size on all layers (the paper runs B = 1).
     pub fn with_batch(mut self, b: u64) -> Self {
         for l in &mut self.layers {

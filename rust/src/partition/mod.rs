@@ -10,5 +10,5 @@ mod topology;
 
 pub use placement::{interlayer_traffic_elems, PlacementPolicy};
 pub use scheme::{Factors, SharedData};
-pub use slicer::{slice_layer, LayerSlice};
+pub use slicer::{chunk_size_corners, slice_layer, split_group_dims, LayerSlice};
 pub use topology::{Torus, TorusNode};

@@ -99,8 +99,11 @@ impl std::fmt::Display for Factors {
     }
 }
 
-fn divisors(n: u64) -> Vec<u64> {
-    (1..=n).filter(|d| n % d == 0).collect()
+/// Divisors of `n`, ascending — lazily, so `enumerate`'s nested loops
+/// allocate nothing (§Perf: this runs inside the partition-search hot
+/// path for every cluster size).
+fn divisors(n: u64) -> impl Iterator<Item = u64> {
+    (1..=n).filter(move |d| n % d == 0)
 }
 
 #[cfg(test)]

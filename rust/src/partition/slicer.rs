@@ -46,6 +46,42 @@ fn ranges(total: u64, parts: u64) -> Vec<(u64, u64)> {
     out
 }
 
+/// The distinct **non-zero** chunk sizes `ranges(total, parts)` produces,
+/// in first-appearance order (the `base+1` remainder chunks come first,
+/// then the `base` chunks). At most two entries — chunk sizes differ by at
+/// most one — which is what collapses the worst-slice search from `P`
+/// materialized slices to ≤2⁴ corner shapes (`analytic::xfer`). Zero-size
+/// chunks (over-partitioned dims) are dropped, mirroring the zero-extent
+/// filter the latency path applies to `slice_layer` output.
+pub fn chunk_size_corners(total: u64, parts: u64) -> ([u64; 2], usize) {
+    let base = total / parts;
+    let extra = total % parts;
+    let mut sizes = [0u64; 2];
+    let mut n = 0;
+    if extra > 0 {
+        sizes[n] = base + 1;
+        n += 1;
+    }
+    if base > 0 {
+        sizes[n] = base;
+        n += 1;
+    }
+    (sizes, n)
+}
+
+/// Grouped layers under an OFM-channel split: if the slice's `m` does not
+/// divide the groups, the group structure is flattened — each slice sees
+/// one group's inputs. Single source of truth for the materializing
+/// slicer AND the closed-form corner path (`analytic::xfer`); returns the
+/// slice's `(n, groups)`.
+pub fn split_group_dims(m: u64, n: u64, groups: u64) -> (u64, u64) {
+    if groups > 1 && m % groups != 0 {
+        (n / groups, 1)
+    } else {
+        (n, groups)
+    }
+}
+
 /// Slice a layer by partition factors. Slices with an empty range (more
 /// parts than elements) still appear with zero extent — callers can skip
 /// them; they model FPGAs left idle when a factor exceeds a layer dim
@@ -66,12 +102,8 @@ pub fn slice_layer(layer: &ConvLayer, f: &Factors) -> Vec<LayerSlice> {
                     sub.r = r.1 - r.0;
                     sub.c = c.1 - c.0;
                     sub.m = m.1 - m.0;
-                    // Grouped layers: OFM-channel partitioning splits within
-                    // groups; keep the group structure only if it divides.
-                    if sub.groups > 1 && (sub.m % sub.groups != 0) {
-                        sub.n /= sub.groups; // each slice sees one group's inputs
-                        sub.groups = 1;
-                    }
+                    // Keep the group structure only if the split divides it.
+                    (sub.n, sub.groups) = split_group_dims(sub.m, sub.n, sub.groups);
                     out.push(LayerSlice {
                         fpga: id,
                         grid: (bi as u64, ri as u64, ci as u64, mi as u64),
@@ -128,6 +160,25 @@ mod tests {
         assert_eq!(slices.iter().filter(|s| s.sub.m == 0).count(), 2);
         let total: u64 = slices.iter().map(|s| s.macs()).sum();
         assert_eq!(total, l.macs());
+    }
+
+    #[test]
+    fn corner_sizes_match_materialized_slices() {
+        // The closed-form corner set must equal the distinct non-zero chunk
+        // sizes the real slicer produces, in first-appearance order.
+        for total in [1u64, 2, 3, 7, 13, 27, 55, 100] {
+            for parts in [1u64, 2, 3, 4, 5, 8, 16] {
+                let (sizes, n) = chunk_size_corners(total, parts);
+                let mut seen: Vec<u64> = Vec::new();
+                for (a, b) in ranges(total, parts) {
+                    let len = b - a;
+                    if len > 0 && !seen.contains(&len) {
+                        seen.push(len);
+                    }
+                }
+                assert_eq!(&sizes[..n], &seen[..], "total={total} parts={parts}");
+            }
+        }
     }
 
     #[test]

@@ -1,15 +1,24 @@
-//! Thin wrapper over the `xla` crate's PJRT CPU client.
+//! Thin wrapper over the PJRT CPU client.
+//!
+//! The real backend lives behind the `pjrt` cargo feature (it needs the
+//! `xla` crate, which the offline build image cannot fetch). Without the
+//! feature an API-compatible stub compiles instead: it still resolves
+//! artifact paths and produces the same friendly errors, but refuses to
+//! execute — the serving stack and tests exercise it through the
+//! `InferBackend` trait with stub backends.
 
 use crate::{Error, Result};
 use std::path::Path;
 
 /// A PJRT client owning compiled artifact executables.
 pub struct PjrtRuntime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
 }
 
 /// One compiled HLO artifact ready to execute.
 pub struct ArtifactExecutable {
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
     /// Artifact name (manifest key), for diagnostics.
     pub name: String,
@@ -18,15 +27,30 @@ pub struct ArtifactExecutable {
 impl PjrtRuntime {
     /// Create the CPU PJRT client (the simulated cluster's compute
     /// substrate — on the paper's testbed this would be the FPGA fabric).
+    #[cfg(feature = "pjrt")]
     pub fn cpu() -> Result<Self> {
         Ok(PjrtRuntime {
             client: xla::PjRtClient::cpu()?,
         })
     }
 
+    /// Stub client: constructing it succeeds (so manifest-level tooling
+    /// works) but compiling an artifact reports the missing feature.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn cpu() -> Result<Self> {
+        Ok(PjrtRuntime {})
+    }
+
     /// Platform string, e.g. "cpu" (diagnostics).
+    #[cfg(feature = "pjrt")]
     pub fn platform(&self) -> String {
         self.client.platform_name()
+    }
+
+    /// Platform string of the stub backend (diagnostics).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn platform(&self) -> String {
+        "offline-stub (rebuild with --features pjrt)".to_string()
     }
 
     /// Load an HLO-text artifact and compile it for this client.
@@ -37,6 +61,11 @@ impl PjrtRuntime {
                 path.display()
             )));
         }
+        self.compile(path)
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn compile(&self, path: &Path) -> Result<ArtifactExecutable> {
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str()
                 .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
@@ -50,17 +79,37 @@ impl PjrtRuntime {
             .replace(".hlo", "");
         Ok(ArtifactExecutable { exe, name })
     }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn compile(&self, _path: &Path) -> Result<ArtifactExecutable> {
+        Err(Error::Runtime(
+            "built without the `pjrt` feature — rebuild with `--features pjrt` \
+             (and the `xla` dependency) to execute artifacts"
+                .into(),
+        ))
+    }
 }
 
 impl ArtifactExecutable {
     /// Execute with one f32 input tensor of the given dims; returns the
     /// flattened f32 output. Artifacts are lowered with
     /// `return_tuple=True`, so the result is a 1-tuple.
+    #[cfg(feature = "pjrt")]
     pub fn run_f32(&self, input: &[f32], dims: &[i64]) -> Result<Vec<f32>> {
         let lit = xla::Literal::vec1(input).reshape(dims)?;
         let result = self.exe.execute::<xla::Literal>(&[lit])?;
         let out = result[0][0].to_literal_sync()?;
         let tuple = out.to_tuple1()?;
         Ok(tuple.to_vec::<f32>()?)
+    }
+
+    /// Stub: unreachable in practice (the stub runtime never constructs an
+    /// executable), kept for API parity.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn run_f32(&self, _input: &[f32], _dims: &[i64]) -> Result<Vec<f32>> {
+        Err(Error::Runtime(format!(
+            "artifact {} cannot execute: built without the `pjrt` feature",
+            self.name
+        )))
     }
 }

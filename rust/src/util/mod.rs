@@ -1,8 +1,9 @@
 //! Supporting substrates built in-crate (the offline image vendors no
 //! general-purpose crates): a deterministic PRNG, summary statistics,
-//! fixed-point quantization helpers, and a miniature property-testing
-//! harness.
+//! fixed-point quantization helpers, a miniature property-testing harness,
+//! and a scoped fork-join parallelism helper (`par`, rayon-shaped).
 
+pub mod par;
 mod prng;
 pub mod proptest;
 mod quant;

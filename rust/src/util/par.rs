@@ -1,0 +1,149 @@
+//! Minimal fork-join parallelism on `std::thread::scope` — the offline
+//! image vendors no rayon, so the DSE hot paths use this rayon-shaped
+//! substrate instead. Work items are claimed dynamically from a shared
+//! atomic counter (work-stealing-lite: load balance without per-item
+//! channels), and the thread count honors `SUPERLIP_THREADS` /
+//! `RAYON_NUM_THREADS` for drop-in compatibility with rayon-tuned run
+//! scripts (`RAYON_NUM_THREADS=1` gives deterministic single-core timing
+//! runs — see EXPERIMENTS.md §Perf).
+//!
+//! Callers are expected to make results **schedule-independent**: the DSE
+//! searches order candidates by a total (cycles, rank) key, so the winner
+//! is bit-identical no matter how threads interleave.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+/// Test-only thread-count override (0 = none). An atomic, NOT an env var:
+/// `setenv` concurrent with `getenv` from other test threads is undefined
+/// behavior on glibc, so tests must never mutate the environment.
+static OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Force the worker count until the returned guard drops (tests only —
+/// e.g. comparing a sequential run against a parallel one). Overrides are
+/// serialized by an internal lock so concurrent tests cannot fight; other
+/// threads reading the atomic mid-override merely run at the overridden
+/// width, which is harmless because results are schedule-independent.
+#[doc(hidden)]
+pub fn override_threads(n: usize) -> ThreadOverride {
+    static LOCK: Mutex<()> = Mutex::new(());
+    let guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    OVERRIDE.store(n, Ordering::SeqCst);
+    ThreadOverride { _guard: guard }
+}
+
+/// RAII guard for `override_threads`; clears the override on drop.
+#[doc(hidden)]
+pub struct ThreadOverride {
+    _guard: MutexGuard<'static, ()>,
+}
+
+impl Drop for ThreadOverride {
+    fn drop(&mut self) {
+        OVERRIDE.store(0, Ordering::SeqCst);
+    }
+}
+
+fn parse_thread_var(v: &str) -> Option<usize> {
+    match v.trim().parse::<usize>() {
+        Ok(n) if n >= 1 => Some(n),
+        _ => None,
+    }
+}
+
+/// Worker-thread count: test override, else the crate-specific
+/// `SUPERLIP_THREADS` (takes precedence), else rayon's
+/// `RAYON_NUM_THREADS`, else the machine's available parallelism.
+pub fn num_threads() -> usize {
+    let o = OVERRIDE.load(Ordering::SeqCst);
+    if o > 0 {
+        return o;
+    }
+    for var in ["SUPERLIP_THREADS", "RAYON_NUM_THREADS"] {
+        if let Some(n) = std::env::var(var).ok().as_deref().and_then(parse_thread_var) {
+            return n;
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `work(i)` for every `i in 0..n`, dynamically load-balanced across
+/// up to `num_threads()` scoped OS threads. Falls back to a plain loop for
+/// tiny inputs or single-thread configs (zero spawn overhead). A panic in
+/// any worker propagates after the scope joins.
+pub fn par_for<F>(n: usize, work: &F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = num_threads().min(n);
+    if threads <= 1 {
+        for i in 0..n {
+            work(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                work(i);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn visits_every_index_exactly_once() {
+        let n = 1000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        par_for(n, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn empty_and_single_inputs_ok() {
+        par_for(0, &|_| panic!("no work expected"));
+        let count = AtomicU64::new(0);
+        par_for(1, &|i| {
+            assert_eq!(i, 0);
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn thread_var_parsing() {
+        assert_eq!(parse_thread_var("4"), Some(4));
+        assert_eq!(parse_thread_var(" 2 "), Some(2));
+        assert_eq!(parse_thread_var("0"), None);
+        assert_eq!(parse_thread_var(""), None);
+        assert_eq!(parse_thread_var("lots"), None);
+    }
+
+    #[test]
+    fn override_forces_sequential_and_restores() {
+        {
+            let _t = override_threads(1);
+            assert_eq!(num_threads(), 1);
+            let sum = AtomicU64::new(0);
+            par_for(100, &|i| {
+                sum.fetch_add(i as u64, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 4950);
+        }
+        assert_ne!(OVERRIDE.load(Ordering::SeqCst), 1, "override must clear");
+    }
+}

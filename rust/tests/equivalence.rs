@@ -1,0 +1,246 @@
+//! Fast-path ⇔ reference equivalence (the §Perf contract): the
+//! closed-form worst-slice evaluation, the folded adaptive-XFER
+//! comparison, the layer-shape dedup and the parallel branch-and-bound
+//! searches must all return results **bit-identical** to the retained
+//! naive implementations, across random layers, designs, factors and
+//! modes.
+
+use superlip::analytic::{
+    layer_latency, xfer_layer_latency, xfer_layer_latency_ref, xfer_network_latency,
+    xfer_network_latency_ref, Design, XferMode,
+};
+use superlip::dse;
+use superlip::model::{ConvLayer, Network};
+use superlip::partition::Factors;
+use superlip::platform::{FpgaSpec, Precision};
+use superlip::util::proptest::forall;
+use superlip::util::SplitMix64;
+
+/// Random conv layer in realistic ranges (awkward remainders included).
+fn gen_layer(r: &mut SplitMix64) -> ConvLayer {
+    let k = *r.choose(&[1u64, 3, 5, 7, 11]);
+    let mut l = ConvLayer::strided(
+        "prop",
+        r.range(1, 4),
+        r.range(1, 512),
+        r.range(1, 512),
+        r.range(1, 56),
+        r.range(1, 56),
+        k,
+        r.range(1, 2),
+    );
+    // Occasionally grouped (AlexNet conv2/4/5 style), when divisible.
+    if r.below(4) == 0 && l.m % 2 == 0 && l.n % 2 == 0 {
+        l = l.grouped(2);
+    }
+    l
+}
+
+fn gen_design(r: &mut SplitMix64) -> Design {
+    let p = if r.below(2) == 0 {
+        Precision::Float32
+    } else {
+        Precision::Fixed16
+    };
+    Design {
+        tm: r.range(1, 128),
+        tn: r.range(1, 64),
+        tr: r.range(1, 14),
+        tc: r.range(1, 14),
+        ip: *r.choose(&[1u64, 2, 4, 8]),
+        wp: *r.choose(&[1u64, 2, 4, 8]),
+        op: *r.choose(&[1u64, 2, 4, 8]),
+        precision: p,
+    }
+}
+
+fn gen_factors(r: &mut SplitMix64) -> Factors {
+    Factors::new(
+        *r.choose(&[1u64, 2]),
+        *r.choose(&[1u64, 2, 3, 4]),
+        *r.choose(&[1u64, 2, 3]),
+        *r.choose(&[1u64, 2, 3, 4]),
+    )
+}
+
+fn gen_mode(r: &mut SplitMix64) -> XferMode {
+    if r.below(2) == 0 {
+        XferMode::Baseline
+    } else {
+        XferMode::Xfer
+    }
+}
+
+#[test]
+fn prop_closed_form_equals_naive_reference() {
+    let fpga = FpgaSpec::zcu102();
+    forall(
+        0xE901,
+        500,
+        |r| (gen_layer(r), gen_design(r), gen_factors(r), gen_mode(r)),
+        |(l, d, f, mode)| {
+            let fast = xfer_layer_latency(l, d, f, &fpga, *mode);
+            let slow = xfer_layer_latency_ref(l, d, f, &fpga, *mode);
+            fast == slow
+        },
+    );
+}
+
+#[test]
+fn prop_network_dedup_equals_naive_sum() {
+    let fpga = FpgaSpec::zcu102();
+    forall(
+        0xDED0,
+        120,
+        |r| {
+            // Random small net WITH forced shape repeats (the dedup path).
+            let a = gen_layer(r);
+            let b = gen_layer(r);
+            let layers = vec![a.clone(), b.clone(), a.clone(), b, a];
+            (Network::new("prop", layers), gen_design(r), gen_factors(r), gen_mode(r))
+        },
+        |(net, d, f, mode)| {
+            xfer_network_latency(net, d, f, &fpga, *mode)
+                == xfer_network_latency_ref(net, d, f, &fpga, *mode)
+        },
+    );
+}
+
+#[test]
+fn vgg16_dedup_cache_correct() {
+    // VGG16's stacked 3×3 blocks are the motivating dedup case: the class
+    // list must be strictly smaller than the layer list, multiplicities
+    // must cover every conv layer, and the dedup'd sums must equal the
+    // naive per-layer sums exactly.
+    let net = superlip::model::zoo::vgg16();
+    let classes = net.conv_shape_classes();
+    let n_layers = net.conv_layers().count() as u64;
+    assert!(
+        (classes.len() as u64) < n_layers,
+        "VGG16 must have repeated conv shapes: {} classes vs {} layers",
+        classes.len(),
+        n_layers
+    );
+    assert_eq!(classes.iter().map(|&(_, c)| c).sum::<u64>(), n_layers);
+
+    let fpga = FpgaSpec::zcu102();
+    let d = Design::fixed16(64, 26, 14, 14);
+    // Single-FPGA sum (network_latency dedups internally).
+    let by_layer: u64 = net.conv_layers().map(|l| layer_latency(l, &d).lat).sum();
+    assert_eq!(superlip::analytic::network_latency(&net, &d), by_layer);
+    // Cluster sums across several schemes and both modes.
+    for f in [
+        Factors::single(),
+        Factors::new(1, 2, 1, 1),
+        Factors::new(1, 2, 1, 2),
+        Factors::new(1, 4, 1, 4),
+    ] {
+        for mode in [XferMode::Baseline, XferMode::Xfer] {
+            assert_eq!(
+                xfer_network_latency(&net, &d, &f, &fpga, mode),
+                xfer_network_latency_ref(&net, &d, &f, &fpga, mode),
+                "{f} {mode:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn best_factors_equals_naive_enumeration() {
+    // The parallel single-pass search must pick exactly the scheme the
+    // seed's two-pass sequential scan picked: first (in enumeration order)
+    // among the admissible minima.
+    let fpga = FpgaSpec::zcu102();
+    for (net, d, sizes) in [
+        (
+            superlip::model::zoo::alexnet(),
+            Design::fixed16(128, 10, 7, 14),
+            vec![2u64, 4, 8],
+        ),
+        (
+            superlip::model::zoo::yolov1(),
+            Design::fixed16(64, 25, 7, 14),
+            vec![16u64],
+        ),
+    ] {
+        for &n in &sizes {
+            for mode in [XferMode::Baseline, XferMode::Xfer] {
+                let max_b = net.layers.first().map(|l| l.b).unwrap_or(1);
+                let mut naive: Option<(Factors, u64)> = None;
+                for f in Factors::enumerate(n, max_b) {
+                    if mode == XferMode::Xfer {
+                        let ok = net.conv_layers().all(|l| {
+                            xfer_layer_latency_ref(l, &d, &f, &fpga, mode).bandwidth_ok
+                        });
+                        if !ok {
+                            continue;
+                        }
+                    }
+                    let cycles = xfer_network_latency_ref(&net, &d, &f, &fpga, mode);
+                    if naive.as_ref().map(|&(_, b)| cycles < b).unwrap_or(true) {
+                        naive = Some((f, cycles));
+                    }
+                }
+                let fast = dse::best_factors(&net, &d, &fpga, n, mode);
+                assert_eq!(fast, naive.unwrap(), "{} n={n} {mode:?}", net.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn cross_layer_search_equals_bruteforce_on_toy_net() {
+    // A layer small enough to brute-force the whole candidate space with
+    // no pruning: the parallel branch-and-bound top-1 must match the
+    // global minimum (ties to the earliest candidate in nest order).
+    use superlip::analytic::is_feasible;
+    use superlip::dse::{candidate_tiles, stream_presets};
+
+    let net = Network::new("toy", vec![ConvLayer::conv("t", 1, 8, 8, 6, 6, 3)]);
+    let fpga = FpgaSpec::zcu102();
+    let p = Precision::Fixed16;
+    let layer = &net.layers[0];
+
+    let desc = |mut v: Vec<u64>| {
+        v.reverse();
+        v
+    };
+    let tm_c = desc(candidate_tiles(layer.m_per_group()));
+    let tn_c = desc(candidate_tiles(layer.n_per_group()));
+    let tr_c = desc(candidate_tiles(layer.r));
+    let tc_c = desc(candidate_tiles(layer.c));
+    let k_max = layer.k;
+    let mut brute: Option<(Design, u64)> = None;
+    for &tm in &tm_c {
+        for &tn in &tn_c {
+            if tm * tn > fpga.max_macs(p) {
+                continue;
+            }
+            for &tr in &tr_c {
+                for &tc in &tc_c {
+                    for &(ip, wp, op) in &stream_presets(p, &fpga) {
+                        let d = Design {
+                            tm,
+                            tn,
+                            tr,
+                            tc,
+                            ip,
+                            wp,
+                            op,
+                            precision: p,
+                        };
+                        if !is_feasible(&d, &fpga, k_max) {
+                            continue;
+                        }
+                        let cycles = layer_latency(layer, &d).lat;
+                        if brute.as_ref().map(|&(_, b)| cycles < b).unwrap_or(true) {
+                            brute = Some((d, cycles));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let (top, _, _) = dse::top_uniform_designs(&net, &fpga, p, 1);
+    assert_eq!(top[0], brute.unwrap());
+}
