@@ -1,0 +1,103 @@
+//! Fleet serving scenarios: mixed-model traffic on a shared multi-FPGA
+//! cluster (EXPERIMENTS.md §Fleet).
+//!
+//! An 8-board ZCU102 fleet serves a 4-model mix (AlexNet + SqueezeNet
+//! light/interactive, VGG16 + YOLO heavy/deadline-tight). The mix is
+//! **self-calibrated** from the simulator so the comparison is robust on
+//! any machine: light models get a deadline of 4× their 1-board service
+//! time, heavy models a deadline strictly between their 3-board and
+//! 2-board service times — so heavy models provably need 3 boards, and the
+//! naive equal split (2 boards each) provably misses. The planner must
+//! discover the 1/1/3/3 carve-up, and the served p99 under the planned
+//! split must beat the naive equal split.
+
+use std::time::Duration;
+use superlip::bench::Harness;
+use superlip::fleet::{
+    equal_split, run_scenario, stats_table, worst_miss_rate, worst_p99, FleetPlan, FleetSpec,
+    ModelStats, Planner, PlannerConfig, ScenarioConfig, WorkloadSpec,
+};
+use superlip::platform::FpgaSpec;
+use superlip::report::{self, Table};
+
+const FLEET_SIZE: usize = 8;
+
+fn main() {
+    let mut h = Harness::new("fleet_scenarios");
+    let planner = Planner::new(
+        FleetSpec::homogeneous(FLEET_SIZE, FpgaSpec::zcu102()),
+        PlannerConfig::default(),
+    );
+
+    // Self-calibrated mix (see module doc).
+    let light = |model: &str| {
+        let s1 = planner.service_ms(model, 1).expect("probe");
+        WorkloadSpec::new(
+            model,
+            0.25 / (s1 / 1e3),
+            Duration::from_secs_f64(4.0 * s1 / 1e3),
+        )
+        .with_max_batch(2)
+    };
+    let heavy = |model: &str| {
+        let s3 = planner.service_ms(model, 3).expect("probe");
+        let s2 = planner.service_ms(model, 2).expect("probe");
+        WorkloadSpec::new(
+            model,
+            0.2 / (s3 / 1e3),
+            Duration::from_secs_f64((s3 + s2) / 2.0 / 1e3),
+        )
+    };
+    let mix = vec![
+        light("alexnet"),
+        light("squeezenet"),
+        heavy("vgg16"),
+        heavy("yolo"),
+    ];
+    let mut t = Table::new(&["Model", "Rate(rps)", "Deadline(ms)", "MaxBatch"]);
+    for w in &mix {
+        t.row(&[
+            w.model.clone(),
+            format!("{:.1}", w.rate_rps),
+            report::ms(w.deadline_ms()),
+            w.max_batch.to_string(),
+        ]);
+    }
+    h.table("calibrated traffic mix", &t.render());
+
+    h.measure("fleet planning (8 boards, 4 models)", || {
+        std::hint::black_box(planner.plan(&mix).expect("plan"));
+    });
+    let planned = planner.plan(&mix).expect("plan");
+    let naive = planner
+        .plan_allocation(&mix, &equal_split(FLEET_SIZE, mix.len()))
+        .expect("naive plan");
+    h.table("planned split", &planned.summary());
+    h.table("naive equal split", &naive.summary());
+
+    let scen = ScenarioConfig {
+        requests_per_model: if h.is_quick() { 20 } else { 80 },
+        seed: 2026,
+        // Halve wall-clock; latency ratios and miss rates are invariant.
+        time_scale: 0.5,
+        ..Default::default()
+    };
+    let serve = |label: &str, plan: &FleetPlan, h: &mut Harness| -> Vec<ModelStats> {
+        let stats = run_scenario(plan, &scen).expect("scenario");
+        h.table(&format!("{label} — served traffic"), &stats_table(&stats));
+        stats
+    };
+    let ps = serve("planned split", &planned, &mut h);
+    let ns = serve("naive equal split", &naive, &mut h);
+
+    let (wp, wn) = (worst_p99(&ps), worst_p99(&ns));
+    h.record("worst-case p99, planned split", wp, "ms");
+    h.record("worst-case p99, naive equal split", wn, "ms");
+    h.record("worst-case miss rate, planned", worst_miss_rate(&ps) * 100.0, "%");
+    h.record("worst-case miss rate, naive", worst_miss_rate(&ns) * 100.0, "%");
+    println!(
+        "  planned split beats naive equal split on p99: {}",
+        if wp < wn { "YES" } else { "NO" }
+    );
+    h.finish();
+}

@@ -1,0 +1,156 @@
+//! The cluster-simulator serving backend: each planned torus sub-cluster
+//! becomes one `InferBackend` whose service time is the discrete
+//! simulator's latency for the batch it is handed (`sim::cluster`), so the
+//! whole serving path — EDF batching, plan routing, worker dispatch — runs
+//! against simulated hardware with real wall-clock pacing.
+
+use crate::analytic::{Design, XferMode};
+use crate::model::Network;
+use crate::partition::Factors;
+use crate::platform::FpgaSpec;
+use crate::serving::InferBackend;
+use crate::sim::{batch_latency_table, SimConfig};
+use std::time::Duration;
+
+/// `InferBackend` over the multi-FPGA cluster simulator.
+///
+/// `infer` sleeps the simulated batch latency (scaled by `time_scale`) and
+/// returns deterministic checksum logits (`logits[c] = sum(image)·(c+1)`),
+/// so end-to-end tests can verify both timing and payload integrity. The
+/// backend models *service time*, not tensor math — `image_elems` /
+/// `classes` are synthetic knobs, independent of the network's real
+/// activation shapes.
+pub struct SimClusterBackend {
+    elems: usize,
+    classes: usize,
+    /// Sleep per batch size (index `b − 1`), already scaled.
+    service: Vec<Duration>,
+}
+
+impl SimClusterBackend {
+    /// Build from a planned uniform deployment: simulate the network on the
+    /// sub-cluster once per admissible batch size.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_sim(
+        net: &Network,
+        d: &Design,
+        f: &Factors,
+        fpga: &FpgaSpec,
+        cfg: &SimConfig,
+        mode: XferMode,
+        max_batch: usize,
+        time_scale: f64,
+        elems: usize,
+        classes: usize,
+    ) -> Self {
+        let table = batch_latency_table(net, d, f, fpga, cfg, mode, max_batch);
+        let service = table
+            .into_iter()
+            .map(|cycles| {
+                Duration::from_secs_f64(d.precision.cycles_to_s(cycles) * time_scale.max(0.0))
+            })
+            .collect();
+        SimClusterBackend {
+            elems,
+            classes,
+            service,
+        }
+    }
+
+    /// Build from a per-item analytic estimate (the heterogeneous
+    /// row-partition path, which has no cycle simulator): batch `b` costs
+    /// `b × ms_per_item`.
+    pub fn from_service_ms(
+        ms_per_item: f64,
+        max_batch: usize,
+        time_scale: f64,
+        elems: usize,
+        classes: usize,
+    ) -> Self {
+        assert!(max_batch >= 1 && ms_per_item >= 0.0);
+        let service = (1..=max_batch)
+            .map(|b| Duration::from_secs_f64(ms_per_item / 1e3 * b as f64 * time_scale.max(0.0)))
+            .collect();
+        SimClusterBackend {
+            elems,
+            classes,
+            service,
+        }
+    }
+
+    /// The (scaled) simulated service time for a batch of `n`.
+    pub fn service_for(&self, n: usize) -> Duration {
+        self.service[n.clamp(1, self.service.len()) - 1]
+    }
+}
+
+impl InferBackend for SimClusterBackend {
+    fn image_elems(&self) -> usize {
+        self.elems
+    }
+    fn classes(&self) -> usize {
+        self.classes
+    }
+    fn max_batch(&self) -> usize {
+        self.service.len()
+    }
+    fn infer(&self, images: &[f32], n: usize) -> crate::Result<Vec<f32>> {
+        std::thread::sleep(self.service_for(n));
+        let mut out = Vec::with_capacity(n * self.classes);
+        for i in 0..n {
+            let s: f32 = images[i * self.elems..(i + 1) * self.elems].iter().sum();
+            for c in 0..self.classes {
+                out.push(s * (c + 1) as f32);
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn sim_backend_times_track_cluster_sim() {
+        let fpga = FpgaSpec::zcu102();
+        let cfg = SimConfig::zcu102(&fpga);
+        let net = zoo::alexnet();
+        let d = Design::fixed16(128, 10, 7, 14);
+        let f = Factors::new(1, 2, 1, 1);
+        let b = SimClusterBackend::from_sim(
+            &net,
+            &d,
+            &f,
+            &fpga,
+            &cfg,
+            XferMode::Xfer,
+            4,
+            1.0,
+            8,
+            4,
+        );
+        assert_eq!(b.max_batch(), 4);
+        let t1 = b.service_for(1);
+        let t4 = b.service_for(4);
+        assert!(t1 > Duration::ZERO);
+        assert!(t4 > t1, "bigger batches take longer");
+        // AlexNet fx16 on 2 boards is around a millisecond, not seconds.
+        assert!(t1 < Duration::from_millis(100), "{t1:?}");
+        // Out-of-range batch clamps.
+        assert_eq!(b.service_for(9), t4);
+        assert_eq!(b.service_for(0), t1);
+    }
+
+    #[test]
+    fn checksum_logits_and_scaling() {
+        let b = SimClusterBackend::from_service_ms(2.0, 2, 0.0, 3, 2);
+        let out = b.infer(&[1.0, 2.0, 3.0, 0.5, 0.5, 0.0], 2).unwrap();
+        assert_eq!(out, vec![6.0, 12.0, 1.0, 2.0]);
+        // time_scale 0 → no sleep, service reported as zero.
+        assert_eq!(b.service_for(2), Duration::ZERO);
+        let unscaled = SimClusterBackend::from_service_ms(2.0, 2, 1.0, 3, 2);
+        assert_eq!(unscaled.service_for(2), Duration::from_millis(4));
+    }
+}

@@ -1,0 +1,35 @@
+//! Fleet serving: carve one FPGA fleet into torus sub-clusters serving a
+//! mixed-model workload (the ROADMAP's production-serving north star; the
+//! multi-accelerator analogue of the resource partitioning in
+//! Shen et al., arXiv:1607.00064).
+//!
+//! Pipeline:
+//!
+//! 1. **Describe** the fleet (`FleetSpec`, optionally heterogeneous) and
+//!    the traffic mix (`WorkloadSpec`: model, Poisson rate, deadline).
+//! 2. **Plan** (`Planner`): enumerate fleet compositions, run the fast DSE
+//!    / reference tilings + partition search per sub-cluster, place each
+//!    network on its `Pm × (Pb·Pr·Pc)` torus sub-grid, and pick the split
+//!    minimizing worst-case deadline-miss risk (`miss_risk`, an M/D/1
+//!    sojourn-tail estimate).
+//! 3. **Serve** (`run_scenario`): each planned sub-cluster becomes one
+//!    `SimClusterBackend` lane of `serving::Server::start_plan`; mixed
+//!    traffic is EDF-batched, plan-routed, and executed against the
+//!    discrete cluster simulator, returning per-model p50/p99 latency and
+//!    miss rates.
+//!
+//! The `fleet` CLI subcommand and the `fleet_scenarios` bench drive this
+//! end-to-end; `EXPERIMENTS.md` §Fleet documents the protocol.
+
+mod backend;
+mod planner;
+mod scenario;
+mod workload;
+
+pub use backend::SimClusterBackend;
+pub use planner::{equal_split, miss_risk, Deployment, FleetPlan, Planner, PlannerConfig};
+pub use scenario::{
+    run_scenario, stats_table, worst_miss_rate, worst_p99, ModelStats, ScenarioConfig,
+    SCENARIO_CLASSES, SCENARIO_IMAGE_ELEMS,
+};
+pub use workload::{parse_mix, reference_design, FleetSpec, WorkloadSpec};

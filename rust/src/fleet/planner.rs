@@ -1,0 +1,584 @@
+//! The fleet deployment planner: carve `F` FPGAs into torus sub-clusters,
+//! one per served model, minimizing the worst-case deadline-miss risk.
+//!
+//! For every composition of the fleet into per-workload board counts the
+//! planner runs the (cheap, post-§Perf) design/partition search on each
+//! sub-cluster — reference Figure 15 tilings by default, the full
+//! cross-layer DSE when `co_optimize` is set — places the sub-cluster on a
+//! `Pm × (Pb·Pr·Pc)` torus sub-grid, and scores the deployment with an
+//! analytic deadline-miss risk: an M/D/1 sojourn-tail estimate of the
+//! sub-cluster (one lock-step cluster serves like a single server whose
+//! deterministic service time is the simulated batch-1 latency) against
+//! the workload's deadline. The chosen split minimizes the worst risk
+//! across workloads (tie-broken by total risk, then enumeration order —
+//! deterministic).
+//!
+//! Heterogeneous fleets: a sub-cluster spanning mixed boards is planned on
+//! the element-wise weakest member (`FpgaSpec::min_capability`, lock-step
+//! uniform design) and, as an alternative, with the rate-proportional row
+//! partition of `partition::hetero`; the faster estimate wins.
+
+use super::workload::{reference_design, FleetSpec, WorkloadSpec};
+use crate::analytic::{is_feasible, Design};
+use crate::coordinator::SuperLip;
+use crate::model::zoo;
+use crate::partition::hetero::{hetero_row_partition, HeteroNode};
+use crate::partition::{Factors, Torus};
+use crate::platform::{FpgaSpec, Precision};
+use crate::report::{self, Table};
+use crate::sim::SimConfig;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Planner tuning.
+#[derive(Debug, Clone, Copy)]
+pub struct PlannerConfig {
+    pub precision: Precision,
+    /// Run the full per-sub-cluster cross-layer DSE instead of the pinned
+    /// Figure 15 reference tilings (slower, occasionally better).
+    pub co_optimize: bool,
+    /// Tail multiplier on the M/D/1 mean queueing wait when estimating the
+    /// p99-ish sojourn entering the risk score.
+    pub wait_inflation: f64,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig {
+            precision: Precision::Fixed16,
+            co_optimize: false,
+            wait_inflation: 3.0,
+        }
+    }
+}
+
+/// A planned sub-cluster for one model (independent of the workload's
+/// rate/deadline — cacheable per (model, board range)).
+#[derive(Debug, Clone)]
+struct SubPlan {
+    design: Design,
+    factors: Factors,
+    fpga: FpgaSpec,
+    sim_cfg: SimConfig,
+    service_cycles: u64,
+    service_ms: f64,
+    hetero: bool,
+}
+
+/// One deployed sub-cluster of the final plan.
+#[derive(Debug, Clone)]
+pub struct Deployment {
+    pub workload: WorkloadSpec,
+    /// First board index in the fleet (boards are assigned contiguously).
+    pub start: usize,
+    pub n_boards: usize,
+    /// Effective board spec the design was planned against.
+    pub fpga: FpgaSpec,
+    pub sim_cfg: SimConfig,
+    pub design: Design,
+    pub factors: Factors,
+    /// Torus sub-grid shape `(rows = Pb·Pr·Pc, cols = Pm)` (§4.4).
+    pub torus: (u64, u64),
+    /// Simulated batch-1 service latency on the sub-cluster.
+    pub service_cycles: u64,
+    pub service_ms: f64,
+    /// Offered utilization `ρ = rate · service`.
+    pub utilization: f64,
+    /// Deadline-miss risk score (see `miss_risk`; `f64::INFINITY` when the
+    /// deadline is unmeetable or the queue is unstable).
+    pub risk: f64,
+    /// True when the rate-proportional heterogeneous row partition beat the
+    /// lock-step uniform plan (mixed-board sub-clusters only).
+    pub hetero: bool,
+}
+
+/// A complete fleet plan.
+#[derive(Debug, Clone)]
+pub struct FleetPlan {
+    pub deployments: Vec<Deployment>,
+    /// Worst per-workload risk (the minimized objective).
+    pub worst_risk: f64,
+}
+
+impl FleetPlan {
+    /// Per-workload board counts, in mix order.
+    pub fn allocation(&self) -> Vec<usize> {
+        self.deployments.iter().map(|d| d.n_boards).collect()
+    }
+
+    /// Human-readable plan table (CLI / bench output).
+    pub fn summary(&self) -> String {
+        let mut t = Table::new(&[
+            "Model", "Boards", "Torus", "Design", "Partition", "Svc(ms)", "Util", "Risk",
+        ]);
+        for d in &self.deployments {
+            t.row(&[
+                d.workload.model.clone(),
+                format!("{}..{}", d.start, d.start + d.n_boards),
+                format!("{}x{}{}", d.torus.0, d.torus.1, if d.hetero { " (hetero)" } else { "" }),
+                d.design.to_string(),
+                d.factors.to_string(),
+                report::ms(d.service_ms),
+                format!("{:.2}", d.utilization),
+                if d.risk.is_finite() {
+                    format!("{:.3}", d.risk)
+                } else {
+                    "MISS".to_string()
+                },
+            ]);
+        }
+        format!("{}worst-case risk: {:.3}", t.render(), self.worst_risk)
+    }
+}
+
+/// Deadline-miss risk of serving `rate_rps` Poisson traffic with
+/// deterministic per-request service `service_ms` against `deadline_ms`:
+/// the M/D/1 sojourn-tail estimate `S + k·Wq` (mean wait
+/// `Wq = ρS / 2(1−ρ)`, `k` = `wait_inflation`) as a fraction of the
+/// deadline. `INFINITY` when the service alone misses the deadline or the
+/// queue is unstable (`ρ ≥ 1`) — a certain miss either way.
+pub fn miss_risk(service_ms: f64, deadline_ms: f64, rate_rps: f64, wait_inflation: f64) -> f64 {
+    if !service_ms.is_finite() || service_ms <= 0.0 {
+        return f64::INFINITY;
+    }
+    let rho = rate_rps * service_ms / 1e3;
+    if service_ms > deadline_ms || rho >= 1.0 {
+        return f64::INFINITY;
+    }
+    let wq = rho * service_ms / (2.0 * (1.0 - rho));
+    (service_ms + wait_inflation * wq) / deadline_ms
+}
+
+/// Equal board split: `n_boards` over `n_workloads`, remainder to the
+/// earliest workloads (the naive baseline the planner is judged against).
+pub fn equal_split(n_boards: usize, n_workloads: usize) -> Vec<usize> {
+    assert!(n_workloads >= 1 && n_boards >= n_workloads);
+    let base = n_boards / n_workloads;
+    let rem = n_boards % n_workloads;
+    (0..n_workloads)
+        .map(|i| base + usize::from(i < rem))
+        .collect()
+}
+
+/// The fleet planner (memoizes sub-cluster plans across the composition
+/// search).
+pub struct Planner {
+    fleet: FleetSpec,
+    cfg: PlannerConfig,
+    cache: Mutex<HashMap<(String, usize, usize), SubPlan>>,
+}
+
+impl Planner {
+    pub fn new(fleet: FleetSpec, cfg: PlannerConfig) -> Self {
+        assert!(!fleet.is_empty());
+        Planner {
+            fleet,
+            cfg,
+            cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn fleet(&self) -> &FleetSpec {
+        &self.fleet
+    }
+
+    /// Simulated batch-1 service latency (ms) of `model` on the first
+    /// `n_boards` boards — the calibration probe used by benches/tests to
+    /// construct mixes with known headroom.
+    pub fn service_ms(&self, model: &str, n_boards: usize) -> Result<f64> {
+        Ok(self.subplan(model, 0, n_boards)?.service_ms)
+    }
+
+    /// Best fleet split for the mix: search all compositions of the fleet
+    /// into per-workload board counts (each ≥ 1, boards contiguous in mix
+    /// order), minimizing worst-case risk.
+    pub fn plan(&self, mix: &[WorkloadSpec]) -> Result<FleetPlan> {
+        let f = self.fleet.len();
+        let m = mix.len();
+        if m == 0 {
+            return Err(Error::InvalidArg("empty traffic mix".into()));
+        }
+        if m > f {
+            return Err(Error::InvalidArg(format!(
+                "{m} workloads need at least {m} boards, fleet has {f}"
+            )));
+        }
+        if let Some(w) = mix
+            .iter()
+            .enumerate()
+            .find(|(i, w)| mix[..*i].iter().any(|o| o.model == w.model))
+        {
+            return Err(Error::InvalidArg(format!(
+                "model `{}` appears twice in the mix; merge its traffic into one entry",
+                w.1.model
+            )));
+        }
+
+        let mut counts = vec![1usize; m];
+        let mut best: Option<(f64, f64, Vec<usize>)> = None;
+        self.search(mix, &mut counts, 0, f - m, &mut best)?;
+        let (_, _, alloc) = best.expect("at least the minimal composition scores");
+        self.plan_allocation(mix, &alloc)
+    }
+
+    /// Plan with a fixed per-workload board allocation (e.g. the naive
+    /// `equal_split` baseline).
+    pub fn plan_allocation(&self, mix: &[WorkloadSpec], counts: &[usize]) -> Result<FleetPlan> {
+        // One sub-cluster per model: the serving router groups lanes by
+        // model name, so duplicate entries would pool their traffic across
+        // both sub-clusters and void the per-entry risk model. (Replica
+        // sub-clusters for one hot model belong at the serving layer —
+        // `Server::start_plan` already supports them.)
+        for (i, w) in mix.iter().enumerate() {
+            if mix[..i].iter().any(|o| o.model == w.model) {
+                return Err(Error::InvalidArg(format!(
+                    "model `{}` appears twice in the mix; merge its traffic into one entry",
+                    w.model
+                )));
+            }
+        }
+        if counts.len() != mix.len() {
+            return Err(Error::InvalidArg(format!(
+                "allocation covers {} workloads, mix has {}",
+                counts.len(),
+                mix.len()
+            )));
+        }
+        if counts.iter().any(|&c| c == 0) {
+            return Err(Error::InvalidArg("every workload needs ≥ 1 board".into()));
+        }
+        if counts.iter().sum::<usize>() != self.fleet.len() {
+            return Err(Error::InvalidArg(format!(
+                "allocation uses {} boards, fleet has {}",
+                counts.iter().sum::<usize>(),
+                self.fleet.len()
+            )));
+        }
+        let mut deployments = Vec::with_capacity(mix.len());
+        let mut start = 0usize;
+        let mut worst = 0.0f64;
+        for (w, &n) in mix.iter().zip(counts) {
+            let sp = self.subplan(&w.model, start, n)?;
+            let torus = Torus::for_factors(&sp.factors);
+            let rho = w.rate_rps * sp.service_ms / 1e3;
+            let risk = miss_risk(
+                sp.service_ms,
+                w.deadline_ms(),
+                w.rate_rps,
+                self.cfg.wait_inflation,
+            );
+            worst = worst.max(risk);
+            deployments.push(Deployment {
+                workload: w.clone(),
+                start,
+                n_boards: n,
+                fpga: sp.fpga,
+                sim_cfg: sp.sim_cfg,
+                design: sp.design,
+                factors: sp.factors,
+                torus: (torus.rows, torus.cols),
+                service_cycles: sp.service_cycles,
+                service_ms: sp.service_ms,
+                utilization: rho,
+                risk,
+                hetero: sp.hetero,
+            });
+            start += n;
+        }
+        Ok(FleetPlan {
+            deployments,
+            worst_risk: worst,
+        })
+    }
+
+    /// Recursive composition search over `counts[idx..]`, distributing the
+    /// remaining `extra` boards; scores complete compositions.
+    fn search(
+        &self,
+        mix: &[WorkloadSpec],
+        counts: &mut Vec<usize>,
+        idx: usize,
+        extra: usize,
+        best: &mut Option<(f64, f64, Vec<usize>)>,
+    ) -> Result<()> {
+        if idx + 1 == mix.len() {
+            counts[idx] = 1 + extra;
+            let (worst, total) = self.score(mix, counts)?;
+            let better = match best {
+                None => true,
+                Some((bw, bt, _)) => (worst, total) < (*bw, *bt),
+            };
+            if better {
+                *best = Some((worst, total, counts.clone()));
+            }
+            return Ok(());
+        }
+        for take in 0..=extra {
+            counts[idx] = 1 + take;
+            self.search(mix, counts, idx + 1, extra - take, best)?;
+        }
+        Ok(())
+    }
+
+    /// (worst, total) risk of a composition, with `INFINITY` flattened to a
+    /// large finite score so ties among infeasible splits still order by
+    /// how much of the mix misses.
+    fn score(&self, mix: &[WorkloadSpec], counts: &[usize]) -> Result<(f64, f64)> {
+        const MISS: f64 = 1e18;
+        let mut worst = 0.0f64;
+        let mut total = 0.0f64;
+        let mut start = 0usize;
+        for (w, &n) in mix.iter().zip(counts) {
+            let sp = self.subplan(&w.model, start, n)?;
+            let mut r = miss_risk(
+                sp.service_ms,
+                w.deadline_ms(),
+                w.rate_rps,
+                self.cfg.wait_inflation,
+            );
+            if !r.is_finite() {
+                r = MISS;
+            }
+            worst = worst.max(r);
+            total += r;
+            start += n;
+        }
+        Ok((worst, total))
+    }
+
+    /// Plan one sub-cluster (cached). Homogeneous fleets normalize the
+    /// range start so every equally-sized range shares one entry.
+    fn subplan(&self, model: &str, start: usize, n: usize) -> Result<SubPlan> {
+        if n == 0 || start + n > self.fleet.len() {
+            return Err(Error::InvalidArg(format!(
+                "sub-cluster {start}..{} exceeds fleet of {}",
+                start + n,
+                self.fleet.len()
+            )));
+        }
+        let key_start = if self.fleet.is_homogeneous() { 0 } else { start };
+        let key = (model.to_string(), key_start, n);
+        if let Some(sp) = self.cache.lock().unwrap().get(&key) {
+            return Ok(sp.clone());
+        }
+        let sp = self.build_subplan(model, start, n)?;
+        self.cache.lock().unwrap().insert(key, sp.clone());
+        Ok(sp)
+    }
+
+    fn build_subplan(&self, model: &str, start: usize, n: usize) -> Result<SubPlan> {
+        let net = zoo::by_name(model)
+            .ok_or_else(|| Error::InvalidArg(format!("unknown model: {model}")))?;
+        let p = self.cfg.precision;
+        let eff = self.fleet.effective_spec(start, n);
+        let sim_cfg = SimConfig::zcu102(&eff);
+        let slip = SuperLip { fpga: eff, sim_cfg };
+        let k_max = net.conv_layers().map(|l| l.k).max().unwrap_or(1);
+
+        let plan = if self.cfg.co_optimize {
+            slip.plan(&net, p, n as u64)?
+        } else {
+            match reference_design(model, p).and_then(|d| fit_design(d, &eff, k_max)) {
+                Some(d) => slip.plan_with_design(&net, d, n as u64)?,
+                None => slip.plan(&net, p, n as u64)?,
+            }
+        };
+        let mut sp = SubPlan {
+            design: plan.design,
+            factors: plan.factors,
+            fpga: eff,
+            sim_cfg,
+            service_cycles: plan.sim_cycles,
+            service_ms: plan.sim_ms,
+            hetero: false,
+        };
+
+        // Mixed-board sub-cluster: try the rate-proportional row partition
+        // (each board gets its own feasible design; shares balance so all
+        // boards finish together — `partition::hetero`).
+        let boards = &self.fleet.boards[start..start + n];
+        if n > 1 && boards.windows(2).any(|w| w[0] != w[1]) {
+            let nodes: Option<Vec<HeteroNode>> = boards
+                .iter()
+                .map(|b| {
+                    fit_design(reference_design(model, p).unwrap_or(plan.design), b, k_max)
+                        .map(|design| HeteroNode { fpga: *b, design })
+                })
+                .collect();
+            if let Some(nodes) = nodes {
+                let hetero_analytic_ms: f64 = net
+                    .conv_layers()
+                    .map(|l| hetero_row_partition(l, &nodes).1)
+                    .sum();
+                // `hetero_row_partition` is a pure analytic estimate (no
+                // sync/DDR-setup/link overheads), while `sp.service_ms` is
+                // simulated WITH them — comparing raw would systematically
+                // favor hetero. Re-apply the uniform plan's own
+                // sim/analytic overhead ratio to put both on sim footing.
+                let uniform_analytic_ms = p.cycles_to_ms(plan.model_cycles);
+                let overhead = if uniform_analytic_ms > 0.0 {
+                    (plan.sim_ms / uniform_analytic_ms).max(1.0)
+                } else {
+                    1.0
+                };
+                let hetero_ms = hetero_analytic_ms * overhead;
+                if hetero_ms < sp.service_ms {
+                    sp.factors = Factors::new(1, n as u64, 1, 1);
+                    sp.service_ms = hetero_ms;
+                    sp.service_cycles = (hetero_ms * p.freq_mhz() as f64 * 1e3).ceil() as u64;
+                    sp.hetero = true;
+                }
+            }
+        }
+        Ok(sp)
+    }
+}
+
+/// Shrink a design until it fits the board (halving `Tm`, then `Tn`) — the
+/// reference tilings target a full ZCU102; weaker heterogeneous members
+/// instantiate a smaller engine.
+fn fit_design(mut d: Design, fpga: &FpgaSpec, k_max: u64) -> Option<Design> {
+    loop {
+        if is_feasible(&d, fpga, k_max) {
+            return Some(d);
+        }
+        if d.tm > 1 {
+            d.tm = (d.tm / 2).max(1);
+        } else if d.tn > 1 {
+            d.tn = (d.tn / 2).max(1);
+        } else if d.ip + d.wp + d.op > 3 {
+            d.ip = (d.ip / 2).max(1);
+            d.wp = (d.wp / 2).max(1);
+            d.op = (d.op / 2).max(1);
+        } else {
+            return None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn fleet(n: usize) -> FleetSpec {
+        FleetSpec::homogeneous(n, FpgaSpec::zcu102())
+    }
+
+    fn w(model: &str, rate: f64, deadline_ms: f64) -> WorkloadSpec {
+        WorkloadSpec::new(model, rate, Duration::from_secs_f64(deadline_ms / 1e3))
+    }
+
+    #[test]
+    fn risk_model_shapes() {
+        // Unmeetable service → certain miss.
+        assert!(miss_risk(20.0, 10.0, 1.0, 3.0).is_infinite());
+        // Unstable queue → certain miss.
+        assert!(miss_risk(10.0, 100.0, 200.0, 3.0).is_infinite());
+        // Comfortable: low utilization, deadline 10× service.
+        let r = miss_risk(1.0, 10.0, 100.0, 3.0);
+        assert!(r > 0.0 && r < 0.2, "risk {r}");
+        // Risk grows with load.
+        assert!(miss_risk(1.0, 10.0, 800.0, 3.0) > r);
+    }
+
+    #[test]
+    fn equal_split_sums() {
+        assert_eq!(equal_split(8, 4), vec![2, 2, 2, 2]);
+        assert_eq!(equal_split(7, 3), vec![3, 2, 2]);
+        assert_eq!(equal_split(3, 3), vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn planner_gives_heavy_models_more_boards() {
+        let planner = Planner::new(fleet(4), PlannerConfig::default());
+        // Calibrate: alexnet comfortable on 1 board; vgg16 needs 3.
+        let alex1 = planner.service_ms("alexnet", 1).unwrap();
+        let vgg3 = planner.service_ms("vgg16", 3).unwrap();
+        let vgg2 = planner.service_ms("vgg16", 2).unwrap();
+        assert!(vgg3 < vgg2, "more boards must be faster");
+        // Deadline strictly between the 3-board and 2-board service times:
+        // vgg16 provably needs all of 3 boards, alexnet is happy on 1.
+        let dl_vgg = (vgg3 + vgg2) / 2.0;
+        let mix = vec![
+            w("alexnet", 0.05 / (alex1 / 1e3), 3.0 * alex1),
+            w("vgg16", 0.2 / (vgg3 / 1e3), dl_vgg),
+        ];
+        let plan = planner.plan(&mix).unwrap();
+        assert_eq!(plan.allocation(), vec![1, 3], "{}", plan.summary());
+        assert!(plan.worst_risk.is_finite());
+        // The planner's split is never worse than any fixed allocation,
+        // including the naive equal one (it is itself a composition).
+        let naive = planner
+            .plan_allocation(&mix, &equal_split(4, 2))
+            .unwrap();
+        assert!(plan.worst_risk <= naive.worst_risk);
+        assert!(!naive.worst_risk.is_finite(), "vgg16 on 2 boards misses");
+    }
+
+    #[test]
+    fn plan_covers_fleet_contiguously() {
+        let planner = Planner::new(fleet(5), PlannerConfig::default());
+        let mix = vec![w("alexnet", 50.0, 50.0), w("squeezenet", 50.0, 50.0)];
+        let plan = planner.plan(&mix).unwrap();
+        assert_eq!(plan.deployments.len(), 2);
+        let mut covered = 0;
+        for d in &plan.deployments {
+            assert_eq!(d.start, covered);
+            covered += d.n_boards;
+            assert_eq!(d.torus.0 * d.torus.1, d.n_boards as u64);
+            assert!(d.service_ms > 0.0);
+        }
+        assert_eq!(covered, 5);
+    }
+
+    #[test]
+    fn planner_rejects_bad_inputs() {
+        let planner = Planner::new(fleet(2), PlannerConfig::default());
+        assert!(planner.plan(&[]).is_err());
+        let three = vec![
+            w("alexnet", 1.0, 50.0),
+            w("vgg16", 1.0, 50.0),
+            w("yolo", 1.0, 50.0),
+        ];
+        assert!(planner.plan(&three).is_err(), "3 workloads on 2 boards");
+        let mix = vec![w("alexnet", 1.0, 50.0)];
+        assert!(planner.plan_allocation(&mix, &[3]).is_err(), "overcommit");
+        assert!(planner.plan_allocation(&mix, &[0, 2]).is_err());
+        let dup = vec![w("alexnet", 1.0, 50.0), w("alexnet", 2.0, 60.0)];
+        assert!(planner.plan(&dup).is_err(), "duplicate model entries");
+        assert!(planner.plan_allocation(&dup, &[1, 1]).is_err());
+    }
+
+    #[test]
+    fn hetero_fleet_plans_on_weakest_or_proportional() {
+        let mut small = FpgaSpec::zcu102();
+        small.dsp /= 2;
+        small.bram18k /= 2;
+        let fleet = FleetSpec {
+            boards: vec![FpgaSpec::zcu102(), small],
+        };
+        let planner = Planner::new(fleet, PlannerConfig::default());
+        let mix = vec![w("alexnet", 10.0, 100.0)];
+        let plan = planner.plan(&mix).unwrap();
+        let d = &plan.deployments[0];
+        assert_eq!(d.n_boards, 2);
+        assert!(d.service_ms > 0.0 && d.service_ms.is_finite());
+        // Either path must at least fit the weakest board's MAC budget when
+        // uniform; the hetero path marks itself.
+        if !d.hetero {
+            assert!(d.design.macs() <= d.fpga.max_macs(Precision::Fixed16));
+        }
+    }
+
+    #[test]
+    fn fit_design_shrinks_to_small_boards() {
+        let mut tiny = FpgaSpec::zcu102();
+        tiny.dsp /= 8;
+        tiny.bram18k /= 8;
+        let d = fit_design(Design::fixed16(128, 10, 7, 14), &tiny, 11).unwrap();
+        assert!(is_feasible(&d, &tiny, 11));
+        assert!(d.macs() <= tiny.max_macs(Precision::Fixed16));
+    }
+}

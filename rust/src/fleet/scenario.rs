@@ -1,0 +1,325 @@
+//! Scenario runner: drive a mixed-model Poisson workload through a planned
+//! fleet end-to-end — every planned sub-cluster becomes one
+//! `SimClusterBackend`-backed serving lane, requests are EDF-batched and
+//! plan-routed (`serving::Server::start_plan`), and per-model latency /
+//! deadline-miss statistics come back from the real request path.
+
+use super::backend::SimClusterBackend;
+use super::planner::FleetPlan;
+use crate::analytic::XferMode;
+use crate::model::zoo;
+use crate::report::{self, Table};
+use crate::serving::{
+    BackendFactory, BatcherConfig, InferBackend, InferenceResponse, LaneSpec, Server, ServerConfig,
+};
+use crate::util::{SplitMix64, Summary};
+use crate::{Error, Result};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Synthetic request payload shape (the sim backend models service time,
+/// not tensor math — see `SimClusterBackend`).
+pub const SCENARIO_IMAGE_ELEMS: usize = 64;
+pub const SCENARIO_CLASSES: usize = 8;
+
+/// Scenario tuning.
+#[derive(Debug, Clone, Copy)]
+pub struct ScenarioConfig {
+    /// Open-loop requests generated per mix entry.
+    pub requests_per_model: usize,
+    /// PRNG seed (arrivals and payloads replay exactly).
+    pub seed: u64,
+    /// Wall-clock compression: service times, deadlines and inter-arrivals
+    /// all scale together, so latency ratios and miss rates are invariant
+    /// while the run finishes `1/time_scale`× sooner. Reported stats are
+    /// un-scaled back to model time.
+    pub time_scale: f64,
+    /// Batching window per lane (scaled like everything else).
+    pub window: Duration,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig {
+            requests_per_model: 100,
+            seed: 2026,
+            time_scale: 1.0,
+            window: Duration::from_micros(200),
+        }
+    }
+}
+
+/// Per-mix-entry serving statistics (latencies in un-scaled model ms).
+#[derive(Debug, Clone)]
+pub struct ModelStats {
+    pub model: String,
+    pub n_boards: usize,
+    pub sent: usize,
+    pub completed: usize,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub mean_batch: f64,
+    /// Fraction of SENT requests that missed their deadline — requests that
+    /// were never served (dropped on backend failure / timed out waiting)
+    /// count as misses, so drops cannot flatter the metric.
+    pub miss_rate: f64,
+}
+
+/// Render per-model stats as a table (shared by the `fleet` CLI and the
+/// `fleet_scenarios` bench).
+pub fn stats_table(stats: &[ModelStats]) -> String {
+    let mut t = Table::new(&[
+        "Model", "Boards", "Sent", "Done", "p50(ms)", "p99(ms)", "Batch", "Miss%",
+    ]);
+    for s in stats {
+        t.row(&[
+            s.model.clone(),
+            s.n_boards.to_string(),
+            s.sent.to_string(),
+            s.completed.to_string(),
+            report::ms(s.p50_ms),
+            report::ms(s.p99_ms),
+            format!("{:.2}", s.mean_batch),
+            format!("{:.1}", s.miss_rate * 100.0),
+        ]);
+    }
+    t.render()
+}
+
+/// Worst-case (max) p99 across models — the headline planned-vs-naive
+/// contrast metric. NaN rows (nothing completed) are skipped.
+pub fn worst_p99(stats: &[ModelStats]) -> f64 {
+    stats.iter().map(|m| m.p99_ms).fold(f64::NAN, f64::max)
+}
+
+/// Worst-case (max) deadline-miss rate across models.
+pub fn worst_miss_rate(stats: &[ModelStats]) -> f64 {
+    stats.iter().map(|m| m.miss_rate).fold(f64::NAN, f64::max)
+}
+
+/// Run the planned fleet against its own workload mix; returns one stats
+/// row per mix entry (same order as `plan.deployments`).
+pub fn run_scenario(plan: &FleetPlan, cfg: &ScenarioConfig) -> Result<Vec<ModelStats>> {
+    if plan.deployments.is_empty() {
+        return Err(Error::InvalidArg("empty fleet plan".into()));
+    }
+    if cfg.requests_per_model == 0 {
+        return Err(Error::InvalidArg("requests_per_model must be ≥ 1".into()));
+    }
+    if !cfg.time_scale.is_finite() || cfg.time_scale <= 0.0 {
+        return Err(Error::InvalidArg("time_scale must be > 0".into()));
+    }
+    let ts = cfg.time_scale;
+
+    // One lane per deployment; replica deployments of one model are grouped
+    // into a replica lane set by the server's plan router.
+    let lanes: Vec<LaneSpec> = plan
+        .deployments
+        .iter()
+        .map(|d| {
+            let window = cfg.window.mul_f64(ts);
+            LaneSpec {
+                model: d.workload.model.clone(),
+                factories: vec![backend_factory(d, ts)],
+                batcher: BatcherConfig {
+                    max_batch: d.workload.max_batch,
+                    window,
+                    deadline_margin: window,
+                },
+            }
+        })
+        .collect();
+    let server = Server::start_plan(lanes, ServerConfig::default());
+
+    // Pre-generate the merged Poisson arrival schedule (deterministic by
+    // seed; each mix entry draws from its own stream).
+    let mut events: Vec<(f64, usize)> = Vec::new();
+    for (si, d) in plan.deployments.iter().enumerate() {
+        let mut rng = SplitMix64::new(cfg.seed ^ (0x9E37 + si as u64));
+        let mut t = 0.0f64;
+        for _ in 0..cfg.requests_per_model {
+            t += rng.exp(1.0 / d.workload.rate_rps);
+            events.push((t, si));
+        }
+    }
+    events.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    // Open-loop submission at scaled wall-clock pace.
+    let mut payload_rng = SplitMix64::new(cfg.seed.wrapping_mul(0xC0FFEE));
+    let mut pending: Vec<Vec<(f32, mpsc::Receiver<InferenceResponse>)>> =
+        plan.deployments.iter().map(|_| Vec::new()).collect();
+    let t0 = Instant::now();
+    for &(t, si) in &events {
+        let target = t0 + Duration::from_secs_f64(t * ts);
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let img: Vec<f32> = (0..SCENARIO_IMAGE_ELEMS)
+            .map(|_| payload_rng.signed_unit())
+            .collect();
+        let checksum: f32 = img.iter().sum();
+        let d = &plan.deployments[si];
+        let rx = server.submit_to(&d.workload.model, img, d.workload.deadline.mul_f64(ts))?;
+        pending[si].push((checksum, rx));
+    }
+
+    // Collect and score.
+    let mut stats = Vec::with_capacity(plan.deployments.len());
+    for (si, d) in plan.deployments.iter().enumerate() {
+        let mut lat_ms = Vec::new();
+        let mut batches = Vec::new();
+        let mut misses = 0usize;
+        let sent = pending[si].len();
+        for (checksum, rx) in pending[si].drain(..) {
+            let Ok(r) = rx.recv_timeout(Duration::from_secs(120)) else {
+                continue; // dropped (backend failure) — counted via `completed`
+            };
+            debug_assert!(
+                (r.logits[0] - checksum).abs() <= 1e-3 * checksum.abs().max(1.0),
+                "payload integrity: {} vs {}",
+                r.logits[0],
+                checksum
+            );
+            lat_ms.push(r.latency.as_secs_f64() / ts * 1e3);
+            batches.push(r.batch);
+            if !r.deadline_met {
+                misses += 1;
+            }
+        }
+        let completed = lat_ms.len();
+        let (p50, p99) = if completed > 0 {
+            let s = Summary::of(&lat_ms);
+            (s.p50(), s.p99())
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+        stats.push(ModelStats {
+            model: d.workload.model.clone(),
+            n_boards: d.n_boards,
+            sent,
+            completed,
+            p50_ms: p50,
+            p99_ms: p99,
+            mean_batch: if completed > 0 {
+                batches.iter().sum::<usize>() as f64 / completed as f64
+            } else {
+                0.0
+            },
+            miss_rate: if sent > 0 {
+                (misses + (sent - completed)) as f64 / sent as f64
+            } else {
+                1.0
+            },
+        });
+    }
+    server.shutdown();
+    Ok(stats)
+}
+
+/// Build the lane's backend factory from a deployment (the backend is
+/// constructed inside the worker thread).
+fn backend_factory(d: &super::planner::Deployment, time_scale: f64) -> BackendFactory {
+    let d = d.clone();
+    Box::new(move || {
+        let backend: Box<dyn InferBackend> = if d.hetero {
+            Box::new(SimClusterBackend::from_service_ms(
+                d.service_ms,
+                d.workload.max_batch,
+                time_scale,
+                SCENARIO_IMAGE_ELEMS,
+                SCENARIO_CLASSES,
+            ))
+        } else {
+            let net = zoo::by_name(&d.workload.model).ok_or_else(|| {
+                Error::InvalidArg(format!("unknown model: {}", d.workload.model))
+            })?;
+            Box::new(SimClusterBackend::from_sim(
+                &net,
+                &d.design,
+                &d.factors,
+                &d.fpga,
+                &d.sim_cfg,
+                XferMode::Xfer,
+                d.workload.max_batch,
+                time_scale,
+                SCENARIO_IMAGE_ELEMS,
+                SCENARIO_CLASSES,
+            ))
+        };
+        Ok(backend)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::{FleetSpec, Planner, PlannerConfig, WorkloadSpec};
+    use crate::platform::FpgaSpec;
+
+    #[test]
+    fn scenario_serves_all_requests_and_meets_loose_deadlines() {
+        let planner = Planner::new(
+            FleetSpec::homogeneous(3, FpgaSpec::zcu102()),
+            PlannerConfig::default(),
+        );
+        // Generous deadlines + modest load: everything should complete and
+        // (almost) nothing should miss.
+        let alex1 = planner.service_ms("alexnet", 1).unwrap();
+        let sq1 = planner.service_ms("squeezenet", 1).unwrap();
+        let mix = vec![
+            WorkloadSpec::new(
+                "alexnet",
+                0.2 / (alex1 / 1e3),
+                Duration::from_secs_f64(20.0 * alex1 / 1e3),
+            )
+            .with_max_batch(2),
+            WorkloadSpec::new(
+                "squeezenet",
+                0.2 / (sq1 / 1e3),
+                Duration::from_secs_f64(20.0 * sq1 / 1e3),
+            ),
+        ];
+        let plan = planner.plan(&mix).unwrap();
+        let stats = run_scenario(
+            &plan,
+            &ScenarioConfig {
+                requests_per_model: 25,
+                seed: 7,
+                time_scale: 1.0,
+                window: Duration::from_micros(200),
+            },
+        )
+        .unwrap();
+        assert_eq!(stats.len(), 2);
+        for s in &stats {
+            assert_eq!(s.completed, 25, "{}: all requests served", s.model);
+            assert!(s.p50_ms > 0.0 && s.p99_ms >= s.p50_ms, "{s:?}");
+            assert!(
+                s.miss_rate < 0.2,
+                "{}: 20× deadline headroom should not miss: {s:?}",
+                s.model
+            );
+        }
+    }
+
+    #[test]
+    fn scenario_rejects_bad_config() {
+        let planner = Planner::new(
+            FleetSpec::homogeneous(1, FpgaSpec::zcu102()),
+            PlannerConfig::default(),
+        );
+        let mix = vec![WorkloadSpec::new("alexnet", 10.0, Duration::from_millis(50))];
+        let plan = planner.plan(&mix).unwrap();
+        let no_requests = ScenarioConfig {
+            requests_per_model: 0,
+            ..Default::default()
+        };
+        assert!(run_scenario(&plan, &no_requests).is_err());
+        let frozen_clock = ScenarioConfig {
+            time_scale: 0.0,
+            ..Default::default()
+        };
+        assert!(run_scenario(&plan, &frozen_clock).is_err());
+    }
+}

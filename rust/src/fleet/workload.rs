@@ -1,0 +1,213 @@
+//! Fleet and workload descriptions: which boards the cluster owns, which
+//! models must be served at what arrival rate and deadline, and the
+//! reference accelerator designs (the Figure 15 tilings) the planner uses
+//! when a full DSE is not requested.
+
+use crate::analytic::Design;
+use crate::model::zoo;
+use crate::platform::{FpgaSpec, Precision};
+use crate::{Error, Result};
+use std::time::Duration;
+
+/// One model's serving requirement in a mixed-traffic scenario.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    /// Zoo model name (`zoo::by_name`).
+    pub model: String,
+    /// Mean Poisson arrival rate (requests/second).
+    pub rate_rps: f64,
+    /// Per-request relative deadline.
+    pub deadline: Duration,
+    /// Lane batch cap (real-time serving runs "low or even no batching",
+    /// §1 — the artifact set tops out at 4).
+    pub max_batch: usize,
+}
+
+impl WorkloadSpec {
+    pub fn new(model: &str, rate_rps: f64, deadline: Duration) -> Self {
+        WorkloadSpec {
+            model: model.to_string(),
+            rate_rps,
+            deadline,
+            max_batch: 1,
+        }
+    }
+
+    pub fn with_max_batch(mut self, max_batch: usize) -> Self {
+        assert!(max_batch >= 1);
+        self.max_batch = max_batch;
+        self
+    }
+
+    pub fn deadline_ms(&self) -> f64 {
+        self.deadline.as_secs_f64() * 1e3
+    }
+}
+
+/// Parse a traffic mix from `model:rate_rps:deadline_ms[:max_batch]`
+/// entries separated by commas, e.g.
+/// `alexnet:200:20,vgg16:25:100:2`.
+pub fn parse_mix(s: &str) -> Result<Vec<WorkloadSpec>> {
+    let mut out = Vec::new();
+    for entry in s.split(',').filter(|e| !e.trim().is_empty()) {
+        let parts: Vec<&str> = entry.trim().split(':').collect();
+        if !(3..=4).contains(&parts.len()) {
+            return Err(Error::InvalidArg(format!(
+                "mix entry `{entry}`: expected model:rate_rps:deadline_ms[:max_batch]"
+            )));
+        }
+        let model = parts[0].to_ascii_lowercase();
+        if zoo::by_name(&model).is_none() {
+            return Err(Error::InvalidArg(format!(
+                "mix entry `{entry}`: unknown model `{model}` (choose from {:?})",
+                zoo::names()
+            )));
+        }
+        let rate: f64 = parts[1]
+            .parse()
+            .map_err(|e| Error::InvalidArg(format!("mix entry `{entry}`: rate: {e}")))?;
+        let deadline_ms: f64 = parts[2]
+            .parse()
+            .map_err(|e| Error::InvalidArg(format!("mix entry `{entry}`: deadline: {e}")))?;
+        if !rate.is_finite() || !deadline_ms.is_finite() || rate <= 0.0 || deadline_ms <= 0.0 {
+            return Err(Error::InvalidArg(format!(
+                "mix entry `{entry}`: rate and deadline must be positive and finite"
+            )));
+        }
+        let mut w = WorkloadSpec::new(&model, rate, Duration::from_secs_f64(deadline_ms / 1e3));
+        if parts.len() == 4 {
+            let mb: usize = parts[3]
+                .parse()
+                .map_err(|e| Error::InvalidArg(format!("mix entry `{entry}`: max_batch: {e}")))?;
+            if mb == 0 {
+                return Err(Error::InvalidArg(format!(
+                    "mix entry `{entry}`: max_batch must be ≥ 1"
+                )));
+            }
+            w = w.with_max_batch(mb);
+        }
+        out.push(w);
+    }
+    if out.is_empty() {
+        return Err(Error::InvalidArg("empty traffic mix".into()));
+    }
+    // One entry per model: the planner sizes one sub-cluster per entry and
+    // the serving router pools lanes by model name, so duplicates would
+    // blur both (see `Planner::plan_allocation`).
+    for (i, w) in out.iter().enumerate() {
+        if out[..i].iter().any(|o| o.model == w.model) {
+            return Err(Error::InvalidArg(format!(
+                "model `{}` appears twice in the mix; merge its traffic into one entry",
+                w.model
+            )));
+        }
+    }
+    Ok(out)
+}
+
+/// The FPGA fleet to carve up: an ordered list of boards (heterogeneous
+/// fleets simply list different specs).
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    pub boards: Vec<FpgaSpec>,
+}
+
+impl FleetSpec {
+    /// `n` identical boards.
+    pub fn homogeneous(n: usize, spec: FpgaSpec) -> Self {
+        assert!(n >= 1);
+        FleetSpec {
+            boards: vec![spec; n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.boards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.boards.is_empty()
+    }
+
+    pub fn is_homogeneous(&self) -> bool {
+        self.boards.windows(2).all(|w| w[0] == w[1])
+    }
+
+    /// The spec a lock-step uniform design must fit on boards
+    /// `start..start+len`: the element-wise weakest member.
+    pub fn effective_spec(&self, start: usize, len: usize) -> FpgaSpec {
+        assert!(len >= 1 && start + len <= self.boards.len());
+        self.boards[start + 1..start + len]
+            .iter()
+            .fold(self.boards[start], |acc, b| acc.min_capability(b))
+    }
+}
+
+/// The Figure 15 / Table 3 reference tiling for a zoo model, if one is
+/// pinned for the precision. The planner uses these when not co-optimizing
+/// (they are the published design points, already validated by the
+/// `fig15_scaling` bench); `None` falls back to the full cross-layer DSE.
+pub fn reference_design(model: &str, p: Precision) -> Option<Design> {
+    match (model.to_ascii_lowercase().as_str(), p) {
+        ("alexnet", Precision::Fixed16) => Some(Design::fixed16(128, 10, 7, 14)),
+        ("squeezenet", Precision::Fixed16) => Some(Design::fixed16(64, 16, 7, 14)),
+        ("vgg" | "vgg16", Precision::Fixed16) => Some(Design::fixed16(64, 25, 7, 14)),
+        ("yolo" | "yolov1", Precision::Fixed16) => Some(Design::fixed16(64, 25, 7, 14)),
+        ("alexnet", Precision::Float32) => Some(Design::float32(64, 7, 7, 14)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_mix_roundtrip() {
+        let mix = parse_mix("alexnet:200:20,VGG16:25:100:2").unwrap();
+        assert_eq!(mix.len(), 2);
+        assert_eq!(mix[0].model, "alexnet");
+        assert!((mix[0].rate_rps - 200.0).abs() < 1e-12);
+        assert!((mix[0].deadline_ms() - 20.0).abs() < 1e-9);
+        assert_eq!(mix[0].max_batch, 1);
+        assert_eq!(mix[1].model, "vgg16");
+        assert_eq!(mix[1].max_batch, 2);
+    }
+
+    #[test]
+    fn parse_mix_rejects_bad_entries() {
+        assert!(parse_mix("").is_err());
+        assert!(parse_mix("resnet:10:10").is_err());
+        assert!(parse_mix("alexnet:10").is_err());
+        assert!(parse_mix("alexnet:0:10").is_err());
+        assert!(parse_mix("alexnet:10:-5").is_err());
+        assert!(parse_mix("alexnet:10:10:0").is_err());
+        assert!(parse_mix("alexnet:nan:10").is_err());
+        assert!(parse_mix("alexnet:10:inf").is_err());
+        assert!(parse_mix("alexnet:10:10,alexnet:20:20").is_err(), "duplicate model");
+    }
+
+    #[test]
+    fn effective_spec_takes_weakest() {
+        let mut small = FpgaSpec::zcu102();
+        small.dsp /= 2;
+        let fleet = FleetSpec {
+            boards: vec![FpgaSpec::zcu102(), small, FpgaSpec::zcu102()],
+        };
+        assert!(!fleet.is_homogeneous());
+        assert_eq!(fleet.effective_spec(0, 2).dsp, small.dsp);
+        assert_eq!(fleet.effective_spec(2, 1), FpgaSpec::zcu102());
+        assert!(FleetSpec::homogeneous(4, FpgaSpec::zcu102()).is_homogeneous());
+    }
+
+    #[test]
+    fn reference_designs_cover_fx16_zoo() {
+        for name in zoo::names() {
+            assert!(
+                reference_design(name, Precision::Fixed16).is_some(),
+                "{name} needs a pinned fx16 tiling"
+            );
+        }
+        assert!(reference_design("vgg16", Precision::Float32).is_none());
+    }
+}

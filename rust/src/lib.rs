@@ -29,6 +29,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod dse;
 pub mod energy;
+pub mod fleet;
 pub mod model;
 pub mod partition;
 pub mod platform;

@@ -2,6 +2,8 @@
 //!
 //! Commands:
 //!   plan      plan a deployment (DSE → partition → XFER → sim → energy)
+//!   fleet     carve a fleet into sub-clusters for a mixed-model traffic
+//!             mix and (optionally) serve it against the simulator
 //!   dse       per-layer + cross-layer design-space exploration
 //!   scale     Figure 15 scaling sweep for one network
 //!   validate  model-vs-simulator accuracy (Figure 14 / Table 4 style)
@@ -12,8 +14,9 @@ use std::time::{Duration, Instant};
 use superlip::analytic::{detect, Design, XferMode};
 use superlip::cli::{parse_precision, Args};
 use superlip::coordinator::SuperLip;
+use superlip::fleet::{self, FleetSpec, Planner, PlannerConfig, ScenarioConfig};
 use superlip::model::zoo;
-use superlip::platform::Precision;
+use superlip::platform::{FpgaSpec, Precision};
 use superlip::report::{self, Table};
 use superlip::runtime::{ModelExecutor, PjrtRuntime};
 use superlip::serving::{Server, ServerConfig};
@@ -35,6 +38,7 @@ fn run() -> Result<()> {
     let args = Args::from_env()?;
     match args.command.as_str() {
         "plan" => cmd_plan(&args),
+        "fleet" => cmd_fleet(&args),
         "dse" => cmd_dse(&args),
         "scale" => cmd_scale(&args),
         "validate" => cmd_validate(),
@@ -56,6 +60,8 @@ USAGE: superlip <command> [--flags]
 
 COMMANDS:
   plan      --net <alexnet|squeezenet|vgg16|yolo> --fpgas N --precision <f32|fx16>
+  fleet     --fpgas N --mix model:rate_rps:deadline_ms[:max_batch],...
+            [--requests N] [--naive] [--time-scale X] [--co-optimize] [--qsfp]
   dse       --net <name> --precision <f32|fx16>
   scale     --net <name> --max-fpgas N [--precision fx16]
   validate
@@ -79,6 +85,64 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let slip = SuperLip::default();
     let plan = slip.plan(&net, p, n)?;
     println!("{}", plan.summary());
+    Ok(())
+}
+
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let n = args.flag_u64("fpgas", 8)? as usize;
+    // Default mix: every workload admits a stable sub-cluster on an
+    // 8-board fleet, but the per-model needs are skewed (heavy models want
+    // more boards), so the planned split is visibly unequal.
+    let mix = fleet::parse_mix(args.flag_or(
+        "mix",
+        "alexnet:100:40,squeezenet:60:60,vgg16:12:90,yolo:8:150",
+    ))?;
+    if n < mix.len() {
+        return Err(Error::InvalidArg(format!(
+            "--fpgas {n}: need at least one board per workload ({} in the mix)",
+            mix.len()
+        )));
+    }
+    let p = precision_arg(args)?;
+    let board = if args.has("qsfp") {
+        FpgaSpec::zcu102_qsfp()
+    } else {
+        FpgaSpec::zcu102()
+    };
+    let planner = Planner::new(
+        FleetSpec::homogeneous(n, board),
+        PlannerConfig {
+            precision: p,
+            co_optimize: args.has("co-optimize"),
+            ..Default::default()
+        },
+    );
+    let plan = planner.plan(&mix)?;
+    println!("fleet plan ({n} × {}, {} workloads):", board.name, mix.len());
+    println!("{}", plan.summary());
+
+    let requests = args.flag_u64("requests", 0)? as usize;
+    if requests > 0 {
+        let scen = ScenarioConfig {
+            requests_per_model: requests,
+            time_scale: args.flag_f64("time-scale", 1.0)?,
+            ..Default::default()
+        };
+        let stats = fleet::run_scenario(&plan, &scen)?;
+        println!("\nplanned split — served traffic:");
+        println!("{}", fleet::stats_table(&stats));
+        if args.has("naive") {
+            let naive = planner.plan_allocation(&mix, &fleet::equal_split(n, mix.len()))?;
+            let nstats = fleet::run_scenario(&naive, &scen)?;
+            println!("naive equal split — served traffic:");
+            println!("{}", fleet::stats_table(&nstats));
+            println!(
+                "worst-case p99: planned {} vs naive {}",
+                report::ms(fleet::worst_p99(&stats)),
+                report::ms(fleet::worst_p99(&nstats))
+            );
+        }
+    }
     Ok(())
 }
 

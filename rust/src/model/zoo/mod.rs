@@ -29,6 +29,11 @@ pub fn all() -> Vec<Network> {
     vec![alexnet(), squeezenet(), vgg16(), yolov1()]
 }
 
+/// Canonical zoo names accepted by `by_name` (CLI help / mix validation).
+pub fn names() -> &'static [&'static str] {
+    &["alexnet", "squeezenet", "vgg16", "yolo"]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -39,6 +44,14 @@ mod tests {
             assert!(by_name(n).is_some(), "{n}");
         }
         assert!(by_name("resnet").is_none());
+    }
+
+    #[test]
+    fn names_resolve() {
+        for n in names() {
+            assert!(by_name(n).is_some(), "{n}");
+        }
+        assert_eq!(names().len(), all().len());
     }
 
     #[test]

@@ -73,6 +73,24 @@ impl FpgaSpec {
     pub fn b2b_ports(&self, p: Precision) -> u64 {
         self.b2b_bits / p.bits()
     }
+
+    /// Element-wise weakest-member capability of two boards: the spec a
+    /// lock-step uniform design must fit when a sub-cluster mixes board
+    /// types (the fleet planner's conservative heterogeneous fallback; the
+    /// rate-proportional alternative is `partition::hetero`). Setup
+    /// latencies take the max (the slowest member paces the ring).
+    pub fn min_capability(&self, other: &FpgaSpec) -> FpgaSpec {
+        FpgaSpec {
+            name: if self == other { self.name } else { "hetero-min" },
+            dsp: self.dsp.min(other.dsp),
+            bram18k: self.bram18k.min(other.bram18k),
+            mem_bus_bits: self.mem_bus_bits.min(other.mem_bus_bits),
+            b2b_bits: self.b2b_bits.min(other.b2b_bits),
+            ddr_bytes_per_cycle: self.ddr_bytes_per_cycle.min(other.ddr_bytes_per_cycle),
+            ddr_setup_cycles: self.ddr_setup_cycles.max(other.ddr_setup_cycles),
+            link_setup_cycles: self.link_setup_cycles.max(other.link_setup_cycles),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -87,6 +105,23 @@ mod tests {
         // f32: at most 504 MACs; fx16: 2520 MACs.
         assert_eq!(f.max_macs(Precision::Float32), 504);
         assert_eq!(f.max_macs(Precision::Fixed16), 2520);
+    }
+
+    #[test]
+    fn min_capability_is_weakest_member() {
+        let big = FpgaSpec::zcu102_qsfp();
+        let mut small = FpgaSpec::zcu102();
+        small.dsp /= 2;
+        small.link_setup_cycles = 9;
+        let min = big.min_capability(&small);
+        assert_eq!(min.dsp, small.dsp);
+        assert_eq!(min.b2b_bits, 256, "stock SFP+ is the weaker link");
+        assert_eq!(min.link_setup_cycles, 9, "slowest member paces setup");
+        assert_eq!(min.name, "hetero-min");
+        // Idempotent on identical boards, name preserved.
+        let same = big.min_capability(&FpgaSpec::zcu102_qsfp());
+        assert_eq!(same, FpgaSpec::zcu102_qsfp());
+        assert_eq!(same.name, "ZCU102");
     }
 
     #[test]

@@ -1,10 +1,13 @@
 //! Real-time inference serving (the paper's §1 use case: ultra-low batch,
 //! deadline-bound requests): request types, a deadline-aware low-batch
-//! dynamic batcher, a replica router, a worker-pool server, and metrics.
+//! dynamic batcher, a plan-driven router, a worker-pool server with
+//! per-model lanes, and metrics.
 //!
 //! Rust owns the whole request path; compute dispatches either to the PJRT
-//! runtime (`runtime::ModelExecutor`) or to any `InferBackend` (tests use
-//! a stub).
+//! runtime (`runtime::ModelExecutor`), to the cluster-simulator backend
+//! (`fleet::SimClusterBackend`), or to any `InferBackend` (tests use a
+//! stub). Mixed-model fleets (`fleet::planner`) start one lane per planned
+//! sub-cluster via `Server::start_plan`.
 
 mod batcher;
 mod metrics;
@@ -15,5 +18,5 @@ mod server;
 pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::Metrics;
 pub use request::{InferBackend, InferenceRequest, InferenceResponse};
-pub use router::{Router, RoutePolicy};
-pub use server::{BackendFactory, Server, ServerConfig};
+pub use router::{PlanRouter, RoutePolicy, Router};
+pub use server::{BackendFactory, LaneSpec, Server, ServerConfig};

@@ -1,67 +1,155 @@
-//! Replica router: spreads requests across independent serving replicas
-//! (e.g. two 2-FPGA XFER clusters serving the same model).
+//! Plan-driven request routing.
+//!
+//! A fleet plan (`fleet::planner`) carves the FPGA fleet into sub-clusters,
+//! each serving one model; the server materializes one **lane** (queue +
+//! worker + backend) per sub-cluster. The `PlanRouter` maps a model name to
+//! its set of lanes (a model may have several replica sub-clusters) and
+//! picks one per request by policy, tracking per-lane outstanding counts.
+//!
+//! The original single-model replica `Router` is retained as a thin wrapper
+//! over a one-entry `PlanRouter`, so pre-fleet callers keep working.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Routing policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RoutePolicy {
-    /// Cycle through replicas.
+    /// Cycle through the model's lanes.
     RoundRobin,
-    /// Pick the replica with the fewest outstanding requests.
+    /// Pick the model's lane with the fewest outstanding requests.
     LeastOutstanding,
 }
 
-/// Router state over `n` replicas.
-pub struct Router {
-    policy: RoutePolicy,
+/// One model's routing entry: the lanes able to serve it.
+struct ModelRoutes {
+    model: String,
+    lanes: Vec<usize>,
     rr: AtomicU64,
+}
+
+/// Router over a fleet plan: model name → replica lane set → lane index.
+pub struct PlanRouter {
+    policy: RoutePolicy,
+    models: Vec<ModelRoutes>,
     outstanding: Vec<AtomicU64>,
 }
 
-impl Router {
-    pub fn new(policy: RoutePolicy, replicas: usize) -> Self {
-        assert!(replicas > 0);
-        Router {
+impl PlanRouter {
+    /// Empty router over `n_lanes` lanes; add models with `add_route`.
+    pub fn new(policy: RoutePolicy, n_lanes: usize) -> Self {
+        assert!(n_lanes > 0);
+        PlanRouter {
             policy,
-            rr: AtomicU64::new(0),
-            outstanding: (0..replicas).map(|_| AtomicU64::new(0)).collect(),
+            models: Vec::new(),
+            outstanding: (0..n_lanes).map(|_| AtomicU64::new(0)).collect(),
         }
     }
 
-    pub fn replicas(&self) -> usize {
+    /// Build from `(model, lanes)` pairs.
+    pub fn with_routes<I, S>(policy: RoutePolicy, n_lanes: usize, routes: I) -> Self
+    where
+        I: IntoIterator<Item = (S, Vec<usize>)>,
+        S: Into<String>,
+    {
+        let mut r = Self::new(policy, n_lanes);
+        for (model, lanes) in routes {
+            r.add_route(model, lanes);
+        }
+        r
+    }
+
+    /// Register a model's replica lane set.
+    pub fn add_route<S: Into<String>>(&mut self, model: S, lanes: Vec<usize>) {
+        let model = model.into();
+        assert!(!lanes.is_empty(), "model {model}: empty lane set");
+        assert!(
+            lanes.iter().all(|&l| l < self.outstanding.len()),
+            "model {model}: lane index out of range"
+        );
+        assert!(
+            self.models.iter().all(|m| m.model != model),
+            "model {model}: duplicate route"
+        );
+        self.models.push(ModelRoutes {
+            model,
+            lanes,
+            rr: AtomicU64::new(0),
+        });
+    }
+
+    pub fn n_lanes(&self) -> usize {
         self.outstanding.len()
     }
 
-    /// Choose a replica for the next request and account it outstanding.
-    pub fn route(&self) -> usize {
+    /// The registered model names, in registration order.
+    pub fn models(&self) -> impl Iterator<Item = &str> {
+        self.models.iter().map(|m| m.model.as_str())
+    }
+
+    /// Choose a lane for the next request to `model` and account it
+    /// outstanding. `None` if the model has no route.
+    pub fn route(&self, model: &str) -> Option<usize> {
+        let entry = self.models.iter().find(|m| m.model == model)?;
         let idx = match self.policy {
             RoutePolicy::RoundRobin => {
-                (self.rr.fetch_add(1, Ordering::Relaxed) % self.outstanding.len() as u64) as usize
+                let t = entry.rr.fetch_add(1, Ordering::Relaxed);
+                entry.lanes[(t % entry.lanes.len() as u64) as usize]
             }
-            RoutePolicy::LeastOutstanding => self
-                .outstanding
+            RoutePolicy::LeastOutstanding => *entry
+                .lanes
                 .iter()
-                .enumerate()
-                .min_by_key(|(_, o)| o.load(Ordering::Relaxed))
-                .map(|(i, _)| i)
+                .min_by_key(|&&l| self.outstanding[l].load(Ordering::Relaxed))
                 .unwrap(),
         };
         self.outstanding[idx].fetch_add(1, Ordering::Relaxed);
-        idx
+        Some(idx)
     }
 
-    /// Mark a request complete on a replica.
-    pub fn complete(&self, replica: usize) {
-        self.outstanding[replica].fetch_sub(1, Ordering::Relaxed);
+    /// Mark a request complete on a lane.
+    pub fn complete(&self, lane: usize) {
+        self.outstanding[lane].fetch_sub(1, Ordering::Relaxed);
     }
 
-    /// Outstanding count per replica (diagnostics / tests).
+    /// Outstanding count per lane (diagnostics / tests).
     pub fn load(&self) -> Vec<u64> {
         self.outstanding
             .iter()
             .map(|o| o.load(Ordering::Relaxed))
             .collect()
+    }
+}
+
+/// Replica router for a single anonymous model (e.g. two 2-FPGA XFER
+/// clusters serving the same network) — the pre-fleet API, now a wrapper
+/// over `PlanRouter`.
+pub struct Router {
+    inner: PlanRouter,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy, replicas: usize) -> Self {
+        let inner =
+            PlanRouter::with_routes(policy, replicas, [("", (0..replicas).collect::<Vec<_>>())]);
+        Router { inner }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.inner.n_lanes()
+    }
+
+    /// Choose a replica for the next request and account it outstanding.
+    pub fn route(&self) -> usize {
+        self.inner.route("").expect("anonymous route registered")
+    }
+
+    /// Mark a request complete on a replica.
+    pub fn complete(&self, replica: usize) {
+        self.inner.complete(replica);
+    }
+
+    /// Outstanding count per replica (diagnostics / tests).
+    pub fn load(&self) -> Vec<u64> {
+        self.inner.load()
     }
 }
 
@@ -99,5 +187,43 @@ mod tests {
             r.complete(i);
         }
         assert_eq!(r.load().iter().sum::<u64>(), 40);
+    }
+
+    #[test]
+    fn plan_router_dispatches_by_model() {
+        let r = PlanRouter::with_routes(
+            RoutePolicy::LeastOutstanding,
+            3,
+            [("alexnet", vec![0, 1]), ("vgg16", vec![2])],
+        );
+        assert_eq!(r.route("vgg16"), Some(2));
+        assert_eq!(r.route("vgg16"), Some(2));
+        let a = r.route("alexnet").unwrap();
+        let b = r.route("alexnet").unwrap();
+        assert_ne!(a, b, "replica lanes must balance");
+        assert!(a < 2 && b < 2, "alexnet never lands on the vgg lane");
+        assert_eq!(r.route("resnet"), None, "unknown model has no route");
+        assert_eq!(r.load(), vec![1, 1, 2]);
+    }
+
+    #[test]
+    fn plan_router_round_robin_is_per_model() {
+        let mut r = PlanRouter::new(RoutePolicy::RoundRobin, 4);
+        r.add_route("a", vec![0, 1]);
+        r.add_route("b", vec![2, 3]);
+        // Interleaved requests: each model cycles its own lanes.
+        assert_eq!(r.route("a"), Some(0));
+        assert_eq!(r.route("b"), Some(2));
+        assert_eq!(r.route("a"), Some(1));
+        assert_eq!(r.route("b"), Some(3));
+        assert_eq!(r.route("a"), Some(0));
+        assert_eq!(r.models().collect::<Vec<_>>(), vec!["a", "b"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "lane index out of range")]
+    fn route_to_missing_lane_rejected() {
+        let mut r = PlanRouter::new(RoutePolicy::RoundRobin, 2);
+        r.add_route("a", vec![2]);
     }
 }

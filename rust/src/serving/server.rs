@@ -1,9 +1,20 @@
-//! The serving server: a shared deadline-aware batcher feeding a pool of
-//! worker threads, each owning one compute backend (one simulated FPGA
-//! cluster / one PJRT executor).
+//! The serving server.
+//!
+//! Two entry points share one machinery:
+//!
+//! * `Server::start` — the original single-model path: one shared
+//!   deadline-aware batcher feeding a pool of worker threads, each owning
+//!   one compute backend (one simulated FPGA cluster / one PJRT executor).
+//! * `Server::start_plan` — the fleet path: one **lane** (batcher + workers
+//!   + per-lane metrics) per planned sub-cluster, with a `PlanRouter`
+//!   dispatching `submit_to(model, ...)` requests to the right lane (and
+//!   balancing across replica lanes of the same model).
 
-use super::{Batcher, BatcherConfig, InferBackend, InferenceRequest, InferenceResponse, Metrics};
-use std::sync::atomic::{AtomicU64, Ordering};
+use super::{
+    Batcher, BatcherConfig, InferBackend, InferenceRequest, InferenceResponse, Metrics,
+    PlanRouter, RoutePolicy,
+};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -14,6 +25,8 @@ pub struct ServerConfig {
     pub batcher: BatcherConfig,
     /// Default deadline applied when the client does not set one.
     pub default_deadline: Duration,
+    /// How `submit_to` picks among a model's replica lanes.
+    pub policy: RoutePolicy,
 }
 
 impl Default for ServerConfig {
@@ -21,6 +34,7 @@ impl Default for ServerConfig {
         ServerConfig {
             batcher: BatcherConfig::default(),
             default_deadline: Duration::from_millis(50),
+            policy: RoutePolicy::LeastOutstanding,
         }
     }
 }
@@ -29,9 +43,27 @@ impl Default for ServerConfig {
 /// `Send`, so backends cannot cross threads — factories can).
 pub type BackendFactory = Box<dyn FnOnce() -> crate::Result<Box<dyn InferBackend>> + Send>;
 
+/// One lane of a planned server: the model it serves, the workers that
+/// drain its queue, and its batching knobs.
+pub struct LaneSpec {
+    /// Model name routed to this lane (several lanes may share one name —
+    /// replica sub-clusters).
+    pub model: String,
+    /// One worker thread per factory.
+    pub factories: Vec<BackendFactory>,
+    pub batcher: BatcherConfig,
+}
+
+struct Lane {
+    model: String,
+    batcher: Arc<Batcher>,
+    metrics: Arc<Metrics>,
+}
+
 /// A running server (drop or `shutdown()` to stop).
 pub struct Server {
-    batcher: Arc<Batcher>,
+    lanes: Vec<Lane>,
+    router: Arc<PlanRouter>,
     metrics: Arc<Metrics>,
     workers: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
@@ -39,28 +71,82 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start one worker thread per backend factory.
+    /// Single-model server: one worker thread per backend factory, all
+    /// sharing one batcher (the pre-fleet API).
     pub fn start(factories: Vec<BackendFactory>, cfg: ServerConfig) -> Self {
-        assert!(!factories.is_empty());
-        let batcher = Arc::new(Batcher::new(cfg.batcher));
+        Self::start_plan(
+            vec![LaneSpec {
+                model: "default".into(),
+                factories,
+                batcher: cfg.batcher,
+            }],
+            cfg,
+        )
+    }
+
+    /// Plan-driven server: one lane per planned sub-cluster, routed by
+    /// model name.
+    pub fn start_plan(specs: Vec<LaneSpec>, cfg: ServerConfig) -> Self {
+        assert!(!specs.is_empty());
+        assert!(specs.iter().all(|s| !s.factories.is_empty()));
+        // Group replica lanes by model name, in first-appearance order.
+        let mut routes: Vec<(String, Vec<usize>)> = Vec::new();
+        for (i, s) in specs.iter().enumerate() {
+            match routes.iter_mut().find(|(m, _)| *m == s.model) {
+                Some((_, lanes)) => lanes.push(i),
+                None => routes.push((s.model.clone(), vec![i])),
+            }
+        }
+        let router = Arc::new(PlanRouter::with_routes(cfg.policy, specs.len(), routes));
         let metrics = Arc::new(Metrics::new());
-        let workers = factories
-            .into_iter()
-            .enumerate()
-            .map(|(wid, factory)| {
+
+        let mut lanes = Vec::with_capacity(specs.len());
+        let mut workers = Vec::new();
+        for (lane_idx, spec) in specs.into_iter().enumerate() {
+            let batcher = Arc::new(Batcher::new(spec.batcher));
+            let lane_metrics = Arc::new(Metrics::new());
+            let live = Arc::new(AtomicUsize::new(spec.factories.len()));
+            for (wid, factory) in spec.factories.into_iter().enumerate() {
                 let b = batcher.clone();
-                let m = metrics.clone();
-                std::thread::Builder::new()
-                    .name(format!("superlip-worker-{wid}"))
-                    .spawn(move || match factory() {
-                        Ok(backend) => worker_loop(&*backend, &b, &m),
-                        Err(e) => eprintln!("worker {wid}: backend init failed: {e}"),
-                    })
-                    .expect("spawn worker")
-            })
-            .collect();
+                let g = metrics.clone();
+                let lm = lane_metrics.clone();
+                let r = router.clone();
+                let live = live.clone();
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("superlip-lane{lane_idx}-worker{wid}"))
+                        .spawn(move || match factory() {
+                            Ok(backend) => worker_loop(&*backend, &b, &g, &lm, &r, lane_idx),
+                            Err(e) => {
+                                eprintln!("lane {lane_idx} worker {wid}: backend init failed: {e}");
+                                // A lane whose LAST worker failed to start
+                                // must not become a black hole: refuse new
+                                // pushes and drop queued requests so their
+                                // reply channels disconnect instead of
+                                // hanging clients forever.
+                                if live.fetch_sub(1, Ordering::AcqRel) == 1 {
+                                    b.close();
+                                    while let Some(batch) = b.next_batch() {
+                                        for req in batch {
+                                            r.complete(lane_idx);
+                                            drop(req);
+                                        }
+                                    }
+                                }
+                            }
+                        })
+                        .expect("spawn worker"),
+                );
+            }
+            lanes.push(Lane {
+                model: spec.model,
+                batcher,
+                metrics: lane_metrics,
+            });
+        }
         Server {
-            batcher,
+            lanes,
+            router,
             metrics,
             workers,
             next_id: AtomicU64::new(0),
@@ -68,53 +154,102 @@ impl Server {
         }
     }
 
-    /// Submit one image; returns the receiver for its response.
+    /// Submit one image to the first lane's model; returns the receiver for
+    /// its response.
     pub fn submit(&self, image: Vec<f32>) -> crate::Result<mpsc::Receiver<InferenceResponse>> {
         self.submit_with_deadline(image, self.cfg.default_deadline)
     }
 
-    /// Submit with an explicit relative deadline.
+    /// Submit to the first lane's model with an explicit relative deadline.
     pub fn submit_with_deadline(
         &self,
         image: Vec<f32>,
         deadline: Duration,
     ) -> crate::Result<mpsc::Receiver<InferenceResponse>> {
+        self.submit_to(&self.lanes[0].model, image, deadline)
+    }
+
+    /// Submit a request for `model`, routed by the plan router to one of
+    /// the model's lanes.
+    pub fn submit_to(
+        &self,
+        model: &str,
+        image: Vec<f32>,
+        deadline: Duration,
+    ) -> crate::Result<mpsc::Receiver<InferenceResponse>> {
+        let lane = self.router.route(model).ok_or_else(|| {
+            crate::Error::Serving(format!("no lane serves model `{model}`"))
+        })?;
         let (tx, rx) = mpsc::channel();
         let now = Instant::now();
-        self.batcher.push(InferenceRequest {
+        let pushed = self.lanes[lane].batcher.push(InferenceRequest {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             image,
             enqueued: now,
             deadline: now + deadline,
             reply: tx,
-        })?;
+        });
+        if let Err(e) = pushed {
+            // The queue refused the request — undo the outstanding account.
+            self.router.complete(lane);
+            return Err(e);
+        }
         Ok(rx)
     }
 
+    /// Aggregate metrics across all lanes.
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
     }
 
-    /// Stop accepting requests, drain the queue, join workers.
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn lane_model(&self, lane: usize) -> &str {
+        &self.lanes[lane].model
+    }
+
+    /// Per-lane metrics handle (clone survives shutdown).
+    pub fn lane_metrics(&self, lane: usize) -> Arc<Metrics> {
+        self.lanes[lane].metrics.clone()
+    }
+
+    /// Outstanding requests per lane (diagnostics).
+    pub fn lane_load(&self) -> Vec<u64> {
+        self.router.load()
+    }
+
+    /// Stop accepting requests, drain the queues, join workers.
     pub fn shutdown(mut self) -> Arc<Metrics> {
-        self.batcher.close();
+        self.close_and_join();
+        self.metrics.clone()
+    }
+
+    fn close_and_join(&mut self) {
+        for lane in &self.lanes {
+            lane.batcher.close();
+        }
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
-        self.metrics.clone()
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.batcher.close();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.close_and_join();
     }
 }
 
-fn worker_loop(backend: &dyn InferBackend, batcher: &Batcher, metrics: &Metrics) {
+fn worker_loop(
+    backend: &dyn InferBackend,
+    batcher: &Batcher,
+    metrics: &Metrics,
+    lane_metrics: &Metrics,
+    router: &PlanRouter,
+    lane: usize,
+) {
     let elems = backend.image_elems();
     let classes = backend.classes();
     let max_batch = backend.max_batch().max(1);
@@ -136,6 +271,11 @@ fn worker_loop(backend: &dyn InferBackend, batcher: &Batcher, metrics: &Metrics)
                         let latency = now - req.enqueued;
                         let deadline_met = now <= req.deadline;
                         metrics.record(latency, n, deadline_met);
+                        lane_metrics.record(latency, n, deadline_met);
+                        // Un-account BEFORE replying: a client that has its
+                        // response must never observe the request as still
+                        // outstanding.
+                        router.complete(lane);
                         let _ = req.reply.send(InferenceResponse {
                             id: req.id,
                             logits: logits[i * classes..(i + 1) * classes].to_vec(),
@@ -147,7 +287,11 @@ fn worker_loop(backend: &dyn InferBackend, batcher: &Batcher, metrics: &Metrics)
                 }
                 Err(_) => {
                     // Backend failure: drop replies (receivers observe a
-                    // closed channel). Metrics record nothing.
+                    // closed channel). Metrics record nothing, but the
+                    // requests are no longer outstanding.
+                    for _ in chunk {
+                        router.complete(lane);
+                    }
                 }
             }
         }
@@ -266,5 +410,111 @@ mod tests {
         for rx in rxs {
             assert!(rx.try_recv().is_ok());
         }
+    }
+
+    #[test]
+    fn planned_lanes_route_by_model() {
+        // Two models with distinct class counts prove requests land on the
+        // right backend.
+        let lane = |model: &str, classes: usize| LaneSpec {
+            model: model.into(),
+            factories: vec![Box::new(move || {
+                Ok(Box::new(Stub {
+                    elems: 4,
+                    classes,
+                    max_batch: 4,
+                    delay: Duration::from_millis(0),
+                }) as Box<dyn InferBackend>)
+            }) as BackendFactory],
+            batcher: BatcherConfig::default(),
+        };
+        let srv = Server::start_plan(
+            vec![lane("alexnet", 2), lane("vgg16", 5)],
+            ServerConfig::default(),
+        );
+        let d = Duration::from_secs(5);
+        let a = srv.submit_to("alexnet", vec![1.0; 4], d).unwrap();
+        let v = srv.submit_to("vgg16", vec![1.0; 4], d).unwrap();
+        assert_eq!(a.recv_timeout(d).unwrap().logits.len(), 2);
+        assert_eq!(v.recv_timeout(d).unwrap().logits.len(), 5);
+        assert!(srv.submit_to("resnet", vec![1.0; 4], d).is_err());
+        assert_eq!(srv.lane_model(0), "alexnet");
+        let (a_lane, v_lane) = (srv.lane_metrics(0), srv.lane_metrics(1));
+        let m = srv.shutdown();
+        assert_eq!(m.completed(), 2, "aggregate spans lanes");
+        assert_eq!(a_lane.completed(), 1);
+        assert_eq!(v_lane.completed(), 1);
+    }
+
+    #[test]
+    fn replica_lanes_balance_one_model() {
+        let lane = || LaneSpec {
+            model: "alexnet".into(),
+            factories: vec![stub(2)],
+            batcher: BatcherConfig {
+                max_batch: 1,
+                ..BatcherConfig::default()
+            },
+        };
+        let srv = Server::start_plan(vec![lane(), lane()], ServerConfig::default());
+        let d = Duration::from_secs(5);
+        let rxs: Vec<_> = (0..10)
+            .map(|_| srv.submit_to("alexnet", vec![0.0; 4], d).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv_timeout(d).unwrap();
+        }
+        let (l0, l1) = (srv.lane_metrics(0), srv.lane_metrics(1));
+        srv.shutdown();
+        assert!(
+            l0.completed() > 0 && l1.completed() > 0,
+            "least-outstanding must use both replicas: {}/{}",
+            l0.completed(),
+            l1.completed()
+        );
+        assert_eq!(l0.completed() + l1.completed(), 10);
+    }
+
+    #[test]
+    fn failed_backend_init_does_not_hang_clients() {
+        let bad: BackendFactory = Box::new(|| Err(crate::Error::Runtime("boom".into())));
+        let srv = Server::start_plan(
+            vec![LaneSpec {
+                model: "dead".into(),
+                factories: vec![bad],
+                batcher: BatcherConfig::default(),
+            }],
+            ServerConfig::default(),
+        );
+        // Whether the first submit races ahead of the failure or not, the
+        // client must observe an error or a disconnect — never a hang.
+        match srv.submit_to("dead", vec![0.0; 4], Duration::from_secs(1)) {
+            Err(_) => {} // lane already closed
+            Ok(rx) => assert!(
+                rx.recv_timeout(Duration::from_secs(2)).is_err(),
+                "reply channel must disconnect"
+            ),
+        }
+        // Once the failure lands, new submissions are refused outright.
+        let t0 = Instant::now();
+        while srv
+            .submit_to("dead", vec![0.0; 4], Duration::from_secs(1))
+            .is_ok()
+        {
+            assert!(t0.elapsed() < Duration::from_secs(2), "lane never closed");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        srv.shutdown();
+    }
+
+    #[test]
+    fn outstanding_returns_to_zero() {
+        let srv = Server::start(vec![stub(1)], ServerConfig::default());
+        let rxs: Vec<_> = (0..6).map(|_| srv.submit(vec![0.0; 4]).unwrap()).collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(srv.lane_load().iter().sum::<u64>(), 0);
+        srv.shutdown();
     }
 }

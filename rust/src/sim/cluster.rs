@@ -162,6 +162,26 @@ pub fn simulate_network(
     }
 }
 
+/// Per-batch-size cluster service latency (cycles): entry `b − 1` is the
+/// simulated time to process one batch of `b` images on the cluster (the
+/// fleet serving backend's service-time table — batching multiplies the
+/// outer trips, so per-image latency is flat while batch latency grows
+/// ~linearly, the paper's reason for "low or even no batching" in §1).
+pub fn batch_latency_table(
+    net: &Network,
+    d: &Design,
+    f: &Factors,
+    fpga: &FpgaSpec,
+    cfg: &SimConfig,
+    mode: XferMode,
+    max_batch: usize,
+) -> Vec<u64> {
+    assert!(max_batch >= 1);
+    (1..=max_batch as u64)
+        .map(|b| simulate_network(&net.clone().with_batch(b), d, f, fpga, cfg, mode).cycles)
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -254,6 +274,24 @@ mod tests {
             XferMode::Xfer,
         );
         assert_eq!(pm2.interlayer_cycles, 0);
+    }
+
+    #[test]
+    fn batch_table_grows_linearly() {
+        let (fpga, cfg) = setup();
+        let net = zoo::alexnet();
+        let d = Design::fixed16(128, 10, 7, 14);
+        let f = Factors::new(1, 2, 1, 1);
+        let t = batch_latency_table(&net, &d, &f, &fpga, &cfg, XferMode::Xfer, 4);
+        assert_eq!(t.len(), 4);
+        let batch1 = simulate_network(&net, &d, &f, &fpga, &cfg, XferMode::Xfer).cycles;
+        assert_eq!(t[0], batch1);
+        for w in t.windows(2) {
+            assert!(w[1] > w[0], "batch latency must grow: {t:?}");
+        }
+        // Outer trips scale with B, so batch 4 is ~4× batch 1 (±overheads).
+        let ratio = t[3] as f64 / t[0] as f64;
+        assert!((3.0..5.0).contains(&ratio), "ratio {ratio}");
     }
 
     #[test]

@@ -22,5 +22,5 @@
 mod cluster;
 mod engine;
 
-pub use cluster::{simulate_cluster, simulate_network, ClusterSim};
+pub use cluster::{batch_latency_table, simulate_cluster, simulate_network, ClusterSim};
 pub use engine::{simulate_layer, SimConfig, SimResult};

@@ -1,0 +1,181 @@
+//! Property tests for the deadline-aware batcher (`serving::Batcher`),
+//! driven by the in-crate PRNG/property harness (`util::prng`,
+//! `util::proptest`): batches never exceed `max_batch`, requests pop in
+//! earliest-deadline-first order, a batch closes early once the earliest
+//! deadline is within `deadline_margin`, and no request is ever dropped —
+//! including under random concurrent arrival bursts.
+
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+use superlip::serving::{Batcher, BatcherConfig, InferenceRequest, InferenceResponse};
+use superlip::util::proptest::forall;
+use superlip::util::SplitMix64;
+
+fn req(
+    id: u64,
+    now: Instant,
+    deadline_ms: u64,
+) -> (InferenceRequest, mpsc::Receiver<InferenceResponse>) {
+    let (tx, rx) = mpsc::channel();
+    (
+        InferenceRequest {
+            id,
+            image: Vec::new(),
+            enqueued: now,
+            deadline: now + Duration::from_millis(deadline_ms),
+            reply: tx,
+        },
+        rx,
+    )
+}
+
+#[test]
+fn batches_bounded_edf_ordered_and_lossless() {
+    // Random (max_batch, deadline multiset) cases: draining the whole queue
+    // must emit 1..=max_batch-sized batches, in globally non-decreasing
+    // deadline order, with every pushed id appearing exactly once.
+    forall(
+        0xB47C,
+        200,
+        |r| {
+            let max_batch = r.range(1, 6) as usize;
+            let n = r.range(0, 40) as usize;
+            let deadlines: Vec<u64> = (0..n).map(|_| r.range(0, 10_000)).collect();
+            (max_batch, deadlines)
+        },
+        |case| {
+            let (max_batch, deadlines) = case;
+            let b = Batcher::new(BatcherConfig {
+                max_batch: *max_batch,
+                window: Duration::ZERO,
+                deadline_margin: Duration::ZERO,
+            });
+            let now = Instant::now();
+            let mut rxs = Vec::new();
+            for (i, &d) in deadlines.iter().enumerate() {
+                let (rq, rx) = req(i as u64, now, d);
+                b.push(rq).unwrap();
+                rxs.push(rx);
+            }
+            b.close();
+            let mut seen: Vec<(Instant, u64)> = Vec::new();
+            while let Some(batch) = b.next_batch() {
+                if batch.is_empty() || batch.len() > *max_batch {
+                    return false;
+                }
+                seen.extend(batch.into_iter().map(|r| (r.deadline, r.id)));
+            }
+            if seen.len() != deadlines.len() {
+                return false; // a request was dropped (or duplicated)
+            }
+            let mut ids: Vec<u64> = seen.iter().map(|&(_, id)| id).collect();
+            ids.sort_unstable();
+            if ids != (0..deadlines.len() as u64).collect::<Vec<_>>() {
+                return false;
+            }
+            // EDF: deadlines never decrease across the drained stream.
+            seen.windows(2).all(|w| w[0].0 <= w[1].0)
+        },
+    );
+}
+
+#[test]
+fn urgent_deadline_closes_batch_before_window() {
+    // A 30 s window would sink any real-time deadline; the margin check
+    // must close the batch immediately when the EDF head is urgent.
+    let b = Batcher::new(BatcherConfig {
+        max_batch: 8,
+        window: Duration::from_secs(30),
+        deadline_margin: Duration::from_millis(100),
+    });
+    let now = Instant::now();
+    let (far, _x1) = req(2, now, 60_000);
+    let (urgent, _x2) = req(1, now, 10); // inside the margin
+    b.push(far).unwrap();
+    b.push(urgent).unwrap();
+    let t0 = Instant::now();
+    let batch = b.next_batch().unwrap();
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "batch must close early, not wait the window: {:?}",
+        t0.elapsed()
+    );
+    assert_eq!(batch.first().unwrap().id, 1, "EDF head pops first");
+    assert_eq!(batch.len(), 2, "queued requests ride along");
+}
+
+#[test]
+fn relaxed_deadlines_wait_for_the_window() {
+    // Control for the early-close property: with every deadline far outside
+    // the margin, the batcher waits for late joiners.
+    let b = Arc::new(Batcher::new(BatcherConfig {
+        max_batch: 4,
+        window: Duration::from_millis(60),
+        deadline_margin: Duration::from_millis(1),
+    }));
+    let now = Instant::now();
+    let (first, _x1) = req(0, now, 60_000);
+    b.push(first).unwrap();
+    let b2 = b.clone();
+    let joiner = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(15));
+        let (late, x) = req(1, Instant::now(), 60_000);
+        b2.push(late).unwrap();
+        std::mem::forget(x);
+    });
+    let batch = b.next_batch().unwrap();
+    joiner.join().unwrap();
+    assert_eq!(batch.len(), 2, "late arrival joins the open window");
+}
+
+#[test]
+fn random_concurrent_bursts_never_drop_requests() {
+    // Producer pushes Poisson-ish bursts while two consumers race to drain:
+    // every id must surface exactly once across both consumers.
+    let mut rng = SplitMix64::new(0xB0B5);
+    let b = Arc::new(Batcher::new(BatcherConfig {
+        max_batch: 3,
+        window: Duration::from_micros(200),
+        deadline_margin: Duration::from_micros(50),
+    }));
+    let total: u64 = 300;
+    let drained: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+    let consumers: Vec<_> = (0..2)
+        .map(|_| {
+            let b = b.clone();
+            let d = drained.clone();
+            std::thread::spawn(move || {
+                while let Some(batch) = b.next_batch() {
+                    assert!(!batch.is_empty() && batch.len() <= 3);
+                    d.lock().unwrap().extend(batch.iter().map(|r| r.id));
+                }
+            })
+        })
+        .collect();
+    let mut rxs = Vec::new();
+    let now = Instant::now();
+    let mut id = 0u64;
+    while id < total {
+        let burst = rng.range(1, 8).min(total - id);
+        for _ in 0..burst {
+            let (rq, rx) = req(id, now, rng.range(1, 50));
+            b.push(rq).unwrap();
+            rxs.push(rx);
+            id += 1;
+        }
+        if rng.below(3) == 0 {
+            std::thread::sleep(Duration::from_micros(rng.range(0, 300)));
+        }
+    }
+    b.close();
+    for c in consumers {
+        c.join().unwrap();
+    }
+    let mut ids = drained.lock().unwrap().clone();
+    ids.sort_unstable();
+    assert_eq!(ids.len() as u64, total, "no request may be dropped");
+    assert!(
+        ids.iter().enumerate().all(|(i, &v)| v == i as u64),
+        "every request drained exactly once"
+    );
+}

@@ -1,12 +1,17 @@
 //! Cross-module integration tests: DSE → partition → XFER → simulator →
-//! energy pipelines over the real network zoo.
+//! energy pipelines over the real network zoo, plus the fleet planner →
+//! plan-driven serving path end-to-end.
 
+use std::time::Duration;
 use superlip::analytic::{
     check_feasible, network_latency, xfer_network_latency, Design, XferMode,
 };
 use superlip::coordinator::SuperLip;
 use superlip::dse;
 use superlip::energy::{self, PowerModel};
+use superlip::fleet::{
+    equal_split, run_scenario, FleetSpec, Planner, PlannerConfig, ScenarioConfig, WorkloadSpec,
+};
 use superlip::model::zoo;
 use superlip::partition::Factors;
 use superlip::platform::{FpgaSpec, Precision};
@@ -152,6 +157,69 @@ fn float_vs_fixed_tradeoff() {
         pf.sim_ms
     );
     assert!(px.gops > pf.gops);
+}
+
+#[test]
+fn fleet_planner_to_sim_serving_end_to_end() {
+    // 4-board fleet, alexnet (light) + vgg16 (heavy). The mix is
+    // self-calibrated: vgg16's deadline sits strictly between its 3-board
+    // and 2-board service times, so the planner must discover the 1/3
+    // split, and the naive equal split provably misses.
+    let planner = Planner::new(
+        FleetSpec::homogeneous(4, FpgaSpec::zcu102()),
+        PlannerConfig::default(),
+    );
+    let alex1 = planner.service_ms("alexnet", 1).unwrap();
+    let vgg3 = planner.service_ms("vgg16", 3).unwrap();
+    let vgg2 = planner.service_ms("vgg16", 2).unwrap();
+    assert!(vgg3 < vgg2);
+    let mix = vec![
+        WorkloadSpec::new(
+            "alexnet",
+            0.05 / (alex1 / 1e3),
+            Duration::from_secs_f64(4.0 * alex1 / 1e3),
+        ),
+        WorkloadSpec::new(
+            "vgg16",
+            0.15 / (vgg3 / 1e3),
+            Duration::from_secs_f64((vgg3 + vgg2) / 2.0 / 1e3),
+        ),
+    ];
+    let plan = planner.plan(&mix).unwrap();
+    assert_eq!(plan.allocation(), vec![1, 3], "{}", plan.summary());
+    assert!(plan.worst_risk.is_finite());
+
+    // The planner's split can never be worse than any fixed allocation it
+    // also enumerated — including the naive equal split.
+    let naive = planner.plan_allocation(&mix, &equal_split(4, 2)).unwrap();
+    assert!(plan.worst_risk <= naive.worst_risk);
+    assert!(
+        !naive.worst_risk.is_finite(),
+        "vgg16 on 2 boards cannot meet its deadline"
+    );
+
+    // Serve the planned fleet for real: plan-driven router over
+    // sim-cluster backends, no hard-coded single backend anywhere.
+    let stats = run_scenario(
+        &plan,
+        &ScenarioConfig {
+            requests_per_model: 15,
+            seed: 42,
+            time_scale: 1.0,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(stats.len(), 2);
+    for s in &stats {
+        assert_eq!(s.completed, 15, "{}: all requests served", s.model);
+        assert!(s.p99_ms >= s.p50_ms && s.p50_ms > 0.0);
+    }
+    let vgg = stats.iter().find(|s| s.model == "vgg16").unwrap();
+    assert_eq!(vgg.n_boards, 3);
+    // Service fits the deadline with ~20% headroom and ρ ≈ 0.15; the bulk
+    // of requests must make it (generous bound for CI jitter).
+    assert!(vgg.miss_rate < 0.5, "planned vgg16 misses too much: {vgg:?}");
 }
 
 #[test]

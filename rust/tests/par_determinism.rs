@@ -1,0 +1,88 @@
+//! Determinism of the parallel DSE substrate (`util::par`): search results
+//! are bit-identical no matter how many worker threads run — asserted here
+//! across widths {1, 2, 8} (and by CI across whole-process
+//! `SUPERLIP_THREADS` settings {1, 4}; see `.github/workflows/ci.yml`).
+//!
+//! The thread count is forced via `util::par::override_threads` rather
+//! than by mutating `RAYON_NUM_THREADS`: `setenv` racing `getenv` from
+//! concurrent test threads is undefined behavior on glibc.
+
+use superlip::analytic::{Design, XferMode};
+use superlip::dse;
+use superlip::model::{zoo, ConvLayer, Network};
+use superlip::platform::{FpgaSpec, Precision};
+use superlip::util::par;
+
+const WIDTHS: [usize; 3] = [1, 2, 8];
+
+fn toy_net() -> Network {
+    // Small candidate space, one repeated shape (exercises the dedup).
+    let a = ConvLayer::conv("a", 1, 32, 24, 14, 14, 3);
+    let b = ConvLayer::conv("b", 1, 48, 16, 7, 7, 5);
+    Network::new("toy", vec![a.clone(), b, a])
+}
+
+#[test]
+fn top_uniform_designs_bit_identical_across_thread_counts() {
+    let net = toy_net();
+    let fpga = FpgaSpec::zcu102();
+    let runs: Vec<_> = WIDTHS
+        .iter()
+        .map(|&w| {
+            let guard = par::override_threads(w);
+            let (top, stats, _elapsed) =
+                dse::top_uniform_designs(&net, &fpga, Precision::Fixed16, 8);
+            drop(guard);
+            (top, stats.evaluated, stats.infeasible)
+        })
+        .collect();
+    for (w, run) in WIDTHS.iter().zip(&runs).skip(1) {
+        assert_eq!(
+            runs[0].0, run.0,
+            "top-k must be bit-identical at {w} threads"
+        );
+        assert_eq!(runs[0].1, run.1, "evaluated count differs at {w} threads");
+        assert_eq!(runs[0].2, run.2, "infeasible count differs at {w} threads");
+    }
+}
+
+#[test]
+fn best_factors_bit_identical_across_thread_counts() {
+    let net = zoo::alexnet();
+    let d = Design::fixed16(128, 10, 7, 14);
+    let fpga = FpgaSpec::zcu102();
+    for n in [4u64, 8, 16] {
+        for mode in [XferMode::Xfer, XferMode::Baseline] {
+            let runs: Vec<_> = WIDTHS
+                .iter()
+                .map(|&w| {
+                    let guard = par::override_threads(w);
+                    let r = dse::best_factors(&net, &d, &fpga, n, mode);
+                    drop(guard);
+                    r
+                })
+                .collect();
+            for run in &runs[1..] {
+                assert_eq!(runs[0], *run, "n={n} {mode:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn best_layer_design_bit_identical_across_thread_counts() {
+    let layer = zoo::alexnet().layers[2].clone();
+    let fpga = FpgaSpec::zcu102();
+    let runs: Vec<_> = WIDTHS
+        .iter()
+        .map(|&w| {
+            let guard = par::override_threads(w);
+            let (design, ll, stats) = dse::best_layer_design(&layer, &fpga, Precision::Fixed16);
+            drop(guard);
+            (design, ll.lat, stats.evaluated, stats.infeasible)
+        })
+        .collect();
+    for run in &runs[1..] {
+        assert_eq!(runs[0], *run);
+    }
+}

@@ -1,12 +1,14 @@
 //! Serving-path end-to-end tests with a stub backend: correctness under
-//! load, batching behaviour, deadline handling, router integration, and
-//! failure injection.
+//! load, batching behaviour, deadline handling, plan-driven routing
+//! (multi-model lanes and replica sets), legacy single-backend routing,
+//! and failure injection.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 use superlip::serving::{
-    BackendFactory, InferBackend, RoutePolicy, Router, Server, ServerConfig,
+    BackendFactory, BatcherConfig, InferBackend, LaneSpec, RoutePolicy, Router, Server,
+    ServerConfig,
 };
 use superlip::util::SplitMix64;
 
@@ -150,6 +152,99 @@ fn deadlines_tracked_under_slow_backend() {
     assert!(loose.recv_timeout(Duration::from_secs(10)).unwrap().deadline_met);
     let m = srv.shutdown();
     assert_eq!(m.deadline_misses(), 1);
+}
+
+/// A lane over the shared stub with its own class count, so responses
+/// prove which model's backend served them.
+fn lane(
+    model: &str,
+    classes: usize,
+    delay_ms: u64,
+    served: Arc<AtomicUsize>,
+) -> LaneSpec {
+    LaneSpec {
+        model: model.into(),
+        factories: vec![Box::new(move || {
+            Ok(Box::new(Stub {
+                elems: 8,
+                classes,
+                max_batch: 4,
+                delay: Duration::from_millis(delay_ms),
+                fail_every: None,
+                calls: AtomicU64::new(0),
+                served,
+            }) as Box<dyn InferBackend>)
+        }) as BackendFactory],
+        batcher: BatcherConfig::default(),
+    }
+}
+
+#[test]
+fn plan_router_dispatches_mixed_traffic_to_the_right_backend() {
+    // Two models on one server: every response must come from the lane
+    // owning the request's model (distinct class counts + checksums), and
+    // per-lane metrics must add up to the aggregate.
+    let served_a = Arc::new(AtomicUsize::new(0));
+    let served_v = Arc::new(AtomicUsize::new(0));
+    let srv = Server::start_plan(
+        vec![
+            lane("alexnet", 3, 0, served_a.clone()),
+            lane("vgg16", 5, 0, served_v.clone()),
+        ],
+        ServerConfig::default(),
+    );
+    let d = Duration::from_secs(10);
+    let mut rng = SplitMix64::new(17);
+    let mut pending = Vec::new();
+    for i in 0..60 {
+        let model = if i % 3 == 0 { "vgg16" } else { "alexnet" };
+        let img: Vec<f32> = (0..8).map(|_| rng.signed_unit()).collect();
+        let sum: f32 = img.iter().sum();
+        pending.push((model, sum, srv.submit_to(model, img, d).unwrap()));
+    }
+    for (model, sum, rx) in pending {
+        let r = rx.recv_timeout(d).unwrap();
+        let want_classes = if model == "vgg16" { 5 } else { 3 };
+        assert_eq!(r.logits.len(), want_classes, "{model} answered by wrong lane");
+        assert!((r.logits[0] - sum).abs() < 1e-4);
+    }
+    assert!(srv.submit_to("resnet", vec![0.0; 8], d).is_err(), "unplanned model rejected");
+    let (alex_lane, vgg_lane) = (srv.lane_metrics(0), srv.lane_metrics(1));
+    let m = srv.shutdown();
+    assert_eq!(m.completed(), 60);
+    assert_eq!(alex_lane.completed(), 40);
+    assert_eq!(vgg_lane.completed(), 20);
+    assert_eq!(served_a.load(Ordering::Relaxed), 40);
+    assert_eq!(served_v.load(Ordering::Relaxed), 20);
+}
+
+#[test]
+fn plan_router_spreads_one_model_across_replica_lanes() {
+    // Two replica sub-clusters of the same model behind one name: the
+    // plan router must use both under load and lose nothing.
+    let served_0 = Arc::new(AtomicUsize::new(0));
+    let served_1 = Arc::new(AtomicUsize::new(0));
+    let mk = |served: Arc<AtomicUsize>| {
+        let mut l = lane("alexnet", 4, 3, served);
+        l.batcher.max_batch = 1; // per-request dispatch → both lanes engage
+        l
+    };
+    let srv = Server::start_plan(
+        vec![mk(served_0.clone()), mk(served_1.clone())],
+        ServerConfig::default(),
+    );
+    let d = Duration::from_secs(10);
+    let rxs: Vec<_> = (0..20)
+        .map(|_| srv.submit_to("alexnet", vec![1.0; 8], d).unwrap())
+        .collect();
+    for rx in rxs {
+        rx.recv_timeout(d).unwrap();
+    }
+    assert_eq!(srv.lane_load().iter().sum::<u64>(), 0, "nothing outstanding");
+    srv.shutdown();
+    let (a, b) = (served_0.load(Ordering::Relaxed), served_1.load(Ordering::Relaxed));
+    assert_eq!(a + b, 20);
+    assert!(a > 0 && b > 0, "least-outstanding must engage both replicas: {a}/{b}");
 }
 
 #[test]

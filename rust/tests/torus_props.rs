@@ -1,0 +1,117 @@
+//! Unit/property tests for the 2D-torus cluster topology
+//! (`partition::topology::Torus`, paper §4.4 / Figure 10): link degrees,
+//! the `Pm × (Pb·Pr·Pc)` shape contract of `for_factors`, and the
+//! Property 2 traffic-balance rotation (each ring visits every peer
+//! exactly once).
+
+use std::collections::BTreeSet;
+use superlip::partition::{Factors, Torus};
+use superlip::util::proptest::forall;
+
+#[test]
+fn every_node_has_two_in_and_two_out_links() {
+    // "Each FPGA has two incoming links and two outgoing links" — one per
+    // torus dimension, whenever both dimensions are real.
+    for rows in 2..=5u64 {
+        for cols in 2..=5u64 {
+            let t = Torus { rows, cols };
+            assert_eq!(t.out_degree(), 2);
+            for id in 0..t.num_nodes() {
+                let n = t.node(id);
+                let (down, right) = (t.down(n), t.right(n));
+                assert_ne!(down, right, "{rows}x{cols} node {id}: out links distinct");
+                assert_ne!(down, n, "no self-link on a real column ring");
+                assert_ne!(right, n, "no self-link on a real row ring");
+                let in_degree: u64 = (0..t.num_nodes())
+                    .map(|uid| {
+                        let u = t.node(uid);
+                        u64::from(t.down(u) == n) + u64::from(t.right(u) == n)
+                    })
+                    .sum();
+                assert_eq!(in_degree, 2, "{rows}x{cols} node {id}: in-degree");
+            }
+        }
+    }
+}
+
+#[test]
+fn collapsed_dimensions_carry_no_real_links() {
+    let line = Torus { rows: 1, cols: 4 };
+    assert_eq!(line.out_degree(), 1);
+    let n = line.node(2);
+    assert_eq!(line.down(n), n, "collapsed column ring is a self-loop");
+    assert_ne!(line.right(n), n);
+    let single = Torus { rows: 1, cols: 1 };
+    assert_eq!(single.out_degree(), 0);
+}
+
+#[test]
+fn for_factors_shape_is_pbprpc_rows_by_pm_cols() {
+    // §4.4 "Organization": rows = Pb·Pr·Pc (weight-sharing groups),
+    // cols = Pm (IFM-sharing groups) — for every factorization.
+    forall(
+        0x7012,
+        300,
+        |r| (r.range(1, 3), r.range(1, 3), r.range(1, 3), r.range(1, 4)),
+        |&(pb, pr, pc, pm)| {
+            let f = Factors::new(pb, pr, pc, pm);
+            let t = Torus::for_factors(&f);
+            t.rows == pb * pr * pc && t.cols == pm && t.num_nodes() == f.num_fpgas()
+        },
+    );
+}
+
+#[test]
+fn ring_rotation_visits_every_peer_exactly_once() {
+    // Property 2 (traffic balance): rotating along a row visits every
+    // column exactly once and returns home; same for columns — so the
+    // all-to-all exchange needs no routing and no link is oversubscribed.
+    let t = Torus { rows: 3, cols: 4 };
+    for id in 0..t.num_nodes() {
+        let start = t.node(id);
+        let mut cur = start;
+        let mut cols_seen = BTreeSet::new();
+        for _ in 0..t.cols {
+            cur = t.right(cur);
+            assert_eq!(cur.row, start.row, "row ring stays in its row");
+            assert!(cols_seen.insert(cur.col), "column revisited early");
+        }
+        assert_eq!(cur, start, "row ring closes after `cols` hops");
+        assert_eq!(cols_seen.len() as u64, t.cols);
+
+        let mut cur = start;
+        let mut rows_seen = BTreeSet::new();
+        for _ in 0..t.rows {
+            cur = t.down(cur);
+            assert_eq!(cur.col, start.col, "column ring stays in its column");
+            assert!(rows_seen.insert(cur.row), "row revisited early");
+        }
+        assert_eq!(cur, start, "column ring closes after `rows` hops");
+        assert_eq!(rows_seen.len() as u64, t.rows);
+    }
+}
+
+#[test]
+fn ring_schedule_delivers_all_chunks_for_any_ring_size() {
+    for p in 1..=8u64 {
+        let steps = Torus::ring_schedule(p);
+        assert_eq!(steps.len() as u64, p.saturating_sub(1));
+        let mut own: Vec<Vec<bool>> = (0..p)
+            .map(|i| (0..p).map(|c| c == i).collect())
+            .collect();
+        for step in &steps {
+            assert_eq!(step.len() as u64, p, "every node forwards each step");
+            let snapshot = own.clone();
+            for &(from, to, chunk) in step {
+                assert!(
+                    snapshot[from as usize][chunk as usize],
+                    "p={p}: node {from} forwarded chunk {chunk} it doesn't hold"
+                );
+                own[to as usize][chunk as usize] = true;
+            }
+        }
+        for (i, holds) in own.iter().enumerate() {
+            assert!(holds.iter().all(|&h| h), "p={p}: node {i} missing a chunk");
+        }
+    }
+}
