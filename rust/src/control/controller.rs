@@ -1,0 +1,491 @@
+//! The controller: one `tick()` per telemetry window closes the loop —
+//! poll telemetry, detect drift or death, re-plan, and migrate the live
+//! server make-before-break.
+//!
+//! ## Hitless migration
+//!
+//! Applying a `PlanDelta` to the running `serving::Server`:
+//!
+//! 1. every `add` lane is stood up and routed FIRST (`Server::add_lane`);
+//! 2. only then is each `retire` lane derouted and closed
+//!    (`Server::begin_retire`) — it keeps draining everything it already
+//!    queued, while new traffic flows to the replacement;
+//! 3. drained lanes are reaped lazily on later ticks (`finish_retire`),
+//!    so a tick never blocks on a deep backlog.
+//!
+//! A submit racing step 2 re-routes inside `Server::submit_to`, so every
+//! request submitted across a migration gets exactly one response.
+//!
+//! ## Failure repair
+//!
+//! A board death reaches the controller two ways: `board_down` (the
+//! platform's out-of-band health monitor — the scenario runner calls it
+//! at the kill event) or, without one, the telemetry fallback (a lane
+//! showing arrivals but zero completions for `dead_after` consecutive
+//! windows; the whole lock-step sub-cluster is then written off, since
+//! telemetry cannot tell WHICH member died). Either way the dead lane is
+//! retired (its queued requests were already lost to the hardware — the
+//! one migration that cannot be hitless), the fleet shrinks to the
+//! survivors, and the mix is re-planned on what remains.
+//!
+//! ## Board bookkeeping
+//!
+//! Plans describe contiguous ranges over an abstract fleet; physical
+//! boards are tracked by stable ORIGINAL indices (`fleet::FleetHealth`
+//! numbering). Kept lanes keep their boards; added lanes draw from the
+//! pool freed by retiring ones. During the drain overlap old and new
+//! lanes briefly share boards — the cluster simulator charges service
+//! time, not bitstream reconfiguration, so the overlap is a modeling
+//! shortcut (a real deployment would drain before reprogramming).
+
+use super::drift::{DriftConfig, DriftDecision, DriftDetector};
+use super::replanner::{diff_plans, Replanner};
+use super::telemetry::{TelemetryFrame, TelemetryHub};
+use crate::fleet::{lane_spec_for, FleetHealth, FleetPlan, WorkloadSpec};
+use crate::serving::Server;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Controller tuning + runtime wiring.
+#[derive(Clone)]
+pub struct ControlConfig {
+    pub drift: DriftConfig,
+    /// Telemetry frames pooled for rate smoothing (arrival-rate estimates
+    /// feeding the re-planner average over this many windows).
+    pub history: usize,
+    /// Telemetry-fallback death: a lane with arrivals but zero
+    /// completions for this many consecutive windows is written off.
+    pub dead_after: usize,
+    /// Scenario wall-clock compression (1.0 = real time) — telemetry
+    /// un-scales with it, and new lanes are built at the same scale.
+    pub time_scale: f64,
+    /// Batching window for newly added lanes (model time).
+    pub window: Duration,
+    /// Board-failure switches (enables health-gated lanes + repair).
+    pub health: Option<FleetHealth>,
+}
+
+impl Default for ControlConfig {
+    fn default() -> Self {
+        ControlConfig {
+            drift: DriftConfig::default(),
+            history: 3,
+            dead_after: 2,
+            time_scale: 1.0,
+            window: Duration::from_micros(200),
+            health: None,
+        }
+    }
+}
+
+/// What one tick did.
+#[derive(Debug, Clone)]
+pub struct TickReport {
+    pub frame: TelemetryFrame,
+    pub decision: DriftDecision,
+    /// Allocation after this tick, if a migration happened.
+    pub migrated_to: Option<Vec<usize>>,
+}
+
+/// The online re-planning controller over one live server.
+pub struct Controller {
+    server: Arc<Server>,
+    hub: TelemetryHub,
+    detector: DriftDetector,
+    replanner: Replanner,
+    cfg: ControlConfig,
+    /// Current plan (what the lanes implement).
+    plan: FleetPlan,
+    /// Current baseline mix (planned rates; re-baselined on every
+    /// re-plan so the detector measures drift from the LAST plan).
+    mix: Vec<WorkloadSpec>,
+    /// model → live lane index.
+    lane_of: HashMap<String, usize>,
+    /// model → ORIGINAL board indices its lane occupies.
+    boards_of: HashMap<String, Vec<usize>>,
+    /// Original indices of surviving boards, in replanner fleet order.
+    fleet_ids: Vec<usize>,
+    /// Lanes draining toward reap.
+    retiring: Vec<usize>,
+    /// Lane → (consecutive starved windows, arrivals accumulated over
+    /// them) — the telemetry-fallback death evidence.
+    dead_streak: HashMap<usize, (usize, u64)>,
+    /// Human-readable event log (benches/CLI print it).
+    pub events: Vec<String>,
+    replans: usize,
+}
+
+impl Controller {
+    /// Wrap a server whose lanes were started one-per-deployment, in
+    /// `plan.deployments` order (what `Server::start_plan` over
+    /// `lane_spec_for` yields). The replanner should be warmed with
+    /// `adopt_cache` from the planner that produced `plan`.
+    pub fn new(
+        server: Arc<Server>,
+        replanner: Replanner,
+        plan: FleetPlan,
+        cfg: ControlConfig,
+    ) -> Result<Self> {
+        if replanner.fleet().len() != plan.deployments.iter().map(|d| d.n_boards).sum::<usize>() {
+            return Err(Error::InvalidArg(
+                "replanner fleet does not match the plan's board count".into(),
+            ));
+        }
+        let mix: Vec<WorkloadSpec> = plan.deployments.iter().map(|d| d.workload.clone()).collect();
+        let mut lane_of = HashMap::new();
+        let mut boards_of = HashMap::new();
+        for (i, d) in plan.deployments.iter().enumerate() {
+            lane_of.insert(d.workload.model.clone(), i);
+            boards_of.insert(
+                d.workload.model.clone(),
+                (d.start..d.start + d.n_boards).collect(),
+            );
+        }
+        let fleet_ids = (0..replanner.fleet().len()).collect();
+        let hub = TelemetryHub::new(server.clone(), cfg.time_scale, cfg.history.max(1));
+        let detector = DriftDetector::new(cfg.drift);
+        Ok(Controller {
+            server,
+            hub,
+            detector,
+            replanner,
+            cfg,
+            plan,
+            mix,
+            lane_of,
+            boards_of,
+            fleet_ids,
+            retiring: Vec::new(),
+            dead_streak: HashMap::new(),
+            events: Vec::new(),
+            replans: 0,
+        })
+    }
+
+    pub fn replans(&self) -> usize {
+        self.replans
+    }
+
+    pub fn plan(&self) -> &FleetPlan {
+        &self.plan
+    }
+
+    /// Boards (by count) per model in the current plan.
+    pub fn allocation_for(&self, model: &str) -> usize {
+        self.boards_of.get(model).map_or(0, Vec::len)
+    }
+
+    /// One control window: reap drained lanes, poll telemetry, decide,
+    /// and (when drift sustains) re-plan + migrate.
+    pub fn tick(&mut self) -> TickReport {
+        self.retiring.retain(|&l| !self.server.finish_retire(l));
+        let frame = self.hub.tick();
+        if let Some(dead_model) = self.scan_for_dead_lanes(&frame) {
+            let report_frame = frame.clone();
+            let migrated = self.repair_dead_lane(&dead_model);
+            return TickReport {
+                frame: report_frame,
+                decision: DriftDecision::Stable,
+                migrated_to: migrated,
+            };
+        }
+        let decision = self.detector.observe(&self.mix, &frame.models);
+        let mut migrated_to = None;
+        if let DriftDecision::Replan { reason } = &decision {
+            self.events.push(format!("drift: {reason}"));
+            let observed = self.hub.observed_mix(&self.mix);
+            match self.replanner.plan(&observed) {
+                Ok(new_plan) => {
+                    migrated_to = Some(self.migrate_to(new_plan, observed));
+                }
+                Err(e) => self.events.push(format!("re-plan failed: {e}")),
+            }
+        }
+        TickReport {
+            frame,
+            decision,
+            migrated_to,
+        }
+    }
+
+    /// Out-of-band health event: `board` (ORIGINAL index) died. Retires
+    /// the lock-step sub-cluster it belonged to, shrinks the fleet, and
+    /// re-plans the current mix on the survivors.
+    pub fn board_down(&mut self, board: usize) {
+        let Some(pos) = self.fleet_ids.iter().position(|&b| b == board) else {
+            return; // already written off
+        };
+        self.events.push(format!("board {board} down"));
+        let dead_model = self
+            .boards_of
+            .iter()
+            .find(|(_, ids)| ids.contains(&board))
+            .map(|(m, _)| m.clone());
+        // Shrink the replanner FIRST: if it refuses (last board), the
+        // books must stay consistent — degraded, but coherent.
+        if let Err(e) = self.replanner.remove_board(pos) {
+            self.events.push(format!("cannot shrink fleet: {e}"));
+            return;
+        }
+        self.fleet_ids.remove(pos);
+        match dead_model {
+            Some(model) => {
+                let _ = self.repair_dead_lane(&model);
+            }
+            None => {
+                // A free board died: nothing to retire, but re-plan so the
+                // bookkeeping matches the smaller fleet.
+                let observed = self.hub.observed_mix(&self.mix);
+                match self.replanner.plan(&observed) {
+                    Ok(new_plan) => {
+                        self.migrate_to(new_plan, observed);
+                    }
+                    Err(e) => self
+                        .events
+                        .push(format!("re-plan failed ({e}); serving degraded")),
+                }
+                self.detector.arm_cooldown();
+            }
+        }
+    }
+
+    /// Telemetry fallback: a lane starved of completions while traffic
+    /// keeps arriving is presumed dead. Dead ≠ slow: the verdict needs
+    /// `dead_after` consecutive starved windows AND at least
+    /// `drift.min_arrivals` arrivals accumulated over them (a
+    /// long-service model legitimately spans windows with a batch in
+    /// flight), AND — when board health switches are wired — a dead flag
+    /// on one of the lane's boards (all-alive switches mean slow, not
+    /// dead). Returns the model to repair.
+    fn scan_for_dead_lanes(&mut self, frame: &TelemetryFrame) -> Option<String> {
+        let min_arrivals = self.cfg.drift.min_arrivals;
+        let mut dead = None;
+        for lane in &frame.lanes {
+            if self.retiring.contains(&lane.lane) {
+                continue; // draining lanes report no arrivals anyway
+            }
+            let (streak, starved) = self.dead_streak.entry(lane.lane).or_insert((0, 0));
+            if lane.arrivals > 0 && lane.completed == 0 {
+                *streak += 1;
+                *starved += lane.arrivals;
+                if *streak >= self.cfg.dead_after && *starved >= min_arrivals && dead.is_none() {
+                    let confirmed = match (&self.cfg.health, self.boards_of.get(&lane.model)) {
+                        (Some(h), Some(ids)) => ids.iter().any(|&b| h.is_dead(b)),
+                        _ => true, // no health channel — telemetry is all we have
+                    };
+                    if confirmed {
+                        dead = Some(lane.model.clone());
+                    }
+                }
+            } else {
+                *streak = 0;
+                *starved = 0;
+            }
+        }
+        if let Some(model) = &dead {
+            self.events
+                .push(format!("lane for {model} dead (telemetry): writing off its boards"));
+            // Telemetry cannot tell which member died — write off the
+            // whole sub-cluster's boards (shrink the replanner first so a
+            // refusal leaves the books consistent). A refusal ("last
+            // board") stops the shrink but NOT the repair: the dead lane
+            // must still retire, else every tick re-detects it forever.
+            for b in self.boards_of.get(model).cloned().unwrap_or_default() {
+                if let Some(pos) = self.fleet_ids.iter().position(|&x| x == b) {
+                    if let Err(e) = self.replanner.remove_board(pos) {
+                        self.events.push(format!(
+                            "cannot shrink fleet further ({e}); re-planning on what is left"
+                        ));
+                        break;
+                    }
+                    self.fleet_ids.remove(pos);
+                }
+            }
+        }
+        dead
+    }
+
+    /// Retire `model`'s dead lane and re-plan the mix on the (already
+    /// shrunken) fleet. Requests queued on the dead lane are dropped —
+    /// the hardware lost them; clients observe a disconnect.
+    fn repair_dead_lane(&mut self, model: &str) -> Option<Vec<usize>> {
+        if let Some(lane) = self.lane_of.remove(model) {
+            if self.server.begin_retire(lane).is_ok() {
+                self.retiring.push(lane);
+            }
+        }
+        self.boards_of.remove(model);
+        // The dead deployment is gone from the baseline plan, so the diff
+        // below re-adds the model on fresh boards.
+        self.plan.deployments.retain(|d| d.workload.model != model);
+        let observed = self.hub.observed_mix(&self.mix);
+        let out = match self.replanner.plan(&observed) {
+            Ok(new_plan) => Some(self.migrate_to(new_plan, observed)),
+            Err(e) => {
+                self.events
+                    .push(format!("repair re-plan failed ({e}); serving degraded"));
+                None
+            }
+        };
+        self.detector.arm_cooldown();
+        out
+    }
+
+    /// Apply `new_plan` to the live server make-before-break; returns the
+    /// new allocation. Also re-baselines the drift detector's mix.
+    fn migrate_to(&mut self, new_plan: FleetPlan, new_mix: Vec<WorkloadSpec>) -> Vec<usize> {
+        let delta = diff_plans(&self.plan, &new_plan);
+        if !delta.is_empty() {
+            // Free pool: surviving boards not owned by a kept lane.
+            let kept_boards: Vec<usize> = delta
+                .keep
+                .iter()
+                .flat_map(|m| self.boards_of.get(m).cloned().unwrap_or_default())
+                .collect();
+            let mut pool: Vec<usize> = self
+                .fleet_ids
+                .iter()
+                .copied()
+                .filter(|b| !kept_boards.contains(b))
+                .collect();
+
+            // 1. Make: stand up and route every replacement lane.
+            let mut fresh: Vec<(String, usize, Vec<usize>)> = Vec::new();
+            for &di in &delta.add {
+                let d = &new_plan.deployments[di];
+                assert!(
+                    pool.len() >= d.n_boards,
+                    "board bookkeeping underflow: {} free, {} wanted",
+                    pool.len(),
+                    d.n_boards
+                );
+                let ids: Vec<usize> = pool.drain(..d.n_boards).collect();
+                let health = self.cfg.health.clone().map(|h| (h, ids.clone()));
+                let spec = lane_spec_for(d, self.cfg.time_scale, self.cfg.window, health);
+                let lane = self.server.add_lane(spec);
+                fresh.push((d.workload.model.clone(), lane, ids));
+            }
+            // 2. Break: deroute + close the lanes they replace (they keep
+            // draining; reaped on later ticks).
+            for m in &delta.retire {
+                if let Some(lane) = self.lane_of.remove(m) {
+                    if self.server.begin_retire(lane).is_ok() {
+                        self.retiring.push(lane);
+                    }
+                }
+                self.boards_of.remove(m);
+            }
+            for (model, lane, ids) in fresh {
+                self.lane_of.insert(model.clone(), lane);
+                self.boards_of.insert(model, ids);
+            }
+        }
+        let alloc = new_plan.allocation();
+        self.events.push(format!(
+            "re-planned → {:?} over {} boards ({} lane change{})",
+            new_plan
+                .deployments
+                .iter()
+                .map(|d| format!("{}:{}", d.workload.model, d.n_boards))
+                .collect::<Vec<_>>(),
+            self.fleet_ids.len(),
+            delta.add.len() + delta.retire.len(),
+            if delta.add.len() + delta.retire.len() == 1 { "" } else { "s" },
+        ));
+        self.plan = new_plan;
+        self.mix = new_mix;
+        self.replans += 1;
+        alloc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::{FleetSpec, Planner, PlannerConfig, ScenarioConfig};
+    use crate::platform::FpgaSpec;
+    use crate::serving::ServerConfig;
+    use std::time::Duration;
+
+    /// Stand a controlled server up from a fresh 2-model plan.
+    fn harness(n_boards: usize) -> (Arc<Server>, Controller, Vec<WorkloadSpec>) {
+        let fleet = FleetSpec::homogeneous(n_boards, FpgaSpec::zcu102());
+        let pcfg = PlannerConfig::default();
+        let planner = Planner::new(fleet.clone(), pcfg);
+        let a1 = planner.service_ms("alexnet", 1).unwrap();
+        let s1 = planner.service_ms("squeezenet", 1).unwrap();
+        let mix = vec![
+            WorkloadSpec::new("alexnet", 0.2 / (a1 / 1e3), Duration::from_secs_f64(8.0 * a1 / 1e3)),
+            WorkloadSpec::new(
+                "squeezenet",
+                0.2 / (s1 / 1e3),
+                Duration::from_secs_f64(8.0 * s1 / 1e3),
+            ),
+        ];
+        let plan = planner.plan(&mix).unwrap();
+        let scen = ScenarioConfig::default();
+        let lanes = plan
+            .deployments
+            .iter()
+            .map(|d| crate::fleet::lane_spec_for(d, 1.0, scen.window, None))
+            .collect();
+        let server = Arc::new(Server::start_plan(lanes, ServerConfig::default()));
+        let replanner = Replanner::new(fleet, pcfg);
+        replanner.adopt_cache(&planner);
+        let ctl = Controller::new(server.clone(), replanner, plan, ControlConfig::default())
+            .unwrap();
+        (server, ctl, mix)
+    }
+
+    #[test]
+    fn stable_traffic_never_migrates() {
+        let (server, mut ctl, mix) = harness(2);
+        for _ in 0..3 {
+            for w in &mix {
+                for _ in 0..3 {
+                    let rx = server
+                        .submit_to(&w.model, vec![0.5; 64], Duration::from_secs(5))
+                        .unwrap();
+                    rx.recv_timeout(Duration::from_secs(5)).unwrap();
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            // 3 arrivals per window sit below `min_arrivals`, and nothing
+            // misses: sparse-but-healthy windows must never migrate.
+            let tick = ctl.tick();
+            assert!(tick.migrated_to.is_none(), "{:?}", ctl.events);
+        }
+        assert_eq!(ctl.replans(), 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn board_down_shrinks_and_migrates() {
+        let (server, mut ctl, _mix) = harness(3);
+        let lanes_before = server.live_lanes().len();
+        assert_eq!(lanes_before, 2);
+        // Kill a board of the model that owns board 0.
+        ctl.board_down(0);
+        assert_eq!(ctl.replans(), 1, "{:?}", ctl.events);
+        assert_eq!(ctl.fleet_ids.len(), 2);
+        assert!(!ctl.fleet_ids.contains(&0));
+        // Both models still routable after repair.
+        for model in ["alexnet", "squeezenet"] {
+            assert!(ctl.allocation_for(model) >= 1);
+            let rx = server
+                .submit_to(model, vec![0.1; 64], Duration::from_secs(5))
+                .unwrap();
+            assert!(rx.recv_timeout(Duration::from_secs(5)).is_ok(), "{model}");
+        }
+        // Duplicate report is a no-op.
+        ctl.board_down(0);
+        assert_eq!(ctl.replans(), 1);
+        // Board totals conserved: every model's boards ⊆ survivors.
+        let owned: Vec<usize> = ctl.boards_of.values().flatten().copied().collect();
+        assert!(owned.iter().all(|b| ctl.fleet_ids.contains(b)));
+        assert_eq!(owned.len(), 2);
+        server.shutdown();
+    }
+}

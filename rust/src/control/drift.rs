@@ -1,0 +1,288 @@
+//! Drift detection: does the observed mix still look like the plan?
+//!
+//! Pure decision logic (no clocks, no serving handles) so the flap-proof
+//! properties are unit-testable: a re-plan needs `hysteresis` CONSECUTIVE
+//! drifted windows (one noisy window never migrates the fleet), and a
+//! fired re-plan arms a `cooldown` of windows during which nothing fires
+//! (the migration's own transient — drained backlogs, cold batchers —
+//! must not be mistaken for more drift).
+
+use super::telemetry::ModelObs;
+use crate::fleet::WorkloadSpec;
+
+/// Detector tuning.
+#[derive(Debug, Clone, Copy)]
+pub struct DriftConfig {
+    /// A model drifts when observed/planned rate leaves
+    /// `[1/rate_ratio, rate_ratio]`.
+    pub rate_ratio: f64,
+    /// ... or when its window miss rate exceeds this.
+    pub miss_rate: f64,
+    /// Consecutive drifted windows required to fire.
+    pub hysteresis: usize,
+    /// Windows to stay quiet after firing.
+    pub cooldown: usize,
+    /// Ignore a model's rate ratio (or miss rate) when the window saw
+    /// fewer arrivals (completions) than this — a handful of Poisson
+    /// samples is noise, not signal.
+    pub min_arrivals: u64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        // 15/3 is the Monte-Carlo-validated floor (see the verify skill):
+        // at ~12 arrivals per window, looser settings fake a 1.6× breach
+        // in ~1% of runs; these fire 0/3000 while still detecting a real
+        // mix flip within 3 windows.
+        DriftConfig {
+            rate_ratio: 1.6,
+            miss_rate: 0.15,
+            hysteresis: 3,
+            cooldown: 4,
+            min_arrivals: 15,
+        }
+    }
+}
+
+/// Per-window verdict.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DriftDecision {
+    /// Mix looks like the plan.
+    Stable,
+    /// Post-re-plan quiet period (`left` windows remain).
+    Cooldown { left: usize },
+    /// Drifted, but not for long enough yet.
+    Drifting { streak: usize },
+    /// Fire the re-planner. `reason` names the first offending model.
+    Replan { reason: String },
+}
+
+/// Sliding-window drift detector with hysteresis and cooldown.
+#[derive(Debug)]
+pub struct DriftDetector {
+    cfg: DriftConfig,
+    streak: usize,
+    cooldown_left: usize,
+}
+
+impl DriftDetector {
+    pub fn new(cfg: DriftConfig) -> Self {
+        assert!(cfg.rate_ratio > 1.0 && cfg.hysteresis >= 1);
+        DriftDetector {
+            cfg,
+            streak: 0,
+            cooldown_left: 0,
+        }
+    }
+
+    pub fn config(&self) -> DriftConfig {
+        self.cfg
+    }
+
+    /// Why this window counts as drifted, if it does.
+    fn drift_reason(&self, planned: &[WorkloadSpec], observed: &[ModelObs]) -> Option<String> {
+        for w in planned {
+            let Some(o) = observed.iter().find(|o| o.model == w.model) else {
+                continue;
+            };
+            // Both triggers demand a minimum sample: one straggler out of
+            // two completions is not a 50% miss regime.
+            if o.completed >= self.cfg.min_arrivals && o.miss_rate > self.cfg.miss_rate {
+                return Some(format!(
+                    "{}: miss rate {:.0}% > {:.0}%",
+                    w.model,
+                    o.miss_rate * 100.0,
+                    self.cfg.miss_rate * 100.0
+                ));
+            }
+            if o.arrivals >= self.cfg.min_arrivals && w.rate_rps > 0.0 {
+                let ratio = o.rate_rps / w.rate_rps;
+                if ratio > self.cfg.rate_ratio || ratio < 1.0 / self.cfg.rate_ratio {
+                    return Some(format!(
+                        "{}: observed {:.1} rps vs planned {:.1} rps (ratio {:.2})",
+                        w.model, o.rate_rps, w.rate_rps, ratio
+                    ));
+                }
+            }
+        }
+        None
+    }
+
+    /// Feed one telemetry window; returns the verdict. `Replan` resets the
+    /// streak and arms the cooldown — the caller re-plans and (crucially)
+    /// re-baselines `planned` to the observed mix, otherwise the same
+    /// drift fires again after the cooldown.
+    pub fn observe(&mut self, planned: &[WorkloadSpec], observed: &[ModelObs]) -> DriftDecision {
+        if self.cooldown_left > 0 {
+            self.cooldown_left -= 1;
+            return DriftDecision::Cooldown {
+                left: self.cooldown_left,
+            };
+        }
+        match self.drift_reason(planned, observed) {
+            None => {
+                self.streak = 0;
+                DriftDecision::Stable
+            }
+            Some(reason) => {
+                self.streak += 1;
+                if self.streak >= self.cfg.hysteresis {
+                    self.streak = 0;
+                    self.cooldown_left = self.cfg.cooldown;
+                    DriftDecision::Replan { reason }
+                } else {
+                    DriftDecision::Drifting {
+                        streak: self.streak,
+                    }
+                }
+            }
+        }
+    }
+
+    /// Arm the cooldown without a drift verdict (used after failure
+    /// repair, which migrates for reasons telemetry ratios don't capture).
+    pub fn arm_cooldown(&mut self) {
+        self.streak = 0;
+        self.cooldown_left = self.cfg.cooldown;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn planned(rate: f64) -> Vec<WorkloadSpec> {
+        vec![WorkloadSpec::new("alexnet", rate, Duration::from_millis(20))]
+    }
+
+    fn obs(rate: f64, arrivals: u64, miss_rate: f64) -> Vec<ModelObs> {
+        vec![ModelObs {
+            model: "alexnet".into(),
+            arrivals,
+            completed: arrivals,
+            misses: (miss_rate * arrivals as f64) as u64,
+            rate_rps: rate,
+            p50_ms: 1.0,
+            p99_ms: 2.0,
+            miss_rate,
+        }]
+    }
+
+    fn det(hysteresis: usize, cooldown: usize) -> DriftDetector {
+        DriftDetector::new(DriftConfig {
+            hysteresis,
+            cooldown,
+            ..DriftConfig::default()
+        })
+    }
+
+    #[test]
+    fn noisy_but_stationary_mix_never_replans() {
+        // ±30% Poisson noise around the planned rate, occasional benign
+        // misses: hysteresis must hold the fleet still.
+        let mut d = det(2, 4);
+        let p = planned(100.0);
+        for i in 0..50 {
+            let wobble = 1.0 + 0.3 * f64::sin(i as f64);
+            let mr = if i % 7 == 0 { 0.1 } else { 0.0 };
+            let dec = d.observe(&p, &obs(100.0 * wobble, 40, mr));
+            assert!(
+                matches!(dec, DriftDecision::Stable),
+                "window {i}: {dec:?} must stay stable"
+            );
+        }
+    }
+
+    #[test]
+    fn flapping_drift_resets_the_streak() {
+        // Alternating breach / calm never accumulates to hysteresis = 2.
+        let mut d = det(2, 4);
+        let p = planned(100.0);
+        for i in 0..40 {
+            let rate = if i % 2 == 0 { 250.0 } else { 100.0 };
+            let dec = d.observe(&p, &obs(rate, 40, 0.0));
+            assert!(
+                !matches!(dec, DriftDecision::Replan { .. }),
+                "window {i}: flapping must not migrate ({dec:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn sustained_step_fires_after_exactly_hysteresis_windows() {
+        let mut d = det(3, 4);
+        let p = planned(100.0);
+        assert_eq!(
+            d.observe(&p, &obs(300.0, 40, 0.0)),
+            DriftDecision::Drifting { streak: 1 }
+        );
+        assert_eq!(
+            d.observe(&p, &obs(300.0, 40, 0.0)),
+            DriftDecision::Drifting { streak: 2 }
+        );
+        assert!(matches!(
+            d.observe(&p, &obs(300.0, 40, 0.0)),
+            DriftDecision::Replan { .. }
+        ));
+        // Immediately after firing: cooldown, even under continued drift.
+        for left in (0..4).rev() {
+            assert_eq!(
+                d.observe(&p, &obs(300.0, 40, 0.0)),
+                DriftDecision::Cooldown { left }
+            );
+        }
+        // Cooldown expired and the baseline was never updated → builds a
+        // fresh streak from zero (no carried-over state).
+        assert_eq!(
+            d.observe(&p, &obs(300.0, 40, 0.0)),
+            DriftDecision::Drifting { streak: 1 }
+        );
+    }
+
+    #[test]
+    fn rate_collapse_and_miss_spike_both_drift() {
+        let mut d = det(1, 0);
+        let p = planned(100.0);
+        assert!(matches!(
+            d.observe(&p, &obs(20.0, 40, 0.0)),
+            DriftDecision::Replan { .. }
+        ));
+        let mut d = det(1, 0);
+        assert!(matches!(
+            d.observe(&p, &obs(100.0, 40, 0.5)),
+            DriftDecision::Replan { .. }
+        ));
+    }
+
+    #[test]
+    fn sparse_windows_are_ignored() {
+        let mut d = det(1, 0);
+        let p = planned(100.0);
+        // 3 arrivals at a wild ratio: below min_arrivals, not evidence.
+        assert_eq!(d.observe(&p, &obs(900.0, 3, 0.0)), DriftDecision::Stable);
+        // Unknown observed models are ignored too.
+        let stray = vec![ModelObs {
+            model: "vgg16".into(),
+            arrivals: 100,
+            completed: 100,
+            misses: 0,
+            rate_rps: 1e6,
+            p50_ms: 1.0,
+            p99_ms: 1.0,
+            miss_rate: 0.0,
+        }];
+        assert_eq!(d.observe(&p, &stray), DriftDecision::Stable);
+    }
+
+    #[test]
+    fn arm_cooldown_suppresses() {
+        let mut d = det(1, 3);
+        let p = planned(100.0);
+        d.arm_cooldown();
+        assert_eq!(
+            d.observe(&p, &obs(300.0, 40, 0.0)),
+            DriftDecision::Cooldown { left: 2 }
+        );
+    }
+}

@@ -1,0 +1,48 @@
+//! The control plane: telemetry-driven online re-planning with hitless
+//! plan migration and failure repair.
+//!
+//! The fleet planner (`fleet::Planner`) picks one composition for one
+//! workload profile; production traffic does not hold still (the ROADMAP
+//! north star), and a fixed resource partition loses its optimality as
+//! the mix drifts from the profile (Shen et al., arXiv:1607.00064; Guo et
+//! al.'s FPGA-accelerator survey make the same observation for single
+//! boards). This module closes the loop between served telemetry and the
+//! planner:
+//!
+//! 1. **Observe** — [`TelemetryHub`] ticks every serving lane's windowed
+//!    metrics (`serving::Metrics::snapshot_and_reset`), pooling per-model
+//!    arrival rates, window p50/p99, and miss rates over a short sliding
+//!    history.
+//! 2. **Decide** — [`DriftDetector`] compares the observed mix against
+//!    the planned `WorkloadSpec`s: a sustained rate-ratio breach or
+//!    miss-rate spike (hysteresis: `hysteresis` consecutive windows)
+//!    triggers a re-plan; a post-migration cooldown stops flapping.
+//! 3. **Re-plan** — [`Replanner`] re-runs the composition search on the
+//!    *observed* mix — on the surviving boards when a failure shrank the
+//!    fleet — and [`diff_plans`] reduces old vs new plan to the minimal
+//!    set of lane changes (sub-clusters whose shape did not change keep
+//!    serving untouched).
+//! 4. **Migrate** — [`Controller`] applies the delta to the live
+//!    `serving::Server` make-before-break: replacement lanes are added
+//!    and routed *before* the lanes they replace are derouted and
+//!    drained, so every request submitted across the migration gets
+//!    exactly one response (hitless handoff; `tests/control_migration.rs`
+//!    property-tests this).
+//!
+//! [`run_drift_scenario`] drives the whole loop against the cluster
+//! simulator under piecewise-stationary Poisson traffic and board-failure
+//! injection (`fleet::scenario`); the `control_drift` bench and
+//! `fleet --online` CLI mode contrast a static plan with the controlled
+//! one through a mid-run mix flip.
+
+mod controller;
+mod drift;
+mod replanner;
+mod runner;
+mod telemetry;
+
+pub use controller::{ControlConfig, Controller, TickReport};
+pub use drift::{DriftConfig, DriftDecision, DriftDetector};
+pub use replanner::{diff_plans, PlanDelta, Replanner};
+pub use runner::{run_drift_scenario, KillSpec, OnlineConfig, OnlineOutcome};
+pub use telemetry::{LaneObs, ModelObs, TelemetryFrame, TelemetryHub};

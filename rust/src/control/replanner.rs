@@ -1,0 +1,202 @@
+//! Re-planning: re-run the fleet composition search on the observed mix
+//! (and the surviving boards, after a failure), then reduce old plan →
+//! new plan to the minimal set of lane changes.
+
+use crate::fleet::{FleetPlan, FleetSpec, Planner, PlannerConfig, WorkloadSpec};
+use crate::{Error, Result};
+
+/// A `fleet::Planner` that can shrink with the fleet. Re-planning on an
+/// unchanged fleet reuses the planner's sub-plan cache (the initial
+/// composition search already simulated every (model, size) pair, so a
+/// drift re-plan is pure arithmetic); a board removal rebuilds the
+/// planner on the survivors and adopts the still-valid cache entries.
+pub struct Replanner {
+    planner: Planner,
+}
+
+impl Replanner {
+    pub fn new(fleet: FleetSpec, cfg: PlannerConfig) -> Self {
+        Replanner {
+            planner: Planner::new(fleet, cfg),
+        }
+    }
+
+    pub fn fleet(&self) -> &FleetSpec {
+        self.planner.fleet()
+    }
+
+    /// Warm this replanner from another planner's cache (e.g. the one
+    /// that produced the initial plan).
+    pub fn adopt_cache(&self, other: &Planner) {
+        self.planner.adopt_cache(other);
+    }
+
+    /// Drop the board at `position` in the CURRENT fleet ordering (the
+    /// caller maps stable board ids to positions).
+    pub fn remove_board(&mut self, position: usize) -> Result<()> {
+        let mut boards = self.planner.fleet().boards.clone();
+        if position >= boards.len() {
+            return Err(Error::InvalidArg(format!(
+                "board position {position} out of range (fleet of {})",
+                boards.len()
+            )));
+        }
+        boards.remove(position);
+        if boards.is_empty() {
+            return Err(Error::InvalidArg("cannot remove the last board".into()));
+        }
+        let next = Planner::new(FleetSpec { boards }, self.planner.config());
+        next.adopt_cache(&self.planner);
+        self.planner = next;
+        Ok(())
+    }
+
+    pub fn plan(&self, mix: &[WorkloadSpec]) -> Result<FleetPlan> {
+        self.planner.plan(mix)
+    }
+}
+
+/// The minimal lane changes migrating `old` → `new`.
+#[derive(Debug, Clone, Default)]
+pub struct PlanDelta {
+    /// Models whose sub-cluster shape is unchanged — their lanes keep
+    /// serving untouched.
+    pub keep: Vec<String>,
+    /// Models whose old lane must drain and go (shape changed, or model
+    /// left the mix).
+    pub retire: Vec<String>,
+    /// Indices into `new.deployments` needing a fresh lane.
+    pub add: Vec<usize>,
+}
+
+impl PlanDelta {
+    pub fn is_empty(&self) -> bool {
+        self.retire.is_empty() && self.add.is_empty()
+    }
+}
+
+/// Diff two plans into the minimal lane changes. A lane is reusable iff
+/// its model's sub-cluster *shape* is unchanged — board count, design,
+/// partition factors, hetero flag, and batch cap; observed-rate changes
+/// alone never churn a lane (only the risk arithmetic saw them). Board
+/// *identity* is irrelevant: a kept lane keeps its physical boards, and
+/// the plan's contiguous ranges are an abstraction over a fungible fleet.
+pub fn diff_plans(old: &FleetPlan, new: &FleetPlan) -> PlanDelta {
+    let mut delta = PlanDelta::default();
+    for (i, n) in new.deployments.iter().enumerate() {
+        match old
+            .deployments
+            .iter()
+            .find(|o| o.workload.model == n.workload.model)
+        {
+            Some(o)
+                if o.n_boards == n.n_boards
+                    && o.design == n.design
+                    && o.factors == n.factors
+                    && o.hetero == n.hetero
+                    && o.workload.max_batch == n.workload.max_batch =>
+            {
+                delta.keep.push(n.workload.model.clone());
+            }
+            Some(_) => {
+                delta.retire.push(n.workload.model.clone());
+                delta.add.push(i);
+            }
+            None => delta.add.push(i),
+        }
+    }
+    for o in &old.deployments {
+        if !new
+            .deployments
+            .iter()
+            .any(|n| n.workload.model == o.workload.model)
+        {
+            delta.retire.push(o.workload.model.clone());
+        }
+    }
+    delta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::FpgaSpec;
+    use std::time::Duration;
+
+    fn w(model: &str, rate: f64, deadline_ms: f64) -> WorkloadSpec {
+        WorkloadSpec::new(model, rate, Duration::from_secs_f64(deadline_ms / 1e3))
+    }
+
+    fn fleet(n: usize) -> FleetSpec {
+        FleetSpec::homogeneous(n, FpgaSpec::zcu102())
+    }
+
+    #[test]
+    fn identical_plans_diff_to_nothing() {
+        let rp = Replanner::new(fleet(4), PlannerConfig::default());
+        let mix = vec![w("alexnet", 50.0, 50.0), w("squeezenet", 50.0, 50.0)];
+        let a = rp.plan(&mix).unwrap();
+        // Rates change but the chosen composition does not → zero churn.
+        let mut shifted = mix.clone();
+        shifted[0].rate_rps *= 1.2;
+        let b = rp.plan(&shifted).unwrap();
+        if a.allocation() == b.allocation() {
+            let d = diff_plans(&a, &b);
+            assert!(d.is_empty(), "{d:?}");
+            assert_eq!(d.keep.len(), 2);
+        }
+        let d = diff_plans(&a, &a.clone());
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn reallocation_touches_only_changed_models() {
+        let planner = Planner::new(fleet(4), PlannerConfig::default());
+        let mix = vec![w("alexnet", 10.0, 100.0), w("vgg16", 5.0, 500.0)];
+        let a = planner.plan_allocation(&mix, &[1, 3]).unwrap();
+        let b = planner.plan_allocation(&mix, &[2, 2]).unwrap();
+        let d = diff_plans(&a, &b);
+        assert!(d.keep.is_empty(), "both models resized: {d:?}");
+        assert_eq!(d.retire.len(), 2);
+        assert_eq!(d.add.len(), 2);
+
+        // One model resized, one untouched.
+        let c = planner.plan_allocation(&mix, &[1, 3]).unwrap();
+        let e = planner.plan_allocation(&mix, &[2, 2]).unwrap();
+        let mixed = FleetPlan {
+            deployments: vec![c.deployments[0].clone(), e.deployments[1].clone()],
+            worst_risk: 0.0,
+        };
+        let d = diff_plans(&a, &mixed);
+        assert_eq!(d.keep, vec!["alexnet"]);
+        assert_eq!(d.retire, vec!["vgg16"]);
+        assert_eq!(d.add, vec![1]);
+
+        // A model leaving the mix retires without replacement.
+        let solo = FleetPlan {
+            deployments: vec![a.deployments[0].clone()],
+            worst_risk: 0.0,
+        };
+        let d = diff_plans(&a, &solo);
+        assert_eq!(d.keep, vec!["alexnet"]);
+        assert_eq!(d.retire, vec!["vgg16"]);
+        assert!(d.add.is_empty());
+    }
+
+    #[test]
+    fn remove_board_shrinks_and_replans() {
+        let mut rp = Replanner::new(fleet(3), PlannerConfig::default());
+        let mix = vec![w("alexnet", 20.0, 100.0), w("squeezenet", 20.0, 100.0)];
+        let a = rp.plan(&mix).unwrap();
+        assert_eq!(a.allocation().iter().sum::<usize>(), 3);
+        rp.remove_board(1).unwrap();
+        assert_eq!(rp.fleet().len(), 2);
+        let b = rp.plan(&mix).unwrap();
+        assert_eq!(b.allocation(), vec![1, 1]);
+        rp.remove_board(1).unwrap();
+        // Two workloads cannot fit one board.
+        assert!(rp.plan(&mix).is_err());
+        assert!(rp.remove_board(0).is_err(), "last board is load-bearing");
+        assert!(rp.remove_board(5).is_err());
+    }
+}

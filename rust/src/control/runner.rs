@@ -1,0 +1,378 @@
+//! Closed-loop scenario runner: piecewise-stationary Poisson traffic (and
+//! optional board failure) served through a planned fleet, with or
+//! without the controller in the loop — the static-vs-controlled
+//! comparison behind the `control_drift` bench and `fleet --online`.
+
+use super::controller::{ControlConfig, Controller};
+use super::replanner::Replanner;
+use crate::fleet::{
+    lane_spec_for, piecewise_arrivals, FleetHealth, FleetSpec, ModelStats, PhaseSpec, Planner,
+    PlannerConfig, WorkloadSpec, SCENARIO_IMAGE_ELEMS,
+};
+use crate::serving::{InferenceResponse, Server, ServerConfig};
+use crate::util::{SplitMix64, Summary};
+use crate::{Error, Result};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// Board-failure injection for the online runner.
+#[derive(Debug, Clone, Copy)]
+pub struct KillSpec {
+    /// When (model-time seconds from scenario start).
+    pub at_s: f64,
+    /// ORIGINAL fleet index of the board that dies.
+    pub board: usize,
+    /// Deliver the out-of-band health event to the controller (`false`
+    /// exercises the telemetry-fallback death detection instead).
+    pub notify: bool,
+}
+
+/// Online scenario tuning.
+#[derive(Clone)]
+pub struct OnlineConfig {
+    pub seed: u64,
+    /// Wall-clock compression (see `fleet::ScenarioConfig::time_scale`).
+    pub time_scale: f64,
+    /// Lane batching window (model time).
+    pub window: Duration,
+    /// Controller tick interval (model-time seconds).
+    pub tick_s: f64,
+    pub control: ControlConfig,
+    pub kill: Option<KillSpec>,
+    /// Wall-clock budget for collecting each response after submission
+    /// ends (an unstable static lane drains a deep backlog here).
+    pub recv_timeout: Duration,
+}
+
+impl Default for OnlineConfig {
+    fn default() -> Self {
+        OnlineConfig {
+            seed: 2026,
+            time_scale: 1.0,
+            window: Duration::from_micros(200),
+            tick_s: 0.05,
+            control: ControlConfig::default(),
+            kill: None,
+            recv_timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+/// One run's outcome: per-phase per-model stats plus the control log.
+#[derive(Debug)]
+pub struct OnlineOutcome {
+    /// `[phase][mix entry]` — `n_boards` is the allocation at run END.
+    pub phase_stats: Vec<Vec<ModelStats>>,
+    pub replans: usize,
+    pub final_alloc: Vec<usize>,
+    pub events: Vec<String>,
+}
+
+impl OnlineOutcome {
+    /// Worst p99 across models in one phase (NaN-safe max).
+    pub fn worst_p99(&self, phase: usize) -> f64 {
+        self.phase_stats[phase]
+            .iter()
+            .map(|m| m.p99_ms)
+            .fold(f64::NAN, f64::max)
+    }
+
+    pub fn worst_miss_rate(&self, phase: usize) -> f64 {
+        self.phase_stats[phase]
+            .iter()
+            .map(|m| m.miss_rate)
+            .fold(f64::NAN, f64::max)
+    }
+}
+
+enum Ev {
+    Arrival { entry: usize, phase: usize },
+    Tick,
+    Kill { board: usize, notify: bool },
+}
+
+/// Serve a piecewise-stationary mix through a freshly planned fleet.
+/// `controlled = false` freezes the initial plan (the static baseline);
+/// `controlled = true` puts a [`Controller`] in the loop, ticking every
+/// `tick_s`. Board kill switches are armed either way (a static fleet
+/// suffers the failure too — it just cannot repair).
+pub fn run_drift_scenario(
+    fleet: &FleetSpec,
+    pcfg: PlannerConfig,
+    mix: &[WorkloadSpec],
+    phases: &[PhaseSpec],
+    cfg: &OnlineConfig,
+    controlled: bool,
+) -> Result<OnlineOutcome> {
+    if phases.is_empty() {
+        return Err(Error::InvalidArg("need at least one phase".into()));
+    }
+    if !cfg.time_scale.is_finite() || cfg.time_scale <= 0.0 {
+        return Err(Error::InvalidArg("time_scale must be > 0".into()));
+    }
+    if !(cfg.tick_s.is_finite() && cfg.tick_s > 0.0) {
+        return Err(Error::InvalidArg("tick_s must be > 0".into()));
+    }
+    for (pi, p) in phases.iter().enumerate() {
+        if p.rates_rps.len() != mix.len() {
+            return Err(Error::InvalidArg(format!(
+                "phase {pi}: {} rates for {} mix entries",
+                p.rates_rps.len(),
+                mix.len()
+            )));
+        }
+    }
+    let ts = cfg.time_scale;
+    let total_s: f64 = phases.iter().map(|p| p.duration_s).sum();
+
+    // Plan the provisioned mix and stand the fleet up, every lane gated on
+    // its boards' health.
+    let planner = Planner::new(fleet.clone(), pcfg);
+    let plan = planner.plan(mix)?;
+    let health = FleetHealth::new(fleet.len());
+    let lanes = plan
+        .deployments
+        .iter()
+        .map(|d| {
+            lane_spec_for(
+                d,
+                ts,
+                cfg.window,
+                Some((health.clone(), (d.start..d.start + d.n_boards).collect())),
+            )
+        })
+        .collect();
+    let server = Arc::new(Server::start_plan(lanes, ServerConfig::default()));
+
+    let mut controller = if controlled {
+        let replanner = Replanner::new(fleet.clone(), pcfg);
+        replanner.adopt_cache(&planner);
+        let mut ccfg = cfg.control.clone();
+        ccfg.time_scale = ts;
+        ccfg.window = cfg.window;
+        ccfg.health = Some(health.clone());
+        Some(Controller::new(server.clone(), replanner, plan.clone(), ccfg)?)
+    } else {
+        None
+    };
+
+    // Merge arrivals, controller ticks, and the kill into one timeline.
+    let mut timeline: Vec<(f64, Ev)> = piecewise_arrivals(phases, mix.len(), cfg.seed)
+        .into_iter()
+        .map(|(t, entry, phase)| (t, Ev::Arrival { entry, phase }))
+        .collect();
+    let mut t = cfg.tick_s;
+    while t < total_s {
+        timeline.push((t, Ev::Tick));
+        t += cfg.tick_s;
+    }
+    if let Some(k) = cfg.kill {
+        if k.board >= fleet.len() {
+            return Err(Error::InvalidArg(format!(
+                "kill board {} out of range (fleet of {})",
+                k.board,
+                fleet.len()
+            )));
+        }
+        timeline.push((
+            k.at_s,
+            Ev::Kill {
+                board: k.board,
+                notify: k.notify,
+            },
+        ));
+    }
+    timeline.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+    // Open-loop run at scaled wall-clock pace.
+    type Pending = Vec<(f32, mpsc::Receiver<InferenceResponse>)>;
+    let mut pending: Vec<Vec<Pending>> = (0..phases.len())
+        .map(|_| (0..mix.len()).map(|_| Vec::new()).collect())
+        .collect();
+    let mut dropped: Vec<Vec<usize>> = vec![vec![0; mix.len()]; phases.len()];
+    let mut payload_rng = SplitMix64::new(cfg.seed.wrapping_mul(0xC0FFEE));
+    let t0 = Instant::now();
+    for (t, ev) in timeline {
+        let target = t0 + Duration::from_secs_f64(t * ts);
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        match ev {
+            Ev::Arrival { entry, phase } => {
+                let img: Vec<f32> = (0..SCENARIO_IMAGE_ELEMS)
+                    .map(|_| payload_rng.signed_unit())
+                    .collect();
+                let checksum: f32 = img.iter().sum();
+                let w = &mix[entry];
+                match server.submit_to(&w.model, img, w.deadline.mul_f64(ts)) {
+                    Ok(rx) => pending[phase][entry].push((checksum, rx)),
+                    // Unroutable (e.g. dead lane, repair failed): a lost
+                    // request — charged as a miss below.
+                    Err(_) => dropped[phase][entry] += 1,
+                }
+            }
+            Ev::Tick => {
+                if let Some(c) = controller.as_mut() {
+                    c.tick();
+                }
+            }
+            Ev::Kill { board, notify } => {
+                health.kill(board);
+                if notify {
+                    if let Some(c) = controller.as_mut() {
+                        c.board_down(board);
+                    }
+                }
+            }
+        }
+    }
+
+    // Collect and score per (phase, entry).
+    let final_alloc: Vec<usize> = match &controller {
+        Some(c) => mix.iter().map(|w| c.allocation_for(&w.model)).collect(),
+        None => plan.allocation(),
+    };
+    let mut phase_stats = Vec::with_capacity(phases.len());
+    for (pi, per_entry) in pending.iter_mut().enumerate() {
+        let mut rows = Vec::with_capacity(mix.len());
+        for (ei, pend) in per_entry.iter_mut().enumerate() {
+            let sent = pend.len() + dropped[pi][ei];
+            let mut lat_ms = Vec::new();
+            let mut batches = Vec::new();
+            let mut misses = 0usize;
+            for (checksum, rx) in pend.drain(..) {
+                let Ok(r) = rx.recv_timeout(cfg.recv_timeout) else {
+                    continue; // dropped (dead backend / retired mid-loss)
+                };
+                debug_assert!(
+                    (r.logits[0] - checksum).abs() <= 1e-3 * checksum.abs().max(1.0),
+                    "payload integrity: {} vs {}",
+                    r.logits[0],
+                    checksum
+                );
+                lat_ms.push(r.latency.as_secs_f64() / ts * 1e3);
+                batches.push(r.batch);
+                if !r.deadline_met {
+                    misses += 1;
+                }
+            }
+            let completed = lat_ms.len();
+            let (p50, p99) = if completed > 0 {
+                let s = Summary::of(&lat_ms);
+                (s.p50(), s.p99())
+            } else {
+                (f64::NAN, f64::NAN)
+            };
+            rows.push(ModelStats {
+                model: mix[ei].model.clone(),
+                n_boards: final_alloc[ei],
+                sent,
+                completed,
+                p50_ms: p50,
+                p99_ms: p99,
+                mean_batch: if completed > 0 {
+                    batches.iter().sum::<usize>() as f64 / completed as f64
+                } else {
+                    0.0
+                },
+                // An idle entry (nothing sent this phase) is not failing —
+                // score 0, not 100%, so worst_miss_rate compares what was
+                // actually served.
+                miss_rate: if sent > 0 {
+                    (misses + (sent - completed)) as f64 / sent as f64
+                } else {
+                    0.0
+                },
+            });
+        }
+        phase_stats.push(rows);
+    }
+    server.shutdown();
+    let (replans, events) = match controller {
+        Some(c) => (c.replans(), c.events.clone()),
+        None => (0, Vec::new()),
+    };
+    Ok(OnlineOutcome {
+        phase_stats,
+        replans,
+        final_alloc,
+        events,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::FpgaSpec;
+
+    /// The controller repairs a mid-run board failure: the dead model's
+    /// lane is retired, the fleet shrinks, and the model comes back on a
+    /// surviving board — while the static fleet just keeps missing.
+    #[test]
+    fn controller_repairs_board_failure() {
+        let fleet = FleetSpec::homogeneous(3, FpgaSpec::zcu102());
+        let pcfg = PlannerConfig::default();
+        let planner = Planner::new(fleet.clone(), pcfg);
+        let a1 = planner.service_ms("alexnet", 1).unwrap();
+        let s1 = planner.service_ms("squeezenet", 1).unwrap();
+        // Light load, roomy deadlines: 1 board each is plenty, so repair
+        // onto a 2-board fleet stays feasible.
+        let mix = vec![
+            WorkloadSpec::new(
+                "alexnet",
+                0.1 / (a1 / 1e3),
+                Duration::from_secs_f64(20.0 * a1 / 1e3),
+            ),
+            WorkloadSpec::new(
+                "squeezenet",
+                0.1 / (s1 / 1e3),
+                Duration::from_secs_f64(20.0 * s1 / 1e3),
+            ),
+        ];
+        let rates: Vec<f64> = mix.iter().map(|w| w.rate_rps).collect();
+        let phases = vec![PhaseSpec {
+            duration_s: 1.2,
+            rates_rps: rates,
+        }];
+        let plan = planner.plan(&mix).unwrap();
+        // Kill a board of the FIRST deployment early in the run.
+        let victim = plan.deployments[0].start;
+        let dead_model = plan.deployments[0].workload.model.clone();
+        let cfg = OnlineConfig {
+            tick_s: 0.05,
+            kill: Some(KillSpec {
+                at_s: 0.3,
+                board: victim,
+                notify: true,
+            }),
+            recv_timeout: Duration::from_secs(10),
+            ..OnlineConfig::default()
+        };
+        let ctl = run_drift_scenario(&fleet, pcfg, &mix, &phases, &cfg, true).unwrap();
+        assert!(ctl.replans >= 1, "repair must re-plan: {:?}", ctl.events);
+        assert_eq!(ctl.final_alloc.iter().sum::<usize>(), 2, "{:?}", ctl.events);
+        assert!(ctl.final_alloc.iter().all(|&n| n == 1));
+        let row = ctl.phase_stats[0]
+            .iter()
+            .find(|r| r.model == dead_model)
+            .unwrap();
+        // The dead sub-cluster loses its in-flight work, but the model
+        // keeps serving: far more completions than the pre-kill quarter.
+        assert!(
+            row.completed as f64 >= 0.5 * row.sent as f64,
+            "repair must restore service: {row:?} / {:?}",
+            ctl.events
+        );
+
+        let stat = run_drift_scenario(&fleet, pcfg, &mix, &phases, &cfg, false).unwrap();
+        let srow = stat.phase_stats[0]
+            .iter()
+            .find(|r| r.model == dead_model)
+            .unwrap();
+        assert!(
+            srow.miss_rate > row.miss_rate,
+            "static cannot repair: {srow:?} vs {row:?}"
+        );
+    }
+}

@@ -1,0 +1,248 @@
+//! Telemetry aggregation: per-lane windowed metrics → per-model observed
+//! traffic, with a short sliding history for rate smoothing.
+//!
+//! All reported figures are in **model time**: scenarios run wall-clock
+//! compressed by `time_scale` (see `fleet::ScenarioConfig`), so the hub
+//! un-scales windows and latencies before anyone compares them against
+//! planned rates/deadlines (which are always model time).
+
+use crate::fleet::WorkloadSpec;
+use crate::serving::{MetricsSnapshot, Server};
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+/// One lane's window, un-merged — the controller uses this to spot dead
+/// lanes (arrivals with zero completions).
+#[derive(Debug, Clone)]
+pub struct LaneObs {
+    pub lane: usize,
+    pub model: String,
+    pub arrivals: u64,
+    pub completed: u64,
+}
+
+/// One model's pooled window across its lanes.
+#[derive(Debug, Clone)]
+pub struct ModelObs {
+    pub model: String,
+    pub arrivals: u64,
+    pub completed: u64,
+    pub misses: u64,
+    /// Observed arrival rate over the window (model-time rps).
+    pub rate_rps: f64,
+    /// Window latency percentiles (model-time ms; NaN when idle).
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// Fraction of the window's completions that missed (0 when idle).
+    pub miss_rate: f64,
+}
+
+/// One telemetry tick: every live lane's window, pooled per model.
+#[derive(Debug, Clone)]
+pub struct TelemetryFrame {
+    /// Window length (model-time seconds; max across lanes).
+    pub window_s: f64,
+    pub lanes: Vec<LaneObs>,
+    pub models: Vec<ModelObs>,
+}
+
+/// Aggregates serving telemetry from a live server. Each `tick` drains
+/// every lane's metrics window and appends the pooled frame to a sliding
+/// history of depth `history` (rate estimates average over it, so one
+/// noisy window does not whipsaw the re-planner).
+pub struct TelemetryHub {
+    server: Arc<Server>,
+    time_scale: f64,
+    history: VecDeque<TelemetryFrame>,
+    depth: usize,
+}
+
+impl TelemetryHub {
+    pub fn new(server: Arc<Server>, time_scale: f64, depth: usize) -> Self {
+        assert!(time_scale > 0.0 && depth >= 1);
+        TelemetryHub {
+            server,
+            time_scale,
+            history: VecDeque::with_capacity(depth + 1),
+            depth,
+        }
+    }
+
+    /// Drain every live lane's window and pool per model.
+    pub fn tick(&mut self) -> TelemetryFrame {
+        let ts = self.time_scale;
+        let mut lanes = Vec::new();
+        let mut by_model: Vec<(String, Vec<MetricsSnapshot>)> = Vec::new();
+        for (lane, model, metrics) in self.server.live_lanes() {
+            let snap = metrics.snapshot_and_reset();
+            lanes.push(LaneObs {
+                lane,
+                model: model.clone(),
+                arrivals: snap.arrivals,
+                completed: snap.completed,
+            });
+            // position()+index, not iter_mut().find(): the held `find`
+            // borrow would conflict with the push in the miss arm.
+            match by_model.iter().position(|(m, _)| *m == model) {
+                Some(i) => by_model[i].1.push(snap),
+                None => by_model.push((model, vec![snap])),
+            }
+        }
+        let mut window_s = 0.0f64;
+        let models = by_model
+            .into_iter()
+            .map(|(model, snaps)| {
+                let s = MetricsSnapshot::merge(&snaps);
+                let w = s.window.as_secs_f64() / ts;
+                window_s = window_s.max(w);
+                let (p50, p99) = match s.latency_summary() {
+                    Some(sum) => (sum.p50() / ts, sum.p99() / ts),
+                    None => (f64::NAN, f64::NAN),
+                };
+                ModelObs {
+                    model,
+                    arrivals: s.arrivals,
+                    completed: s.completed,
+                    misses: s.misses,
+                    rate_rps: s.arrivals as f64 / w.max(1e-9),
+                    p50_ms: p50,
+                    p99_ms: p99,
+                    miss_rate: if s.completed > 0 { s.miss_rate() } else { 0.0 },
+                }
+            })
+            .collect();
+        let frame = TelemetryFrame {
+            window_s,
+            lanes,
+            models,
+        };
+        self.history.push_back(frame.clone());
+        while self.history.len() > self.depth {
+            self.history.pop_front();
+        }
+        frame
+    }
+
+    /// Observed arrival rate for `model`, averaged over the history
+    /// (model-time rps). `None` when the model never appeared.
+    pub fn smoothed_rate(&self, model: &str) -> Option<f64> {
+        let mut arrivals = 0u64;
+        let mut secs = 0.0f64;
+        let mut seen = false;
+        for f in &self.history {
+            if let Some(m) = f.models.iter().find(|m| m.model == model) {
+                arrivals += m.arrivals;
+                secs += f.window_s;
+                seen = true;
+            }
+        }
+        if !seen || secs <= 0.0 {
+            None
+        } else {
+            Some(arrivals as f64 / secs)
+        }
+    }
+
+    /// The planned mix with rates replaced by smoothed observations — what
+    /// the re-planner plans for. With no telemetry yet (empty history) the
+    /// planned rates stand; a model that IS being observed but stays
+    /// silent keeps a floor of 1% of its planned rate (the planner needs a
+    /// positive rate, and a silent model should release its boards, not be
+    /// dropped from the mix).
+    pub fn observed_mix(&self, planned: &[WorkloadSpec]) -> Vec<WorkloadSpec> {
+        if self.history.is_empty() {
+            return planned.to_vec();
+        }
+        planned
+            .iter()
+            .map(|w| {
+                let mut o = w.clone();
+                let floor = w.rate_rps * 0.01;
+                o.rate_rps = self.smoothed_rate(&w.model).unwrap_or(floor).max(floor);
+                o
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::{
+        BackendFactory, BatcherConfig, InferBackend, LaneSpec, Server, ServerConfig,
+    };
+    use std::time::Duration;
+
+    struct Echo;
+    impl InferBackend for Echo {
+        fn image_elems(&self) -> usize {
+            2
+        }
+        fn classes(&self) -> usize {
+            1
+        }
+        fn max_batch(&self) -> usize {
+            4
+        }
+        fn infer(&self, images: &[f32], n: usize) -> crate::Result<Vec<f32>> {
+            Ok((0..n).map(|i| images[i * 2]).collect())
+        }
+    }
+
+    fn lane(model: &str) -> LaneSpec {
+        LaneSpec {
+            model: model.into(),
+            factories: vec![
+                Box::new(|| Ok(Box::new(Echo) as Box<dyn InferBackend>)) as BackendFactory
+            ],
+            batcher: BatcherConfig::default(),
+        }
+    }
+
+    #[test]
+    fn hub_pools_lanes_and_unscales_time() {
+        let srv = Arc::new(Server::start_plan(
+            vec![lane("a"), lane("a"), lane("b")],
+            ServerConfig::default(),
+        ));
+        // time_scale 0.5: model time runs 2× faster than the wall.
+        let mut hub = TelemetryHub::new(srv.clone(), 0.5, 4);
+        let d = Duration::from_secs(5);
+        let mut rxs = Vec::new();
+        for _ in 0..6 {
+            rxs.push(srv.submit_to("a", vec![1.0, 0.0], d).unwrap());
+        }
+        for _ in 0..2 {
+            rxs.push(srv.submit_to("b", vec![1.0, 0.0], d).unwrap());
+        }
+        for rx in rxs {
+            rx.recv_timeout(d).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(20));
+        let frame = hub.tick();
+        assert_eq!(frame.lanes.len(), 3);
+        let a = frame.models.iter().find(|m| m.model == "a").unwrap();
+        let b = frame.models.iter().find(|m| m.model == "b").unwrap();
+        assert_eq!((a.arrivals, a.completed), (6, 6), "replica lanes pooled");
+        assert_eq!(b.arrivals, 2);
+        assert!(a.p99_ms >= a.p50_ms);
+        // Model-time window is twice the wall window; observed rate is
+        // arrivals over model seconds and ~3× b's.
+        assert!(frame.window_s >= 0.02 / 0.5 * 0.9);
+        assert!((a.rate_rps / b.rate_rps - 3.0).abs() < 0.2);
+        // Smoothing spans frames; observed mix rewrites rates only.
+        std::thread::sleep(Duration::from_millis(5));
+        hub.tick();
+        let sm = hub.smoothed_rate("a").unwrap();
+        assert!(sm > 0.0 && sm < a.rate_rps, "second idle frame dilutes");
+        let planned = vec![
+            WorkloadSpec::new("a", 1000.0, Duration::from_millis(10)),
+            WorkloadSpec::new("zzz", 50.0, Duration::from_millis(10)),
+        ];
+        let obs = hub.observed_mix(&planned);
+        assert!((obs[0].rate_rps - sm).abs() < 1e-9);
+        assert!((obs[1].rate_rps - 0.5).abs() < 1e-9, "unseen model floors at 1%");
+        assert_eq!(obs[1].deadline, planned[1].deadline);
+        srv.shutdown();
+    }
+}

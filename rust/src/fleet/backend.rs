@@ -4,6 +4,7 @@
 //! whole serving path — EDF batching, plan routing, worker dispatch — runs
 //! against simulated hardware with real wall-clock pacing.
 
+use super::scenario::FleetHealth;
 use crate::analytic::{Design, XferMode};
 use crate::model::Network;
 use crate::partition::Factors;
@@ -107,6 +108,54 @@ impl InferBackend for SimClusterBackend {
     }
 }
 
+/// A backend gated on the health of the physical boards backing its
+/// sub-cluster: a lock-step torus fails as a unit, so the moment ANY of
+/// its boards is marked dead (`FleetHealth::kill`) every infer errors —
+/// the worker loop then drops replies (clients observe a disconnect, the
+/// scenario scores a miss) until the control plane retires the lane and
+/// re-plans around the loss.
+pub struct HealthGatedBackend {
+    inner: Box<dyn InferBackend>,
+    health: FleetHealth,
+    /// Original fleet indices of the boards this sub-cluster runs on.
+    boards: Vec<usize>,
+}
+
+impl HealthGatedBackend {
+    pub fn new(inner: Box<dyn InferBackend>, health: FleetHealth, boards: Vec<usize>) -> Self {
+        HealthGatedBackend {
+            inner,
+            health,
+            boards,
+        }
+    }
+
+    pub fn is_dead(&self) -> bool {
+        self.boards.iter().any(|&b| self.health.is_dead(b))
+    }
+}
+
+impl InferBackend for HealthGatedBackend {
+    fn image_elems(&self) -> usize {
+        self.inner.image_elems()
+    }
+    fn classes(&self) -> usize {
+        self.inner.classes()
+    }
+    fn max_batch(&self) -> usize {
+        self.inner.max_batch()
+    }
+    fn infer(&self, images: &[f32], n: usize) -> crate::Result<Vec<f32>> {
+        if self.is_dead() {
+            return Err(crate::Error::Runtime(format!(
+                "sub-cluster lost a board (boards {:?})",
+                self.boards
+            )));
+        }
+        self.inner.infer(images, n)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,6 +190,21 @@ mod tests {
         // Out-of-range batch clamps.
         assert_eq!(b.service_for(9), t4);
         assert_eq!(b.service_for(0), t1);
+    }
+
+    #[test]
+    fn health_gate_kills_whole_subcluster() {
+        let health = FleetHealth::new(4);
+        let inner = Box::new(SimClusterBackend::from_service_ms(1.0, 2, 0.0, 3, 2));
+        let b = HealthGatedBackend::new(inner, health.clone(), vec![1, 2]);
+        assert!(!b.is_dead());
+        assert!(b.infer(&[1.0; 3], 1).is_ok());
+        health.kill(3); // some other sub-cluster's board
+        assert!(!b.is_dead());
+        health.kill(2); // one of OUR boards → the lock-step cluster is gone
+        assert!(b.is_dead());
+        assert!(b.infer(&[1.0; 3], 1).is_err());
+        assert_eq!(health.survivors(), vec![0, 1]);
     }
 
     #[test]

@@ -26,10 +26,13 @@ mod planner;
 mod scenario;
 mod workload;
 
-pub use backend::SimClusterBackend;
-pub use planner::{equal_split, miss_risk, Deployment, FleetPlan, Planner, PlannerConfig};
+pub use backend::{HealthGatedBackend, SimClusterBackend};
+pub use planner::{
+    equal_split, miss_risk, miss_risk_batched, service_at_batch, Deployment, FleetPlan, Planner,
+    PlannerConfig, PLAN_BATCH_CAP,
+};
 pub use scenario::{
-    run_scenario, stats_table, worst_miss_rate, worst_p99, ModelStats, ScenarioConfig,
-    SCENARIO_CLASSES, SCENARIO_IMAGE_ELEMS,
+    lane_spec_for, piecewise_arrivals, run_scenario, stats_table, worst_miss_rate, worst_p99,
+    FleetHealth, ModelStats, PhaseSpec, ScenarioConfig, SCENARIO_CLASSES, SCENARIO_IMAGE_ELEMS,
 };
 pub use workload::{parse_mix, reference_design, FleetSpec, WorkloadSpec};

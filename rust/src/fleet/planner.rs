@@ -53,6 +53,11 @@ impl Default for PlannerConfig {
     }
 }
 
+/// How many batch sizes the planner simulates per sub-cluster (the
+/// artifact set tops out at B = 4, §1 "low or even no batching"); risk
+/// scoring extrapolates linearly past the table.
+pub const PLAN_BATCH_CAP: usize = 4;
+
 /// A planned sub-cluster for one model (independent of the workload's
 /// rate/deadline — cacheable per (model, board range)).
 #[derive(Debug, Clone)]
@@ -63,6 +68,9 @@ struct SubPlan {
     sim_cfg: SimConfig,
     service_cycles: u64,
     service_ms: f64,
+    /// Simulated service latency per batch size (entry `b − 1` is a batch
+    /// of `b`), up to `PLAN_BATCH_CAP`.
+    service_ms_batch: Vec<f64>,
     hetero: bool,
 }
 
@@ -83,10 +91,16 @@ pub struct Deployment {
     /// Simulated batch-1 service latency on the sub-cluster.
     pub service_cycles: u64,
     pub service_ms: f64,
-    /// Offered utilization `ρ = rate · service`.
+    /// Simulated service latency per batch size (entry `b − 1`), up to
+    /// `PLAN_BATCH_CAP` — the table behind the batch-aware risk score.
+    pub service_ms_batch: Vec<f64>,
+    /// Batch size the risk score picked (≤ the workload's `max_batch`).
+    pub planned_batch: usize,
+    /// Offered utilization at the planned batch:
+    /// `ρ = rate · service(b) / b`.
     pub utilization: f64,
-    /// Deadline-miss risk score (see `miss_risk`; `f64::INFINITY` when the
-    /// deadline is unmeetable or the queue is unstable).
+    /// Deadline-miss risk score (see `miss_risk_batched`; `f64::INFINITY`
+    /// when the deadline is unmeetable or the queue is unstable).
     pub risk: f64,
     /// True when the rate-proportional heterogeneous row partition beat the
     /// lock-step uniform plan (mixed-board sub-clusters only).
@@ -110,7 +124,7 @@ impl FleetPlan {
     /// Human-readable plan table (CLI / bench output).
     pub fn summary(&self) -> String {
         let mut t = Table::new(&[
-            "Model", "Boards", "Torus", "Design", "Partition", "Svc(ms)", "Util", "Risk",
+            "Model", "Boards", "Torus", "Design", "Partition", "Svc(ms)", "B", "Util", "Risk",
         ]);
         for d in &self.deployments {
             t.row(&[
@@ -120,6 +134,7 @@ impl FleetPlan {
                 d.design.to_string(),
                 d.factors.to_string(),
                 report::ms(d.service_ms),
+                d.planned_batch.to_string(),
                 format!("{:.2}", d.utilization),
                 if d.risk.is_finite() {
                     format!("{:.3}", d.risk)
@@ -148,6 +163,62 @@ pub fn miss_risk(service_ms: f64, deadline_ms: f64, rate_rps: f64, wait_inflatio
     }
     let wq = rho * service_ms / (2.0 * (1.0 - rho));
     (service_ms + wait_inflation * wq) / deadline_ms
+}
+
+/// Batch-aware deadline-miss risk (ROADMAP open item): score each
+/// candidate batch size `b ≤ max_batch` against the simulated batch
+/// service table (`sim::batch_latency_table`; entry `b − 1` serves a batch
+/// of `b`, extrapolated linearly past the table) and return the best
+/// `(risk, batch)`.
+///
+/// Per candidate `b`, the server is an M/D/1 queue of batches: service
+/// `S_b`, utilization `ρ = λ·S_b/b`, mean batch wait `Wq = ρ·S_b/2(1−ρ)`,
+/// plus the mean batch-forming wait `(b−1)/2λ` (half the time for the
+/// remaining `b − 1` Poisson arrivals to show up — the price of waiting
+/// for a full batch, which is what pushes lightly loaded workloads back to
+/// `b = 1`). Risk is the inflated sojourn as a fraction of the deadline;
+/// `b = 1` reduces exactly to `miss_risk`. An unmeetable service or
+/// unstable queue at every candidate returns `(INFINITY, 1)`.
+pub fn miss_risk_batched(
+    service_ms_batch: &[f64],
+    deadline_ms: f64,
+    rate_rps: f64,
+    wait_inflation: f64,
+    max_batch: usize,
+) -> (f64, usize) {
+    assert!(!service_ms_batch.is_empty() && max_batch >= 1);
+    let lam = rate_rps / 1e3; // arrivals per ms
+    let mut best = (f64::INFINITY, 1usize);
+    for b in 1..=max_batch {
+        let s_b = service_at_batch(service_ms_batch, b);
+        if !s_b.is_finite() || s_b <= 0.0 || lam <= 0.0 {
+            continue;
+        }
+        let rho = lam * s_b / b as f64;
+        if s_b > deadline_ms || rho >= 1.0 {
+            continue;
+        }
+        let wq = rho * s_b / (2.0 * (1.0 - rho));
+        let forming = (b as f64 - 1.0) / (2.0 * lam);
+        let risk = (s_b + wait_inflation * wq + forming) / deadline_ms;
+        if risk < best.0 {
+            best = (risk, b);
+        }
+    }
+    best
+}
+
+/// Service time of a batch of `b` from a batch-latency table (entry
+/// `b − 1`), extrapolating linearly past the table — the ONE definition
+/// shared by the risk score and the reported utilization.
+pub fn service_at_batch(service_ms_batch: &[f64], b: usize) -> f64 {
+    assert!(!service_ms_batch.is_empty() && b >= 1);
+    let n = service_ms_batch.len();
+    if b <= n {
+        service_ms_batch[b - 1]
+    } else {
+        service_ms_batch[n - 1] * b as f64 / n as f64
+    }
 }
 
 /// Equal board split: `n_boards` over `n_workloads`, remainder to the
@@ -181,6 +252,34 @@ impl Planner {
 
     pub fn fleet(&self) -> &FleetSpec {
         &self.fleet
+    }
+
+    pub fn config(&self) -> PlannerConfig {
+        self.cfg
+    }
+
+    /// Copy another planner's still-valid sub-plan cache into this one —
+    /// used by the control plane when a board failure shrinks the fleet,
+    /// so the repair re-plan does not re-simulate every (model, size)
+    /// pair. Only safe (and only done) when both fleets are homogeneous
+    /// over the same board spec; sub-clusters no larger than this fleet
+    /// carry over unchanged.
+    pub fn adopt_cache(&self, other: &Planner) {
+        if self.cfg.precision != other.cfg.precision
+            || self.cfg.co_optimize != other.cfg.co_optimize
+            || !self.fleet.is_homogeneous()
+            || !other.fleet.is_homogeneous()
+            || self.fleet.boards[0] != other.fleet.boards[0]
+        {
+            return;
+        }
+        let src = other.cache.lock().unwrap();
+        let mut dst = self.cache.lock().unwrap();
+        for (k, v) in src.iter() {
+            if k.1 == 0 && k.2 <= self.fleet.len() {
+                dst.insert(k.clone(), v.clone());
+            }
+        }
     }
 
     /// Simulated batch-1 service latency (ms) of `model` on the first
@@ -261,13 +360,15 @@ impl Planner {
         for (w, &n) in mix.iter().zip(counts) {
             let sp = self.subplan(&w.model, start, n)?;
             let torus = Torus::for_factors(&sp.factors);
-            let rho = w.rate_rps * sp.service_ms / 1e3;
-            let risk = miss_risk(
-                sp.service_ms,
+            let (risk, planned_batch) = miss_risk_batched(
+                &sp.service_ms_batch,
                 w.deadline_ms(),
                 w.rate_rps,
                 self.cfg.wait_inflation,
+                w.max_batch,
             );
+            let s_b = service_at_batch(&sp.service_ms_batch, planned_batch);
+            let rho = w.rate_rps * s_b / planned_batch as f64 / 1e3;
             worst = worst.max(risk);
             deployments.push(Deployment {
                 workload: w.clone(),
@@ -280,6 +381,8 @@ impl Planner {
                 torus: (torus.rows, torus.cols),
                 service_cycles: sp.service_cycles,
                 service_ms: sp.service_ms,
+                service_ms_batch: sp.service_ms_batch.clone(),
+                planned_batch,
                 utilization: rho,
                 risk,
                 hetero: sp.hetero,
@@ -331,11 +434,12 @@ impl Planner {
         let mut start = 0usize;
         for (w, &n) in mix.iter().zip(counts) {
             let sp = self.subplan(&w.model, start, n)?;
-            let mut r = miss_risk(
-                sp.service_ms,
+            let (mut r, _) = miss_risk_batched(
+                &sp.service_ms_batch,
                 w.deadline_ms(),
                 w.rate_rps,
                 self.cfg.wait_inflation,
+                w.max_batch,
             );
             if !r.is_finite() {
                 r = MISS;
@@ -384,6 +488,19 @@ impl Planner {
                 None => slip.plan(&net, p, n as u64)?,
             }
         };
+        // Batch service table (entry b − 1 serves a batch of b) — the
+        // batch-aware risk score and the serving backend share it.
+        let table = crate::sim::batch_latency_table(
+            &net,
+            &plan.design,
+            &plan.factors,
+            &eff,
+            &sim_cfg,
+            crate::analytic::XferMode::Xfer,
+            PLAN_BATCH_CAP,
+        );
+        let service_ms_batch: Vec<f64> =
+            table.iter().map(|&c| p.cycles_to_ms(c)).collect();
         let mut sp = SubPlan {
             design: plan.design,
             factors: plan.factors,
@@ -391,6 +508,7 @@ impl Planner {
             sim_cfg,
             service_cycles: plan.sim_cycles,
             service_ms: plan.sim_ms,
+            service_ms_batch,
             hetero: false,
         };
 
@@ -427,6 +545,12 @@ impl Planner {
                     sp.factors = Factors::new(1, n as u64, 1, 1);
                     sp.service_ms = hetero_ms;
                     sp.service_cycles = (hetero_ms * p.freq_mhz() as f64 * 1e3).ceil() as u64;
+                    // No cycle simulator for the row partition: batches
+                    // scale linearly (matching the serving backend's
+                    // `SimClusterBackend::from_service_ms`).
+                    sp.service_ms_batch = (1..=PLAN_BATCH_CAP)
+                        .map(|b| hetero_ms * b as f64)
+                        .collect();
                     sp.hetero = true;
                 }
             }
@@ -481,6 +605,63 @@ mod tests {
         assert!(r > 0.0 && r < 0.2, "risk {r}");
         // Risk grows with load.
         assert!(miss_risk(1.0, 10.0, 800.0, 3.0) > r);
+    }
+
+    #[test]
+    fn batched_risk_reduces_to_batch1_and_prefers_sane_batches() {
+        // b = 1 must agree with the legacy scalar score exactly.
+        let table = vec![1.0, 2.0, 3.0, 4.0]; // linear: batching buys nothing
+        let (r1, b1) = miss_risk_batched(&table, 10.0, 100.0, 3.0, 1);
+        assert_eq!(b1, 1);
+        assert!((r1 - miss_risk(1.0, 10.0, 100.0, 3.0)).abs() < 1e-12);
+        // Linear table + light load → batching only adds forming wait.
+        let (_, b) = miss_risk_batched(&table, 10.0, 100.0, 3.0, 4);
+        assert_eq!(b, 1, "linear batch table should plan batch 1");
+        // Sub-linear table + heavy load → batching is the only stable
+        // operating point (batch-1 queue would be unstable).
+        let sub = vec![1.0, 1.2, 1.4, 1.6];
+        let (r, b) = miss_risk_batched(&sub, 20.0, 2000.0, 3.0, 4);
+        assert!(r.is_finite(), "batched service must stabilize the queue");
+        assert!(b >= 3, "high λ wants large batches, got {b}");
+        assert!(miss_risk(1.0, 20.0, 2000.0, 3.0).is_infinite());
+        // Nothing feasible → (∞, 1).
+        let (ri, bi) = miss_risk_batched(&[50.0], 10.0, 1.0, 3.0, 2);
+        assert!(ri.is_infinite());
+        assert_eq!(bi, 1);
+    }
+
+    #[test]
+    fn deployments_carry_batch_tables() {
+        let planner = Planner::new(fleet(2), PlannerConfig::default());
+        let mix = vec![w("alexnet", 10.0, 100.0).with_max_batch(4)];
+        let plan = planner.plan(&mix).unwrap();
+        let d = &plan.deployments[0];
+        assert_eq!(d.service_ms_batch.len(), PLAN_BATCH_CAP);
+        assert!((d.service_ms_batch[0] - d.service_ms).abs() < 1e-9);
+        assert!(
+            d.service_ms_batch.windows(2).all(|w| w[1] > w[0]),
+            "bigger batches take longer: {:?}",
+            d.service_ms_batch
+        );
+        assert!((1..=4).contains(&d.planned_batch));
+    }
+
+    #[test]
+    fn adopt_cache_carries_subplans_to_smaller_fleets() {
+        let big = Planner::new(fleet(3), PlannerConfig::default());
+        let s1 = big.service_ms("alexnet", 1).unwrap();
+        let _ = big.service_ms("alexnet", 3).unwrap();
+        let small = Planner::new(fleet(2), PlannerConfig::default());
+        small.adopt_cache(&big);
+        // Same sub-plan, no re-simulation drift.
+        assert_eq!(small.service_ms("alexnet", 1).unwrap(), s1);
+        // Mismatched board specs refuse to adopt (silently — cache stays
+        // valid either way).
+        let mut weak = FpgaSpec::zcu102();
+        weak.dsp /= 2;
+        let other = Planner::new(FleetSpec::homogeneous(2, weak), PlannerConfig::default());
+        other.adopt_cache(&big);
+        assert!(other.cache.lock().unwrap().is_empty());
     }
 
     #[test]

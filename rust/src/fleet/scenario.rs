@@ -4,8 +4,8 @@
 //! plan-routed (`serving::Server::start_plan`), and per-model latency /
 //! deadline-miss statistics come back from the real request path.
 
-use super::backend::SimClusterBackend;
-use super::planner::FleetPlan;
+use super::backend::{HealthGatedBackend, SimClusterBackend};
+use super::planner::{Deployment, FleetPlan};
 use crate::analytic::XferMode;
 use crate::model::zoo;
 use crate::report::{self, Table};
@@ -14,7 +14,8 @@ use crate::serving::{
 };
 use crate::util::{SplitMix64, Summary};
 use crate::{Error, Result};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 /// Synthetic request payload shape (the sim backend models service time,
@@ -47,6 +48,88 @@ impl Default for ScenarioConfig {
             window: Duration::from_micros(200),
         }
     }
+}
+
+/// Board-level failure injection: one kill switch per board of the
+/// ORIGINAL fleet (indices never shift, even as re-planning reshuffles
+/// sub-clusters). `kill` flips a board dead; every `HealthGatedBackend`
+/// watching that board starts erroring on the next batch — the simulated
+/// equivalent of a lock-step torus losing a member mid-run.
+#[derive(Clone)]
+pub struct FleetHealth {
+    dead: Arc<Vec<AtomicBool>>,
+}
+
+impl FleetHealth {
+    pub fn new(n_boards: usize) -> Self {
+        FleetHealth {
+            dead: Arc::new((0..n_boards).map(|_| AtomicBool::new(false)).collect()),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.dead.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.dead.is_empty()
+    }
+
+    pub fn kill(&self, board: usize) {
+        self.dead[board].store(true, Ordering::Release);
+    }
+
+    pub fn is_dead(&self, board: usize) -> bool {
+        self.dead[board].load(Ordering::Acquire)
+    }
+
+    /// Original indices of the boards still alive, in order.
+    pub fn survivors(&self) -> Vec<usize> {
+        (0..self.dead.len()).filter(|&b| !self.is_dead(b)).collect()
+    }
+}
+
+/// One stationary stretch of a piecewise-stationary Poisson workload:
+/// each mix entry serves at `rates_rps[i]` for `duration_s` (model time).
+#[derive(Debug, Clone)]
+pub struct PhaseSpec {
+    pub duration_s: f64,
+    pub rates_rps: Vec<f64>,
+}
+
+/// Merged arrival schedule for a piecewise-stationary Poisson mix:
+/// `(t_model_seconds, mix_index, phase_index)`, time-sorted. Poisson
+/// streams are memoryless, so restarting each entry's exponential clock at
+/// a phase boundary samples the piecewise process exactly. Deterministic
+/// by seed; a zero (or negative) rate silences the entry for that phase.
+pub fn piecewise_arrivals(
+    phases: &[PhaseSpec],
+    n_entries: usize,
+    seed: u64,
+) -> Vec<(f64, usize, usize)> {
+    let mut events = Vec::new();
+    for i in 0..n_entries {
+        let mut rng = SplitMix64::new(seed ^ (0x9E37 + i as u64));
+        let mut phase_start = 0.0f64;
+        for (pi, ph) in phases.iter().enumerate() {
+            assert_eq!(ph.rates_rps.len(), n_entries, "phase {pi}: rate per entry");
+            let end = phase_start + ph.duration_s;
+            let rate = ph.rates_rps[i];
+            if rate > 0.0 {
+                let mut t = phase_start;
+                loop {
+                    t += rng.exp(1.0 / rate);
+                    if t >= end {
+                        break;
+                    }
+                    events.push((t, i, pi));
+                }
+            }
+            phase_start = end;
+        }
+    }
+    events.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    events
 }
 
 /// Per-mix-entry serving statistics (latencies in un-scaled model ms).
@@ -116,18 +199,7 @@ pub fn run_scenario(plan: &FleetPlan, cfg: &ScenarioConfig) -> Result<Vec<ModelS
     let lanes: Vec<LaneSpec> = plan
         .deployments
         .iter()
-        .map(|d| {
-            let window = cfg.window.mul_f64(ts);
-            LaneSpec {
-                model: d.workload.model.clone(),
-                factories: vec![backend_factory(d, ts)],
-                batcher: BatcherConfig {
-                    max_batch: d.workload.max_batch,
-                    window,
-                    deadline_margin: window,
-                },
-            }
-        })
+        .map(|d| lane_spec_for(d, ts, cfg.window, None))
         .collect();
     let server = Server::start_plan(lanes, ServerConfig::default());
 
@@ -217,9 +289,37 @@ pub fn run_scenario(plan: &FleetPlan, cfg: &ScenarioConfig) -> Result<Vec<ModelS
     Ok(stats)
 }
 
+/// Build a serving lane from a planned deployment: simulator-backed
+/// backend (constructed inside the worker thread), the workload's batch
+/// cap, and the scenario's (scaled) batching window. Shared by the static
+/// scenario runner, the `fleet` CLI, and the control plane's live plan
+/// migrations. `health` attaches a board-failure gate: `(switches,
+/// board_ids)` — the ORIGINAL fleet indices this sub-cluster occupies.
+pub fn lane_spec_for(
+    d: &Deployment,
+    time_scale: f64,
+    window: Duration,
+    health: Option<(FleetHealth, Vec<usize>)>,
+) -> LaneSpec {
+    let window = window.mul_f64(time_scale);
+    LaneSpec {
+        model: d.workload.model.clone(),
+        factories: vec![backend_factory(d, time_scale, health)],
+        batcher: BatcherConfig {
+            max_batch: d.workload.max_batch,
+            window,
+            deadline_margin: window,
+        },
+    }
+}
+
 /// Build the lane's backend factory from a deployment (the backend is
 /// constructed inside the worker thread).
-fn backend_factory(d: &super::planner::Deployment, time_scale: f64) -> BackendFactory {
+fn backend_factory(
+    d: &Deployment,
+    time_scale: f64,
+    health: Option<(FleetHealth, Vec<usize>)>,
+) -> BackendFactory {
     let d = d.clone();
     Box::new(move || {
         let backend: Box<dyn InferBackend> = if d.hetero {
@@ -247,7 +347,10 @@ fn backend_factory(d: &super::planner::Deployment, time_scale: f64) -> BackendFa
                 SCENARIO_CLASSES,
             ))
         };
-        Ok(backend)
+        Ok(match health {
+            Some((h, boards)) => Box::new(HealthGatedBackend::new(backend, h, boards)),
+            None => backend,
+        })
     })
 }
 
@@ -301,6 +404,47 @@ mod tests {
                 s.model
             );
         }
+    }
+
+    #[test]
+    fn piecewise_arrivals_track_phase_rates() {
+        let phases = vec![
+            PhaseSpec {
+                duration_s: 10.0,
+                rates_rps: vec![100.0, 5.0],
+            },
+            PhaseSpec {
+                duration_s: 10.0,
+                rates_rps: vec![5.0, 100.0],
+            },
+        ];
+        let ev = piecewise_arrivals(&phases, 2, 42);
+        assert!(ev.windows(2).all(|w| w[0].0 <= w[1].0), "time-sorted");
+        assert!(ev.iter().all(|&(t, _, _)| (0.0..20.0).contains(&t)));
+        let count = |model: usize, phase: usize| {
+            ev.iter().filter(|&&(_, m, p)| m == model && p == phase).count() as f64
+        };
+        // ~1000 vs ~50 arrivals — the flip must be visible in each stream.
+        assert!(count(0, 0) > 800.0 && count(0, 0) < 1200.0, "{}", count(0, 0));
+        assert!(count(0, 1) < 150.0);
+        assert!(count(1, 0) < 150.0);
+        assert!(count(1, 1) > 800.0 && count(1, 1) < 1200.0);
+        // Phase attribution matches the timeline.
+        assert!(ev
+            .iter()
+            .all(|&(t, _, p)| if p == 0 { t < 10.0 } else { t >= 10.0 }));
+        // Deterministic by seed.
+        assert_eq!(ev.len(), piecewise_arrivals(&phases, 2, 42).len());
+        // A silenced entry emits nothing.
+        let quiet = piecewise_arrivals(
+            &[PhaseSpec {
+                duration_s: 5.0,
+                rates_rps: vec![0.0, 10.0],
+            }],
+            2,
+            7,
+        );
+        assert!(quiet.iter().all(|&(_, m, _)| m == 1));
     }
 
     #[test]

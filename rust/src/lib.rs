@@ -26,6 +26,7 @@
 pub mod analytic;
 pub mod bench;
 pub mod cli;
+pub mod control;
 pub mod coordinator;
 pub mod dse;
 pub mod energy;

@@ -13,6 +13,7 @@
 use std::time::{Duration, Instant};
 use superlip::analytic::{detect, Design, XferMode};
 use superlip::cli::{parse_precision, Args};
+use superlip::control;
 use superlip::coordinator::SuperLip;
 use superlip::fleet::{self, FleetSpec, Planner, PlannerConfig, ScenarioConfig};
 use superlip::model::zoo;
@@ -62,6 +63,10 @@ COMMANDS:
   plan      --net <alexnet|squeezenet|vgg16|yolo> --fpgas N --precision <f32|fx16>
   fleet     --fpgas N --mix model:rate_rps:deadline_ms[:max_batch],...
             [--requests N] [--naive] [--time-scale X] [--co-optimize] [--qsfp]
+            [--online [--flip-after S] [--post S] [--tick S] [--kill-board I --kill-at S]]
+            (--online: serve the mix, flip the entries' rates mid-run, and
+             contrast the frozen static plan with the telemetry-driven
+             controller re-planning + hitlessly migrating lanes)
   dse       --net <name> --precision <f32|fx16>
   scale     --net <name> --max-fpgas N [--precision fx16]
   validate
@@ -90,6 +95,11 @@ fn cmd_plan(args: &Args) -> Result<()> {
 
 fn cmd_fleet(args: &Args) -> Result<()> {
     let n = args.flag_u64("fpgas", 8)? as usize;
+    if n == 0 {
+        return Err(Error::InvalidArg(
+            "--fpgas must be ≥ 1 (the fleet needs at least one board)".into(),
+        ));
+    }
     // Default mix: every workload admits a stable sub-cluster on an
     // 8-board fleet, but the per-model needs are skewed (heavy models want
     // more boards), so the planned split is visibly unequal.
@@ -101,6 +111,12 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         return Err(Error::InvalidArg(format!(
             "--fpgas {n}: need at least one board per workload ({} in the mix)",
             mix.len()
+        )));
+    }
+    let ts = args.flag_f64("time-scale", 1.0)?;
+    if !ts.is_finite() || ts <= 0.0 {
+        return Err(Error::InvalidArg(format!(
+            "--time-scale {ts}: must be positive and finite"
         )));
     }
     let p = precision_arg(args)?;
@@ -121,11 +137,15 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     println!("fleet plan ({n} × {}, {} workloads):", board.name, mix.len());
     println!("{}", plan.summary());
 
+    if args.has("online") {
+        return cmd_fleet_online(args, &mix, n, board, p, ts);
+    }
+
     let requests = args.flag_u64("requests", 0)? as usize;
     if requests > 0 {
         let scen = ScenarioConfig {
             requests_per_model: requests,
-            time_scale: args.flag_f64("time-scale", 1.0)?,
+            time_scale: ts,
             ..Default::default()
         };
         let stats = fleet::run_scenario(&plan, &scen)?;
@@ -142,6 +162,107 @@ fn cmd_fleet(args: &Args) -> Result<()> {
                 report::ms(fleet::worst_p99(&nstats))
             );
         }
+    }
+    Ok(())
+}
+
+/// `fleet --online`: serve the mix under a mid-run rate flip (entry i
+/// takes entry (i+1)'s rate — the canonical "who is hot changed" drift),
+/// optionally kill a board, and contrast the frozen static plan with the
+/// controlled one.
+fn cmd_fleet_online(
+    args: &Args,
+    mix: &[fleet::WorkloadSpec],
+    n: usize,
+    board: FpgaSpec,
+    p: Precision,
+    ts: f64,
+) -> Result<()> {
+    if mix.len() < 2 {
+        return Err(Error::InvalidArg(
+            "--online needs ≥ 2 mix entries (the drift scenario rotates their rates)".into(),
+        ));
+    }
+    let flip_after = args.flag_f64("flip-after", 1.0)?;
+    let post = args.flag_f64("post", 2.0)?;
+    let tick = args.flag_f64("tick", 0.05)?;
+    for (name, v) in [("flip-after", flip_after), ("post", post), ("tick", tick)] {
+        if !v.is_finite() || v <= 0.0 {
+            return Err(Error::InvalidArg(format!(
+                "--{name} {v}: must be positive and finite"
+            )));
+        }
+    }
+    let rates: Vec<f64> = mix.iter().map(|w| w.rate_rps).collect();
+    let mut flipped = rates.clone();
+    flipped.rotate_left(1);
+    let phases = vec![
+        fleet::PhaseSpec {
+            duration_s: flip_after,
+            rates_rps: rates,
+        },
+        fleet::PhaseSpec {
+            duration_s: post,
+            rates_rps: flipped,
+        },
+    ];
+    let kill = match (args.flag("kill-board"), args.flag("kill-at")) {
+        (None, None) => None,
+        (b, t) => {
+            let board_idx = b
+                .ok_or_else(|| Error::InvalidArg("--kill-at needs --kill-board".into()))?
+                .parse::<usize>()
+                .map_err(|e| Error::InvalidArg(format!("--kill-board: {e}")))?;
+            if board_idx >= n {
+                return Err(Error::InvalidArg(format!(
+                    "--kill-board {board_idx}: fleet has boards 0..{n}"
+                )));
+            }
+            let at_s = t
+                .map(|t| t.parse::<f64>())
+                .transpose()
+                .map_err(|e| Error::InvalidArg(format!("--kill-at: {e}")))?
+                .unwrap_or(flip_after / 2.0);
+            Some(control::KillSpec {
+                at_s,
+                board: board_idx,
+                notify: true,
+            })
+        }
+    };
+    let cfg = control::OnlineConfig {
+        time_scale: ts,
+        tick_s: tick,
+        kill,
+        ..Default::default()
+    };
+    let fleet_spec = FleetSpec::homogeneous(n, board);
+    let pcfg = PlannerConfig {
+        precision: p,
+        co_optimize: args.has("co-optimize"),
+        ..Default::default()
+    };
+    println!(
+        "\nonline drift scenario: {flip_after:.2}s planned mix, then {post:.2}s with rates rotated; tick {tick:.3}s"
+    );
+    for (label, controlled) in [("static plan (frozen)", false), ("controlled (online re-planning)", true)] {
+        let out = control::run_drift_scenario(&fleet_spec, pcfg, mix, &phases, &cfg, controlled)?;
+        println!("\n{label}:");
+        for (pi, rows) in out.phase_stats.iter().enumerate() {
+            println!("phase {pi} — served traffic:");
+            println!("{}", fleet::stats_table(rows));
+        }
+        if controlled {
+            println!("re-plans: {}", out.replans);
+            for e in &out.events {
+                println!("  [control] {e}");
+            }
+        }
+        println!(
+            "post-flip worst-case: p99 {}  miss {:.1}%",
+            report::ms(out.worst_p99(1)),
+            out.worst_miss_rate(1) * 100.0
+        );
     }
     Ok(())
 }

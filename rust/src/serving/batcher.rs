@@ -71,9 +71,18 @@ impl Batcher {
 
     /// Enqueue a request in earliest-deadline-first position.
     pub fn push(&self, req: InferenceRequest) -> crate::Result<()> {
+        self.try_push(req)
+            .map_err(|_| crate::Error::Serving("batcher closed".into()))
+    }
+
+    /// Like `push`, but a refused request (closed queue) is handed back to
+    /// the caller so it can be re-routed to another lane — the server's
+    /// hitless-migration path relies on this to lose nothing while a lane
+    /// drains.
+    pub fn try_push(&self, req: InferenceRequest) -> std::result::Result<(), InferenceRequest> {
         let mut q = self.locked();
         if q.closed {
-            return Err(crate::Error::Serving("batcher closed".into()));
+            return Err(req);
         }
         // EDF insertion (queues are short — linear scan is the fast path).
         let pos = q
@@ -206,6 +215,15 @@ mod tests {
         let batch = b.next_batch().unwrap();
         let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn try_push_returns_request_when_closed() {
+        let b = Batcher::new(BatcherConfig::default());
+        b.close();
+        let (r, _x) = req(7, 100);
+        let back = b.try_push(r).expect_err("closed queue hands the request back");
+        assert_eq!(back.id, 7, "same request, ready to re-route");
     }
 
     #[test]

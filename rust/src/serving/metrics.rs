@@ -1,4 +1,18 @@
 //! Serving metrics: latency distribution, throughput, deadline misses.
+//!
+//! Two accounting horizons share one collector:
+//!
+//! * **cumulative** — everything since creation (or the last `reset`),
+//!   backing the end-of-run summaries the benches print;
+//! * **windowed** — everything since the last `snapshot_and_reset`,
+//!   drained into a [`MetricsSnapshot`] so percentiles reflect the recent
+//!   interval rather than the whole run. The control plane
+//!   (`control::TelemetryHub`) ticks this; it is equally useful for
+//!   standalone periodic reporting.
+//!
+//! Arrivals are recorded separately from completions (`record_arrival` at
+//! submit time) so a window can expose the *offered* rate and expose dead
+//! lanes (arrivals with no completions).
 
 use crate::util::Summary;
 use std::sync::Mutex;
@@ -12,10 +26,91 @@ pub struct Metrics {
 
 #[derive(Debug)]
 struct Inner {
+    // Cumulative (since creation / last `reset`).
     latencies_ms: Vec<f64>,
     batch_sizes: Vec<usize>,
     deadline_misses: u64,
+    arrivals: u64,
     started: Instant,
+    // Window (since last `snapshot_and_reset`).
+    win_latencies_ms: Vec<f64>,
+    win_completed: u64,
+    win_batch_total: u64,
+    win_misses: u64,
+    win_arrivals: u64,
+    win_started: Instant,
+}
+
+/// One interval's worth of serving activity, drained by
+/// [`Metrics::snapshot_and_reset`]. Latency samples are the raw window so
+/// callers can pool several lanes' snapshots exactly before taking
+/// percentiles.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    /// Wall-clock length of the interval.
+    pub window: Duration,
+    /// Requests submitted during the interval.
+    pub arrivals: u64,
+    /// Requests completed during the interval.
+    pub completed: u64,
+    /// Completed requests that missed their deadline.
+    pub misses: u64,
+    /// Raw per-request latencies (ms) completed in the interval.
+    pub latencies_ms: Vec<f64>,
+    /// Sum of served batch sizes over the interval.
+    pub batch_total: u64,
+}
+
+impl MetricsSnapshot {
+    /// Pool several snapshots (e.g. replica lanes of one model) into one.
+    /// The window is the max of the parts (they are ticked together).
+    pub fn merge(parts: &[MetricsSnapshot]) -> MetricsSnapshot {
+        let mut out = MetricsSnapshot {
+            window: Duration::ZERO,
+            arrivals: 0,
+            completed: 0,
+            misses: 0,
+            latencies_ms: Vec::new(),
+            batch_total: 0,
+        };
+        for p in parts {
+            out.window = out.window.max(p.window);
+            out.arrivals += p.arrivals;
+            out.completed += p.completed;
+            out.misses += p.misses;
+            out.latencies_ms.extend_from_slice(&p.latencies_ms);
+            out.batch_total += p.batch_total;
+        }
+        out
+    }
+
+    /// Offered arrival rate over the interval (requests/second of wall
+    /// clock; divide by the scenario time scale for model time).
+    pub fn arrival_rate_rps(&self) -> f64 {
+        self.arrivals as f64 / self.window.as_secs_f64().max(1e-9)
+    }
+
+    /// Fraction of completed requests that missed (NaN when idle).
+    pub fn miss_rate(&self) -> f64 {
+        self.misses as f64 / self.completed as f64
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.batch_total as f64 / self.completed as f64
+        }
+    }
+
+    /// Window latency summary (`None` when nothing completed).
+    pub fn latency_summary(&self) -> Option<Summary> {
+        if self.latencies_ms.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&self.latencies_ms))
+        }
+    }
 }
 
 impl Default for Metrics {
@@ -26,48 +121,117 @@ impl Default for Metrics {
 
 impl Metrics {
     pub fn new() -> Self {
+        let now = Instant::now();
         Metrics {
             inner: Mutex::new(Inner {
                 latencies_ms: Vec::new(),
                 batch_sizes: Vec::new(),
                 deadline_misses: 0,
-                started: Instant::now(),
+                arrivals: 0,
+                started: now,
+                win_latencies_ms: Vec::new(),
+                win_completed: 0,
+                win_batch_total: 0,
+                win_misses: 0,
+                win_arrivals: 0,
+                win_started: now,
             }),
         }
     }
 
+    fn locked(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Raw latency samples retained per window. Callers that never drain
+    /// windows (`snapshot_and_reset`) must not pay an unbounded second
+    /// copy of every sample, so the window buffer saturates here; the
+    /// window COUNTERS (arrivals/completions/misses/batches) stay exact
+    /// regardless, only window percentiles degrade to the first N samples
+    /// — and any real windowing caller drains far below this.
+    const WINDOW_SAMPLE_CAP: usize = 1 << 18;
+
     /// Record one served request.
     pub fn record(&self, latency: Duration, batch: usize, deadline_met: bool) {
-        let mut m = self.inner.lock().unwrap_or_else(|e| e.into_inner());
-        m.latencies_ms.push(latency.as_secs_f64() * 1e3);
+        let ms = latency.as_secs_f64() * 1e3;
+        let mut m = self.locked();
+        m.latencies_ms.push(ms);
         m.batch_sizes.push(batch);
+        m.win_completed += 1;
+        if m.win_latencies_ms.len() < Self::WINDOW_SAMPLE_CAP {
+            m.win_latencies_ms.push(ms);
+        }
+        m.win_batch_total += batch as u64;
         if !deadline_met {
             m.deadline_misses += 1;
+            m.win_misses += 1;
         }
     }
 
-    /// Clear all recorded samples (e.g. after a warmup phase) and restart
-    /// the throughput clock.
+    /// Record one submitted request (before it is served).
+    pub fn record_arrival(&self) {
+        let mut m = self.locked();
+        m.arrivals += 1;
+        m.win_arrivals += 1;
+    }
+
+    /// Clear all recorded samples (e.g. after a warmup phase), restart the
+    /// throughput clock, and open a fresh window.
     pub fn reset(&self) {
-        let mut m = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let mut m = self.locked();
+        let now = Instant::now();
         m.latencies_ms.clear();
         m.batch_sizes.clear();
         m.deadline_misses = 0;
-        m.started = Instant::now();
+        m.arrivals = 0;
+        m.started = now;
+        m.win_latencies_ms.clear();
+        m.win_completed = 0;
+        m.win_batch_total = 0;
+        m.win_misses = 0;
+        m.win_arrivals = 0;
+        m.win_started = now;
+    }
+
+    /// Drain the current window into a snapshot and open a new one.
+    /// Cumulative counters are untouched.
+    pub fn snapshot_and_reset(&self) -> MetricsSnapshot {
+        let mut m = self.locked();
+        let now = Instant::now();
+        let snap = MetricsSnapshot {
+            window: now - m.win_started,
+            arrivals: m.win_arrivals,
+            completed: m.win_completed,
+            misses: m.win_misses,
+            latencies_ms: std::mem::take(&mut m.win_latencies_ms),
+            batch_total: m.win_batch_total,
+        };
+        m.win_completed = 0;
+        m.win_batch_total = 0;
+        m.win_misses = 0;
+        m.win_arrivals = 0;
+        m.win_started = now;
+        snap
     }
 
     /// Requests served so far.
     pub fn completed(&self) -> usize {
-        self.inner.lock().unwrap_or_else(|e| e.into_inner()).latencies_ms.len()
+        self.locked().latencies_ms.len()
+    }
+
+    /// Requests submitted so far (0 on paths that never call
+    /// `record_arrival`).
+    pub fn arrivals(&self) -> u64 {
+        self.locked().arrivals
     }
 
     pub fn deadline_misses(&self) -> u64 {
-        self.inner.lock().unwrap_or_else(|e| e.into_inner()).deadline_misses
+        self.locked().deadline_misses
     }
 
     /// Latency summary (ms). `None` if nothing served yet.
     pub fn latency_summary(&self) -> Option<Summary> {
-        let m = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let m = self.locked();
         if m.latencies_ms.is_empty() {
             None
         } else {
@@ -77,7 +241,7 @@ impl Metrics {
 
     /// Mean batch size actually served (batching effectiveness).
     pub fn mean_batch(&self) -> f64 {
-        let m = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let m = self.locked();
         if m.batch_sizes.is_empty() {
             0.0
         } else {
@@ -87,7 +251,7 @@ impl Metrics {
 
     /// Requests/second since collector creation.
     pub fn throughput_rps(&self) -> f64 {
-        let m = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let m = self.locked();
         let secs = m.started.elapsed().as_secs_f64().max(1e-9);
         m.latencies_ms.len() as f64 / secs
     }
@@ -113,11 +277,15 @@ mod tests {
     #[test]
     fn reset_clears() {
         let m = Metrics::new();
+        m.record_arrival();
         m.record(Duration::from_millis(10), 1, false);
         m.reset();
         assert_eq!(m.completed(), 0);
         assert_eq!(m.deadline_misses(), 0);
+        assert_eq!(m.arrivals(), 0);
         assert!(m.latency_summary().is_none());
+        let s = m.snapshot_and_reset();
+        assert_eq!((s.arrivals, s.completed, s.misses), (0, 0, 0));
     }
 
     #[test]
@@ -125,5 +293,63 @@ mod tests {
         let m = Metrics::new();
         assert!(m.latency_summary().is_none());
         assert_eq!(m.mean_batch(), 0.0);
+    }
+
+    #[test]
+    fn windows_drain_independently_of_cumulative() {
+        let m = Metrics::new();
+        m.record_arrival();
+        m.record_arrival();
+        m.record(Duration::from_millis(10), 1, true);
+        m.record(Duration::from_millis(30), 2, false);
+        let w1 = m.snapshot_and_reset();
+        assert_eq!(w1.arrivals, 2);
+        assert_eq!(w1.completed, 2);
+        assert_eq!(w1.misses, 1);
+        assert_eq!(w1.latencies_ms.len(), 2);
+        assert!((w1.mean_batch() - 1.5).abs() < 1e-9);
+        assert!((w1.miss_rate() - 0.5).abs() < 1e-9);
+
+        // New window starts empty; cumulative keeps everything.
+        m.record_arrival();
+        m.record(Duration::from_millis(50), 1, true);
+        let w2 = m.snapshot_and_reset();
+        assert_eq!(w2.arrivals, 1);
+        assert_eq!(w2.completed, 1);
+        assert_eq!(w2.misses, 0);
+        assert!((w2.latencies_ms[0] - 50.0).abs() < 1e-9);
+        assert_eq!(m.completed(), 3);
+        assert_eq!(m.arrivals(), 3);
+        assert_eq!(m.deadline_misses(), 1);
+
+        // Window percentiles reflect the window, not the run.
+        let s = w2.latency_summary().unwrap();
+        assert!((s.p50() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn snapshots_merge_across_lanes() {
+        let a = MetricsSnapshot {
+            window: Duration::from_millis(100),
+            arrivals: 3,
+            completed: 2,
+            misses: 1,
+            latencies_ms: vec![1.0, 2.0],
+            batch_total: 2,
+        };
+        let b = MetricsSnapshot {
+            window: Duration::from_millis(90),
+            arrivals: 1,
+            completed: 1,
+            misses: 0,
+            latencies_ms: vec![9.0],
+            batch_total: 3,
+        };
+        let m = MetricsSnapshot::merge(&[a, b]);
+        assert_eq!(m.window, Duration::from_millis(100));
+        assert_eq!((m.arrivals, m.completed, m.misses), (4, 3, 1));
+        assert_eq!(m.latencies_ms, vec![1.0, 2.0, 9.0]);
+        assert!((m.arrival_rate_rps() - 40.0).abs() < 1e-6);
+        assert!((m.mean_batch() - 5.0 / 3.0).abs() < 1e-9);
     }
 }

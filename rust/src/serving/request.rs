@@ -4,6 +4,7 @@ use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 /// One inference request: an image plus its real-time deadline.
+#[derive(Debug)]
 pub struct InferenceRequest {
     pub id: u64,
     /// Flattened f32 image (`image_elems` values).

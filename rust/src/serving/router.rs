@@ -6,10 +6,18 @@
 //! its set of lanes (a model may have several replica sub-clusters) and
 //! picks one per request by policy, tracking per-lane outstanding counts.
 //!
+//! The route table is **live**: the control plane adds lanes
+//! (`add_lane` + `add_lane_route`) and removes them (`deroute`) while
+//! requests are in flight, so a plan migration can stand a new lane up and
+//! drain the old one without stopping the server. Lane indices are stable
+//! for the lifetime of the server (retired lanes leave a hole, they are
+//! never reused).
+//!
 //! The original single-model replica `Router` is retained as a thin wrapper
 //! over a one-entry `PlanRouter`, so pre-fleet callers keep working.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
 
 /// Routing policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -27,21 +35,27 @@ struct ModelRoutes {
     rr: AtomicU64,
 }
 
-/// Router over a fleet plan: model name → replica lane set → lane index.
-pub struct PlanRouter {
-    policy: RoutePolicy,
+struct RouterInner {
     models: Vec<ModelRoutes>,
     outstanding: Vec<AtomicU64>,
 }
 
+/// Router over a fleet plan: model name → replica lane set → lane index.
+pub struct PlanRouter {
+    policy: RoutePolicy,
+    inner: RwLock<RouterInner>,
+}
+
 impl PlanRouter {
-    /// Empty router over `n_lanes` lanes; add models with `add_route`.
+    /// Router over `n_lanes` pre-existing lanes (0 for a dynamically grown
+    /// server); add models with `add_route`.
     pub fn new(policy: RoutePolicy, n_lanes: usize) -> Self {
-        assert!(n_lanes > 0);
         PlanRouter {
             policy,
-            models: Vec::new(),
-            outstanding: (0..n_lanes).map(|_| AtomicU64::new(0)).collect(),
+            inner: RwLock::new(RouterInner {
+                models: Vec::new(),
+                outstanding: (0..n_lanes).map(|_| AtomicU64::new(0)).collect(),
+            }),
         }
     }
 
@@ -51,68 +65,119 @@ impl PlanRouter {
         I: IntoIterator<Item = (S, Vec<usize>)>,
         S: Into<String>,
     {
-        let mut r = Self::new(policy, n_lanes);
+        let r = Self::new(policy, n_lanes);
         for (model, lanes) in routes {
             r.add_route(model, lanes);
         }
         r
     }
 
+    fn read(&self) -> std::sync::RwLockReadGuard<'_, RouterInner> {
+        self.inner.read().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn write(&self) -> std::sync::RwLockWriteGuard<'_, RouterInner> {
+        self.inner.write().unwrap_or_else(|e| e.into_inner())
+    }
+
     /// Register a model's replica lane set.
-    pub fn add_route<S: Into<String>>(&mut self, model: S, lanes: Vec<usize>) {
+    pub fn add_route<S: Into<String>>(&self, model: S, lanes: Vec<usize>) {
         let model = model.into();
+        let mut inner = self.write();
         assert!(!lanes.is_empty(), "model {model}: empty lane set");
         assert!(
-            lanes.iter().all(|&l| l < self.outstanding.len()),
+            lanes.iter().all(|&l| l < inner.outstanding.len()),
             "model {model}: lane index out of range"
         );
         assert!(
-            self.models.iter().all(|m| m.model != model),
+            inner.models.iter().all(|m| m.model != model),
             "model {model}: duplicate route"
         );
-        self.models.push(ModelRoutes {
+        inner.models.push(ModelRoutes {
             model,
             lanes,
             rr: AtomicU64::new(0),
         });
     }
 
+    /// Grow the lane table by one; returns the new lane's index. The lane
+    /// serves nothing until `add_lane_route` points a model at it.
+    pub fn add_lane(&self) -> usize {
+        let mut inner = self.write();
+        inner.outstanding.push(AtomicU64::new(0));
+        inner.outstanding.len() - 1
+    }
+
+    /// Point `model` at one more lane (creating the model's entry if this
+    /// is its first).
+    pub fn add_lane_route(&self, model: &str, lane: usize) {
+        let mut inner = self.write();
+        assert!(lane < inner.outstanding.len(), "lane index out of range");
+        // position()+index, not iter_mut().find(): the held `find` borrow
+        // would conflict with the push in the miss arm.
+        match inner.models.iter().position(|m| m.model == model) {
+            Some(i) => {
+                if !inner.models[i].lanes.contains(&lane) {
+                    inner.models[i].lanes.push(lane);
+                }
+            }
+            None => inner.models.push(ModelRoutes {
+                model: model.to_string(),
+                lanes: vec![lane],
+                rr: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Remove `lane` from every model's lane set (retirement / quarantine
+    /// of a failed backend). Models left with no lanes stop routing
+    /// (`route` returns `None`) but keep their entry, so a replacement lane
+    /// can be attached later.
+    pub fn deroute(&self, lane: usize) {
+        let mut inner = self.write();
+        for entry in inner.models.iter_mut() {
+            entry.lanes.retain(|&l| l != lane);
+        }
+    }
+
     pub fn n_lanes(&self) -> usize {
-        self.outstanding.len()
+        self.read().outstanding.len()
     }
 
     /// The registered model names, in registration order.
-    pub fn models(&self) -> impl Iterator<Item = &str> {
-        self.models.iter().map(|m| m.model.as_str())
+    pub fn models(&self) -> Vec<String> {
+        self.read().models.iter().map(|m| m.model.clone()).collect()
     }
 
     /// Choose a lane for the next request to `model` and account it
-    /// outstanding. `None` if the model has no route.
+    /// outstanding. `None` if the model has no route (unknown, or all of
+    /// its lanes retired).
     pub fn route(&self, model: &str) -> Option<usize> {
-        let entry = self.models.iter().find(|m| m.model == model)?;
+        let inner = self.read();
+        let entry = inner.models.iter().find(|m| m.model == model)?;
         let idx = match self.policy {
             RoutePolicy::RoundRobin => {
                 let t = entry.rr.fetch_add(1, Ordering::Relaxed);
-                entry.lanes[(t % entry.lanes.len() as u64) as usize]
+                *entry.lanes.get((t % entry.lanes.len().max(1) as u64) as usize)?
             }
             RoutePolicy::LeastOutstanding => *entry
                 .lanes
                 .iter()
-                .min_by_key(|&&l| self.outstanding[l].load(Ordering::Relaxed))
-                .unwrap(),
+                .min_by_key(|&&l| inner.outstanding[l].load(Ordering::Relaxed))?,
         };
-        self.outstanding[idx].fetch_add(1, Ordering::Relaxed);
+        inner.outstanding[idx].fetch_add(1, Ordering::Relaxed);
         Some(idx)
     }
 
     /// Mark a request complete on a lane.
     pub fn complete(&self, lane: usize) {
-        self.outstanding[lane].fetch_sub(1, Ordering::Relaxed);
+        self.read().outstanding[lane].fetch_sub(1, Ordering::Relaxed);
     }
 
     /// Outstanding count per lane (diagnostics / tests).
     pub fn load(&self) -> Vec<u64> {
-        self.outstanding
+        self.read()
+            .outstanding
             .iter()
             .map(|o| o.load(Ordering::Relaxed))
             .collect()
@@ -128,6 +193,7 @@ pub struct Router {
 
 impl Router {
     pub fn new(policy: RoutePolicy, replicas: usize) -> Self {
+        assert!(replicas >= 1);
         let inner =
             PlanRouter::with_routes(policy, replicas, [("", (0..replicas).collect::<Vec<_>>())]);
         Router { inner }
@@ -208,7 +274,7 @@ mod tests {
 
     #[test]
     fn plan_router_round_robin_is_per_model() {
-        let mut r = PlanRouter::new(RoutePolicy::RoundRobin, 4);
+        let r = PlanRouter::new(RoutePolicy::RoundRobin, 4);
         r.add_route("a", vec![0, 1]);
         r.add_route("b", vec![2, 3]);
         // Interleaved requests: each model cycles its own lanes.
@@ -217,13 +283,41 @@ mod tests {
         assert_eq!(r.route("a"), Some(1));
         assert_eq!(r.route("b"), Some(3));
         assert_eq!(r.route("a"), Some(0));
-        assert_eq!(r.models().collect::<Vec<_>>(), vec!["a", "b"]);
+        assert_eq!(r.models(), vec!["a", "b"]);
     }
 
     #[test]
     #[should_panic(expected = "lane index out of range")]
     fn route_to_missing_lane_rejected() {
-        let mut r = PlanRouter::new(RoutePolicy::RoundRobin, 2);
+        let r = PlanRouter::new(RoutePolicy::RoundRobin, 2);
         r.add_route("a", vec![2]);
+    }
+
+    #[test]
+    fn lanes_grow_and_retire_live() {
+        let r = PlanRouter::new(RoutePolicy::LeastOutstanding, 0);
+        let l0 = r.add_lane();
+        r.add_lane_route("m", l0);
+        assert_eq!(r.route("m"), Some(l0));
+        // Stand up a replacement, then drain the original.
+        let l1 = r.add_lane();
+        r.add_lane_route("m", l1);
+        r.deroute(l0);
+        for _ in 0..4 {
+            assert_eq!(r.route("m"), Some(l1), "retired lane must not route");
+        }
+        // Retiring the last lane leaves the model unroutable (not a panic).
+        r.deroute(l1);
+        assert_eq!(r.route("m"), None);
+        // A replacement re-attaches to the existing entry.
+        let l2 = r.add_lane();
+        r.add_lane_route("m", l2);
+        assert_eq!(r.route("m"), Some(l2));
+        assert_eq!(r.n_lanes(), 3);
+        // Outstanding survives retirement until completed.
+        assert!(r.load()[l1] >= 4);
+        for _ in 0..4 {
+            r.complete(l1);
+        }
     }
 }
