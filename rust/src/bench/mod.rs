@@ -1,8 +1,13 @@
 //! Hand-rolled micro-benchmark harness (the offline image has no criterion
-//! crate): warmup, timed iterations, mean ± σ reporting, and a `--quick`
-//! mode for CI. Used by every `rust/benches/*` target.
+//! crate): warmup, timed iterations, mean ± σ reporting, a `--quick` mode
+//! for CI — and machine-readable JSON output (`--json <path>` or
+//! `SUPERLIP_BENCH_JSON=<path>`) so CI can persist the perf trajectory and
+//! gate regressions against the `BENCH_*.json` baselines checked into the
+//! repo root (`tools/compare_bench.py`). Used by every `rust/benches/*`
+//! target.
 
 use crate::util::Summary;
+use std::path::PathBuf;
 use std::time::Instant;
 
 /// A bench runner collecting named measurements.
@@ -10,19 +15,37 @@ pub struct Harness {
     name: String,
     quick: bool,
     results: Vec<(String, Summary)>,
+    /// Scalar metrics recorded via [`Harness::record`]: (label, value,
+    /// unit) — these are what the CI regression gate compares.
+    records: Vec<(String, f64, String)>,
+    json_path: Option<PathBuf>,
 }
 
 impl Harness {
     /// Reads `SUPERLIP_BENCH_QUICK=1` (or `--quick` in argv) to shrink
-    /// iteration counts.
+    /// iteration counts, and `SUPERLIP_BENCH_JSON=<path>` (or
+    /// `--json <path>` in argv) to emit machine-readable results.
     pub fn new(name: &str) -> Self {
         let quick = std::env::var("SUPERLIP_BENCH_QUICK").ok().as_deref() == Some("1")
             || std::env::args().any(|a| a == "--quick");
+        let json_path = std::env::var("SUPERLIP_BENCH_JSON")
+            .ok()
+            .filter(|p| !p.is_empty())
+            .map(PathBuf::from)
+            .or_else(|| {
+                let args: Vec<String> = std::env::args().collect();
+                args.iter()
+                    .position(|a| a == "--json")
+                    .and_then(|i| args.get(i + 1))
+                    .map(PathBuf::from)
+            });
         println!("=== bench: {name}{} ===", if quick { " (quick)" } else { "" });
         Harness {
             name: name.to_string(),
             quick,
             results: Vec::new(),
+            records: Vec::new(),
+            json_path,
         }
     }
 
@@ -53,10 +76,12 @@ impl Harness {
         self.results.push((label.to_string(), s));
     }
 
-    /// Record an externally computed scalar (e.g. simulated cycles) so it
-    /// appears in the bench output stream.
+    /// Record an externally computed scalar (e.g. simulated cycles, a
+    /// served p99) so it appears in the bench output stream — and in the
+    /// JSON metrics when a sink is configured.
     pub fn record(&mut self, label: &str, value: f64, unit: &str) {
         println!("  {label:<44} {value:>12.3} {unit}");
+        self.records.push((label.to_string(), value, unit.to_string()));
     }
 
     /// Print a free-form block (a reproduced table) into the bench output.
@@ -64,9 +89,75 @@ impl Harness {
         println!("\n--- {caption} ---\n{body}");
     }
 
-    /// Footer.
+    /// Footer: print the trailer and, when a JSON sink was configured,
+    /// write the machine-readable results.
     pub fn finish(self) {
+        if let Some(path) = &self.json_path {
+            match std::fs::write(path, self.to_json()) {
+                Ok(()) => println!("  [bench json → {}]", path.display()),
+                Err(e) => eprintln!("  [bench json: cannot write {}: {e}]", path.display()),
+            }
+        }
         println!("=== end bench: {} ===\n", self.name);
+    }
+
+    /// Serialize the run (no serde in the offline image — labels are
+    /// plain ASCII, but escape defensively anyway).
+    fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"bench\": {},\n", json_str(&self.name)));
+        out.push_str(&format!("  \"quick\": {},\n", self.quick));
+        out.push_str("  \"metrics\": {\n");
+        for (i, (label, value, unit)) in self.records.iter().enumerate() {
+            out.push_str(&format!(
+                "    {}: {{\"value\": {}, \"unit\": {}}}{}\n",
+                json_str(label),
+                json_num(*value),
+                json_str(unit),
+                if i + 1 < self.records.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  },\n");
+        out.push_str("  \"timings_ms\": {\n");
+        for (i, (label, s)) in self.results.iter().enumerate() {
+            out.push_str(&format!(
+                "    {}: {{\"mean\": {}, \"stddev\": {}}}{}\n",
+                json_str(label),
+                json_num(s.mean),
+                json_num(s.stddev),
+                if i + 1 < self.results.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  }\n}\n");
+        out
+    }
+}
+
+/// Minimal JSON string escape (quotes, backslashes, control chars).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// JSON number: non-finite values become null (JSON has no NaN/inf).
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "null".to_string()
     }
 }
 
@@ -88,5 +179,26 @@ mod tests {
         h.record("cycles", 123.0, "kcyc");
         h.finish();
         std::env::remove_var("SUPERLIP_BENCH_QUICK");
+    }
+
+    #[test]
+    fn json_output_round_trips_records() {
+        let mut h = Harness {
+            name: "jsontest".into(),
+            quick: true,
+            results: Vec::new(),
+            records: Vec::new(),
+            json_path: None,
+        };
+        h.record("worst-case p99, planned split", 12.5, "ms");
+        h.record("weird \"label\"\n", f64::NAN, "%");
+        let j = h.to_json();
+        assert!(j.contains("\"bench\": \"jsontest\""));
+        assert!(j.contains("\"worst-case p99, planned split\""));
+        assert!(j.contains("\"value\": 12.500000"));
+        assert!(j.contains("\\\"label\\\"\\n"));
+        assert!(j.contains("\"value\": null"), "NaN must serialize as null");
+        // Balanced braces (cheap well-formedness check without a parser).
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
     }
 }

@@ -22,11 +22,13 @@
 //! platform's out-of-band health monitor — the scenario runner calls it
 //! at the kill event) or, without one, the telemetry fallback (a lane
 //! showing arrivals but zero completions for `dead_after` consecutive
-//! windows; the whole lock-step sub-cluster is then written off, since
-//! telemetry cannot tell WHICH member died). Either way the dead lane is
-//! retired (its queued requests were already lost to the hardware — the
-//! one migration that cannot be hitless), the fleet shrinks to the
-//! survivors, and the mix is re-planned on what remains.
+//! windows; that lane's whole lock-step sub-cluster is then written off,
+//! since telemetry cannot tell WHICH member died). Either way ONLY the
+//! replica lane containing the dead board is retired (its queued requests
+//! were already lost to the hardware — the one migration that cannot be
+//! hitless); a multi-replica model's surviving lanes keep routing its
+//! traffic throughout. The fleet shrinks to the survivors and the mix is
+//! re-planned on what remains.
 //!
 //! ## Board bookkeeping
 //!
@@ -89,6 +91,17 @@ pub struct TickReport {
     pub migrated_to: Option<Vec<usize>>,
 }
 
+/// One live lane's books: the model it serves and the ORIGINAL board
+/// indices its replica sub-cluster occupies. A model with R replicas has R
+/// books — quarantine, retirement, and board accounting are all per lane,
+/// so losing one replica never touches the model's other lanes.
+#[derive(Debug, Clone)]
+struct LaneBook {
+    model: String,
+    lane: usize,
+    boards: Vec<usize>,
+}
+
 /// The online re-planning controller over one live server.
 pub struct Controller {
     server: Arc<Server>,
@@ -101,10 +114,9 @@ pub struct Controller {
     /// Current baseline mix (planned rates; re-baselined on every
     /// re-plan so the detector measures drift from the LAST plan).
     mix: Vec<WorkloadSpec>,
-    /// model → live lane index.
-    lane_of: HashMap<String, usize>,
-    /// model → ORIGINAL board indices its lane occupies.
-    boards_of: HashMap<String, Vec<usize>>,
+    /// One entry per live lane (replica lanes of one model each have
+    /// their own book).
+    books: Vec<LaneBook>,
     /// Original indices of surviving boards, in replanner fleet order.
     fleet_ids: Vec<usize>,
     /// Lanes draining toward reap.
@@ -128,21 +140,28 @@ impl Controller {
         plan: FleetPlan,
         cfg: ControlConfig,
     ) -> Result<Self> {
-        if replanner.fleet().len() != plan.deployments.iter().map(|d| d.n_boards).sum::<usize>() {
+        if replanner.fleet().len() != plan.allocation().iter().sum::<usize>() {
             return Err(Error::InvalidArg(
                 "replanner fleet does not match the plan's board count".into(),
             ));
         }
-        let mix: Vec<WorkloadSpec> = plan.deployments.iter().map(|d| d.workload.clone()).collect();
-        let mut lane_of = HashMap::new();
-        let mut boards_of = HashMap::new();
-        for (i, d) in plan.deployments.iter().enumerate() {
-            lane_of.insert(d.workload.model.clone(), i);
-            boards_of.insert(
-                d.workload.model.clone(),
-                (d.start..d.start + d.n_boards).collect(),
-            );
-        }
+        // One baseline mix entry per MODEL (replica deployments share one).
+        let mix: Vec<WorkloadSpec> = plan
+            .deployments
+            .iter()
+            .filter(|d| d.replica == 0)
+            .map(|d| d.workload.clone())
+            .collect();
+        let books = plan
+            .deployments
+            .iter()
+            .enumerate()
+            .map(|(i, d)| LaneBook {
+                model: d.workload.model.clone(),
+                lane: i,
+                boards: (d.start..d.start + d.n_boards).collect(),
+            })
+            .collect();
         let fleet_ids = (0..replanner.fleet().len()).collect();
         let hub = TelemetryHub::new(server.clone(), cfg.time_scale, cfg.history.max(1));
         let detector = DriftDetector::new(cfg.drift);
@@ -154,8 +173,7 @@ impl Controller {
             cfg,
             plan,
             mix,
-            lane_of,
-            boards_of,
+            books,
             fleet_ids,
             retiring: Vec::new(),
             dead_streak: HashMap::new(),
@@ -172,9 +190,18 @@ impl Controller {
         &self.plan
     }
 
-    /// Boards (by count) per model in the current plan.
+    /// Boards (by count) serving `model`, summed over its replica lanes.
     pub fn allocation_for(&self, model: &str) -> usize {
-        self.boards_of.get(model).map_or(0, Vec::len)
+        self.books
+            .iter()
+            .filter(|b| b.model == model)
+            .map(|b| b.boards.len())
+            .sum()
+    }
+
+    /// Live replica lane count for `model`.
+    pub fn lanes_for(&self, model: &str) -> usize {
+        self.books.iter().filter(|b| b.model == model).count()
     }
 
     /// One control window: reap drained lanes, poll telemetry, decide,
@@ -182,9 +209,9 @@ impl Controller {
     pub fn tick(&mut self) -> TickReport {
         self.retiring.retain(|&l| !self.server.finish_retire(l));
         let frame = self.hub.tick();
-        if let Some(dead_model) = self.scan_for_dead_lanes(&frame) {
+        if let Some(dead_lane) = self.scan_for_dead_lanes(&frame) {
             let report_frame = frame.clone();
-            let migrated = self.repair_dead_lane(&dead_model);
+            let migrated = self.repair_dead_lane(dead_lane);
             return TickReport {
                 frame: report_frame,
                 decision: DriftDecision::Stable,
@@ -211,18 +238,17 @@ impl Controller {
     }
 
     /// Out-of-band health event: `board` (ORIGINAL index) died. Retires
-    /// the lock-step sub-cluster it belonged to, shrinks the fleet, and
-    /// re-plans the current mix on the survivors.
+    /// **only the replica lane** whose lock-step sub-cluster contains the
+    /// board — a multi-replica model keeps serving through its healthy
+    /// lanes — shrinks the fleet by the one dead board (the lane's
+    /// surviving boards return to the pool), and re-plans the current mix
+    /// on the survivors.
     pub fn board_down(&mut self, board: usize) {
         let Some(pos) = self.fleet_ids.iter().position(|&b| b == board) else {
             return; // already written off
         };
         self.events.push(format!("board {board} down"));
-        let dead_model = self
-            .boards_of
-            .iter()
-            .find(|(_, ids)| ids.contains(&board))
-            .map(|(m, _)| m.clone());
+        let victim = self.books.iter().position(|b| b.boards.contains(&board));
         // Shrink the replanner FIRST: if it refuses (last board), the
         // books must stay consistent — degraded, but coherent.
         if let Err(e) = self.replanner.remove_board(pos) {
@@ -230,9 +256,9 @@ impl Controller {
             return;
         }
         self.fleet_ids.remove(pos);
-        match dead_model {
-            Some(model) => {
-                let _ = self.repair_dead_lane(&model);
+        match victim {
+            Some(book_idx) => {
+                let _ = self.repair_dead_lane(book_idx);
             }
             None => {
                 // A free board died: nothing to retire, but re-plan so the
@@ -257,26 +283,30 @@ impl Controller {
     /// `drift.min_arrivals` arrivals accumulated over them (a
     /// long-service model legitimately spans windows with a batch in
     /// flight), AND — when board health switches are wired — a dead flag
-    /// on one of the lane's boards (all-alive switches mean slow, not
-    /// dead). Returns the model to repair.
-    fn scan_for_dead_lanes(&mut self, frame: &TelemetryFrame) -> Option<String> {
+    /// on one of **that lane's** boards (all-alive switches mean slow,
+    /// not dead; a sibling replica's dead board never convicts this
+    /// lane). Returns the book index of the lane to repair.
+    fn scan_for_dead_lanes(&mut self, frame: &TelemetryFrame) -> Option<usize> {
         let min_arrivals = self.cfg.drift.min_arrivals;
-        let mut dead = None;
+        let mut dead: Option<usize> = None;
         for lane in &frame.lanes {
             if self.retiring.contains(&lane.lane) {
                 continue; // draining lanes report no arrivals anyway
             }
+            let book_idx = self.books.iter().position(|b| b.lane == lane.lane);
             let (streak, starved) = self.dead_streak.entry(lane.lane).or_insert((0, 0));
             if lane.arrivals > 0 && lane.completed == 0 {
                 *streak += 1;
                 *starved += lane.arrivals;
                 if *streak >= self.cfg.dead_after && *starved >= min_arrivals && dead.is_none() {
-                    let confirmed = match (&self.cfg.health, self.boards_of.get(&lane.model)) {
-                        (Some(h), Some(ids)) => ids.iter().any(|&b| h.is_dead(b)),
-                        _ => true, // no health channel — telemetry is all we have
-                    };
-                    if confirmed {
-                        dead = Some(lane.model.clone());
+                    if let Some(bi) = book_idx {
+                        let confirmed = match &self.cfg.health {
+                            Some(h) => self.books[bi].boards.iter().any(|&b| h.is_dead(b)),
+                            None => true, // no health channel — telemetry is all we have
+                        };
+                        if confirmed {
+                            dead = Some(bi);
+                        }
                     }
                 }
             } else {
@@ -284,15 +314,19 @@ impl Controller {
                 *starved = 0;
             }
         }
-        if let Some(model) = &dead {
-            self.events
-                .push(format!("lane for {model} dead (telemetry): writing off its boards"));
-            // Telemetry cannot tell which member died — write off the
-            // whole sub-cluster's boards (shrink the replanner first so a
-            // refusal leaves the books consistent). A refusal ("last
+        if let Some(bi) = dead {
+            let book = &self.books[bi];
+            self.events.push(format!(
+                "lane {} for {} dead (telemetry): writing off its boards {:?}",
+                book.lane, book.model, book.boards
+            ));
+            // Telemetry cannot tell WHICH member of the lock-step
+            // sub-cluster died — write off that lane's whole board set
+            // (but never a sibling replica's). Shrink the replanner first
+            // so a refusal leaves the books consistent; a refusal ("last
             // board") stops the shrink but NOT the repair: the dead lane
             // must still retire, else every tick re-detects it forever.
-            for b in self.boards_of.get(model).cloned().unwrap_or_default() {
+            for b in self.books[bi].boards.clone() {
                 if let Some(pos) = self.fleet_ids.iter().position(|&x| x == b) {
                     if let Err(e) = self.replanner.remove_board(pos) {
                         self.events.push(format!(
@@ -307,19 +341,34 @@ impl Controller {
         dead
     }
 
-    /// Retire `model`'s dead lane and re-plan the mix on the (already
-    /// shrunken) fleet. Requests queued on the dead lane are dropped —
-    /// the hardware lost them; clients observe a disconnect.
-    fn repair_dead_lane(&mut self, model: &str) -> Option<Vec<usize>> {
-        if let Some(lane) = self.lane_of.remove(model) {
-            if self.server.begin_retire(lane).is_ok() {
-                self.retiring.push(lane);
-            }
+    /// Retire the dead replica lane at `book_idx` and re-plan the mix on
+    /// the (already shrunken) fleet. Only THAT lane is quarantined: a
+    /// multi-replica model's surviving lanes keep routing its traffic
+    /// throughout the repair. Requests queued on the dead lane are
+    /// dropped — the hardware lost them; clients observe a disconnect.
+    fn repair_dead_lane(&mut self, book_idx: usize) -> Option<Vec<usize>> {
+        let book = self.books.remove(book_idx);
+        if self.server.begin_retire(book.lane).is_ok() {
+            self.retiring.push(book.lane);
         }
-        self.boards_of.remove(model);
-        // The dead deployment is gone from the baseline plan, so the diff
-        // below re-adds the model on fresh boards.
-        self.plan.deployments.retain(|d| d.workload.model != model);
+        // Drop ONE deployment of the model from the baseline plan — the
+        // one matching the dead lane's board count, so the diff below
+        // re-adds exactly the lost replica (or re-shapes if the smaller
+        // fleet wants a different split).
+        if let Some(di) = self
+            .plan
+            .deployments
+            .iter()
+            .rposition(|d| d.workload.model == book.model && d.n_boards == book.boards.len())
+            .or_else(|| {
+                self.plan
+                    .deployments
+                    .iter()
+                    .rposition(|d| d.workload.model == book.model)
+            })
+        {
+            self.plan.deployments.remove(di);
+        }
         let observed = self.hub.observed_mix(&self.mix);
         let out = match self.replanner.plan(&observed) {
             Ok(new_plan) => Some(self.migrate_to(new_plan, observed)),
@@ -335,14 +384,34 @@ impl Controller {
 
     /// Apply `new_plan` to the live server make-before-break; returns the
     /// new allocation. Also re-baselines the drift detector's mix.
+    ///
+    /// `delta.retire` names models with LANE multiplicity; the concrete
+    /// victim lanes are chosen here (the model's most recently added
+    /// books — replica lanes of one shape are fungible).
     fn migrate_to(&mut self, new_plan: FleetPlan, new_mix: Vec<WorkloadSpec>) -> Vec<usize> {
         let delta = diff_plans(&self.plan, &new_plan);
         if !delta.is_empty() {
-            // Free pool: surviving boards not owned by a kept lane.
-            let kept_boards: Vec<usize> = delta
-                .keep
+            // Resolve retire multiplicities to concrete book indices.
+            let mut retire_idx: Vec<usize> = Vec::new();
+            for m in &delta.retire {
+                if let Some(bi) = self
+                    .books
+                    .iter()
+                    .enumerate()
+                    .rev()
+                    .find(|(i, b)| b.model == *m && !retire_idx.contains(i))
+                    .map(|(i, _)| i)
+                {
+                    retire_idx.push(bi);
+                }
+            }
+            // Free pool: surviving boards not owned by a lane we keep.
+            let kept_boards: Vec<usize> = self
+                .books
                 .iter()
-                .flat_map(|m| self.boards_of.get(m).cloned().unwrap_or_default())
+                .enumerate()
+                .filter(|(i, _)| !retire_idx.contains(i))
+                .flat_map(|(_, b)| b.boards.clone())
                 .collect();
             let mut pool: Vec<usize> = self
                 .fleet_ids
@@ -352,7 +421,7 @@ impl Controller {
                 .collect();
 
             // 1. Make: stand up and route every replacement lane.
-            let mut fresh: Vec<(String, usize, Vec<usize>)> = Vec::new();
+            let mut fresh: Vec<LaneBook> = Vec::new();
             for &di in &delta.add {
                 let d = &new_plan.deployments[di];
                 assert!(
@@ -365,22 +434,23 @@ impl Controller {
                 let health = self.cfg.health.clone().map(|h| (h, ids.clone()));
                 let spec = lane_spec_for(d, self.cfg.time_scale, self.cfg.window, health);
                 let lane = self.server.add_lane(spec);
-                fresh.push((d.workload.model.clone(), lane, ids));
+                fresh.push(LaneBook {
+                    model: d.workload.model.clone(),
+                    lane,
+                    boards: ids,
+                });
             }
             // 2. Break: deroute + close the lanes they replace (they keep
-            // draining; reaped on later ticks).
-            for m in &delta.retire {
-                if let Some(lane) = self.lane_of.remove(m) {
-                    if self.server.begin_retire(lane).is_ok() {
-                        self.retiring.push(lane);
-                    }
+            // draining; reaped on later ticks). Remove books back-to-front
+            // so earlier indices stay valid.
+            retire_idx.sort_unstable();
+            for &bi in retire_idx.iter().rev() {
+                let book = self.books.remove(bi);
+                if self.server.begin_retire(book.lane).is_ok() {
+                    self.retiring.push(book.lane);
                 }
-                self.boards_of.remove(m);
             }
-            for (model, lane, ids) in fresh {
-                self.lane_of.insert(model.clone(), lane);
-                self.boards_of.insert(model, ids);
-            }
+            self.books.extend(fresh);
         }
         let alloc = new_plan.allocation();
         self.events.push(format!(
@@ -388,7 +458,15 @@ impl Controller {
             new_plan
                 .deployments
                 .iter()
-                .map(|d| format!("{}:{}", d.workload.model, d.n_boards))
+                .map(|d| {
+                    format!(
+                        "{}[{}/{}]:{}",
+                        d.workload.model,
+                        d.replica + 1,
+                        d.n_replicas,
+                        d.n_boards
+                    )
+                })
                 .collect::<Vec<_>>(),
             self.fleet_ids.len(),
             delta.add.len() + delta.retire.len(),
@@ -461,6 +539,79 @@ mod tests {
         server.shutdown();
     }
 
+    /// Regression (`fleet --online --kill-board` inside one replica of a
+    /// multi-replica model): the controller must quarantine ONLY that
+    /// replica's lane — the model's other replica keeps serving through
+    /// the whole repair, never losing its route.
+    #[test]
+    fn board_down_quarantines_only_the_dead_replica() {
+        let fleet = FleetSpec::homogeneous(6, FpgaSpec::zcu102());
+        let pcfg = PlannerConfig::default();
+        let planner = Planner::new(fleet.clone(), pcfg);
+        let a1 = planner.service_ms("alexnet", 1).unwrap();
+        let a2 = planner.service_ms("alexnet", 2).unwrap();
+        let s1 = planner.service_ms("squeezenet", 1).unwrap();
+        // alexnet's deadline sits strictly between its 2-board and 1-board
+        // service times, so every feasible plan must keep 2-board replicas
+        // (the post-repair re-plan provably preserves the survivor's
+        // shape); squeezenet idles along on generous slack.
+        assert!(1.5 * a2 < a1, "calibration: deadline must exclude k = 1");
+        let mix = vec![
+            WorkloadSpec::new(
+                "alexnet",
+                0.15 / (a2 / 1e3),
+                Duration::from_secs_f64(1.5 * a2 / 1e3),
+            )
+            .with_replicas(2),
+            WorkloadSpec::new(
+                "squeezenet",
+                0.1 / (s1 / 1e3),
+                Duration::from_secs_f64(8.0 * s1 / 1e3),
+            ),
+        ];
+        let plan = planner.plan_allocation(&mix, &[4, 2]).unwrap();
+        assert_eq!(plan.replicas_of("alexnet"), 2);
+        let scen = ScenarioConfig::default();
+        let lanes = plan
+            .deployments
+            .iter()
+            .map(|d| crate::fleet::lane_spec_for(d, 1.0, scen.window, None))
+            .collect();
+        let server = Arc::new(Server::start_plan(lanes, ServerConfig::default()));
+        let replanner = Replanner::new(fleet, pcfg);
+        replanner.adopt_cache(&planner);
+        let mut ctl =
+            Controller::new(server.clone(), replanner, plan, ControlConfig::default()).unwrap();
+        assert_eq!(ctl.lanes_for("alexnet"), 2);
+
+        // Kill a board inside alexnet's SECOND replica (boards 2..4).
+        ctl.board_down(2);
+        assert_eq!(ctl.replans(), 1, "{:?}", ctl.events);
+        // The first replica's lane (lane 0, boards 0..2) was never
+        // touched: still live, still serving alexnet.
+        assert_eq!(server.lane_model(0).as_deref(), Some("alexnet"));
+        assert_eq!(
+            ctl.lanes_for("alexnet"),
+            2,
+            "repair re-adds the lost replica: {:?}",
+            ctl.events
+        );
+        assert_eq!(ctl.allocation_for("alexnet"), 4);
+        // The model stayed routable throughout — a submit right after the
+        // repair is answered by a healthy replica.
+        let rx = server
+            .submit_to("alexnet", vec![0.1; 64], Duration::from_secs(5))
+            .unwrap();
+        assert!(rx.recv_timeout(Duration::from_secs(5)).is_ok());
+        // The dead replica's lane drains; the healthy replica's does NOT
+        // (squeezenet's lane may churn — its allocation shrank — but the
+        // surviving alexnet lane must never be quarantined).
+        assert!(ctl.retiring.contains(&1), "{:?}", ctl.events);
+        assert!(!ctl.retiring.contains(&0), "{:?}", ctl.events);
+        assert!(!ctl.fleet_ids.contains(&2));
+        server.shutdown();
+    }
+
     #[test]
     fn board_down_shrinks_and_migrates() {
         let (server, mut ctl, _mix) = harness(3);
@@ -482,8 +633,8 @@ mod tests {
         // Duplicate report is a no-op.
         ctl.board_down(0);
         assert_eq!(ctl.replans(), 1);
-        // Board totals conserved: every model's boards ⊆ survivors.
-        let owned: Vec<usize> = ctl.boards_of.values().flatten().copied().collect();
+        // Board totals conserved: every lane's boards ⊆ survivors.
+        let owned: Vec<usize> = ctl.books.iter().flat_map(|b| b.boards.clone()).collect();
         assert!(owned.iter().all(|b| ctl.fleet_ids.contains(b)));
         assert_eq!(owned.len(), 2);
         server.shutdown();

@@ -56,14 +56,17 @@ impl Replanner {
     }
 }
 
-/// The minimal lane changes migrating `old` → `new`.
+/// The minimal lane changes migrating `old` → `new`. Entries appear with
+/// **lane multiplicity**: a model named twice in `retire` loses two of its
+/// replica lanes; a model named `c` times in `keep` keeps `c` lanes.
 #[derive(Debug, Clone, Default)]
 pub struct PlanDelta {
-    /// Models whose sub-cluster shape is unchanged — their lanes keep
-    /// serving untouched.
+    /// One entry per kept lane (model name, repeated per kept replica) —
+    /// those lanes keep serving untouched.
     pub keep: Vec<String>,
-    /// Models whose old lane must drain and go (shape changed, or model
-    /// left the mix).
+    /// One entry per lane that must drain and go (replica count shrank,
+    /// shape changed, or the model left the mix — the controller picks
+    /// WHICH of the model's fungible replica lanes die).
     pub retire: Vec<String>,
     /// Indices into `new.deployments` needing a fresh lane.
     pub add: Vec<usize>,
@@ -75,43 +78,80 @@ impl PlanDelta {
     }
 }
 
+/// The part of a deployment a serving lane physically implements: board
+/// count, design, partition factors, hetero flag, batch cap. Replica lanes
+/// of one model are fungible exactly when these agree.
+fn same_shape(a: &crate::fleet::Deployment, b: &crate::fleet::Deployment) -> bool {
+    a.n_boards == b.n_boards
+        && a.design == b.design
+        && a.factors == b.factors
+        && a.hetero == b.hetero
+        && a.workload.max_batch == b.workload.max_batch
+}
+
 /// Diff two plans into the minimal lane changes. A lane is reusable iff
 /// its model's sub-cluster *shape* is unchanged — board count, design,
 /// partition factors, hetero flag, and batch cap; observed-rate changes
 /// alone never churn a lane (only the risk arithmetic saw them). Board
 /// *identity* is irrelevant: a kept lane keeps its physical boards, and
 /// the plan's contiguous ranges are an abstraction over a fungible fleet.
+///
+/// **Replica-count drift is a legal minimal delta**: when a model keeps
+/// its per-replica shape and only the count changes R → R', the delta
+/// keeps `min(R, R')` lanes and adds (or retires) exactly the difference
+/// — individual replica lanes, never the model's whole route set.
 pub fn diff_plans(old: &FleetPlan, new: &FleetPlan) -> PlanDelta {
     let mut delta = PlanDelta::default();
-    for (i, n) in new.deployments.iter().enumerate() {
-        match old
+    let mut seen: Vec<&str> = Vec::new();
+    for n in &new.deployments {
+        let model = n.workload.model.as_str();
+        if seen.contains(&model) {
+            continue; // all of the model's replicas handled at once
+        }
+        seen.push(model);
+        let new_idx: Vec<usize> = new
             .deployments
             .iter()
-            .find(|o| o.workload.model == n.workload.model)
-        {
-            Some(o)
-                if o.n_boards == n.n_boards
-                    && o.design == n.design
-                    && o.factors == n.factors
-                    && o.hetero == n.hetero
-                    && o.workload.max_batch == n.workload.max_batch =>
-            {
-                delta.keep.push(n.workload.model.clone());
+            .enumerate()
+            .filter(|(_, d)| d.workload.model == model)
+            .map(|(i, _)| i)
+            .collect();
+        let old_reps: Vec<&crate::fleet::Deployment> = old
+            .deployments
+            .iter()
+            .filter(|d| d.workload.model == model)
+            .collect();
+        if old_reps.is_empty() {
+            delta.add.extend(new_idx);
+            continue;
+        }
+        // Lanes are fungible only when every replica (old and new) shares
+        // ONE shape; heterogeneous replica sets churn wholesale.
+        let rep0 = &new.deployments[new_idx[0]];
+        let uniform = old_reps.iter().all(|&o| same_shape(o, rep0))
+            && new_idx.iter().all(|&i| same_shape(&new.deployments[i], rep0));
+        if uniform {
+            let keep_n = old_reps.len().min(new_idx.len());
+            for _ in 0..keep_n {
+                delta.keep.push(model.to_string());
             }
-            Some(_) => {
-                delta.retire.push(n.workload.model.clone());
-                delta.add.push(i);
+            for &i in &new_idx[keep_n..] {
+                delta.add.push(i); // replica count grew: add the extras
             }
-            None => delta.add.push(i),
+            for _ in new_idx.len()..old_reps.len() {
+                delta.retire.push(model.to_string()); // shrank: drain extras
+            }
+        } else {
+            for _ in 0..old_reps.len() {
+                delta.retire.push(model.to_string());
+            }
+            delta.add.extend(new_idx);
         }
     }
     for o in &old.deployments {
-        if !new
-            .deployments
-            .iter()
-            .any(|n| n.workload.model == o.workload.model)
-        {
-            delta.retire.push(o.workload.model.clone());
+        let model = o.workload.model.as_str();
+        if !new.deployments.iter().any(|n| n.workload.model == model) {
+            delta.retire.push(model.to_string());
         }
     }
     delta
@@ -181,6 +221,38 @@ mod tests {
         assert_eq!(d.keep, vec!["alexnet"]);
         assert_eq!(d.retire, vec!["vgg16"]);
         assert!(d.add.is_empty());
+    }
+
+    #[test]
+    fn replica_count_drift_is_a_minimal_delta() {
+        // Same per-replica shape (2 boards of the same design), count 2→3:
+        // keep both existing lanes, add exactly one, retire nothing.
+        let two = Planner::new(fleet(4), PlannerConfig::default());
+        let three = Planner::new(fleet(6), PlannerConfig::default());
+        let w2 = vec![w("alexnet", 40.0, 60.0).with_replicas(2)];
+        let w3 = vec![w("alexnet", 40.0, 60.0).with_replicas(3)];
+        let a = two.plan_allocation(&w2, &[4]).unwrap();
+        let b = three.plan_allocation(&w3, &[6]).unwrap();
+        assert_eq!(a.deployments.len(), 2);
+        assert_eq!(b.deployments.len(), 3);
+        assert_eq!(a.deployments[0].n_boards, b.deployments[0].n_boards);
+        let d = diff_plans(&a, &b);
+        assert_eq!(d.keep, vec!["alexnet", "alexnet"]);
+        assert_eq!(d.add.len(), 1, "{d:?}");
+        assert!(d.retire.is_empty(), "{d:?}");
+        // And the reverse drift retires exactly one lane, adds none.
+        let d = diff_plans(&b, &a);
+        assert_eq!(d.keep.len(), 2);
+        assert!(d.add.is_empty(), "{d:?}");
+        assert_eq!(d.retire, vec!["alexnet"]);
+        // A shape change (replica size 2 → 3 boards) churns every lane.
+        let resized = Planner::new(fleet(6), PlannerConfig::default())
+            .plan_allocation(&[w("alexnet", 40.0, 60.0).with_replicas(2)], &[6])
+            .unwrap();
+        let d = diff_plans(&a, &resized);
+        assert!(d.keep.is_empty(), "{d:?}");
+        assert_eq!(d.retire.len(), 2);
+        assert_eq!(d.add.len(), 2);
     }
 
     #[test]

@@ -7,16 +7,19 @@
 //!
 //! 1. **Describe** the fleet (`FleetSpec`, optionally heterogeneous) and
 //!    the traffic mix (`WorkloadSpec`: model, Poisson rate, deadline).
-//! 2. **Plan** (`Planner`): enumerate fleet compositions, run the fast DSE
-//!    / reference tilings + partition search per sub-cluster, place each
-//!    network on its `Pm × (Pb·Pr·Pc)` torus sub-grid, and pick the split
-//!    minimizing worst-case deadline-miss risk (`miss_risk`, an M/D/1
-//!    sojourn-tail estimate).
+//! 2. **Plan** (`Planner`): enumerate fleet compositions **and replica
+//!    splits** (`ReplicaPolicy`: R independent k-board tori per model,
+//!    each taking `rate/R` — chosen whenever they beat one R·k lock-step
+//!    cluster, i.e. past the scaling curve's communication knee), run the
+//!    fast DSE / reference tilings + partition search per sub-cluster,
+//!    place each replica on its own disjoint `Pm × (Pb·Pr·Pc)` torus
+//!    sub-grid, and pick the split minimizing worst-case deadline-miss
+//!    risk (`miss_risk_batched`, an M/D/1 sojourn-tail estimate).
 //! 3. **Serve** (`run_scenario`): each planned sub-cluster becomes one
 //!    `SimClusterBackend` lane of `serving::Server::start_plan`; mixed
-//!    traffic is EDF-batched, plan-routed, and executed against the
-//!    discrete cluster simulator, returning per-model p50/p99 latency and
-//!    miss rates.
+//!    traffic is EDF-batched, plan-routed (replica lanes balanced by the
+//!    `PlanRouter`), and executed against the discrete cluster simulator,
+//!    returning per-model p50/p99 latency and miss rates.
 //!
 //! The `fleet` CLI subcommand and the `fleet_scenarios` bench drive this
 //! end-to-end; `EXPERIMENTS.md` §Fleet documents the protocol.
@@ -35,4 +38,4 @@ pub use scenario::{
     lane_spec_for, piecewise_arrivals, run_scenario, stats_table, worst_miss_rate, worst_p99,
     FleetHealth, ModelStats, PhaseSpec, ScenarioConfig, SCENARIO_CLASSES, SCENARIO_IMAGE_ELEMS,
 };
-pub use workload::{parse_mix, reference_design, FleetSpec, WorkloadSpec};
+pub use workload::{parse_mix, reference_design, FleetSpec, ReplicaPolicy, WorkloadSpec};

@@ -1,5 +1,6 @@
 //! The fleet deployment planner: carve `F` FPGAs into torus sub-clusters,
-//! one per served model, minimizing the worst-case deadline-miss risk.
+//! one **or several replicas** per served model, minimizing the worst-case
+//! deadline-miss risk.
 //!
 //! For every composition of the fleet into per-workload board counts the
 //! planner runs the (cheap, post-§Perf) design/partition search on each
@@ -13,12 +14,26 @@
 //! across workloads (tie-broken by total risk, then enumeration order —
 //! deterministic).
 //!
+//! **Replica sub-clusters** (the multi-accelerator analogue of Shen et
+//! al.'s resource partitioning, arXiv:1607.00064): inside a model's board
+//! range of `n` the planner additionally enumerates `R = ⌊n/k⌋` replicas
+//! of `k` boards each (`k = n, …, 1`; `ReplicaPolicy::Fixed` pins `R`).
+//! Each replica is an independent torus sub-cluster taking `rate/R` of the
+//! model's Poisson stream, so its batched M/D/1 risk is scored at the
+//! split rate; the serving layer's `PlanRouter` balances the model's
+//! traffic across the replica lanes. Lock-step wins ties — R > 1 is
+//! chosen exactly when the smaller torus's service time beats the
+//! amortized gain of the big one, which the paper's own scaling curve
+//! (Figure 15) makes true past the communication knee (and in the
+//! non-monotone pockets where awkward cluster sizes force poorly scaling
+//! 1-D partitions).
+//!
 //! Heterogeneous fleets: a sub-cluster spanning mixed boards is planned on
 //! the element-wise weakest member (`FpgaSpec::min_capability`, lock-step
 //! uniform design) and, as an alternative, with the rate-proportional row
 //! partition of `partition::hetero`; the faster estimate wins.
 
-use super::workload::{reference_design, FleetSpec, WorkloadSpec};
+use super::workload::{reference_design, FleetSpec, ReplicaPolicy, WorkloadSpec};
 use crate::analytic::{is_feasible, Design};
 use crate::coordinator::SuperLip;
 use crate::model::zoo;
@@ -74,13 +89,36 @@ struct SubPlan {
     hetero: bool,
 }
 
-/// One deployed sub-cluster of the final plan.
+/// The replica split `best_split` chose for one model's board allocation.
+struct ReplicaSplit {
+    n_replicas: usize,
+    boards_each: usize,
+    /// Worst per-replica risk at the split rate.
+    risk: f64,
+}
+
+/// One deployed sub-cluster of the final plan — one replica of one model
+/// (a model planned with `n_replicas = 1` has exactly one deployment).
 #[derive(Debug, Clone)]
 pub struct Deployment {
     pub workload: WorkloadSpec,
-    /// First board index in the fleet (boards are assigned contiguously).
+    /// First board index in the fleet (boards are assigned contiguously;
+    /// a model's replicas tile disjoint sub-ranges of its allocation).
     pub start: usize,
+    /// Boards of THIS replica's torus.
     pub n_boards: usize,
+    /// Which replica of the model this is (`0..n_replicas`).
+    pub replica: usize,
+    /// Replica count the planner chose for the model.
+    pub n_replicas: usize,
+    /// Total boards of the model's allocation (`≥ n_replicas · n_boards`;
+    /// the remainder `model_boards − n_replicas · n_boards` sits idle when
+    /// the best replica size does not divide the allocation).
+    pub model_boards: usize,
+    /// The slice of the model's Poisson stream this replica serves
+    /// (`workload.rate_rps / n_replicas` — the rate the risk was scored
+    /// at; `workload` always carries the model's FULL rate).
+    pub share_rate_rps: f64,
     /// Effective board spec the design was planned against.
     pub fpga: FpgaSpec,
     pub sim_cfg: SimConfig,
@@ -107,28 +145,48 @@ pub struct Deployment {
     pub hetero: bool,
 }
 
-/// A complete fleet plan.
+/// A complete fleet plan: one `Deployment` per replica sub-cluster, with a
+/// model's replicas stored consecutively (in mix order).
 #[derive(Debug, Clone)]
 pub struct FleetPlan {
     pub deployments: Vec<Deployment>,
-    /// Worst per-workload risk (the minimized objective).
+    /// Worst per-replica risk (the minimized objective).
     pub worst_risk: f64,
 }
 
 impl FleetPlan {
-    /// Per-workload board counts, in mix order.
+    /// Per-workload board totals (the model's whole allocation, idle
+    /// remainder included), in mix order.
     pub fn allocation(&self) -> Vec<usize> {
-        self.deployments.iter().map(|d| d.n_boards).collect()
+        self.deployments
+            .iter()
+            .filter(|d| d.replica == 0)
+            .map(|d| d.model_boards)
+            .collect()
+    }
+
+    /// All replica deployments of one model, in replica order.
+    pub fn model_deployments<'a>(&'a self, model: &'a str) -> impl Iterator<Item = &'a Deployment> {
+        self.deployments
+            .iter()
+            .filter(move |d| d.workload.model == model)
+    }
+
+    /// Replica count the plan chose for `model` (0 when absent).
+    pub fn replicas_of(&self, model: &str) -> usize {
+        self.model_deployments(model).count()
     }
 
     /// Human-readable plan table (CLI / bench output).
     pub fn summary(&self) -> String {
         let mut t = Table::new(&[
-            "Model", "Boards", "Torus", "Design", "Partition", "Svc(ms)", "B", "Util", "Risk",
+            "Model", "Rep", "Boards", "Torus", "Design", "Partition", "Svc(ms)", "B", "Util",
+            "Risk",
         ]);
         for d in &self.deployments {
             t.row(&[
                 d.workload.model.clone(),
+                format!("{}/{}", d.replica + 1, d.n_replicas),
                 format!("{}..{}", d.start, d.start + d.n_boards),
                 format!("{}x{}{}", d.torus.0, d.torus.1, if d.hetero { " (hetero)" } else { "" }),
                 d.design.to_string(),
@@ -291,17 +349,13 @@ impl Planner {
 
     /// Best fleet split for the mix: search all compositions of the fleet
     /// into per-workload board counts (each ≥ 1, boards contiguous in mix
-    /// order), minimizing worst-case risk.
+    /// order) **and** all replica splits of each count, minimizing
+    /// worst-case risk.
     pub fn plan(&self, mix: &[WorkloadSpec]) -> Result<FleetPlan> {
         let f = self.fleet.len();
         let m = mix.len();
         if m == 0 {
             return Err(Error::InvalidArg("empty traffic mix".into()));
-        }
-        if m > f {
-            return Err(Error::InvalidArg(format!(
-                "{m} workloads need at least {m} boards, fleet has {f}"
-            )));
         }
         if let Some(w) = mix
             .iter()
@@ -313,6 +367,19 @@ impl Planner {
                 w.1.model
             )));
         }
+        // Every workload needs at least one board per pinned replica.
+        let need: usize = mix
+            .iter()
+            .map(|w| match w.replicas {
+                ReplicaPolicy::Fixed(r) => r,
+                ReplicaPolicy::Auto => 1,
+            })
+            .sum();
+        if need > f {
+            return Err(Error::InvalidArg(format!(
+                "mix needs at least {need} boards (one per replica), fleet has {f}"
+            )));
+        }
 
         let mut counts = vec![1usize; m];
         let mut best: Option<(f64, f64, Vec<usize>)> = None;
@@ -322,13 +389,13 @@ impl Planner {
     }
 
     /// Plan with a fixed per-workload board allocation (e.g. the naive
-    /// `equal_split` baseline).
+    /// `equal_split` baseline). Each model's allocation is further split
+    /// into its best replica count (`ReplicaPolicy`), replicas tiling
+    /// disjoint contiguous sub-ranges of the model's range.
     pub fn plan_allocation(&self, mix: &[WorkloadSpec], counts: &[usize]) -> Result<FleetPlan> {
-        // One sub-cluster per model: the serving router groups lanes by
-        // model name, so duplicate entries would pool their traffic across
-        // both sub-clusters and void the per-entry risk model. (Replica
-        // sub-clusters for one hot model belong at the serving layer —
-        // `Server::start_plan` already supports them.)
+        // One mix entry per model: the serving router pools a model's
+        // lanes, so duplicate entries would blur the per-entry risk model
+        // (replicas of one entry are planned below, with the rate split).
         for (i, w) in mix.iter().enumerate() {
             if mix[..i].iter().any(|o| o.model == w.model) {
                 return Err(Error::InvalidArg(format!(
@@ -358,35 +425,54 @@ impl Planner {
         let mut start = 0usize;
         let mut worst = 0.0f64;
         for (w, &n) in mix.iter().zip(counts) {
-            let sp = self.subplan(&w.model, start, n)?;
-            let torus = Torus::for_factors(&sp.factors);
-            let (risk, planned_batch) = miss_risk_batched(
-                &sp.service_ms_batch,
-                w.deadline_ms(),
-                w.rate_rps,
-                self.cfg.wait_inflation,
-                w.max_batch,
-            );
-            let s_b = service_at_batch(&sp.service_ms_batch, planned_batch);
-            let rho = w.rate_rps * s_b / planned_batch as f64 / 1e3;
-            worst = worst.max(risk);
-            deployments.push(Deployment {
-                workload: w.clone(),
-                start,
-                n_boards: n,
-                fpga: sp.fpga,
-                sim_cfg: sp.sim_cfg,
-                design: sp.design,
-                factors: sp.factors,
-                torus: (torus.rows, torus.cols),
-                service_cycles: sp.service_cycles,
-                service_ms: sp.service_ms,
-                service_ms_batch: sp.service_ms_batch.clone(),
-                planned_batch,
-                utilization: rho,
-                risk,
-                hetero: sp.hetero,
-            });
+            let split = self.best_split(w, start, n)?.ok_or_else(|| {
+                Error::InvalidArg(format!(
+                    "model `{}` wants {} replicas but its allocation is only {n} board(s)",
+                    w.model,
+                    match w.replicas {
+                        ReplicaPolicy::Fixed(r) => r,
+                        ReplicaPolicy::Auto => unreachable!("auto always splits"),
+                    }
+                ))
+            })?;
+            let (r_count, k) = (split.n_replicas, split.boards_each);
+            let share_rate = w.rate_rps / r_count as f64;
+            for r in 0..r_count {
+                let rep_start = start + r * k;
+                let sp = self.subplan(&w.model, rep_start, k)?;
+                let torus = Torus::for_factors(&sp.factors);
+                let (risk, planned_batch) = miss_risk_batched(
+                    &sp.service_ms_batch,
+                    w.deadline_ms(),
+                    share_rate,
+                    self.cfg.wait_inflation,
+                    w.max_batch,
+                );
+                let s_b = service_at_batch(&sp.service_ms_batch, planned_batch);
+                let rho = share_rate * s_b / planned_batch as f64 / 1e3;
+                worst = worst.max(risk);
+                deployments.push(Deployment {
+                    workload: w.clone(),
+                    start: rep_start,
+                    n_boards: k,
+                    replica: r,
+                    n_replicas: r_count,
+                    model_boards: n,
+                    share_rate_rps: share_rate,
+                    fpga: sp.fpga,
+                    sim_cfg: sp.sim_cfg,
+                    design: sp.design,
+                    factors: sp.factors,
+                    torus: (torus.rows, torus.cols),
+                    service_cycles: sp.service_cycles,
+                    service_ms: sp.service_ms,
+                    service_ms_batch: sp.service_ms_batch.clone(),
+                    planned_batch,
+                    utilization: rho,
+                    risk,
+                    hetero: sp.hetero,
+                });
+            }
             start += n;
         }
         Ok(FleetPlan {
@@ -426,21 +512,22 @@ impl Planner {
 
     /// (worst, total) risk of a composition, with `INFINITY` flattened to a
     /// large finite score so ties among infeasible splits still order by
-    /// how much of the mix misses.
+    /// how much of the mix misses. An allocation that cannot host a pinned
+    /// replica count at all (`Fixed(R)` with fewer than `R` boards) scores
+    /// strictly worse than any constructable miss, so the search never
+    /// elects an unconstructable composition while a constructable one
+    /// exists.
     fn score(&self, mix: &[WorkloadSpec], counts: &[usize]) -> Result<(f64, f64)> {
         const MISS: f64 = 1e18;
+        const UNSAT: f64 = 1e24;
         let mut worst = 0.0f64;
         let mut total = 0.0f64;
         let mut start = 0usize;
         for (w, &n) in mix.iter().zip(counts) {
-            let sp = self.subplan(&w.model, start, n)?;
-            let (mut r, _) = miss_risk_batched(
-                &sp.service_ms_batch,
-                w.deadline_ms(),
-                w.rate_rps,
-                self.cfg.wait_inflation,
-                w.max_batch,
-            );
+            let mut r = match self.best_split(w, start, n)? {
+                Some(split) => split.risk,
+                None => UNSAT,
+            };
             if !r.is_finite() {
                 r = MISS;
             }
@@ -449,6 +536,64 @@ impl Planner {
             start += n;
         }
         Ok((worst, total))
+    }
+
+    /// The best replica split of `n` boards at `start` for workload `w`:
+    /// enumerate replica sizes `k = n, …, 1` with `R = ⌊n/k⌋` identical
+    /// replicas (any remainder sits idle — with non-monotone scaling a
+    /// smaller torus can beat using every board), score each replica's
+    /// batched M/D/1 risk at `rate/R`, and keep the strict best — so the
+    /// full lock-step cluster (`k = n`, the first candidate) wins ties and
+    /// pre-replica plans are reproduced wherever replicas do not strictly
+    /// help. `Fixed(R)` pins the count (`k = ⌊n/R⌋`); returns `None` when
+    /// the allocation cannot host it (`R > n`).
+    ///
+    /// Heterogeneous ranges score every replica (sub-ranges differ);
+    /// homogeneous fleets hit the sub-plan cache after the first.
+    fn best_split(&self, w: &WorkloadSpec, start: usize, n: usize) -> Result<Option<ReplicaSplit>> {
+        let mut candidates: Vec<(usize, usize)> = Vec::new(); // (R, k)
+        match w.replicas {
+            ReplicaPolicy::Fixed(r) => {
+                if r == 0 {
+                    return Err(Error::InvalidArg(format!(
+                        "model `{}`: replica count must be ≥ 1",
+                        w.model
+                    )));
+                }
+                if r > n {
+                    return Ok(None);
+                }
+                candidates.push((r, n / r));
+            }
+            ReplicaPolicy::Auto => {
+                for k in (1..=n).rev() {
+                    candidates.push((n / k, k));
+                }
+            }
+        }
+        let mut best: Option<ReplicaSplit> = None;
+        for (r_count, k) in candidates {
+            let mut risk = 0.0f64;
+            for r in 0..r_count {
+                let sp = self.subplan(&w.model, start + r * k, k)?;
+                let (rep_risk, _) = miss_risk_batched(
+                    &sp.service_ms_batch,
+                    w.deadline_ms(),
+                    w.rate_rps / r_count as f64,
+                    self.cfg.wait_inflation,
+                    w.max_batch,
+                );
+                risk = risk.max(rep_risk);
+            }
+            if best.as_ref().map(|b| risk < b.risk).unwrap_or(true) {
+                best = Some(ReplicaSplit {
+                    n_replicas: r_count,
+                    boards_each: k,
+                    risk,
+                });
+            }
+        }
+        Ok(best)
     }
 
     /// Plan one sub-cluster (cached). Homogeneous fleets normalize the
@@ -703,15 +848,75 @@ mod tests {
         let planner = Planner::new(fleet(5), PlannerConfig::default());
         let mix = vec![w("alexnet", 50.0, 50.0), w("squeezenet", 50.0, 50.0)];
         let plan = planner.plan(&mix).unwrap();
-        assert_eq!(plan.deployments.len(), 2);
-        let mut covered = 0;
-        for d in &plan.deployments {
-            assert_eq!(d.start, covered);
-            covered += d.n_boards;
-            assert_eq!(d.torus.0 * d.torus.1, d.n_boards as u64);
-            assert!(d.service_ms > 0.0);
+        // Model allocations tile the fleet; replicas tile disjoint
+        // sub-ranges of their model's allocation.
+        assert_eq!(plan.allocation().iter().sum::<usize>(), 5);
+        let mut model_start = 0;
+        for w in &mix {
+            let reps: Vec<_> = plan.model_deployments(&w.model).collect();
+            assert!(!reps.is_empty());
+            let n = reps[0].model_boards;
+            for (r, d) in reps.iter().enumerate() {
+                assert_eq!(d.replica, r);
+                assert_eq!(d.n_replicas, reps.len());
+                assert_eq!(d.start, model_start + r * d.n_boards);
+                assert!(d.start + d.n_boards <= model_start + n, "inside the range");
+                assert_eq!(d.torus.0 * d.torus.1, d.n_boards as u64);
+                assert!(d.service_ms > 0.0);
+            }
+            model_start += n;
         }
-        assert_eq!(covered, 5);
+        assert_eq!(model_start, 5);
+    }
+
+    #[test]
+    fn hot_model_elects_replicas_past_the_knee() {
+        // Scaling is non-monotone at awkward sizes (Fig 15's saturation
+        // discussion): alexnet's 6-board lock-step torus serves ~1.4 ms,
+        // its 2-board torus ~2.4 ms — so at 95% of the 6-board service
+        // rate, 3 × 2-board replicas (per-replica ρ ≈ 0.56) strictly beat
+        // the one cluster (ρ = 0.95, divergent wait).
+        let planner = Planner::new(fleet(6), PlannerConfig::default());
+        let s2 = planner.service_ms("alexnet", 2).unwrap();
+        let s6 = planner.service_ms("alexnet", 6).unwrap();
+        let mix = vec![w("alexnet", 0.95 / (s6 / 1e3), 6.0 * s2)];
+        let plan = planner.plan(&mix).unwrap();
+        let reps = plan.replicas_of("alexnet");
+        assert!(reps >= 2, "expected replicas, got {reps}:\n{}", plan.summary());
+        assert!(plan.worst_risk < 1.0, "{}", plan.summary());
+        // The pinned single-cluster plan provably misses the p99 deadline.
+        let single = vec![mix[0].clone().with_replicas(1)];
+        let sp = planner.plan(&single).unwrap();
+        assert_eq!(sp.replicas_of("alexnet"), 1);
+        assert!(
+            sp.worst_risk > 1.0,
+            "single cluster should miss: {}",
+            sp.summary()
+        );
+        // Replica deployments carry the split rate; lock-step the full one.
+        let d = plan.model_deployments("alexnet").next().unwrap();
+        assert!((d.share_rate_rps * d.n_replicas as f64 - d.workload.rate_rps).abs() < 1e-9);
+        assert!((sp.deployments[0].share_rate_rps - single[0].rate_rps).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fixed_replica_policy_pins_the_count() {
+        let planner = Planner::new(fleet(4), PlannerConfig::default());
+        let mix = vec![w("alexnet", 10.0, 100.0).with_replicas(2)];
+        let plan = planner.plan(&mix).unwrap();
+        assert_eq!(plan.replicas_of("alexnet"), 2);
+        let reps: Vec<_> = plan.model_deployments("alexnet").collect();
+        assert_eq!(reps[0].n_boards, 2);
+        assert_eq!(reps[1].start, reps[0].start + 2);
+        // An allocation too small for the pinned count is rejected.
+        assert!(planner
+            .plan_allocation(&[w("alexnet", 10.0, 100.0).with_replicas(8)], &[4])
+            .is_err());
+        // Auto at light load keeps the legacy single cluster (ties go to
+        // lock-step).
+        let auto = planner.plan(&[w("alexnet", 10.0, 100.0)]).unwrap();
+        assert_eq!(auto.replicas_of("alexnet"), 1);
+        assert_eq!(auto.deployments.len(), 1);
     }
 
     #[test]

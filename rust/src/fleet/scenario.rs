@@ -26,8 +26,15 @@ pub const SCENARIO_CLASSES: usize = 8;
 /// Scenario tuning.
 #[derive(Debug, Clone, Copy)]
 pub struct ScenarioConfig {
-    /// Open-loop requests generated per mix entry.
+    /// Open-loop requests generated per mix entry (ignored when
+    /// `duration_s` is set).
     pub requests_per_model: usize,
+    /// When set, every mix entry generates arrivals for this much MODEL
+    /// time instead of a fixed count (≈ `rate × duration` requests each)
+    /// — a hot and a cold entry then cover the same timeline, which a
+    /// fixed per-model count cannot do (the cold stream would stretch the
+    /// run while the hot stream's queue transient gets truncated).
+    pub duration_s: Option<f64>,
     /// PRNG seed (arrivals and payloads replay exactly).
     pub seed: u64,
     /// Wall-clock compression: service times, deadlines and inter-arrivals
@@ -43,6 +50,7 @@ impl Default for ScenarioConfig {
     fn default() -> Self {
         ScenarioConfig {
             requests_per_model: 100,
+            duration_s: None,
             seed: 2026,
             time_scale: 1.0,
             window: Duration::from_micros(200),
@@ -181,21 +189,28 @@ pub fn worst_miss_rate(stats: &[ModelStats]) -> f64 {
 }
 
 /// Run the planned fleet against its own workload mix; returns one stats
-/// row per mix entry (same order as `plan.deployments`).
+/// row per mix entry (mix order — a model's replica lanes are pooled into
+/// its single row).
 pub fn run_scenario(plan: &FleetPlan, cfg: &ScenarioConfig) -> Result<Vec<ModelStats>> {
     if plan.deployments.is_empty() {
         return Err(Error::InvalidArg("empty fleet plan".into()));
     }
-    if cfg.requests_per_model == 0 {
+    if cfg.requests_per_model == 0 && cfg.duration_s.is_none() {
         return Err(Error::InvalidArg("requests_per_model must be ≥ 1".into()));
+    }
+    if let Some(d) = cfg.duration_s {
+        if !d.is_finite() || d <= 0.0 {
+            return Err(Error::InvalidArg("duration_s must be > 0".into()));
+        }
     }
     if !cfg.time_scale.is_finite() || cfg.time_scale <= 0.0 {
         return Err(Error::InvalidArg("time_scale must be > 0".into()));
     }
     let ts = cfg.time_scale;
 
-    // One lane per deployment; replica deployments of one model are grouped
-    // into a replica lane set by the server's plan router.
+    // One lane per deployment; replica deployments of one model are
+    // grouped into a replica lane set by the server's plan router, which
+    // balances the model's stream across them.
     let lanes: Vec<LaneSpec> = plan
         .deployments
         .iter()
@@ -203,15 +218,31 @@ pub fn run_scenario(plan: &FleetPlan, cfg: &ScenarioConfig) -> Result<Vec<ModelS
         .collect();
     let server = Server::start_plan(lanes, ServerConfig::default());
 
+    // One traffic stream and stats row per MODEL (first-replica
+    // deployments, mix order) — the model's full rate, however many
+    // replica lanes serve it.
+    let entries: Vec<&Deployment> = plan.deployments.iter().filter(|d| d.replica == 0).collect();
+
     // Pre-generate the merged Poisson arrival schedule (deterministic by
     // seed; each mix entry draws from its own stream).
     let mut events: Vec<(f64, usize)> = Vec::new();
-    for (si, d) in plan.deployments.iter().enumerate() {
+    for (si, d) in entries.iter().enumerate() {
         let mut rng = SplitMix64::new(cfg.seed ^ (0x9E37 + si as u64));
         let mut t = 0.0f64;
-        for _ in 0..cfg.requests_per_model {
-            t += rng.exp(1.0 / d.workload.rate_rps);
-            events.push((t, si));
+        match cfg.duration_s {
+            Some(dur) => loop {
+                t += rng.exp(1.0 / d.workload.rate_rps);
+                if t >= dur {
+                    break;
+                }
+                events.push((t, si));
+            },
+            None => {
+                for _ in 0..cfg.requests_per_model {
+                    t += rng.exp(1.0 / d.workload.rate_rps);
+                    events.push((t, si));
+                }
+            }
         }
     }
     events.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -219,7 +250,7 @@ pub fn run_scenario(plan: &FleetPlan, cfg: &ScenarioConfig) -> Result<Vec<ModelS
     // Open-loop submission at scaled wall-clock pace.
     let mut payload_rng = SplitMix64::new(cfg.seed.wrapping_mul(0xC0FFEE));
     let mut pending: Vec<Vec<(f32, mpsc::Receiver<InferenceResponse>)>> =
-        plan.deployments.iter().map(|_| Vec::new()).collect();
+        entries.iter().map(|_| Vec::new()).collect();
     let t0 = Instant::now();
     for &(t, si) in &events {
         let target = t0 + Duration::from_secs_f64(t * ts);
@@ -231,14 +262,14 @@ pub fn run_scenario(plan: &FleetPlan, cfg: &ScenarioConfig) -> Result<Vec<ModelS
             .map(|_| payload_rng.signed_unit())
             .collect();
         let checksum: f32 = img.iter().sum();
-        let d = &plan.deployments[si];
+        let d = entries[si];
         let rx = server.submit_to(&d.workload.model, img, d.workload.deadline.mul_f64(ts))?;
         pending[si].push((checksum, rx));
     }
 
     // Collect and score.
-    let mut stats = Vec::with_capacity(plan.deployments.len());
-    for (si, d) in plan.deployments.iter().enumerate() {
+    let mut stats = Vec::with_capacity(entries.len());
+    for (si, d) in entries.iter().enumerate() {
         let mut lat_ms = Vec::new();
         let mut batches = Vec::new();
         let mut misses = 0usize;
@@ -268,7 +299,8 @@ pub fn run_scenario(plan: &FleetPlan, cfg: &ScenarioConfig) -> Result<Vec<ModelS
         };
         stats.push(ModelStats {
             model: d.workload.model.clone(),
-            n_boards: d.n_boards,
+            // Boards actually serving the model across its replicas.
+            n_boards: d.n_boards * d.n_replicas,
             sent,
             completed,
             p50_ms: p50,
@@ -278,10 +310,12 @@ pub fn run_scenario(plan: &FleetPlan, cfg: &ScenarioConfig) -> Result<Vec<ModelS
             } else {
                 0.0
             },
+            // An idle entry (possible in `duration_s` mode when the rate
+            // is tiny) is not failing — score 0, as in the online runner.
             miss_rate: if sent > 0 {
                 (misses + (sent - completed)) as f64 / sent as f64
             } else {
-                1.0
+                0.0
             },
         });
     }
@@ -391,6 +425,7 @@ mod tests {
                 seed: 7,
                 time_scale: 1.0,
                 window: Duration::from_micros(200),
+                ..Default::default()
             },
         )
         .unwrap();
@@ -448,6 +483,48 @@ mod tests {
     }
 
     #[test]
+    fn duration_mode_scales_streams_by_rate() {
+        let planner = Planner::new(
+            FleetSpec::homogeneous(2, FpgaSpec::zcu102()),
+            PlannerConfig::default(),
+        );
+        let alex1 = planner.service_ms("alexnet", 1).unwrap();
+        let sq1 = planner.service_ms("squeezenet", 1).unwrap();
+        // Rates 4:1 — over one shared horizon the sent counts must follow
+        // the rates, not a fixed per-model constant.
+        let hot_rate = 0.4 / (alex1 / 1e3);
+        let mix = vec![
+            WorkloadSpec::new(
+                "alexnet",
+                hot_rate,
+                Duration::from_secs_f64(20.0 * alex1 / 1e3),
+            ),
+            WorkloadSpec::new(
+                "squeezenet",
+                hot_rate / 4.0,
+                Duration::from_secs_f64(20.0 * sq1 / 1e3),
+            ),
+        ];
+        let plan = planner.plan(&mix).unwrap();
+        let horizon = 40.0 * alex1 / 1e3; // ~16 hot arrivals
+        let stats = run_scenario(
+            &plan,
+            &ScenarioConfig {
+                duration_s: Some(horizon),
+                seed: 11,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(stats.len(), 2);
+        let (hot, cold) = (&stats[0], &stats[1]);
+        assert!(hot.sent > cold.sent, "{hot:?} vs {cold:?}");
+        let ratio = hot.sent as f64 / cold.sent.max(1) as f64;
+        assert!((1.5..12.0).contains(&ratio), "rate-proportional: {ratio}");
+        assert_eq!(hot.completed, hot.sent, "all served");
+    }
+
+    #[test]
     fn scenario_rejects_bad_config() {
         let planner = Planner::new(
             FleetSpec::homogeneous(1, FpgaSpec::zcu102()),
@@ -465,5 +542,10 @@ mod tests {
             ..Default::default()
         };
         assert!(run_scenario(&plan, &frozen_clock).is_err());
+        let zero_horizon = ScenarioConfig {
+            duration_s: Some(0.0),
+            ..Default::default()
+        };
+        assert!(run_scenario(&plan, &zero_horizon).is_err());
     }
 }

@@ -9,6 +9,20 @@ use crate::platform::{FpgaSpec, Precision};
 use crate::{Error, Result};
 use std::time::Duration;
 
+/// How many replica sub-clusters a model may be served by (the multi-FPGA
+/// analogue of Shen et al.'s resource partitioning: past the communication
+/// knee, R independent k-board tori each taking `rate/R` beat one R·k
+/// lock-step cluster — see `Planner`'s replica enumeration).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaPolicy {
+    /// The planner enumerates replica counts per allocation and keeps the
+    /// best (lock-step wins ties — the pre-replica behavior).
+    Auto,
+    /// Exactly this many replica sub-clusters (≥ 1; `Fixed(1)` pins the
+    /// model to one lock-step cluster — the single-cluster baseline).
+    Fixed(usize),
+}
+
 /// One model's serving requirement in a mixed-traffic scenario.
 #[derive(Debug, Clone)]
 pub struct WorkloadSpec {
@@ -21,6 +35,8 @@ pub struct WorkloadSpec {
     /// Lane batch cap (real-time serving runs "low or even no batching",
     /// §1 — the artifact set tops out at 4).
     pub max_batch: usize,
+    /// Replica sub-cluster policy (default `Auto`).
+    pub replicas: ReplicaPolicy,
 }
 
 impl WorkloadSpec {
@@ -30,6 +46,7 @@ impl WorkloadSpec {
             rate_rps,
             deadline,
             max_batch: 1,
+            replicas: ReplicaPolicy::Auto,
         }
     }
 
@@ -39,21 +56,35 @@ impl WorkloadSpec {
         self
     }
 
+    /// Pin the replica count (`with_replicas(1)` forces one lock-step
+    /// cluster — the single-cluster baseline the replica bench contrasts).
+    pub fn with_replicas(mut self, replicas: usize) -> Self {
+        assert!(replicas >= 1);
+        self.replicas = ReplicaPolicy::Fixed(replicas);
+        self
+    }
+
+    pub fn with_replica_policy(mut self, policy: ReplicaPolicy) -> Self {
+        self.replicas = policy;
+        self
+    }
+
     pub fn deadline_ms(&self) -> f64 {
         self.deadline.as_secs_f64() * 1e3
     }
 }
 
-/// Parse a traffic mix from `model:rate_rps:deadline_ms[:max_batch]`
-/// entries separated by commas, e.g.
-/// `alexnet:200:20,vgg16:25:100:2`.
+/// Parse a traffic mix from
+/// `model:rate_rps:deadline_ms[:max_batch[:replicas]]` entries separated
+/// by commas, e.g. `alexnet:200:20,vgg16:25:100:2,yolo:8:150:1:2`.
+/// `replicas` is a count (≥ 1) or `auto` (default: the planner decides).
 pub fn parse_mix(s: &str) -> Result<Vec<WorkloadSpec>> {
     let mut out = Vec::new();
     for entry in s.split(',').filter(|e| !e.trim().is_empty()) {
         let parts: Vec<&str> = entry.trim().split(':').collect();
-        if !(3..=4).contains(&parts.len()) {
+        if !(3..=5).contains(&parts.len()) {
             return Err(Error::InvalidArg(format!(
-                "mix entry `{entry}`: expected model:rate_rps:deadline_ms[:max_batch]"
+                "mix entry `{entry}`: expected model:rate_rps:deadline_ms[:max_batch[:replicas]]"
             )));
         }
         let model = parts[0].to_ascii_lowercase();
@@ -75,7 +106,7 @@ pub fn parse_mix(s: &str) -> Result<Vec<WorkloadSpec>> {
             )));
         }
         let mut w = WorkloadSpec::new(&model, rate, Duration::from_secs_f64(deadline_ms / 1e3));
-        if parts.len() == 4 {
+        if parts.len() >= 4 {
             let mb: usize = parts[3]
                 .parse()
                 .map_err(|e| Error::InvalidArg(format!("mix entry `{entry}`: max_batch: {e}")))?;
@@ -85,6 +116,22 @@ pub fn parse_mix(s: &str) -> Result<Vec<WorkloadSpec>> {
                 )));
             }
             w = w.with_max_batch(mb);
+        }
+        if parts.len() == 5 {
+            let spec = parts[4].trim().to_ascii_lowercase();
+            if spec != "auto" {
+                let r: usize = spec.parse().map_err(|e| {
+                    Error::InvalidArg(format!(
+                        "mix entry `{entry}`: replicas must be a count or `auto`: {e}"
+                    ))
+                })?;
+                if r == 0 {
+                    return Err(Error::InvalidArg(format!(
+                        "mix entry `{entry}`: replicas must be ≥ 1 (or `auto`)"
+                    )));
+                }
+                w = w.with_replicas(r);
+            }
         }
         out.push(w);
     }
@@ -172,6 +219,19 @@ mod tests {
         assert_eq!(mix[0].max_batch, 1);
         assert_eq!(mix[1].model, "vgg16");
         assert_eq!(mix[1].max_batch, 2);
+        assert_eq!(mix[0].replicas, ReplicaPolicy::Auto);
+        assert_eq!(mix[1].replicas, ReplicaPolicy::Auto);
+    }
+
+    #[test]
+    fn parse_mix_replica_field() {
+        let mix = parse_mix("alexnet:200:20:1:2,vgg16:25:100:2:auto,yolo:8:150:1:1").unwrap();
+        assert_eq!(mix[0].replicas, ReplicaPolicy::Fixed(2));
+        assert_eq!(mix[1].replicas, ReplicaPolicy::Auto);
+        assert_eq!(mix[2].replicas, ReplicaPolicy::Fixed(1));
+        assert!(parse_mix("alexnet:10:10:1:0").is_err(), "0 replicas");
+        assert!(parse_mix("alexnet:10:10:1:two").is_err());
+        assert!(parse_mix("alexnet:10:10:1:2:9").is_err(), "too many fields");
     }
 
     #[test]

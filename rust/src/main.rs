@@ -61,12 +61,16 @@ USAGE: superlip <command> [--flags]
 
 COMMANDS:
   plan      --net <alexnet|squeezenet|vgg16|yolo> --fpgas N --precision <f32|fx16>
-  fleet     --fpgas N --mix model:rate_rps:deadline_ms[:max_batch],...
+  fleet     --fpgas N --mix model:rate_rps:deadline_ms[:max_batch[:replicas]],...
             [--requests N] [--naive] [--time-scale X] [--co-optimize] [--qsfp]
             [--online [--flip-after S] [--post S] [--tick S] [--kill-board I --kill-at S]]
+            (replicas: a count, or `auto` (default) — the planner may serve a
+             hot model with R independent k-board sub-clusters, splitting its
+             Poisson stream R ways, whenever that beats one R*k lock-step torus)
             (--online: serve the mix, flip the entries' rates mid-run, and
              contrast the frozen static plan with the telemetry-driven
-             controller re-planning + hitlessly migrating lanes)
+             controller re-planning + hitlessly migrating lanes; --kill-board
+             inside one replica quarantines only that replica's lane)
   dse       --net <name> --precision <f32|fx16>
   scale     --net <name> --max-fpgas N [--precision fx16]
   validate

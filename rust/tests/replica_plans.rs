@@ -1,0 +1,277 @@
+//! Replica-plan invariants (PR 4):
+//!
+//! 1. **Disjoint tiling** (property): however the planner splits a model
+//!    into R replicas, the replica tori tile disjoint contiguous board
+//!    sub-ranges inside the model's allocation, and model allocations
+//!    tile the fleet.
+//! 2. **Replica-count drift is minimal** (`diff_plans` R → R+1 produces
+//!    exactly one added lane and zero retires — covered at the unit level
+//!    in `control::replanner`, re-checked here through real planner
+//!    output end-to-end).
+//! 3. **Exactly-one-response across a replica-count migration**: the
+//!    `tests/control_migration.rs` invariant holds while a model's
+//!    replica lane set grows and shrinks under concurrent submitters.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+use superlip::control::diff_plans;
+use superlip::fleet::{FleetSpec, Planner, PlannerConfig, ReplicaPolicy, WorkloadSpec};
+use superlip::platform::FpgaSpec;
+use superlip::serving::{
+    BackendFactory, BatcherConfig, InferBackend, LaneSpec, Server, ServerConfig,
+};
+use superlip::util::{proptest::forall, SplitMix64};
+
+fn w(model: &str, rate: f64, deadline_ms: f64) -> WorkloadSpec {
+    WorkloadSpec::new(model, rate, Duration::from_secs_f64(deadline_ms / 1e3))
+}
+
+/// Property: replicas tile disjoint torus sub-grids, whatever the mix.
+#[test]
+fn replicas_tile_disjoint_subgrids() {
+    const FLEET: usize = 8;
+    // ONE planner: its sub-plan cache makes the 60 random cases cheap.
+    let planner = Planner::new(
+        FleetSpec::homogeneous(FLEET, FpgaSpec::zcu102()),
+        PlannerConfig::default(),
+    );
+    let s1 = planner.service_ms("alexnet", 1).unwrap();
+    let q1 = planner.service_ms("squeezenet", 1).unwrap();
+
+    #[derive(Debug, Clone)]
+    struct Case {
+        split: usize, // boards for model 0 (1..FLEET-1)
+        rate_pct: [u64; 2],
+        dl_mult: [u64; 2],
+        policy: [u64; 2], // 0 = auto, r = Fixed(r)
+    }
+
+    forall(
+        0x5EED_2026,
+        60,
+        |r: &mut SplitMix64| Case {
+            split: r.range(1, (FLEET - 1) as u64) as usize,
+            rate_pct: [r.range(5, 120), r.range(5, 120)],
+            dl_mult: [r.range(1, 40), r.range(1, 40)],
+            policy: [r.range(0, 3), r.range(0, 3)],
+        },
+        |c: &Case| {
+            let counts = vec![c.split, FLEET - c.split];
+            let mk = |model: &str, svc1: f64, i: usize| {
+                let mut spec = w(
+                    model,
+                    c.rate_pct[i] as f64 / 100.0 / (svc1 / 1e3),
+                    c.dl_mult[i] as f64 * svc1,
+                );
+                if c.policy[i] > 0 {
+                    // A pinned count larger than the allocation is a
+                    // legitimate planner error, not a tiling violation —
+                    // clamp into range.
+                    spec = spec.with_replicas((c.policy[i] as usize).min(counts[i]));
+                }
+                spec
+            };
+            let mix = vec![mk("alexnet", s1, 0), mk("squeezenet", q1, 1)];
+            let plan = match planner.plan_allocation(&mix, &counts) {
+                Ok(p) => p,
+                Err(_) => return false,
+            };
+            // Model allocations tile the fleet in mix order.
+            if plan.allocation() != counts {
+                return false;
+            }
+            let mut model_start = 0usize;
+            for (mi, m) in mix.iter().enumerate() {
+                let reps: Vec<_> = plan.model_deployments(&m.model).collect();
+                if reps.is_empty() {
+                    return false;
+                }
+                let r_count = reps.len();
+                if let ReplicaPolicy::Fixed(r) = m.replicas {
+                    if r_count != r {
+                        return false;
+                    }
+                }
+                let k = reps[0].n_boards;
+                for (ri, d) in reps.iter().enumerate() {
+                    let ok = d.replica == ri
+                        && d.n_replicas == r_count
+                        && d.model_boards == counts[mi]
+                        && d.n_boards == k
+                        && d.start == model_start + ri * k
+                        && d.start + d.n_boards <= model_start + counts[mi]
+                        && d.torus.0 * d.torus.1 == d.n_boards as u64
+                        && (d.share_rate_rps * r_count as f64 - m.rate_rps).abs()
+                            < 1e-9 * m.rate_rps;
+                    if !ok {
+                        return false;
+                    }
+                }
+                // Replicas fit inside the allocation; under Auto, R is
+                // maximal for the chosen k (a further size-k replica would
+                // not fit — Fixed pins R, so its remainder may be larger).
+                if r_count * k > counts[mi] {
+                    return false;
+                }
+                if m.replicas == ReplicaPolicy::Auto && counts[mi] - r_count * k >= k {
+                    return false;
+                }
+                model_start += counts[mi];
+            }
+            model_start == FLEET
+        },
+    );
+}
+
+/// R → R+1 drift through REAL planner output is exactly one added lane.
+#[test]
+fn replica_growth_is_one_added_lane() {
+    let mk_plan = |boards: usize, reps: usize| {
+        let planner = Planner::new(
+            FleetSpec::homogeneous(boards, FpgaSpec::zcu102()),
+            PlannerConfig::default(),
+        );
+        let mix = vec![w("alexnet", 60.0, 80.0).with_replicas(reps)];
+        planner.plan_allocation(&mix, &[boards]).unwrap()
+    };
+    // 2×2 boards → 3×2 boards: same per-replica shape, one more lane.
+    let two = mk_plan(4, 2);
+    let three = mk_plan(6, 3);
+    let d = diff_plans(&two, &three);
+    assert_eq!(d.keep.len(), 2, "{d:?}");
+    assert_eq!(d.add.len(), 1, "{d:?}");
+    assert_eq!(d.retire.len(), 0, "{d:?}");
+    // The added index is the third replica of the hot model.
+    assert_eq!(three.deployments[d.add[0]].replica, 2);
+}
+
+/// Deterministic stub backend: logits[0] = sum(image), logits[1] = lane tag.
+struct Stub {
+    delay: Duration,
+    tag: f32,
+}
+
+impl InferBackend for Stub {
+    fn image_elems(&self) -> usize {
+        4
+    }
+    fn classes(&self) -> usize {
+        2
+    }
+    fn max_batch(&self) -> usize {
+        2
+    }
+    fn infer(&self, images: &[f32], n: usize) -> superlip::Result<Vec<f32>> {
+        std::thread::sleep(self.delay);
+        let mut out = Vec::with_capacity(n * 2);
+        for i in 0..n {
+            out.push(images[i * 4..(i + 1) * 4].iter().sum());
+            out.push(self.tag);
+        }
+        Ok(out)
+    }
+}
+
+fn lane(tag: f32) -> LaneSpec {
+    LaneSpec {
+        model: "m".into(),
+        factories: vec![Box::new(move || {
+            Ok(Box::new(Stub {
+                delay: Duration::from_micros(500),
+                tag,
+            }) as Box<dyn InferBackend>)
+        }) as BackendFactory],
+        batcher: BatcherConfig {
+            max_batch: 2,
+            window: Duration::from_micros(300),
+            deadline_margin: Duration::from_micros(300),
+        },
+    }
+}
+
+/// The control-migration invariant across replica-COUNT migrations: while
+/// 3 submitters fire continuously, the model's replica lane set grows
+/// 2 → 3 and shrinks 3 → 2 repeatedly; every accepted request gets
+/// exactly one response and the books balance.
+#[test]
+fn exactly_one_response_across_replica_count_migrations() {
+    const SUBMITTERS: usize = 3;
+    const PER_SUBMITTER: usize = 100;
+    const ROUNDS: usize = 8;
+
+    let srv = Arc::new(Server::start_plan(
+        vec![lane(0.0), lane(1.0)],
+        ServerConfig::default(),
+    ));
+    let refused = Arc::new(AtomicUsize::new(0));
+
+    let mut handles = Vec::new();
+    for sid in 0..SUBMITTERS {
+        let srv = srv.clone();
+        let refused = refused.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut responses = Vec::new();
+            for i in 0..PER_SUBMITTER {
+                let v = (sid * PER_SUBMITTER + i) as f32;
+                match srv.submit_to("m", vec![v, 0.0, 0.0, 0.0], Duration::from_secs(30)) {
+                    Ok(rx) => responses.push((v, rx)),
+                    Err(_) => {
+                        refused.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                std::thread::sleep(Duration::from_micros(150));
+            }
+            let mut got = 0usize;
+            for (v, rx) in responses {
+                let r = rx
+                    .recv_timeout(Duration::from_secs(20))
+                    .unwrap_or_else(|e| panic!("request {v} lost in replica migration: {e}"));
+                assert_eq!(r.logits[0], v, "response landed on the wrong request");
+                assert!(
+                    rx.try_recv().is_err(),
+                    "request {v} answered more than once"
+                );
+                got += 1;
+            }
+            got
+        }));
+    }
+
+    // Grow to 3 replicas, then shrink back to 2, repeatedly — always
+    // make-before-break (the shrink only retires once 3 lanes serve).
+    let migrator = {
+        let srv = srv.clone();
+        std::thread::spawn(move || {
+            let mut live = vec![0usize, 1usize];
+            for round in 0..ROUNDS {
+                let fresh = srv.add_lane(lane((round + 2) as f32));
+                live.push(fresh);
+                std::thread::sleep(Duration::from_millis(4));
+                // Shrink: retire the OLDEST replica lane (blocking drain —
+                // everything it queued is still served).
+                let victim = live.remove(0);
+                srv.retire_lane(victim).expect("victim lane was live");
+                std::thread::sleep(Duration::from_millis(4));
+            }
+            live
+        })
+    };
+
+    let mut total = 0usize;
+    for h in handles {
+        total += h.join().expect("submitter panicked");
+    }
+    let live = migrator.join().expect("migrator panicked");
+    assert_eq!(live.len(), 2, "net replica count restored");
+    assert_eq!(refused.load(Ordering::Relaxed), 0, "make-before-break never refuses");
+    assert_eq!(total, SUBMITTERS * PER_SUBMITTER);
+    let m = srv.shutdown();
+    assert_eq!(m.completed(), total, "one completion per submission");
+    assert_eq!(m.arrivals(), total as u64);
+    assert_eq!(
+        srv.lane_load().iter().sum::<u64>(),
+        0,
+        "no request left accounted outstanding"
+    );
+}

@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""CI perf-trajectory gate: compare a bench run's JSON output (emitted by
+the bench harness via `--json <path>` / `SUPERLIP_BENCH_JSON`) against the
+baseline JSON checked into the repo root (BENCH_fleet.json,
+BENCH_control.json).
+
+Usage:
+    python3 tools/compare_bench.py <baseline.json> <current.json>
+
+Rules (per metric listed in the BASELINE — extra metrics in the current
+run are informational only):
+
+* unit "ms" (latencies): FAIL when
+      current > baseline * (1 + rel) + 1.0 ms
+* unit "%" (miss rates): FAIL when
+      current > baseline + max(2.0, rel * 100 * baseline / 100) points
+  (i.e. an absolute 2-point floor so near-zero baselines are not
+  infinitely strict)
+* other units: informational only.
+
+`rel` defaults to 0.10 (the ">10% regression" contract) and can be
+overridden per metric with a `"rel"` key in the baseline entry — used for
+provisional baselines seeded from the analytic event-sim port rather than
+a real CI run (see the `_comment` in each baseline file). Lower-is-worse
+metrics only: improvements never fail, and the script prints a refreshed
+baseline block so maintainers can tighten provisional entries once real
+runner numbers exist.
+
+Exit code: 0 = within tolerance, 1 = regression, 2 = usage/format error.
+"""
+import json
+import sys
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"compare_bench: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    base_doc, cur_doc = load(sys.argv[1]), load(sys.argv[2])
+    base = base_doc.get("metrics", {})
+    cur = cur_doc.get("metrics", {})
+    if base_doc.get("quick") is not None and cur_doc.get("quick") is not None:
+        if base_doc["quick"] != cur_doc["quick"]:
+            print(
+                f"compare_bench: WARNING: baseline quick={base_doc['quick']} "
+                f"vs current quick={cur_doc['quick']} — numbers are not "
+                "directly comparable; gating anyway."
+            )
+
+    failures, rows = [], []
+    for label, b in base.items():
+        if label.startswith("_"):
+            continue
+        bv, unit = b.get("value"), b.get("unit", "")
+        rel = float(b.get("rel", 0.10))
+        c = cur.get(label)
+        if c is None or c.get("value") is None:
+            failures.append(f"{label}: missing from current run")
+            rows.append((label, bv, None, unit, "MISSING"))
+            continue
+        cv = c["value"]
+        if bv is None:
+            rows.append((label, bv, cv, unit, "seed-me"))
+            continue
+        if unit == "ms":
+            limit = bv * (1.0 + rel) + 1.0
+            verdict = "FAIL" if cv > limit else "ok"
+        elif unit == "%":
+            limit = bv + max(2.0, rel * bv)
+            verdict = "FAIL" if cv > limit else "ok"
+        else:
+            limit, verdict = None, "info"
+        if verdict == "FAIL":
+            failures.append(
+                f"{label}: {cv:.3f}{unit} exceeds baseline {bv:.3f}{unit} "
+                f"(limit {limit:.3f}{unit}, rel {rel:.0%})"
+            )
+        rows.append((label, bv, cv, unit, verdict))
+
+    name = base_doc.get("bench", "?")
+    print(f"perf gate: {name} ({sys.argv[2]} vs {sys.argv[1]})")
+    for label, bv, cv, unit, verdict in rows:
+        btxt = "-" if bv is None else f"{bv:.3f}"
+        ctxt = "-" if cv is None else f"{cv:.3f}"
+        print(f"  [{verdict:>7}] {label:<44} base {btxt:>10} {unit:<3} now {ctxt:>10} {unit}")
+
+    # Refreshed baseline block for maintainers tightening provisional seeds.
+    refreshed = {
+        label: {"value": (cur.get(label) or {}).get("value"), "unit": b.get("unit", "")}
+        for label, b in base.items()
+        if not label.startswith("_")
+    }
+    print("refreshed baseline metrics (paste into the BENCH_*.json to tighten):")
+    print(json.dumps(refreshed, indent=2))
+
+    if failures:
+        print("\nPERF REGRESSION:")
+        for f in failures:
+            print(f"  {f}")
+        sys.exit(1)
+    print("\nperf gate passed")
+
+
+if __name__ == "__main__":
+    main()
