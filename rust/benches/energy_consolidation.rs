@@ -1,0 +1,221 @@
+//! Energy-aware elastic consolidation (EXPERIMENTS.md §Energy): a hot
+//! model cools off mid-run, and the power-managed controller must cut
+//! fleet average watts ≥ 20% vs the static plan — with no deadline-miss
+//! regression, exactly one response per request, and zero requests routed
+//! to a non-Active board — then scale back out through a board wake when
+//! the traffic returns.
+//!
+//! Self-calibrated three-phase scenario on a 4-board fleet:
+//!
+//! * **hot** — alexnet at 0.55 of its 3-board service rate (the
+//!   `control_drift` operating point) + a cold squeezenet;
+//! * **cool** — alexnet collapses to 15% of its 1-board rate. The drift
+//!   detector's expected-arrivals collapse trigger fires (observed
+//!   arrivals alone could never gate a silent stream), the re-planner's
+//!   energy objective consolidates both models onto one board each, and
+//!   the controller powers the freed boards down. The static plan burns
+//!   idle watts on every board forever;
+//! * **re-warm** — alexnet returns to the hot rate. The controller must
+//!   wake a powered-off board BEFORE routing to it (the old lane keeps
+//!   serving through the wake — make-before-break absorbs the latency).
+//!
+//! The watts ledger integrates planned power (idle + dynamic + B2B per
+//! §5C) over the run; the acceptance contrast is the cool phase's fleet
+//! average.
+
+use std::time::Duration;
+use superlip::bench::Harness;
+use superlip::control::{run_drift_scenario, ControlConfig, DriftConfig, OnlineConfig, PowerGating};
+use superlip::fleet::{stats_table, FleetSpec, PhaseSpec, Planner, PlannerConfig, WorkloadSpec};
+use superlip::platform::FpgaSpec;
+use superlip::power;
+use superlip::report;
+
+const FLEET_SIZE: usize = 4;
+
+fn main() {
+    let mut h = Harness::new("energy_consolidation");
+    let fleet = FleetSpec::homogeneous(FLEET_SIZE, FpgaSpec::zcu102());
+    let pcfg = PlannerConfig::default();
+    let planner = Planner::new(fleet.clone(), pcfg);
+
+    let probe = |model: &str, n: usize| planner.service_ms(model, n).expect("probe") / 1e3;
+    let (a1, a3) = (probe("alexnet", 1), probe("alexnet", 3));
+    let q1 = probe("squeezenet", 1);
+    let hot = 0.55 / a3;
+    // 15% of the 1-board rate: low enough that one board serves it at
+    // ρ ≈ 0.15 (the consolidation verdict is identical down to 0.05),
+    // high enough that the cool phase has ~25 samples — a single
+    // wall-jitter straggler then moves the miss rate by ~4 pp, not 12.
+    let trickle = 0.15 / a1;
+    let cold = 0.25 / q1;
+    let mix = vec![
+        WorkloadSpec::new("alexnet", hot, Duration::from_secs_f64(6.0 * a1)),
+        WorkloadSpec::new("squeezenet", cold, Duration::from_secs_f64(6.0 * q1)),
+    ];
+    println!(
+        "  calibration: alexnet s1 {} s3 {} (hot {hot:.0} rps, trickle {trickle:.1} rps), squeezenet s1 {}",
+        report::ms(a1 * 1e3),
+        report::ms(a3 * 1e3),
+        report::ms(q1 * 1e3)
+    );
+
+    // tick 0.1 s → the hot stream expects ~28 arrivals per window, well
+    // over the collapse trigger's expected-arrivals floor (12), while the
+    // Monte-Carlo spurious-fire rate at that level is < 1e-3 per run.
+    let tick_s = 0.1;
+    let (hot_s, cool_s, rewarm_s) = if h.is_quick() {
+        (0.6, 1.0, 0.6)
+    } else {
+        (1.0, 1.5, 0.8)
+    };
+    let phases = vec![
+        PhaseSpec {
+            duration_s: hot_s,
+            rates_rps: vec![hot, cold],
+        },
+        PhaseSpec {
+            duration_s: cool_s,
+            rates_rps: vec![trickle, cold],
+        },
+        PhaseSpec {
+            duration_s: rewarm_s,
+            rates_rps: vec![hot, cold],
+        },
+    ];
+    let cfg = OnlineConfig {
+        seed: 2026,
+        time_scale: 0.5,
+        tick_s,
+        power: Some(PowerGating { wake_latency_s: 0.1 }),
+        recv_timeout: Duration::from_secs(60),
+        control: ControlConfig {
+            drift: DriftConfig {
+                min_arrivals: 15,
+                hysteresis: 3,
+                ..DriftConfig::default()
+            },
+            ..ControlConfig::default()
+        },
+        ..OnlineConfig::default()
+    };
+    let plan = planner.plan(&mix).expect("plan");
+    h.table("initial plan (hot mix)", &plan.summary());
+    h.table("initial power budget", &power::plan_power(&plan).summary());
+
+    let run = |label: &str, controlled: bool, h: &mut Harness| {
+        let out = run_drift_scenario(&fleet, pcfg, &mix, &phases, &cfg, controlled)
+            .expect("scenario");
+        for (pi, rows) in out.phase_stats.iter().enumerate() {
+            h.table(
+                &format!("{label} — phase {pi} ({:.1} W fleet avg)", out.avg_watts[pi]),
+                &stats_table(rows),
+            );
+        }
+        for e in &out.events {
+            println!("    [control] {e}");
+        }
+        out
+    };
+    let stat = run("static plan (always-on)", false, &mut h);
+    let ctl = run("controlled (elastic consolidation)", true, &mut h);
+
+    let (sw, cw) = (stat.avg_watts[1], ctl.avg_watts[1]);
+    let saved = (1.0 - cw / sw) * 100.0;
+    // Deadline-normalized worst p99 (fraction of each model's deadline) —
+    // consolidation trades unused speed for watts, so raw ms on the
+    // consolidated model may grow while every deadline still clears; the
+    // regression contract is on deadlines, not on idle speed.
+    let norm_p99 = |rows: &[superlip::fleet::ModelStats]| -> f64 {
+        rows.iter()
+            .zip(&mix)
+            .map(|(r, w)| r.p99_ms / w.deadline_ms())
+            .fold(f64::NAN, f64::max)
+    };
+    let (sp, cp) = (norm_p99(&stat.phase_stats[1]), norm_p99(&ctl.phase_stats[1]));
+    let (sm, cm) = (stat.worst_miss_rate(1), ctl.worst_miss_rate(1));
+    let j_per_inf = {
+        let done: usize = ctl
+            .phase_stats
+            .iter()
+            .flat_map(|rows| rows.iter().map(|r| r.completed))
+            .sum();
+        ctl.fleet_joules / done.max(1) as f64
+    };
+
+    h.record("cool-phase fleet watts, static", sw, "W");
+    h.record("cool-phase fleet watts, controlled", cw, "W");
+    h.record("watts saved by consolidation", saved, "");
+    h.record("cool-phase worst miss, controlled", cm * 100.0, "%");
+    h.record("cool-phase norm p99, controlled", cp * 100.0, "");
+    h.record("J per inference, controlled", j_per_inf, "J/inf");
+    h.record("re-plans", ctl.replans as f64, "");
+    h.record("boards powered off at end", ctl.powered_off as f64, "");
+    println!(
+        "  consolidation cuts cool-phase watts {saved:.0}% ({sw:.1} → {cw:.1} W); \
+         norm p99 {sp:.2} → {cp:.2}, miss {:.1}% → {:.1}%",
+        sm * 100.0,
+        cm * 100.0
+    );
+
+    // Acceptance (ISSUE 5): ≥20% fleet watts cut on the cooled phase...
+    assert!(
+        cw <= 0.8 * sw,
+        "consolidation must cut ≥20% of fleet watts: static {sw:.1} W vs controlled {cw:.1} W"
+    );
+    // ...with no deadline regression (both runs must clear deadlines
+    // comfortably; squeezenet — identical in both — dominates the norm).
+    // Slack of ~one straggler on the ~25-request trickle stream; the
+    // BENCH_energy.json gate and the norm-p99 bound carry the tighter
+    // trajectory contract.
+    assert!(
+        cm <= sm + 0.05,
+        "no miss regression: controlled {:.1}% vs static {:.1}%",
+        cm * 100.0,
+        sm * 100.0
+    );
+    assert!(
+        cp < 0.7,
+        "cool-phase p99 must clear every deadline with headroom (norm {cp:.2})"
+    );
+    // The controller consolidated AND re-expanded (2 re-plans; tolerate a
+    // spurious detector fire or two).
+    assert!(
+        (2..=4).contains(&ctl.replans),
+        "expected consolidate + re-warm re-plans, got {} ({:?})",
+        ctl.replans,
+        ctl.events
+    );
+    assert!(
+        ctl.events.iter().any(|e| e.contains("powered down boards")),
+        "consolidation must power boards down: {:?}",
+        ctl.events
+    );
+    assert!(
+        ctl.events.iter().any(|e| e.contains("waking boards")),
+        "the re-warm must wake boards before routing: {:?}",
+        ctl.events
+    );
+    assert!(
+        ctl.powered_off >= 1,
+        "the re-warmed plan still leaves surplus boards off ({} off)",
+        ctl.powered_off
+    );
+    // Exactly one response per request across both migrations (nothing
+    // was killed — a dropped or double response would break the counts).
+    for rows in &ctl.phase_stats {
+        for r in rows {
+            assert_eq!(
+                r.completed, r.sent,
+                "{}: every request gets exactly one response across consolidation",
+                r.model
+            );
+        }
+    }
+    // And not one batch was served by a non-Active board.
+    assert_eq!(
+        ctl.power_violations, 0,
+        "no request is ever routed to a non-Active board"
+    );
+    h.finish();
+}

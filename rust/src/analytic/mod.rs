@@ -17,7 +17,7 @@ mod xfer;
 pub use bottleneck::{detect, Bottleneck};
 pub use design::Design;
 pub use latency::{layer_latency, network_latency, LayerLatency, SliceDims};
-pub use resources::{check_feasible, is_feasible, ResourceUsage};
+pub use resources::{check_feasible, is_feasible, usage, ResourceUsage};
 pub use xfer::{
     xfer_layer_latency, xfer_layer_latency_ref, xfer_network_latency, xfer_network_latency_ref,
     ClusterLayerLatency, XferMode,

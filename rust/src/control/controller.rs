@@ -43,7 +43,9 @@
 use super::drift::{DriftConfig, DriftDecision, DriftDetector};
 use super::replanner::{diff_plans, Replanner};
 use super::telemetry::{TelemetryFrame, TelemetryHub};
-use crate::fleet::{lane_spec_for, FleetHealth, FleetPlan, WorkloadSpec};
+use crate::energy::BOARD_IDLE_W;
+use crate::fleet::{lane_spec_for, Deployment, FleetHealth, FleetPlan, WorkloadSpec};
+use crate::power::{FleetPower, PowerState};
 use crate::serving::Server;
 use crate::{Error, Result};
 use std::collections::HashMap;
@@ -67,6 +69,12 @@ pub struct ControlConfig {
     pub window: Duration,
     /// Board-failure switches (enables health-gated lanes + repair).
     pub health: Option<FleetHealth>,
+    /// Board power-state machine (enables elastic consolidation): freed
+    /// boards are powered down after migrations, and boards a re-plan
+    /// needs are woken BEFORE any traffic is routed to them. Wire the
+    /// same machine into `health` (`FleetHealth::with_power`) so the
+    /// serving gate enforces it.
+    pub power: Option<FleetPower>,
 }
 
 impl Default for ControlConfig {
@@ -78,6 +86,7 @@ impl Default for ControlConfig {
             time_scale: 1.0,
             window: Duration::from_micros(200),
             health: None,
+            power: None,
         }
     }
 }
@@ -100,6 +109,24 @@ struct LaneBook {
     model: String,
     lane: usize,
     boards: Vec<usize>,
+    /// Planned run-time watts of the lane's torus (`Deployment::watts`).
+    watts: f64,
+}
+
+/// A lane the controller wants to stand up but whose boards are still
+/// waking — it goes live (and only then are the lanes it replaces
+/// retired) once the wake deadline passes.
+struct PendingLane {
+    dep: Deployment,
+    boards: Vec<usize>,
+    ready_at_s: f64,
+}
+
+/// A lane draining toward reap, with the boards it frees once drained —
+/// one record per retire, so the lane↔boards pairing is structural.
+struct RetiringLane {
+    lane: usize,
+    boards: Vec<usize>,
 }
 
 /// The online re-planning controller over one live server.
@@ -119,8 +146,14 @@ pub struct Controller {
     books: Vec<LaneBook>,
     /// Original indices of surviving boards, in replanner fleet order.
     fleet_ids: Vec<usize>,
-    /// Lanes draining toward reap.
-    retiring: Vec<usize>,
+    /// Lanes draining toward reap, with the boards they free — powered
+    /// down at reap time if no live lane re-claimed them.
+    retiring: Vec<RetiringLane>,
+    /// Lanes waiting for their boards to finish waking (rate-rise path).
+    pending_adds: Vec<PendingLane>,
+    /// Books pulled out of service but whose `begin_retire` is deferred
+    /// until every pending lane is live (make-before-break across a wake).
+    deferred_retires: Vec<LaneBook>,
     /// Lane → (consecutive starved windows, arrivals accumulated over
     /// them) — the telemetry-fallback death evidence.
     dead_streak: HashMap<usize, (usize, u64)>,
@@ -152,7 +185,7 @@ impl Controller {
             .filter(|d| d.replica == 0)
             .map(|d| d.workload.clone())
             .collect();
-        let books = plan
+        let books: Vec<LaneBook> = plan
             .deployments
             .iter()
             .enumerate()
@@ -160,11 +193,39 @@ impl Controller {
                 model: d.workload.model.clone(),
                 lane: i,
                 boards: (d.start..d.start + d.n_boards).collect(),
+                watts: d.watts,
             })
             .collect();
-        let fleet_ids = (0..replanner.fleet().len()).collect();
+        let fleet_ids: Vec<usize> = (0..replanner.fleet().len()).collect();
         let hub = TelemetryHub::new(server.clone(), cfg.time_scale, cfg.history.max(1));
         let detector = DriftDetector::new(cfg.drift);
+        let mut events = Vec::new();
+        // Power gating: lane boards go Active; the plan's power-down
+        // candidates (idle remainder) are gated off right away instead of
+        // idling at ~20 W each.
+        if let Some(p) = &cfg.power {
+            let now = p.now();
+            for b in books.iter().flat_map(|bk| bk.boards.iter()) {
+                p.set_active_at(*b, now).map_err(|e| {
+                    Error::InvalidArg(format!("initial plan routed to an unusable board: {e}"))
+                })?;
+            }
+            let owned: Vec<usize> = books.iter().flat_map(|bk| bk.boards.clone()).collect();
+            let down: Vec<usize> = fleet_ids
+                .iter()
+                .copied()
+                .filter(|b| !owned.contains(b))
+                .collect();
+            for &b in &down {
+                let _ = p.power_down_at(b, now);
+            }
+            if !down.is_empty() {
+                events.push(format!(
+                    "powered down idle remainder boards {down:?} ({:.0} W saved)",
+                    down.len() as f64 * BOARD_IDLE_W
+                ));
+            }
+        }
         Ok(Controller {
             server,
             hub,
@@ -176,8 +237,10 @@ impl Controller {
             books,
             fleet_ids,
             retiring: Vec::new(),
+            pending_adds: Vec::new(),
+            deferred_retires: Vec::new(),
             dead_streak: HashMap::new(),
-            events: Vec::new(),
+            events,
             replans: 0,
         })
     }
@@ -204,10 +267,71 @@ impl Controller {
         self.books.iter().filter(|b| b.model == model).count()
     }
 
-    /// One control window: reap drained lanes, poll telemetry, decide,
-    /// and (when drift sustains) re-plan + migrate.
+    /// The power machine, if consolidation is wired.
+    pub fn power(&self) -> Option<&FleetPower> {
+        self.cfg.power.as_ref()
+    }
+
+    /// Current fleet draw (planned watts, not a measurement): every board
+    /// owned by a serving lane — live books AND deferred-retire lanes,
+    /// which are the model's only capacity while its replacement wakes —
+    /// draws its share of the lane's torus watts; unowned powered boards
+    /// idle at `BOARD_IDLE_W` (boards of draining lanes land here — the
+    /// drain overlap is the PR-3 modeling shortcut, so the replacement
+    /// lane carries the dynamic term); powered-off boards draw nothing;
+    /// dead boards left the fleet.
+    pub fn fleet_watts(&self) -> f64 {
+        let mut total = 0.0;
+        for &b in &self.fleet_ids {
+            if let Some(book) = self
+                .books
+                .iter()
+                .chain(self.deferred_retires.iter())
+                .find(|bk| bk.boards.contains(&b))
+            {
+                total += book.watts / book.boards.len() as f64;
+            } else {
+                let powered = match &self.cfg.power {
+                    Some(p) => p.state(b) != PowerState::PoweredOff,
+                    None => true,
+                };
+                if powered {
+                    total += BOARD_IDLE_W;
+                }
+            }
+        }
+        total
+    }
+
+    /// Planned watts of `model`'s serving lanes (live + deferred-retire).
+    pub fn model_watts(&self, model: &str) -> f64 {
+        self.books
+            .iter()
+            .chain(self.deferred_retires.iter())
+            .filter(|b| b.model == model)
+            .map(|b| b.watts)
+            .sum()
+    }
+
+    /// One control window: finish pending wakes, reap drained lanes (and
+    /// power their boards down), poll telemetry, decide, and (when drift
+    /// sustains) re-plan + migrate.
     pub fn tick(&mut self) -> TickReport {
-        self.retiring.retain(|&l| !self.server.finish_retire(l));
+        self.service_pending_wakes();
+        // Reap drained lanes; their boards power down unless a live lane
+        // re-claimed them.
+        let mut freed: Vec<usize> = Vec::new();
+        let mut i = 0;
+        while i < self.retiring.len() {
+            if self.server.finish_retire(self.retiring[i].lane) {
+                freed.extend(self.retiring.remove(i).boards);
+            } else {
+                i += 1;
+            }
+        }
+        if !freed.is_empty() {
+            self.power_down_if_free(&freed, "freed by drained lane");
+        }
         let frame = self.hub.tick();
         if let Some(dead_lane) = self.scan_for_dead_lanes(&frame) {
             let report_frame = frame.clone();
@@ -290,7 +414,7 @@ impl Controller {
         let min_arrivals = self.cfg.drift.min_arrivals;
         let mut dead: Option<usize> = None;
         for lane in &frame.lanes {
-            if self.retiring.contains(&lane.lane) {
+            if self.retiring.iter().any(|r| r.lane == lane.lane) {
                 continue; // draining lanes report no arrivals anyway
             }
             let book_idx = self.books.iter().position(|b| b.lane == lane.lane);
@@ -349,7 +473,10 @@ impl Controller {
     fn repair_dead_lane(&mut self, book_idx: usize) -> Option<Vec<usize>> {
         let book = self.books.remove(book_idx);
         if self.server.begin_retire(book.lane).is_ok() {
-            self.retiring.push(book.lane);
+            self.retiring.push(RetiringLane {
+                lane: book.lane,
+                boards: book.boards.clone(),
+            });
         }
         // Drop ONE deployment of the model from the baseline plan — the
         // one matching the dead lane's board count, so the diff below
@@ -382,13 +509,124 @@ impl Controller {
         out
     }
 
+    /// Stand up every pending lane whose boards finished waking; once none
+    /// remain, apply the retires that were deferred behind them (the
+    /// make-before-break ordering across a wake).
+    fn service_pending_wakes(&mut self) {
+        let Some(p) = self.cfg.power.clone() else {
+            return;
+        };
+        let now = p.now();
+        let mut i = 0;
+        while i < self.pending_adds.len() {
+            if now + 1e-9 < self.pending_adds[i].ready_at_s {
+                i += 1;
+                continue;
+            }
+            let pa = self.pending_adds.remove(i);
+            let mut ok = true;
+            for &b in &pa.boards {
+                ok &= p.set_active_at(b, now).is_ok();
+            }
+            if !ok {
+                // Should be unreachable (the deadline passed), but never
+                // route to a board the machine refuses.
+                self.events
+                    .push(format!("woken boards {:?} refused activation", pa.boards));
+                continue;
+            }
+            let health = self.cfg.health.clone().map(|h| (h, pa.boards.clone()));
+            let spec = lane_spec_for(&pa.dep, self.cfg.time_scale, self.cfg.window, health);
+            let lane = self.server.add_lane(spec);
+            self.events.push(format!(
+                "boards {:?} awake — lane {lane} live for {}",
+                pa.boards, pa.dep.workload.model
+            ));
+            self.books.push(LaneBook {
+                model: pa.dep.workload.model.clone(),
+                lane,
+                boards: pa.boards,
+                watts: pa.dep.watts,
+            });
+        }
+        if self.pending_adds.is_empty() && !self.deferred_retires.is_empty() {
+            for book in std::mem::take(&mut self.deferred_retires) {
+                if self.server.begin_retire(book.lane).is_ok() {
+                    self.retiring.push(RetiringLane {
+                        lane: book.lane,
+                        boards: book.boards,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Power down every board in `boards` that is not owned by a live
+    /// book, not backing a draining or deferred lane, and still in the
+    /// fleet.
+    fn power_down_if_free(&mut self, boards: &[usize], why: &str) {
+        let Some(p) = self.cfg.power.clone() else {
+            return;
+        };
+        let now = p.now();
+        let mut down: Vec<usize> = Vec::new();
+        for &b in boards {
+            let owned = self.books.iter().any(|bk| bk.boards.contains(&b))
+                || self.retiring.iter().any(|r| r.boards.contains(&b))
+                || self.deferred_retires.iter().any(|bk| bk.boards.contains(&b))
+                || self.pending_adds.iter().any(|pa| pa.boards.contains(&b));
+            if owned || !self.fleet_ids.contains(&b) {
+                continue;
+            }
+            let _ = p.set_idle_at(b, now);
+            if p.power_down_at(b, now).is_ok() && !down.contains(&b) {
+                down.push(b);
+            }
+        }
+        if !down.is_empty() {
+            self.events.push(format!(
+                "powered down boards {down:?} ({why}; {:.0} W saved)",
+                down.len() as f64 * BOARD_IDLE_W
+            ));
+        }
+    }
+
     /// Apply `new_plan` to the live server make-before-break; returns the
     /// new allocation. Also re-baselines the drift detector's mix.
     ///
     /// `delta.retire` names models with LANE multiplicity; the concrete
     /// victim lanes are chosen here (the model's most recently added
     /// books — replica lanes of one shape are fungible).
+    ///
+    /// With power wired: replacement lanes whose boards are powered off
+    /// are woken first and go live on a later tick (`PendingLane`), with
+    /// the lanes they replace retiring only once every pending lane is
+    /// up — old capacity keeps serving through the wake, so the latency
+    /// is absorbed without routing to a non-Active board. Boards the new
+    /// plan leaves unused are powered down (consolidation).
     fn migrate_to(&mut self, new_plan: FleetPlan, new_mix: Vec<WorkloadSpec>) -> Vec<usize> {
+        // A migration landing while woken lanes are still pending (rare —
+        // the cooldown normally outlasts a wake): complete the ready
+        // ones, abandon the rest (the new plan supersedes them; their
+        // boards stay woken/waking and simply return to the pool).
+        self.service_pending_wakes();
+        let mut abandoned: Vec<usize> = Vec::new();
+        for pa in std::mem::take(&mut self.pending_adds) {
+            // The abandoned lane never existed: drop its deployment from
+            // the baseline plan so the fresh diff re-adds whatever the
+            // new plan still wants there (a phantom entry would shadow a
+            // real lane and permanently under-provision the model).
+            if let Some(di) = self.plan.deployments.iter().rposition(|d| {
+                d.workload.model == pa.dep.workload.model && d.n_boards == pa.dep.n_boards
+            }) {
+                self.plan.deployments.remove(di);
+            }
+            abandoned.extend(pa.boards.iter().copied());
+            self.events.push(format!(
+                "abandoning pending lane for {} (superseded by a newer plan)",
+                pa.dep.workload.model
+            ));
+        }
         let delta = diff_plans(&self.plan, &new_plan);
         if !delta.is_empty() {
             // Resolve retire multiplicities to concrete book indices.
@@ -406,6 +644,8 @@ impl Controller {
                 }
             }
             // Free pool: surviving boards not owned by a lane we keep.
+            // Usable (powered) boards first, so adds prefer warm boards
+            // and wake as few as possible; order is otherwise stable.
             let kept_boards: Vec<usize> = self
                 .books
                 .iter()
@@ -419,8 +659,12 @@ impl Controller {
                 .copied()
                 .filter(|b| !kept_boards.contains(b))
                 .collect();
+            if let Some(p) = &self.cfg.power {
+                pool.sort_by_key(|&b| usize::from(!p.is_usable(b)));
+            }
 
-            // 1. Make: stand up and route every replacement lane.
+            // 1. Make: stand up and route every replacement lane — or,
+            // when its boards must first wake, queue it as pending.
             let mut fresh: Vec<LaneBook> = Vec::new();
             for &di in &delta.add {
                 let d = &new_plan.deployments[di];
@@ -431,6 +675,29 @@ impl Controller {
                     d.n_boards
                 );
                 let ids: Vec<usize> = pool.drain(..d.n_boards).collect();
+                if let Some(p) = self.cfg.power.clone() {
+                    let now = p.now();
+                    let ready = ids
+                        .iter()
+                        .map(|&b| p.begin_wake_at(b, now))
+                        .fold(now, f64::max);
+                    if ready > now + 1e-9 {
+                        self.events.push(format!(
+                            "waking boards {ids:?} for {} (ready in {:.0} ms)",
+                            d.workload.model,
+                            (ready - now) * 1e3
+                        ));
+                        self.pending_adds.push(PendingLane {
+                            dep: d.clone(),
+                            boards: ids,
+                            ready_at_s: ready,
+                        });
+                        continue;
+                    }
+                    for &b in &ids {
+                        let _ = p.set_active_at(b, now);
+                    }
+                }
                 let health = self.cfg.health.clone().map(|h| (h, ids.clone()));
                 let spec = lane_spec_for(d, self.cfg.time_scale, self.cfg.window, health);
                 let lane = self.server.add_lane(spec);
@@ -438,20 +705,45 @@ impl Controller {
                     model: d.workload.model.clone(),
                     lane,
                     boards: ids,
+                    watts: d.watts,
                 });
             }
             // 2. Break: deroute + close the lanes they replace (they keep
             // draining; reaped on later ticks). Remove books back-to-front
-            // so earlier indices stay valid.
+            // so earlier indices stay valid. While replacement lanes are
+            // still waking, the victims keep serving (deferred retire) —
+            // the wake latency is absorbed by the old capacity.
             retire_idx.sort_unstable();
+            // Victims of THIS migration, plus any still-deferred victims
+            // carried over from a superseded one — those lanes must not
+            // outlive a second re-plan just because their original
+            // replacements never woke.
+            let mut victims: Vec<LaneBook> = std::mem::take(&mut self.deferred_retires);
             for &bi in retire_idx.iter().rev() {
-                let book = self.books.remove(bi);
-                if self.server.begin_retire(book.lane).is_ok() {
-                    self.retiring.push(book.lane);
+                victims.push(self.books.remove(bi));
+            }
+            let defer = !self.pending_adds.is_empty();
+            for book in victims {
+                if defer {
+                    self.deferred_retires.push(book);
+                } else if self.server.begin_retire(book.lane).is_ok() {
+                    self.retiring.push(RetiringLane {
+                        lane: book.lane,
+                        boards: book.boards,
+                    });
                 }
             }
             self.books.extend(fresh);
+            // 3. Consolidate: whatever the new plan left in the pool is
+            // surplus — power it down (boards of draining/deferred lanes
+            // are skipped and handled at reap time).
+            let leftover: Vec<usize> = pool;
+            self.power_down_if_free(&leftover, "consolidated by re-plan");
         }
+        // Boards claimed by abandoned pending lanes must not stay powered
+        // behind an empty delta — anything this migration did not
+        // re-claim goes dark (a mid-wake board aborts straight to off).
+        self.power_down_if_free(&abandoned, "abandoned wake");
         let alloc = new_plan.allocation();
         self.events.push(format!(
             "re-planned → {:?} over {} boards ({} lane change{})",
@@ -606,8 +898,8 @@ mod tests {
         // The dead replica's lane drains; the healthy replica's does NOT
         // (squeezenet's lane may churn — its allocation shrank — but the
         // surviving alexnet lane must never be quarantined).
-        assert!(ctl.retiring.contains(&1), "{:?}", ctl.events);
-        assert!(!ctl.retiring.contains(&0), "{:?}", ctl.events);
+        assert!(ctl.retiring.iter().any(|r| r.lane == 1), "{:?}", ctl.events);
+        assert!(!ctl.retiring.iter().any(|r| r.lane == 0), "{:?}", ctl.events);
         assert!(!ctl.fleet_ids.contains(&2));
         server.shutdown();
     }

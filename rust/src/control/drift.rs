@@ -24,8 +24,18 @@ pub struct DriftConfig {
     pub cooldown: usize,
     /// Ignore a model's rate ratio (or miss rate) when the window saw
     /// fewer arrivals (completions) than this — a handful of Poisson
-    /// samples is noise, not signal.
+    /// samples is noise, not signal. Gates the surge (high) side and the
+    /// miss trigger.
     pub min_arrivals: u64,
+    /// Rate-COLLAPSE gate: the low side cannot gate on observed arrivals
+    /// (a collapsed stream produces none), so it fires only when the
+    /// window EXPECTED at least this many arrivals from the planned rate
+    /// (`planned_rps × window_s`) and saw under `expected / rate_ratio`.
+    /// Monte-Carlo at the floor of 12: a stationary Poisson stream fakes a
+    /// collapse in <0.1% of hysteresis-3 triples (see the verify skill) —
+    /// this is what lets the controller consolidate a cooled-off model's
+    /// boards instead of idling them forever.
+    pub min_expected_arrivals: f64,
 }
 
 impl Default for DriftConfig {
@@ -40,6 +50,7 @@ impl Default for DriftConfig {
             hysteresis: 3,
             cooldown: 4,
             min_arrivals: 15,
+            min_expected_arrivals: 12.0,
         }
     }
 }
@@ -95,12 +106,26 @@ impl DriftDetector {
                     self.cfg.miss_rate * 100.0
                 ));
             }
-            if o.arrivals >= self.cfg.min_arrivals && w.rate_rps > 0.0 {
+            if w.rate_rps > 0.0 {
                 let ratio = o.rate_rps / w.rate_rps;
-                if ratio > self.cfg.rate_ratio || ratio < 1.0 / self.cfg.rate_ratio {
+                // Surge: enough OBSERVED arrivals to trust the ratio.
+                if o.arrivals >= self.cfg.min_arrivals && ratio > self.cfg.rate_ratio {
                     return Some(format!(
                         "{}: observed {:.1} rps vs planned {:.1} rps (ratio {:.2})",
                         w.model, o.rate_rps, w.rate_rps, ratio
+                    ));
+                }
+                // Collapse: a cooled-off stream has (almost) no observed
+                // arrivals, so gate on what the window EXPECTED instead —
+                // this is the trigger behind energy consolidation.
+                let expected = w.rate_rps * o.window_s;
+                if expected >= self.cfg.min_expected_arrivals
+                    && ratio < 1.0 / self.cfg.rate_ratio
+                {
+                    return Some(format!(
+                        "{}: rate collapsed to {:.1} rps vs planned {:.1} rps \
+                         ({:.1} arrivals expected this window, saw {})",
+                        w.model, o.rate_rps, w.rate_rps, expected, o.arrivals
                     ));
                 }
             }
@@ -162,6 +187,8 @@ mod tests {
             arrivals,
             completed: arrivals,
             misses: (miss_rate * arrivals as f64) as u64,
+            // Window consistent with the observed rate.
+            window_s: arrivals as f64 / rate.max(1e-9),
             rate_rps: rate,
             p50_ms: 1.0,
             p99_ms: 2.0,
@@ -256,6 +283,37 @@ mod tests {
     }
 
     #[test]
+    fn rate_collapse_with_no_arrivals_fires_on_expected() {
+        // A cooled-off stream delivers ZERO arrivals — the old
+        // observed-arrivals gate could never fire on it. The collapse
+        // trigger gates on EXPECTED arrivals instead (the consolidation
+        // path's detection signal).
+        let mut d = det(1, 0);
+        let p = planned(100.0);
+        let silent = vec![ModelObs {
+            model: "alexnet".into(),
+            arrivals: 0,
+            completed: 0,
+            misses: 0,
+            window_s: 0.5, // planned 100 rps × 0.5 s = 50 expected
+            rate_rps: 0.0,
+            p50_ms: f64::NAN,
+            p99_ms: f64::NAN,
+            miss_rate: 0.0,
+        }];
+        assert!(matches!(
+            d.observe(&p, &silent),
+            DriftDecision::Replan { .. }
+        ));
+        // ...but a window too short to expect anything stays quiet (the
+        // same zero arrivals are noise when only ~1 was expected).
+        let mut d = det(1, 0);
+        let mut tiny = silent.clone();
+        tiny[0].window_s = 0.01; // 1 expected < min_expected_arrivals
+        assert_eq!(d.observe(&p, &tiny), DriftDecision::Stable);
+    }
+
+    #[test]
     fn sparse_windows_are_ignored() {
         let mut d = det(1, 0);
         let p = planned(100.0);
@@ -267,6 +325,7 @@ mod tests {
             arrivals: 100,
             completed: 100,
             misses: 0,
+            window_s: 1e-4,
             rate_rps: 1e6,
             p50_ms: 1.0,
             p99_ms: 1.0,

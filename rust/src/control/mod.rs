@@ -44,5 +44,5 @@ mod telemetry;
 pub use controller::{ControlConfig, Controller, TickReport};
 pub use drift::{DriftConfig, DriftDecision, DriftDetector};
 pub use replanner::{diff_plans, PlanDelta, Replanner};
-pub use runner::{run_drift_scenario, KillSpec, OnlineConfig, OnlineOutcome};
+pub use runner::{run_drift_scenario, KillSpec, OnlineConfig, OnlineOutcome, PowerGating};
 pub use telemetry::{LaneObs, ModelObs, TelemetryFrame, TelemetryHub};

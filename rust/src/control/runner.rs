@@ -9,6 +9,7 @@ use crate::fleet::{
     lane_spec_for, piecewise_arrivals, FleetHealth, FleetSpec, ModelStats, PhaseSpec, Planner,
     PlannerConfig, WorkloadSpec, SCENARIO_IMAGE_ELEMS,
 };
+use crate::power::{EnergyLedger, FleetPower};
 use crate::serving::{InferenceResponse, Server, ServerConfig};
 use crate::util::{SplitMix64, Summary};
 use crate::{Error, Result};
@@ -27,6 +28,21 @@ pub struct KillSpec {
     pub notify: bool,
 }
 
+/// Power gating for the online runner: arms a [`FleetPower`] machine on
+/// the controlled run (the static baseline keeps every board powered —
+/// that contrast IS the consolidation experiment).
+#[derive(Debug, Clone, Copy)]
+pub struct PowerGating {
+    /// Wake latency of a powered-down board (model-time seconds).
+    pub wake_latency_s: f64,
+}
+
+impl Default for PowerGating {
+    fn default() -> Self {
+        PowerGating { wake_latency_s: 0.1 }
+    }
+}
+
 /// Online scenario tuning.
 #[derive(Clone)]
 pub struct OnlineConfig {
@@ -39,6 +55,8 @@ pub struct OnlineConfig {
     pub tick_s: f64,
     pub control: ControlConfig,
     pub kill: Option<KillSpec>,
+    /// Elastic power management (controlled runs only).
+    pub power: Option<PowerGating>,
     /// Wall-clock budget for collecting each response after submission
     /// ends (an unstable static lane drains a deep backlog here).
     pub recv_timeout: Duration,
@@ -53,19 +71,33 @@ impl Default for OnlineConfig {
             tick_s: 0.05,
             control: ControlConfig::default(),
             kill: None,
+            power: None,
             recv_timeout: Duration::from_secs(60),
         }
     }
 }
 
-/// One run's outcome: per-phase per-model stats plus the control log.
+/// One run's outcome: per-phase per-model stats plus the control log and
+/// the energy ledger's verdicts.
 #[derive(Debug)]
 pub struct OnlineOutcome {
-    /// `[phase][mix entry]` — `n_boards` is the allocation at run END.
+    /// `[phase][mix entry]` — `n_boards` is the allocation at run END;
+    /// `avg_watts` / `j_per_inf` are the model's ledger share that phase.
     pub phase_stats: Vec<Vec<ModelStats>>,
     pub replans: usize,
     pub final_alloc: Vec<usize>,
     pub events: Vec<String>,
+    /// Fleet average watts per phase (planned-power integration — static
+    /// runs hold the plan's ungated draw; controlled runs step as the
+    /// controller consolidates / wakes).
+    pub avg_watts: Vec<f64>,
+    /// Fleet joules over the whole run.
+    pub fleet_joules: f64,
+    /// Boards powered off at run end (0 without power gating).
+    pub powered_off: usize,
+    /// Serve-gate trips: requests that reached a non-Active board. The
+    /// consolidation property tests pin this to zero.
+    pub power_violations: u64,
 }
 
 impl OnlineOutcome {
@@ -126,10 +158,21 @@ pub fn run_drift_scenario(
     let total_s: f64 = phases.iter().map(|p| p.duration_s).sum();
 
     // Plan the provisioned mix and stand the fleet up, every lane gated on
-    // its boards' health.
+    // its boards' health. Power gating arms only on the controlled run —
+    // the static baseline has no controller to wake a board back up, so
+    // it (correctly) keeps everything powered.
     let planner = Planner::new(fleet.clone(), pcfg);
     let plan = planner.plan(mix)?;
-    let health = FleetHealth::new(fleet.len());
+    let power = if controlled {
+        cfg.power
+            .map(|pg| FleetPower::new(fleet.len(), pg.wake_latency_s, ts))
+    } else {
+        None
+    };
+    let health = match &power {
+        Some(p) => FleetHealth::new(fleet.len()).with_power(p.clone()),
+        None => FleetHealth::new(fleet.len()),
+    };
     let lanes = plan
         .deployments
         .iter()
@@ -151,10 +194,47 @@ pub fn run_drift_scenario(
         ccfg.time_scale = ts;
         ccfg.window = cfg.window;
         ccfg.health = Some(health.clone());
+        ccfg.power = power.clone();
         Some(Controller::new(server.clone(), replanner, plan.clone(), ccfg)?)
     } else {
         None
     };
+
+    // Energy ledger: channel 0 is the fleet, then one channel per mix
+    // entry. The static plan's draw is constant (active tori + idle
+    // remainder, all powered); the controlled run is re-sampled after
+    // every controller tick / kill, which is exactly when lane sets and
+    // power states change.
+    let static_watts: Vec<f64> = {
+        let pp = crate::power::plan_power(&plan);
+        let per_model: Vec<f64> = mix
+            .iter()
+            .map(|w| {
+                pp.per_model
+                    .iter()
+                    .find(|m| m.model == w.model)
+                    .map(|m| m.total_w())
+                    .unwrap_or(0.0)
+            })
+            .collect();
+        let mut v = vec![per_model.iter().sum()];
+        v.extend(per_model);
+        v
+    };
+    let mut channels = vec!["fleet".to_string()];
+    channels.extend(mix.iter().map(|w| w.model.clone()));
+    let mut ledger = EnergyLedger::new(channels);
+    let watts_now = |c: &Option<Controller>| -> Vec<f64> {
+        match c {
+            Some(ctl) => {
+                let mut v = vec![ctl.fleet_watts()];
+                v.extend(mix.iter().map(|w| ctl.model_watts(&w.model)));
+                v
+            }
+            None => static_watts.clone(),
+        }
+    };
+    ledger.record(0.0, &watts_now(&controller));
 
     // Merge arrivals, controller ticks, and the kill into one timeline.
     let mut timeline: Vec<(f64, Ev)> = piecewise_arrivals(phases, mix.len(), cfg.seed)
@@ -216,6 +296,7 @@ pub fn run_drift_scenario(
                 if let Some(c) = controller.as_mut() {
                     c.tick();
                 }
+                ledger.record(t, &watts_now(&controller));
             }
             Ev::Kill { board, notify } => {
                 health.kill(board);
@@ -224,17 +305,27 @@ pub fn run_drift_scenario(
                         c.board_down(board);
                     }
                 }
+                ledger.record(t, &watts_now(&controller));
             }
         }
     }
+    ledger.finish(total_s);
 
     // Collect and score per (phase, entry).
     let final_alloc: Vec<usize> = match &controller {
         Some(c) => mix.iter().map(|w| c.allocation_for(&w.model)).collect(),
         None => plan.allocation(),
     };
+    // Phase boundaries in model time, for the ledger's interval queries.
+    let mut phase_bounds = Vec::with_capacity(phases.len());
+    let mut acc = 0.0;
+    for p in phases {
+        phase_bounds.push((acc, acc + p.duration_s));
+        acc += p.duration_s;
+    }
     let mut phase_stats = Vec::with_capacity(phases.len());
     for (pi, per_entry) in pending.iter_mut().enumerate() {
+        let (p_start, p_end) = phase_bounds[pi];
         let mut rows = Vec::with_capacity(mix.len());
         for (ei, pend) in per_entry.iter_mut().enumerate() {
             let sent = pend.len() + dropped[pi][ei];
@@ -284,11 +375,24 @@ pub fn run_drift_scenario(
                 } else {
                     0.0
                 },
+                avg_watts: ledger.avg_watts_between(1 + ei, p_start, p_end),
+                j_per_inf: ledger.j_per_inference(1 + ei, p_start, p_end, completed),
             });
         }
         phase_stats.push(rows);
     }
     server.shutdown();
+    let avg_watts = phase_bounds
+        .iter()
+        .map(|&(s, e)| ledger.avg_watts_between(0, s, e))
+        .collect();
+    let (powered_off, power_violations) = match &power {
+        Some(p) => {
+            let (_, _, off, _) = p.counts();
+            (off, p.violations())
+        }
+        None => (0, 0),
+    };
     let (replans, events) = match controller {
         Some(c) => (c.replans(), c.events.clone()),
         None => (0, Vec::new()),
@@ -298,6 +402,10 @@ pub fn run_drift_scenario(
         replans,
         final_alloc,
         events,
+        avg_watts,
+        fleet_joules: ledger.joules(0),
+        powered_off,
+        power_violations,
     })
 }
 

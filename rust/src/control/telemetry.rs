@@ -28,6 +28,11 @@ pub struct ModelObs {
     pub arrivals: u64,
     pub completed: u64,
     pub misses: u64,
+    /// Length of the window these counts cover (model-time seconds) —
+    /// the drift detector needs it to compute EXPECTED arrivals for the
+    /// rate-collapse trigger (a collapsed stream produces no observed
+    /// arrivals to gate on).
+    pub window_s: f64,
     /// Observed arrival rate over the window (model-time rps).
     pub rate_rps: f64,
     /// Window latency percentiles (model-time ms; NaN when idle).
@@ -104,6 +109,7 @@ impl TelemetryHub {
                     arrivals: s.arrivals,
                     completed: s.completed,
                     misses: s.misses,
+                    window_s: w,
                     rate_rps: s.arrivals as f64 / w.max(1e-9),
                     p50_ms: p50,
                     p99_ms: p99,

@@ -114,6 +114,12 @@ impl InferBackend for SimClusterBackend {
 /// the worker loop then drops replies (clients observe a disconnect, the
 /// scenario scores a miss) until the control plane retires the lane and
 /// re-plans around the loss.
+///
+/// When the health switchboard carries a power-state machine
+/// (`FleetHealth::with_power`), the same gate enforces power: a batch is
+/// served only if every member board is `Active` — a powered-off or
+/// still-waking board errors the batch AND counts a routing violation on
+/// the `FleetPower` (the controller must wake boards BEFORE routing).
 pub struct HealthGatedBackend {
     inner: Box<dyn InferBackend>,
     health: FleetHealth,
@@ -151,6 +157,17 @@ impl InferBackend for HealthGatedBackend {
                 "sub-cluster lost a board (boards {:?})",
                 self.boards
             )));
+        }
+        if let Some(power) = self.health.power() {
+            for &b in &self.boards {
+                if !power.serve_check(b) {
+                    return Err(crate::Error::Runtime(format!(
+                        "board {b} is not Active (powered off or waking) — \
+                         sub-cluster {:?} cannot serve",
+                        self.boards
+                    )));
+                }
+            }
         }
         self.inner.infer(images, n)
     }
@@ -205,6 +222,31 @@ mod tests {
         assert!(b.is_dead());
         assert!(b.infer(&[1.0; 3], 1).is_err());
         assert_eq!(health.survivors(), vec![0, 1]);
+    }
+
+    #[test]
+    fn power_gate_refuses_non_active_boards() {
+        use crate::power::FleetPower;
+        let power = FleetPower::new(3, 0.5, 1.0);
+        let health = FleetHealth::new(3).with_power(power.clone());
+        let inner = Box::new(SimClusterBackend::from_service_ms(1.0, 2, 0.0, 3, 2));
+        let b = HealthGatedBackend::new(inner, health, vec![0, 1]);
+        // Boards start Idle (powered, but hosting no lane) — serving on
+        // them is a routing violation.
+        assert!(b.infer(&[1.0; 3], 1).is_err());
+        assert_eq!(power.violations(), 1);
+        // The controller marks lane boards Active before routing.
+        let now = power.now();
+        power.set_active_at(0, now).unwrap();
+        power.set_active_at(1, now).unwrap();
+        assert!(b.infer(&[1.0; 3], 1).is_ok());
+        assert_eq!(power.violations(), 1);
+        // A member board powering down kills the whole lock-step torus,
+        // exactly like a death would.
+        power.set_idle_at(1, now).unwrap();
+        power.power_down_at(1, now).unwrap();
+        assert!(b.infer(&[1.0; 3], 1).is_err());
+        assert!(power.violations() >= 2);
     }
 
     #[test]

@@ -56,6 +56,21 @@ pub struct PlannerConfig {
     /// Tail multiplier on the M/D/1 mean queueing wait when estimating the
     /// p99-ish sojourn entering the risk score.
     pub wait_inflation: f64,
+    /// Energy-aware objective (§5C: watts are a headline metric next to
+    /// latency): among compositions and replica splits whose worst risk is
+    /// within `(1 + energy_tolerance)` of the best — or below
+    /// `energy_risk_floor`, whichever is looser — prefer the lowest
+    /// planned fleet watts (fewer active boards, smaller replica sets;
+    /// idle-remainder boards count as powered down, since the plan lists
+    /// them as power-down candidates). Negative disables the energy pass
+    /// entirely (pure risk ordering, lock-step wins ties — the pre-power
+    /// behavior).
+    pub energy_tolerance: f64,
+    /// Absolute risk level below which plans are considered "safe enough
+    /// to energy-shop between" regardless of the relative tolerance (risk
+    /// is the inflated p99-ish sojourn as a fraction of the deadline, so
+    /// 0.5 means half the deadline budget).
+    pub energy_risk_floor: f64,
 }
 
 impl Default for PlannerConfig {
@@ -64,6 +79,8 @@ impl Default for PlannerConfig {
             precision: Precision::Fixed16,
             co_optimize: false,
             wait_inflation: 3.0,
+            energy_tolerance: 0.05,
+            energy_risk_floor: 0.5,
         }
     }
 }
@@ -86,6 +103,9 @@ struct SubPlan {
     /// Simulated service latency per batch size (entry `b − 1` is a batch
     /// of `b`), up to `PLAN_BATCH_CAP`.
     service_ms_batch: Vec<f64>,
+    /// Planned run-time watts of the sub-cluster (`energy::PowerModel`
+    /// over the deployed design's resource usage: idle + dynamic + B2B).
+    watts: f64,
     hetero: bool,
 }
 
@@ -95,6 +115,9 @@ struct ReplicaSplit {
     boards_each: usize,
     /// Worst per-replica risk at the split rate.
     risk: f64,
+    /// Planned watts of the split's active tori (remainder counts 0 — it
+    /// is a power-down candidate).
+    watts: f64,
 }
 
 /// One deployed sub-cluster of the final plan — one replica of one model
@@ -140,6 +163,9 @@ pub struct Deployment {
     /// Deadline-miss risk score (see `miss_risk_batched`; `f64::INFINITY`
     /// when the deadline is unmeetable or the queue is unstable).
     pub risk: f64,
+    /// Planned run-time watts of THIS replica's torus
+    /// (`energy::PowerModel`: per-board idle + dynamic + B2B subsystem).
+    pub watts: f64,
     /// True when the rate-proportional heterogeneous row partition beat the
     /// lock-step uniform plan (mixed-board sub-clusters only).
     pub hetero: bool,
@@ -177,11 +203,50 @@ impl FleetPlan {
         self.model_deployments(model).count()
     }
 
+    /// Planned run-time watts of the active sub-clusters — the fleet draw
+    /// once every power-down candidate is actually gated off.
+    pub fn active_watts(&self) -> f64 {
+        self.deployments.iter().map(|d| d.watts).sum()
+    }
+
+    /// Idle-remainder boards per model: `(model, fleet board indices)` of
+    /// the allocation's boards outside every replica torus. These used to
+    /// "sit idle" silently (~`energy::BOARD_IDLE_W` each); now they are
+    /// first-class power-down candidates.
+    pub fn idle_remainder(&self) -> Vec<(String, Vec<usize>)> {
+        self.deployments
+            .iter()
+            .filter(|d| d.replica == 0)
+            .map(|d| {
+                let used = d.n_replicas * d.n_boards;
+                (
+                    d.workload.model.clone(),
+                    (d.start + used..d.start + d.model_boards).collect(),
+                )
+            })
+            .filter(|(_, boards): &(String, Vec<usize>)| !boards.is_empty())
+            .collect()
+    }
+
+    /// Every idle-remainder board index — what the controller powers down.
+    pub fn power_down_candidates(&self) -> Vec<usize> {
+        self.idle_remainder()
+            .into_iter()
+            .flat_map(|(_, b)| b)
+            .collect()
+    }
+
+    /// Planned fleet watts with the remainder still powered (no gating).
+    pub fn ungated_watts(&self) -> f64 {
+        self.active_watts()
+            + self.power_down_candidates().len() as f64 * crate::energy::BOARD_IDLE_W
+    }
+
     /// Human-readable plan table (CLI / bench output).
     pub fn summary(&self) -> String {
         let mut t = Table::new(&[
             "Model", "Rep", "Boards", "Torus", "Design", "Partition", "Svc(ms)", "B", "Util",
-            "Risk",
+            "Risk", "Watts",
         ]);
         for d in &self.deployments {
             t.row(&[
@@ -199,9 +264,26 @@ impl FleetPlan {
                 } else {
                     "MISS".to_string()
                 },
+                format!("{:.1}", d.watts),
             ]);
         }
-        format!("{}worst-case risk: {:.3}", t.render(), self.worst_risk)
+        let candidates = self.power_down_candidates();
+        let power = if candidates.is_empty() {
+            format!("; planned fleet watts: {:.1}", self.active_watts())
+        } else {
+            format!(
+                "; planned fleet watts: {:.1} active + {:.1} idle (boards {:?} are power-down candidates)",
+                self.active_watts(),
+                candidates.len() as f64 * crate::energy::BOARD_IDLE_W,
+                candidates
+            )
+        };
+        format!(
+            "{}worst-case risk: {:.3}{}",
+            t.render(),
+            self.worst_risk,
+            power
+        )
     }
 }
 
@@ -288,6 +370,24 @@ pub fn equal_split(n_boards: usize, n_workloads: usize) -> Vec<usize> {
     (0..n_workloads)
         .map(|i| base + usize::from(i < rem))
         .collect()
+}
+
+/// Risk flattening constants shared by the composition scorer and the
+/// energy pass (`SCORE_MISS` = a certain miss somewhere in the mix;
+/// `SCORE_UNSAT` = an unconstructable pinned replica count).
+const SCORE_MISS: f64 = 1e18;
+const SCORE_UNSAT: f64 = 1e24;
+
+/// One scored composition of the fleet into per-workload board counts
+/// (the counts themselves stream through `search`'s sink — storing them
+/// per composition would make the search's memory combinatorial in fleet
+/// size).
+struct CompositionScore {
+    worst: f64,
+    total: f64,
+    /// Planned fleet watts of the active tori (power-down candidates
+    /// excluded — they are gated off).
+    watts: f64,
 }
 
 /// The fleet planner (memoizes sub-cluster plans across the composition
@@ -381,10 +481,50 @@ impl Planner {
             )));
         }
 
+        // Two streaming passes over the composition space (never
+        // materialized — `C(F−1, M−1)` would be combinatorial in fleet
+        // size; every `score` behind them is cached-sub-plan arithmetic).
+        //
+        // Pass 1: the risk-best (worst, total), strict improvement → the
+        // first minimum wins, the deterministic legacy order.
         let mut counts = vec![1usize; m];
-        let mut best: Option<(f64, f64, Vec<usize>)> = None;
-        self.search(mix, &mut counts, 0, f - m, &mut best)?;
-        let (_, _, alloc) = best.expect("at least the minimal composition scores");
+        let mut best: Option<(f64, f64)> = None;
+        self.search(mix, &mut counts, 0, f - m, &mut |_, sc| {
+            let better = match best {
+                None => true,
+                Some(b) => (sc.worst, sc.total) < b,
+            };
+            if better {
+                best = Some((sc.worst, sc.total));
+            }
+        })?;
+        let (best_worst, _) = best.expect("at least the minimal composition scores");
+        // Pass 2: the pick. With the energy pass on (and a feasible
+        // best), the lowest-watts composition within the risk tolerance
+        // (or under the floor) wins — ties keep the earliest, which on a
+        // full tie is also the risk-best. Otherwise re-find the risk-best
+        // counts exactly.
+        let energy = self.cfg.energy_tolerance >= 0.0 && best_worst < SCORE_MISS;
+        let lim = (best_worst * (1.0 + self.cfg.energy_tolerance)).max(self.cfg.energy_risk_floor);
+        let mut chosen: Option<((f64, f64, f64), Vec<usize>)> = None;
+        self.search(mix, &mut counts, 0, f - m, &mut |counts, sc| {
+            let key = if energy {
+                if sc.worst > lim {
+                    return;
+                }
+                (sc.watts, sc.worst, sc.total)
+            } else {
+                (sc.worst, sc.total, 0.0)
+            };
+            let better = match &chosen {
+                None => true,
+                Some((k, _)) => key < *k,
+            };
+            if better {
+                chosen = Some((key, counts.to_vec()));
+            }
+        })?;
+        let (_, alloc) = chosen.expect("pass 2 revisits every composition");
         self.plan_allocation(mix, &alloc)
     }
 
@@ -470,6 +610,7 @@ impl Planner {
                     planned_batch,
                     utilization: rho,
                     risk,
+                    watts: sp.watts,
                     hetero: sp.hetero,
                 });
             }
@@ -482,60 +623,59 @@ impl Planner {
     }
 
     /// Recursive composition search over `counts[idx..]`, distributing the
-    /// remaining `extra` boards; scores complete compositions.
+    /// remaining `extra` boards; streams every complete composition's
+    /// counts + score into `sink` (deterministic enumeration order, O(M)
+    /// memory — `plan` folds the stream instead of materializing
+    /// `C(F−1, M−1)` candidates).
     fn search(
         &self,
         mix: &[WorkloadSpec],
         counts: &mut Vec<usize>,
         idx: usize,
         extra: usize,
-        best: &mut Option<(f64, f64, Vec<usize>)>,
+        sink: &mut dyn FnMut(&[usize], &CompositionScore),
     ) -> Result<()> {
         if idx + 1 == mix.len() {
             counts[idx] = 1 + extra;
-            let (worst, total) = self.score(mix, counts)?;
-            let better = match best {
-                None => true,
-                Some((bw, bt, _)) => (worst, total) < (*bw, *bt),
-            };
-            if better {
-                *best = Some((worst, total, counts.clone()));
-            }
+            let sc = self.score(mix, counts)?;
+            sink(counts, &sc);
             return Ok(());
         }
         for take in 0..=extra {
             counts[idx] = 1 + take;
-            self.search(mix, counts, idx + 1, extra - take, best)?;
+            self.search(mix, counts, idx + 1, extra - take, sink)?;
         }
         Ok(())
     }
 
-    /// (worst, total) risk of a composition, with `INFINITY` flattened to a
-    /// large finite score so ties among infeasible splits still order by
-    /// how much of the mix misses. An allocation that cannot host a pinned
-    /// replica count at all (`Fixed(R)` with fewer than `R` boards) scores
-    /// strictly worse than any constructable miss, so the search never
-    /// elects an unconstructable composition while a constructable one
-    /// exists.
-    fn score(&self, mix: &[WorkloadSpec], counts: &[usize]) -> Result<(f64, f64)> {
-        const MISS: f64 = 1e18;
-        const UNSAT: f64 = 1e24;
+    /// Score one composition: (worst, total) risk — with `INFINITY`
+    /// flattened to a large finite score so ties among infeasible splits
+    /// still order by how much of the mix misses — plus the planned fleet
+    /// watts of the chosen splits' active tori. An allocation that cannot
+    /// host a pinned replica count at all (`Fixed(R)` with fewer than `R`
+    /// boards) scores strictly worse than any constructable miss, so the
+    /// search never elects an unconstructable composition while a
+    /// constructable one exists.
+    fn score(&self, mix: &[WorkloadSpec], counts: &[usize]) -> Result<CompositionScore> {
         let mut worst = 0.0f64;
         let mut total = 0.0f64;
+        let mut watts = 0.0f64;
         let mut start = 0usize;
         for (w, &n) in mix.iter().zip(counts) {
-            let mut r = match self.best_split(w, start, n)? {
-                Some(split) => split.risk,
-                None => UNSAT,
-            };
-            if !r.is_finite() {
-                r = MISS;
+            let mut r = SCORE_UNSAT;
+            if let Some(split) = self.best_split(w, start, n)? {
+                r = if split.risk.is_finite() { split.risk } else { SCORE_MISS };
+                watts += split.watts;
             }
             worst = worst.max(r);
             total += r;
             start += n;
         }
-        Ok((worst, total))
+        Ok(CompositionScore {
+            worst,
+            total,
+            watts,
+        })
     }
 
     /// The best replica split of `n` boards at `start` for workload `w`:
@@ -548,9 +688,17 @@ impl Planner {
     /// help. `Fixed(R)` pins the count (`k = ⌊n/R⌋`); returns `None` when
     /// the allocation cannot host it (`R > n`).
     ///
+    /// **Energy pass** (when `energy_tolerance ≥ 0`): the enumeration
+    /// additionally admits *partial* fills `R = 1, …, ⌊n/k⌋` — fewer
+    /// replicas than fit, leaving a larger power-down remainder (splitting
+    /// the rate wider only ever lowers risk, so partial fills are purely
+    /// an energy play) — and among candidates within the risk tolerance
+    /// (or under the floor) of the best, the lowest-watts split wins.
+    ///
     /// Heterogeneous ranges score every replica (sub-ranges differ);
     /// homogeneous fleets hit the sub-plan cache after the first.
     fn best_split(&self, w: &WorkloadSpec, start: usize, n: usize) -> Result<Option<ReplicaSplit>> {
+        let energy = self.cfg.energy_tolerance >= 0.0;
         let mut candidates: Vec<(usize, usize)> = Vec::new(); // (R, k)
         match w.replicas {
             ReplicaPolicy::Fixed(r) => {
@@ -567,13 +715,21 @@ impl Planner {
             }
             ReplicaPolicy::Auto => {
                 for k in (1..=n).rev() {
-                    candidates.push((n / k, k));
+                    let r_max = n / k;
+                    if energy {
+                        for r in 1..=r_max {
+                            candidates.push((r, k));
+                        }
+                    } else {
+                        candidates.push((r_max, k));
+                    }
                 }
             }
         }
-        let mut best: Option<ReplicaSplit> = None;
+        let mut scored: Vec<ReplicaSplit> = Vec::with_capacity(candidates.len());
         for (r_count, k) in candidates {
             let mut risk = 0.0f64;
+            let mut watts = 0.0f64;
             for r in 0..r_count {
                 let sp = self.subplan(&w.model, start + r * k, k)?;
                 let (rep_risk, _) = miss_risk_batched(
@@ -584,16 +740,35 @@ impl Planner {
                     w.max_batch,
                 );
                 risk = risk.max(rep_risk);
+                watts += sp.watts;
             }
-            if best.as_ref().map(|b| risk < b.risk).unwrap_or(true) {
-                best = Some(ReplicaSplit {
-                    n_replicas: r_count,
-                    boards_each: k,
-                    risk,
-                });
+            scored.push(ReplicaSplit {
+                n_replicas: r_count,
+                boards_each: k,
+                risk,
+                watts,
+            });
+        }
+        // Risk-first (strict improvement → the first candidate, the full
+        // lock-step cluster, wins ties)...
+        let mut best_i = 0;
+        for i in 1..scored.len() {
+            if scored[i].risk < scored[best_i].risk {
+                best_i = i;
             }
         }
-        Ok(best)
+        // ...then the energy pick among within-tolerance candidates.
+        if energy && scored[best_i].risk.is_finite() {
+            let lim = (scored[best_i].risk * (1.0 + self.cfg.energy_tolerance))
+                .max(self.cfg.energy_risk_floor);
+            for i in 0..scored.len() {
+                let (c, b) = (&scored[i], &scored[best_i]);
+                if c.risk <= lim && (c.watts, c.risk) < (b.watts, b.risk) {
+                    best_i = i;
+                }
+            }
+        }
+        Ok(Some(scored.swap_remove(best_i)))
     }
 
     /// Plan one sub-cluster (cached). Homogeneous fleets normalize the
@@ -646,6 +821,11 @@ impl Planner {
         );
         let service_ms_batch: Vec<f64> =
             table.iter().map(|&c| p.cycles_to_ms(c)).collect();
+        // Planned run-time watts (§5C power model) of the n-board torus
+        // running this design: per-board idle + dynamic (DSP/BRAM at the
+        // precision's clock) + the B2B subsystem share.
+        let watts = crate::energy::PowerModel::new(n as u64)
+            .watts(&plan.design, &crate::analytic::usage(&plan.design, k_max));
         let mut sp = SubPlan {
             design: plan.design,
             factors: plan.factors,
@@ -654,6 +834,7 @@ impl Planner {
             service_cycles: plan.sim_cycles,
             service_ms: plan.sim_ms,
             service_ms_batch,
+            watts,
             hetero: false,
         };
 
@@ -687,6 +868,10 @@ impl Planner {
                 };
                 let hetero_ms = hetero_analytic_ms * overhead;
                 if hetero_ms < sp.service_ms {
+                    // `sp.watts` keeps the uniform-design estimate: the
+                    // row partition fits per-board engines of comparable
+                    // size, and the idle + B2B terms (the §5C bulk)
+                    // depend only on the board count.
                     sp.factors = Factors::new(1, n as u64, 1, 1);
                     sp.service_ms = hetero_ms;
                     sp.service_cycles = (hetero_ms * p.freq_mhz() as f64 * 1e3).ceil() as u64;
@@ -946,7 +1131,10 @@ mod tests {
             boards: vec![FpgaSpec::zcu102(), small],
         };
         let planner = Planner::new(fleet, PlannerConfig::default());
-        let mix = vec![w("alexnet", 10.0, 100.0)];
+        // Pin one lock-step cluster so the test exercises the mixed-board
+        // planning path (the energy pass would otherwise serve this light
+        // load from the strong board alone and power the weak one down).
+        let mix = vec![w("alexnet", 10.0, 100.0).with_replicas(1)];
         let plan = planner.plan(&mix).unwrap();
         let d = &plan.deployments[0];
         assert_eq!(d.n_boards, 2);

@@ -63,16 +63,36 @@ impl Default for ScenarioConfig {
 /// sub-clusters). `kill` flips a board dead; every `HealthGatedBackend`
 /// watching that board starts erroring on the next batch — the simulated
 /// equivalent of a lock-step torus losing a member mid-run.
+///
+/// With a [`crate::power::FleetPower`] attached (`with_power`), the same
+/// gate also enforces power states: a powered-off or still-waking board
+/// cannot serve a batch, so a lane routed onto one errors exactly like a
+/// dead board would (and the power machine counts the violation).
 #[derive(Clone)]
 pub struct FleetHealth {
     dead: Arc<Vec<AtomicBool>>,
+    power: Option<crate::power::FleetPower>,
 }
 
 impl FleetHealth {
     pub fn new(n_boards: usize) -> Self {
         FleetHealth {
             dead: Arc::new((0..n_boards).map(|_| AtomicBool::new(false)).collect()),
+            power: None,
         }
+    }
+
+    /// Attach a power-state machine: the serve gate then also refuses
+    /// boards that are not `Active`.
+    pub fn with_power(mut self, power: crate::power::FleetPower) -> Self {
+        assert_eq!(power.len(), self.dead.len(), "one power record per board");
+        self.power = Some(power);
+        self
+    }
+
+    /// The attached power machine, if any.
+    pub fn power(&self) -> Option<&crate::power::FleetPower> {
+        self.power.as_ref()
     }
 
     pub fn len(&self) -> usize {
@@ -154,13 +174,21 @@ pub struct ModelStats {
     /// were never served (dropped on backend failure / timed out waiting)
     /// count as misses, so drops cannot flatter the metric.
     pub miss_rate: f64,
+    /// Average watts the model's allocation drew over the run (active
+    /// tori + whatever of its idle remainder stayed powered). The energy
+    /// ledger fills this; 0 when no energy accounting ran.
+    pub avg_watts: f64,
+    /// Joules per completed inference over the run (`avg_watts × duration
+    /// / completed`; NaN when nothing completed or no accounting ran).
+    pub j_per_inf: f64,
 }
 
 /// Render per-model stats as a table (shared by the `fleet` CLI and the
-/// `fleet_scenarios` bench).
+/// `fleet_scenarios` / `energy_consolidation` benches).
 pub fn stats_table(stats: &[ModelStats]) -> String {
     let mut t = Table::new(&[
-        "Model", "Boards", "Sent", "Done", "p50(ms)", "p99(ms)", "Batch", "Miss%",
+        "Model", "Boards", "Sent", "Done", "p50(ms)", "p99(ms)", "Batch", "Miss%", "Watts",
+        "J/inf",
     ]);
     for s in stats {
         t.row(&[
@@ -172,6 +200,12 @@ pub fn stats_table(stats: &[ModelStats]) -> String {
             report::ms(s.p99_ms),
             format!("{:.2}", s.mean_batch),
             format!("{:.1}", s.miss_rate * 100.0),
+            format!("{:.1}", s.avg_watts),
+            if s.j_per_inf.is_finite() {
+                format!("{:.2}", s.j_per_inf)
+            } else {
+                "-".to_string()
+            },
         ]);
     }
     t.render()
@@ -267,6 +301,22 @@ pub fn run_scenario(plan: &FleetPlan, cfg: &ScenarioConfig) -> Result<Vec<ModelS
         pending[si].push((checksum, rx));
     }
 
+    // Static-plan energy accounting: every board stays powered for the
+    // whole run (nothing consolidates without the controller), so each
+    // model draws its plan-power total (active tori + idle remainder).
+    let plan_power = crate::power::plan_power(plan);
+    let model_watts: Vec<f64> = entries
+        .iter()
+        .map(|d| {
+            plan_power
+                .per_model
+                .iter()
+                .find(|m| m.model == d.workload.model)
+                .map(|m| m.total_w())
+                .unwrap_or(0.0)
+        })
+        .collect();
+
     // Collect and score.
     let mut stats = Vec::with_capacity(entries.len());
     for (si, d) in entries.iter().enumerate() {
@@ -317,7 +367,17 @@ pub fn run_scenario(plan: &FleetPlan, cfg: &ScenarioConfig) -> Result<Vec<ModelS
             } else {
                 0.0
             },
+            avg_watts: model_watts[si],
+            j_per_inf: f64::NAN, // filled below once the duration is known
         });
+    }
+    // Energy: the boards were powered from the first submission through
+    // the last collected response (model time = wall / time_scale).
+    let duration_s = t0.elapsed().as_secs_f64() / ts;
+    for s in stats.iter_mut() {
+        if s.completed > 0 {
+            s.j_per_inf = s.avg_watts * duration_s / s.completed as f64;
+        }
     }
     server.shutdown();
     Ok(stats)

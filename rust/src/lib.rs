@@ -34,6 +34,7 @@ pub mod fleet;
 pub mod model;
 pub mod partition;
 pub mod platform;
+pub mod power;
 pub mod report;
 pub mod runtime;
 pub mod serving;

@@ -63,14 +63,20 @@ COMMANDS:
   plan      --net <alexnet|squeezenet|vgg16|yolo> --fpgas N --precision <f32|fx16>
   fleet     --fpgas N --mix model:rate_rps:deadline_ms[:max_batch[:replicas]],...
             [--requests N] [--naive] [--time-scale X] [--co-optimize] [--qsfp]
-            [--online [--flip-after S] [--post S] [--tick S] [--kill-board I --kill-at S]]
+            [--online [--flip-after S] [--post S] [--tick S] [--kill-board I --kill-at S]
+                      [--power [--wake-latency S]]]
             (replicas: a count, or `auto` (default) — the planner may serve a
              hot model with R independent k-board sub-clusters, splitting its
-             Poisson stream R ways, whenever that beats one R*k lock-step torus)
+             Poisson stream R ways, whenever that beats one R*k lock-step torus;
+             among plans within a risk tolerance it prefers the lowest fleet
+             watts and lists idle-remainder boards as power-down candidates)
             (--online: serve the mix, flip the entries' rates mid-run, and
              contrast the frozen static plan with the telemetry-driven
              controller re-planning + hitlessly migrating lanes; --kill-board
-             inside one replica quarantines only that replica's lane)
+             inside one replica quarantines only that replica's lane;
+             --power arms elastic consolidation: the controller powers down
+             boards a cooled-off mix frees and wakes them, --wake-latency
+             seconds ahead of routing, when traffic returns)
   dse       --net <name> --precision <f32|fx16>
   scale     --net <name> --max-fpgas N [--precision fx16]
   validate
@@ -140,6 +146,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let plan = planner.plan(&mix)?;
     println!("fleet plan ({n} × {}, {} workloads):", board.name, mix.len());
     println!("{}", plan.summary());
+    println!("{}", superlip::power::plan_power(&plan).summary());
 
     if args.has("online") {
         return cmd_fleet_online(args, &mix, n, board, p, ts);
@@ -234,10 +241,19 @@ fn cmd_fleet_online(
             })
         }
     };
+    let wake = args.flag_f64("wake-latency", 0.1)?;
+    if !wake.is_finite() || wake < 0.0 {
+        return Err(Error::InvalidArg(format!(
+            "--wake-latency {wake}: must be ≥ 0 and finite"
+        )));
+    }
     let cfg = control::OnlineConfig {
         time_scale: ts,
         tick_s: tick,
         kill,
+        power: args
+            .has("power")
+            .then_some(control::PowerGating { wake_latency_s: wake }),
         ..Default::default()
     };
     let fleet_spec = FleetSpec::homogeneous(n, board);
@@ -247,7 +263,12 @@ fn cmd_fleet_online(
         ..Default::default()
     };
     println!(
-        "\nonline drift scenario: {flip_after:.2}s planned mix, then {post:.2}s with rates rotated; tick {tick:.3}s"
+        "\nonline drift scenario: {flip_after:.2}s planned mix, then {post:.2}s with rates rotated; tick {tick:.3}s{}",
+        if cfg.power.is_some() {
+            format!("; power gating on (wake {wake:.2}s)")
+        } else {
+            String::new()
+        }
     );
     for (label, controlled) in [("static plan (frozen)", false), ("controlled (online re-planning)", true)] {
         let out = control::run_drift_scenario(&fleet_spec, pcfg, mix, &phases, &cfg, controlled)?;
@@ -266,6 +287,20 @@ fn cmd_fleet_online(
             "post-flip worst-case: p99 {}  miss {:.1}%",
             report::ms(out.worst_p99(1)),
             out.worst_miss_rate(1) * 100.0
+        );
+        let watts: Vec<String> = out.avg_watts.iter().map(|w| format!("{w:.1}")).collect();
+        println!(
+            "fleet energy: avg watts per phase [{}]  total {:.1} J{}",
+            watts.join(", "),
+            out.fleet_joules,
+            if controlled && cfg.power.is_some() {
+                format!(
+                    "  ({} board(s) powered off at end, {} routing violation(s))",
+                    out.powered_off, out.power_violations
+                )
+            } else {
+                String::new()
+            }
         );
     }
     Ok(())

@@ -1,0 +1,181 @@
+//! Energy ledger: integrate piecewise-constant power over scenario time.
+//!
+//! The serving runners sample fleet (and per-model) watts at every event
+//! that can change them — controller ticks, migrations, board kills — and
+//! the ledger turns the resulting step function into joules, average
+//! watts over any interval (a phase), and J/inference. All times are
+//! **model seconds**; power changes only at recorded breakpoints, so the
+//! integral is exact, not an approximation.
+
+/// Piecewise-constant multi-channel power timeline. Channel 0 is the
+/// fleet total by convention; further channels are per-model shares.
+#[derive(Debug, Clone)]
+pub struct EnergyLedger {
+    channels: Vec<String>,
+    /// `(t, watts-per-channel)` — watts hold from `t` until the next
+    /// breakpoint (or `end`).
+    points: Vec<(f64, Vec<f64>)>,
+    end_s: Option<f64>,
+}
+
+impl EnergyLedger {
+    pub fn new<S: Into<String>>(channels: Vec<S>) -> Self {
+        let channels: Vec<String> = channels.into_iter().map(Into::into).collect();
+        assert!(!channels.is_empty());
+        EnergyLedger {
+            channels,
+            points: Vec::new(),
+            end_s: None,
+        }
+    }
+
+    pub fn channels(&self) -> &[String] {
+        &self.channels
+    }
+
+    /// Record the power level holding from `t_s` on. Out-of-order or
+    /// duplicate timestamps are clamped to the monotone timeline (the
+    /// runners record in event order, so this is belt-and-braces).
+    pub fn record(&mut self, t_s: f64, watts: &[f64]) {
+        assert_eq!(watts.len(), self.channels.len(), "one wattage per channel");
+        let t = match self.points.last() {
+            Some((last, _)) if t_s < *last => *last,
+            _ => t_s,
+        };
+        self.points.push((t, watts.to_vec()));
+    }
+
+    /// Close the timeline at `t_s`; integration queries cover `[first
+    /// breakpoint, end]`.
+    pub fn finish(&mut self, t_s: f64) {
+        let t = match self.points.last() {
+            Some((last, _)) if t_s < *last => *last,
+            _ => t_s,
+        };
+        self.end_s = Some(t);
+    }
+
+    fn end(&self) -> f64 {
+        self.end_s
+            .or_else(|| self.points.last().map(|(t, _)| *t))
+            .unwrap_or(0.0)
+    }
+
+    /// Joules accumulated on `channel` over `[from_s, to_s]` (clamped to
+    /// the recorded timeline).
+    pub fn joules_between(&self, channel: usize, from_s: f64, to_s: f64) -> f64 {
+        assert!(channel < self.channels.len());
+        let end = self.end();
+        let (from, to) = (from_s.max(0.0), to_s.min(end));
+        if self.points.is_empty() || to <= from {
+            return 0.0;
+        }
+        let mut j = 0.0;
+        for (i, (t, w)) in self.points.iter().enumerate() {
+            let seg_end = self
+                .points
+                .get(i + 1)
+                .map(|(t1, _)| *t1)
+                .unwrap_or(end)
+                .min(to);
+            let seg_start = t.max(from);
+            if seg_end > seg_start {
+                j += w[channel] * (seg_end - seg_start);
+            }
+        }
+        j
+    }
+
+    /// Average watts on `channel` over `[from_s, to_s]`.
+    pub fn avg_watts_between(&self, channel: usize, from_s: f64, to_s: f64) -> f64 {
+        let end = self.end();
+        let (from, to) = (from_s.max(0.0), to_s.min(end));
+        if to <= from {
+            return f64::NAN;
+        }
+        self.joules_between(channel, from, to) / (to - from)
+    }
+
+    /// Total joules on `channel` over the whole recorded timeline.
+    pub fn joules(&self, channel: usize) -> f64 {
+        self.joules_between(channel, 0.0, self.end())
+    }
+
+    /// Whole-run average watts on `channel`.
+    pub fn avg_watts(&self, channel: usize) -> f64 {
+        self.avg_watts_between(channel, 0.0, self.end())
+    }
+
+    /// Joules per completed inference: `channel` joules over `[from_s,
+    /// to_s]` divided by `completed` (NaN when nothing completed).
+    pub fn j_per_inference(&self, channel: usize, from_s: f64, to_s: f64, completed: usize) -> f64 {
+        if completed == 0 {
+            return f64::NAN;
+        }
+        self.joules_between(channel, from_s, to_s) / completed as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::{B2B_SUBSYSTEM_W, BOARD_IDLE_W};
+
+    #[test]
+    fn constant_power_integrates_exactly() {
+        // Table 3 (§5C): Super-LIP f32 on two ZCU102 draws 52.40 W; ten
+        // seconds of it is 524 J, and at 100 inferences that is 5.24
+        // J/inference.
+        let mut l = EnergyLedger::new(vec!["fleet"]);
+        l.record(0.0, &[52.40]);
+        l.finish(10.0);
+        assert!((l.joules(0) - 524.0).abs() < 1e-9);
+        assert!((l.avg_watts(0) - 52.40).abs() < 1e-12);
+        assert!((l.j_per_inference(0, 0.0, 10.0, 100) - 5.24).abs() < 1e-9);
+        assert!(l.j_per_inference(0, 0.0, 10.0, 0).is_nan());
+    }
+
+    #[test]
+    fn b2b_gap_shows_up_as_energy() {
+        // §5C: the inter-FPGA subsystem costs 1.0 W on a 2-board cluster
+        // (52.40 − 2 × 25.70). Over a minute that is exactly 60 J.
+        let single = 25.70;
+        let dual = 2.0 * single + B2B_SUBSYSTEM_W;
+        let mut l = EnergyLedger::new(vec!["dual", "two-singles"]);
+        l.record(0.0, &[dual, 2.0 * single]);
+        l.finish(60.0);
+        assert!((dual - 52.40).abs() < 1e-9);
+        assert!((l.joules(0) - l.joules(1) - 60.0 * B2B_SUBSYSTEM_W).abs() < 1e-9);
+    }
+
+    #[test]
+    fn step_function_integrates_piecewise() {
+        // Consolidation shape: 4 idle boards (80 W) for 2 s, then two are
+        // powered down (40 W) for 3 s → 160 + 120 = 280 J.
+        let mut l = EnergyLedger::new(vec!["fleet"]);
+        l.record(0.0, &[4.0 * BOARD_IDLE_W]);
+        l.record(2.0, &[2.0 * BOARD_IDLE_W]);
+        l.finish(5.0);
+        assert!((l.joules(0) - 280.0).abs() < 1e-9);
+        assert!((l.avg_watts(0) - 56.0).abs() < 1e-9);
+        // Interval queries clamp and slice exactly.
+        assert!((l.joules_between(0, 0.0, 2.0) - 160.0).abs() < 1e-9);
+        assert!((l.joules_between(0, 2.0, 5.0) - 120.0).abs() < 1e-9);
+        assert!((l.joules_between(0, 1.0, 3.0) - 120.0).abs() < 1e-9);
+        assert!((l.avg_watts_between(0, 2.0, 99.0) - 40.0).abs() < 1e-9);
+        assert!(l.avg_watts_between(0, 7.0, 9.0).is_nan());
+    }
+
+    #[test]
+    fn multi_channel_and_out_of_order_clamping() {
+        let mut l = EnergyLedger::new(vec!["fleet", "m"]);
+        l.record(0.0, &[100.0, 30.0]);
+        l.record(1.0, &[50.0, 20.0]);
+        // A stale timestamp clamps to the last breakpoint instead of
+        // corrupting the timeline.
+        l.record(0.5, &[10.0, 10.0]);
+        l.finish(2.0);
+        assert!((l.joules(0) - (100.0 + 10.0)).abs() < 1e-9);
+        assert!((l.joules(1) - (30.0 + 10.0)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,329 @@
+//! Board power-state machine: every fleet board is `Active` (hosting a
+//! serving lane), `Idle` (powered on, no lane), `PoweredOff`, or `Waking`
+//! (powering back up; unusable until its wake deadline).
+//!
+//! Time is explicit: every transition takes `now` in **model seconds**
+//! (the scenario's un-scaled clock), so the machine is deterministic and
+//! property-testable without sleeping. [`FleetPower::now`] converts the
+//! shared wall clock through the scenario `time_scale` for callers that
+//! live on the serving path (the controller, the power-gated backend).
+//!
+//! Legal transitions (anything else is an error and changes nothing):
+//!
+//! ```text
+//!   Idle ── set_active ──▶ Active ── set_idle ──▶ Idle
+//!   Idle ── power_down ──▶ PoweredOff ── begin_wake ──▶ Waking
+//!   Waking ──(now ≥ wake deadline)──▶ Idle        (resolved lazily)
+//!   Waking ── power_down ──▶ PoweredOff            (wake aborted)
+//! ```
+//!
+//! `power_down` on an `Active` board is refused — a board hosting a lane
+//! must be derouted and drained first (the controller's consolidation path
+//! guarantees this ordering). `set_active` on a `PoweredOff`/`Waking`
+//! board is refused — the controller must `begin_wake` and wait out the
+//! wake latency before routing to it.
+
+use crate::{Error, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Power state of one fleet board.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PowerState {
+    /// Powered on and hosting (part of) a serving lane.
+    Active,
+    /// Powered on, no lane — burns `energy::BOARD_IDLE_W`.
+    Idle,
+    /// Powered down — burns nothing, cannot host a lane.
+    PoweredOff,
+    /// Powering back up; unusable until the wake deadline passes.
+    Waking,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct BoardRec {
+    state: PowerState,
+    /// Wake deadline (model seconds) — meaningful only in `Waking`.
+    wake_until_s: f64,
+}
+
+struct PowerInner {
+    boards: Vec<Mutex<BoardRec>>,
+    wake_latency_s: f64,
+    time_scale: f64,
+    t0: Instant,
+    /// Serve-time gate trips: a batch was attempted on a board that was
+    /// not `Active` (the property the routing layer must never violate).
+    violations: AtomicU64,
+}
+
+/// Shared power-state machine for one fleet (clone = same fleet, like
+/// [`crate::fleet::FleetHealth`]). Boards start `Idle`; the controller
+/// marks lane boards `Active` and powers the remainder down.
+#[derive(Clone)]
+pub struct FleetPower {
+    inner: Arc<PowerInner>,
+}
+
+impl FleetPower {
+    /// `wake_latency_s` is in model seconds; `time_scale` is the scenario
+    /// wall-clock compression (`FleetPower::now` un-scales with it).
+    pub fn new(n_boards: usize, wake_latency_s: f64, time_scale: f64) -> Self {
+        assert!(wake_latency_s >= 0.0 && time_scale > 0.0);
+        FleetPower {
+            inner: Arc::new(PowerInner {
+                boards: (0..n_boards)
+                    .map(|_| {
+                        Mutex::new(BoardRec {
+                            state: PowerState::Idle,
+                            wake_until_s: 0.0,
+                        })
+                    })
+                    .collect(),
+                wake_latency_s,
+                time_scale,
+                t0: Instant::now(),
+                violations: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.boards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.boards.is_empty()
+    }
+
+    pub fn wake_latency_s(&self) -> f64 {
+        self.inner.wake_latency_s
+    }
+
+    /// Model seconds elapsed since this machine was created.
+    pub fn now(&self) -> f64 {
+        self.inner.t0.elapsed().as_secs_f64() / self.inner.time_scale
+    }
+
+    fn rec(&self, board: usize) -> std::sync::MutexGuard<'_, BoardRec> {
+        self.inner.boards[board]
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Resolve a `Waking` record whose deadline has passed (→ `Idle`).
+    fn resolve(rec: &mut BoardRec, now_s: f64) {
+        if rec.state == PowerState::Waking && now_s >= rec.wake_until_s {
+            rec.state = PowerState::Idle;
+        }
+    }
+
+    /// Current state at `now_s` (lazily resolves completed wakes).
+    pub fn state_at(&self, board: usize, now_s: f64) -> PowerState {
+        let mut r = self.rec(board);
+        Self::resolve(&mut r, now_s);
+        r.state
+    }
+
+    pub fn state(&self, board: usize) -> PowerState {
+        self.state_at(board, self.now())
+    }
+
+    /// Powered on and wake complete (Active or Idle).
+    pub fn is_usable_at(&self, board: usize, now_s: f64) -> bool {
+        matches!(
+            self.state_at(board, now_s),
+            PowerState::Active | PowerState::Idle
+        )
+    }
+
+    pub fn is_usable(&self, board: usize) -> bool {
+        self.is_usable_at(board, self.now())
+    }
+
+    /// Claim an `Idle` board for a lane. Refused while powered off or
+    /// still waking (routing to such a board is exactly the bug the gate
+    /// exists to catch); idempotent on an already-`Active` board.
+    pub fn set_active_at(&self, board: usize, now_s: f64) -> Result<()> {
+        let mut r = self.rec(board);
+        Self::resolve(&mut r, now_s);
+        match r.state {
+            PowerState::Active | PowerState::Idle => {
+                r.state = PowerState::Active;
+                Ok(())
+            }
+            s => Err(Error::InvalidArg(format!(
+                "board {board}: cannot activate from {s:?} (wake it first)"
+            ))),
+        }
+    }
+
+    /// Release an `Active` board back to `Idle` (no-op when already idle).
+    pub fn set_idle_at(&self, board: usize, now_s: f64) -> Result<()> {
+        let mut r = self.rec(board);
+        Self::resolve(&mut r, now_s);
+        match r.state {
+            PowerState::Active | PowerState::Idle => {
+                r.state = PowerState::Idle;
+                Ok(())
+            }
+            s => Err(Error::InvalidArg(format!(
+                "board {board}: cannot idle from {s:?}"
+            ))),
+        }
+    }
+
+    /// Power a board down. Refused only on `Active` — the lane must be
+    /// retired and drained first. `Waking` aborts back to off (a
+    /// superseding plan may abandon a wake); idempotent on `PoweredOff`.
+    pub fn power_down_at(&self, board: usize, now_s: f64) -> Result<()> {
+        let mut r = self.rec(board);
+        Self::resolve(&mut r, now_s);
+        match r.state {
+            PowerState::Idle | PowerState::PoweredOff | PowerState::Waking => {
+                r.state = PowerState::PoweredOff;
+                Ok(())
+            }
+            s => Err(Error::InvalidArg(format!(
+                "board {board}: cannot power down from {s:?} (retire its lane first)"
+            ))),
+        }
+    }
+
+    /// Start waking a board; returns the model time at which it becomes
+    /// usable. `PoweredOff` → `Waking(now + wake_latency)`; an in-flight
+    /// wake keeps its original deadline; an already-usable board is ready
+    /// immediately.
+    pub fn begin_wake_at(&self, board: usize, now_s: f64) -> f64 {
+        let mut r = self.rec(board);
+        Self::resolve(&mut r, now_s);
+        match r.state {
+            PowerState::PoweredOff => {
+                r.state = PowerState::Waking;
+                r.wake_until_s = now_s + self.inner.wake_latency_s;
+                r.wake_until_s
+            }
+            PowerState::Waking => r.wake_until_s,
+            PowerState::Active | PowerState::Idle => now_s,
+        }
+    }
+
+    /// Serve-time gate: true iff the board is `Active` right now; a trip
+    /// is counted as a routing violation (the "no request is ever served
+    /// by a non-Active board" property the tests pin).
+    pub fn serve_check(&self, board: usize) -> bool {
+        if self.state(board) == PowerState::Active {
+            true
+        } else {
+            self.inner.violations.fetch_add(1, Ordering::Relaxed);
+            false
+        }
+    }
+
+    /// Serve-time gate trips so far (see [`FleetPower::serve_check`]).
+    pub fn violations(&self) -> u64 {
+        self.inner.violations.load(Ordering::Relaxed)
+    }
+
+    /// `(active, idle, powered_off, waking)` board counts at `now_s`.
+    pub fn counts_at(&self, now_s: f64) -> (usize, usize, usize, usize) {
+        let mut c = (0, 0, 0, 0);
+        for b in 0..self.len() {
+            match self.state_at(b, now_s) {
+                PowerState::Active => c.0 += 1,
+                PowerState::Idle => c.1 += 1,
+                PowerState::PoweredOff => c.2 += 1,
+                PowerState::Waking => c.3 += 1,
+            }
+        }
+        c
+    }
+
+    pub fn counts(&self) -> (usize, usize, usize, usize) {
+        self.counts_at(self.now())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fp(n: usize, wake: f64) -> FleetPower {
+        FleetPower::new(n, wake, 1.0)
+    }
+
+    #[test]
+    fn boards_start_idle_and_activate() {
+        let p = fp(3, 0.1);
+        assert_eq!(p.len(), 3);
+        for b in 0..3 {
+            assert_eq!(p.state_at(b, 0.0), PowerState::Idle);
+            assert!(p.is_usable_at(b, 0.0));
+        }
+        p.set_active_at(0, 0.0).unwrap();
+        assert_eq!(p.state_at(0, 0.0), PowerState::Active);
+        // Idempotent.
+        p.set_active_at(0, 0.0).unwrap();
+        p.set_idle_at(0, 0.0).unwrap();
+        assert_eq!(p.state_at(0, 0.0), PowerState::Idle);
+    }
+
+    #[test]
+    fn power_down_refused_on_active_boards() {
+        let p = fp(2, 0.1);
+        p.set_active_at(0, 0.0).unwrap();
+        assert!(p.power_down_at(0, 0.0).is_err(), "active board stays up");
+        assert_eq!(p.state_at(0, 0.0), PowerState::Active);
+        p.set_idle_at(0, 0.0).unwrap();
+        p.power_down_at(0, 0.0).unwrap();
+        assert_eq!(p.state_at(0, 0.0), PowerState::PoweredOff);
+        // Idempotent.
+        p.power_down_at(0, 0.0).unwrap();
+    }
+
+    #[test]
+    fn wake_latency_is_respected() {
+        let p = fp(1, 0.25);
+        p.power_down_at(0, 1.0).unwrap();
+        assert!(!p.is_usable_at(0, 1.0));
+        assert!(p.set_active_at(0, 1.0).is_err(), "off board cannot host");
+        let ready = p.begin_wake_at(0, 2.0);
+        assert!((ready - 2.25).abs() < 1e-12);
+        assert_eq!(p.state_at(0, 2.1), PowerState::Waking);
+        assert!(!p.is_usable_at(0, 2.2), "still waking");
+        assert!(p.set_active_at(0, 2.2).is_err(), "waking board cannot host");
+        // A second wake keeps the original deadline.
+        assert!((p.begin_wake_at(0, 2.2) - 2.25).abs() < 1e-12);
+        // Deadline passed: usable, activate works.
+        assert!(p.is_usable_at(0, 2.25));
+        p.set_active_at(0, 2.3).unwrap();
+        assert_eq!(p.state_at(0, 2.3), PowerState::Active);
+        // Waking an already-on board is ready immediately.
+        assert_eq!(p.begin_wake_at(0, 3.0), 3.0);
+    }
+
+    #[test]
+    fn serve_gate_counts_violations() {
+        let p = fp(2, 0.0);
+        p.set_active_at(0, 0.0).unwrap();
+        assert!(p.serve_check(0));
+        assert_eq!(p.violations(), 0);
+        assert!(!p.serve_check(1), "idle board is not serving a lane");
+        p.power_down_at(1, 0.0).unwrap();
+        assert!(!p.serve_check(1));
+        assert_eq!(p.violations(), 2);
+    }
+
+    #[test]
+    fn counts_track_states() {
+        let p = fp(4, 10.0);
+        p.set_active_at(0, 0.0).unwrap();
+        p.power_down_at(2, 0.0).unwrap();
+        p.power_down_at(3, 0.0).unwrap();
+        p.begin_wake_at(3, 0.0);
+        assert_eq!(p.counts_at(0.0), (1, 1, 1, 1));
+        // The wake completes at t = 10.
+        assert_eq!(p.counts_at(10.0), (1, 2, 1, 0));
+    }
+}

@@ -1,0 +1,281 @@
+//! Power-manager properties (ISSUE 5):
+//!
+//! 1. **State machine** (randomized): wake latency is always respected —
+//!    a board is never usable between `power_down` and its wake deadline;
+//!    an `Active` board can never be powered down; `serve_check` trips
+//!    (and counts) exactly on non-Active boards.
+//! 2. **No request is ever routed to a non-Active board** and **every
+//!    request gets exactly one response across a consolidation
+//!    migration**: a hot→cool→hot scenario drives the controller through
+//!    a consolidation power-down AND a wake-before-route re-expansion
+//!    under live traffic; the serve gate must count zero violations and
+//!    every submitted request must complete exactly once.
+//! 3. **Energy-aware plans tile the fleet**: with the energy pass on,
+//!    partial replica fills still tile disjoint sub-ranges and the
+//!    power-down candidates are exactly the unused boards.
+
+use std::time::Duration;
+use superlip::control::{run_drift_scenario, OnlineConfig, PowerGating};
+use superlip::fleet::{FleetSpec, PhaseSpec, Planner, PlannerConfig, WorkloadSpec};
+use superlip::platform::FpgaSpec;
+use superlip::power::{FleetPower, PowerState};
+use superlip::util::{proptest::forall, SplitMix64};
+
+/// Reference model for one board, mirrored against the real machine.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Ref {
+    Active,
+    Idle,
+    Off,
+    Waking(u64), // wake deadline in ticks
+}
+
+#[test]
+fn state_machine_respects_wake_latency_and_transitions() {
+    const WAKE: f64 = 5.0; // model seconds (integer ticks keep refs exact)
+
+    #[derive(Debug, Clone)]
+    struct Case {
+        ops: Vec<(u64, u64)>, // (op, board)
+    }
+
+    forall(
+        0x50_57A7E_2026,
+        40,
+        |r: &mut SplitMix64| Case {
+            ops: (0..60).map(|_| (r.range(0, 5), r.range(0, 2))).collect(),
+        },
+        |c: &Case| {
+            let p = FleetPower::new(3, WAKE, 1.0);
+            let mut refs = [Ref::Idle; 3];
+            let mut violations = 0u64;
+            for (t, &(op, board)) in c.ops.iter().enumerate() {
+                let now = t as f64;
+                let b = board as usize;
+                // Resolve the reference's pending wake first, like the
+                // machine does lazily.
+                if let Ref::Waking(until) = refs[b] {
+                    if t as u64 >= until {
+                        refs[b] = Ref::Idle;
+                    }
+                }
+                match op {
+                    0 => {
+                        let ok = p.set_active_at(b, now).is_ok();
+                        let want = matches!(refs[b], Ref::Active | Ref::Idle);
+                        if ok != want {
+                            return false;
+                        }
+                        if want {
+                            refs[b] = Ref::Active;
+                        }
+                    }
+                    1 => {
+                        let ok = p.set_idle_at(b, now).is_ok();
+                        let want = matches!(refs[b], Ref::Active | Ref::Idle);
+                        if ok != want {
+                            return false;
+                        }
+                        if want {
+                            refs[b] = Ref::Idle;
+                        }
+                    }
+                    2 => {
+                        let ok = p.power_down_at(b, now).is_ok();
+                        // Only an Active board refuses (its lane must
+                        // retire first); Waking aborts to Off.
+                        let want = !matches!(refs[b], Ref::Active);
+                        if ok != want {
+                            return false;
+                        }
+                        if want {
+                            refs[b] = Ref::Off;
+                        }
+                    }
+                    3 => {
+                        let ready = p.begin_wake_at(b, now);
+                        match refs[b] {
+                            Ref::Off => {
+                                if (ready - (now + WAKE)).abs() > 1e-9 {
+                                    return false;
+                                }
+                                refs[b] = Ref::Waking(t as u64 + WAKE as u64);
+                            }
+                            Ref::Waking(until) => {
+                                if (ready - until as f64).abs() > 1e-9 {
+                                    return false;
+                                }
+                            }
+                            _ => {
+                                if (ready - now).abs() > 1e-9 {
+                                    return false;
+                                }
+                            }
+                        }
+                    }
+                    _ => {
+                        // Serve gate: must pass iff Active, and count a
+                        // violation otherwise.
+                        let before = p.violations();
+                        let ok = p.serve_check(b);
+                        let want = refs[b] == Ref::Active;
+                        if ok != want {
+                            return false;
+                        }
+                        if p.violations() != before + u64::from(!want) {
+                            return false;
+                        }
+                        violations += u64::from(!want);
+                    }
+                }
+                // Invariants, every step: state agrees with the
+                // reference; a waking board is unusable before its
+                // deadline.
+                let state = p.state_at(b, now);
+                let want_state = match refs[b] {
+                    Ref::Active => PowerState::Active,
+                    Ref::Idle => PowerState::Idle,
+                    Ref::Off => PowerState::PoweredOff,
+                    Ref::Waking(until) => {
+                        if (t as u64) < until {
+                            PowerState::Waking
+                        } else {
+                            PowerState::Idle
+                        }
+                    }
+                };
+                if state != want_state {
+                    return false;
+                }
+                if state == PowerState::Waking && p.is_usable_at(b, now) {
+                    return false;
+                }
+            }
+            p.violations() == violations
+        },
+    );
+}
+
+/// End-to-end: consolidation powers boards down, the re-warm wakes one
+/// BEFORE routing — zero serve-gate violations, exactly one response per
+/// request throughout, and the freed board really is off in between.
+#[test]
+fn consolidation_routes_only_to_active_boards_with_exactly_one_response() {
+    let fleet = FleetSpec::homogeneous(3, FpgaSpec::zcu102());
+    let pcfg = PlannerConfig::default();
+    let planner = Planner::new(fleet.clone(), pcfg);
+    let a1 = planner.service_ms("alexnet", 1).unwrap() / 1e3;
+    let a2 = planner.service_ms("alexnet", 2).unwrap() / 1e3;
+    let q1 = planner.service_ms("squeezenet", 1).unwrap() / 1e3;
+    // Hot alexnet saturates one board (needs its 2-board torus); cold
+    // squeezenet idles on one. The cool phase collapses alexnet to a
+    // trickle → the controller consolidates to 1 board each and powers
+    // the freed board down; the re-warm needs it back.
+    let hot = 0.5 / a2;
+    let mix = vec![
+        WorkloadSpec::new("alexnet", hot, Duration::from_secs_f64(6.0 * a1)),
+        WorkloadSpec::new("squeezenet", 0.25 / q1, Duration::from_secs_f64(6.0 * q1)),
+    ];
+    let phases = vec![
+        PhaseSpec {
+            duration_s: 0.5,
+            rates_rps: vec![hot, 0.25 / q1],
+        },
+        PhaseSpec {
+            duration_s: 0.8,
+            rates_rps: vec![0.05 / a1, 0.25 / q1],
+        },
+        PhaseSpec {
+            duration_s: 0.6,
+            rates_rps: vec![hot, 0.25 / q1],
+        },
+    ];
+    let cfg = OnlineConfig {
+        seed: 7,
+        time_scale: 0.5,
+        tick_s: 0.1,
+        power: Some(PowerGating { wake_latency_s: 0.1 }),
+        recv_timeout: Duration::from_secs(30),
+        ..OnlineConfig::default()
+    };
+    let out = run_drift_scenario(&fleet, pcfg, &mix, &phases, &cfg, true).unwrap();
+
+    // The consolidation happened and the re-warm woke a board.
+    assert!(out.replans >= 1, "cool-off must re-plan: {:?}", out.events);
+    assert!(
+        out.events.iter().any(|e| e.contains("powered down boards")),
+        "freed boards must power down: {:?}",
+        out.events
+    );
+    assert!(
+        out.events.iter().any(|e| e.contains("waking boards")),
+        "the re-warm must wake before routing: {:?}",
+        out.events
+    );
+    // Headline property 1: the serve gate never saw a non-Active board.
+    assert_eq!(
+        out.power_violations, 0,
+        "no request may ever be routed to a non-Active board: {:?}",
+        out.events
+    );
+    // Headline property 2: exactly one response per submitted request —
+    // nothing was killed, so sent == completed in every phase row.
+    for rows in &out.phase_stats {
+        for r in rows {
+            assert_eq!(
+                r.completed, r.sent,
+                "{}: exactly-one-response across consolidation ({:?})",
+                r.model, out.events
+            );
+        }
+    }
+    // Watts actually dropped during the cool phase.
+    assert!(
+        out.avg_watts[1] < out.avg_watts[0],
+        "cool phase must draw less: {:?}",
+        out.avg_watts
+    );
+}
+
+/// Energy-aware plans still tile the fleet: partial replica fills leave
+/// their remainder as power-down candidates, disjoint from every torus.
+#[test]
+fn energy_plans_tile_and_list_candidates() {
+    let planner = Planner::new(
+        FleetSpec::homogeneous(6, FpgaSpec::zcu102()),
+        PlannerConfig::default(),
+    );
+    let a1 = planner.service_ms("alexnet", 1).unwrap() / 1e3;
+    let q1 = planner.service_ms("squeezenet", 1).unwrap() / 1e3;
+    // Light loads: the energy pass serves each model from far fewer
+    // boards than the composition hands it.
+    let mix = vec![
+        WorkloadSpec::new("alexnet", 0.2 / a1, Duration::from_secs_f64(8.0 * a1)),
+        WorkloadSpec::new("squeezenet", 0.2 / q1, Duration::from_secs_f64(8.0 * q1)),
+    ];
+    let plan = planner.plan(&mix).unwrap();
+    assert_eq!(plan.allocation().iter().sum::<usize>(), 6, "{}", plan.summary());
+    let candidates = plan.power_down_candidates();
+    let mut used: Vec<usize> = plan
+        .deployments
+        .iter()
+        .flat_map(|d| d.start..d.start + d.n_boards)
+        .collect();
+    used.sort_unstable();
+    used.dedup();
+    assert_eq!(used.len() + candidates.len(), 6, "tori + candidates tile the fleet");
+    assert!(
+        used.iter().all(|b| !candidates.contains(b)),
+        "candidates are disjoint from every torus: used {used:?} vs {candidates:?}"
+    );
+    // Light load ⇒ real consolidation potential surfaced.
+    assert!(
+        !candidates.is_empty(),
+        "light mix must expose power-down candidates:\n{}",
+        plan.summary()
+    );
+    // Watts books balance.
+    let total: f64 = plan.deployments.iter().map(|d| d.watts).sum();
+    assert!((plan.active_watts() - total).abs() < 1e-9);
+    assert!(plan.ungated_watts() >= plan.active_watts());
+}

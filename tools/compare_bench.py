@@ -2,21 +2,27 @@
 """CI perf-trajectory gate: compare a bench run's JSON output (emitted by
 the bench harness via `--json <path>` / `SUPERLIP_BENCH_JSON`) against the
 baseline JSON checked into the repo root (BENCH_fleet.json,
-BENCH_control.json).
+BENCH_control.json, BENCH_energy.json).
 
 Usage:
     python3 tools/compare_bench.py <baseline.json> <current.json>
 
-Rules (per metric listed in the BASELINE — extra metrics in the current
-run are informational only):
+Rules (per metric listed in the BASELINE):
 
 * unit "ms" (latencies): FAIL when
       current > baseline * (1 + rel) + 1.0 ms
+* unit "W" (fleet watts) / "J/inf" (energy per inference): FAIL when
+      current > baseline * (1 + rel) + 0.5
 * unit "%" (miss rates): FAIL when
       current > baseline + max(2.0, rel * 100 * baseline / 100) points
   (i.e. an absolute 2-point floor so near-zero baselines are not
   infinitely strict)
 * other units: informational only.
+
+Metrics present in the CURRENT run but missing from the baseline are
+listed with a WARNING (not a failure) so a bench can grow new metrics —
+and a baseline FILE that does not exist yet warns and passes, so a new
+bench can land one PR before its baseline is seeded.
 
 `rel` defaults to 0.10 (the ">10% regression" contract) and can be
 overridden per metric with a `"rel"` key in the baseline entry — used for
@@ -26,10 +32,15 @@ metrics only: improvements never fail, and the script prints a refreshed
 baseline block so maintainers can tighten provisional entries once real
 runner numbers exist.
 
-Exit code: 0 = within tolerance, 1 = regression, 2 = usage/format error.
+Exit code: 0 = within tolerance (or baseline missing), 1 = regression,
+2 = usage/format error.
 """
 import json
+import os
 import sys
+
+# Lower-is-worse units gated multiplicatively, with their absolute slack.
+GATED_REL = {"ms": 1.0, "W": 0.5, "J/inf": 0.5}
 
 
 def load(path):
@@ -45,7 +56,18 @@ def main():
     if len(sys.argv) != 3:
         print(__doc__, file=sys.stderr)
         sys.exit(2)
-    base_doc, cur_doc = load(sys.argv[1]), load(sys.argv[2])
+    base_path, cur_path = sys.argv[1], sys.argv[2]
+    if not os.path.exists(base_path):
+        # A brand-new bench may land before its baseline is seeded: warn
+        # loudly, print the current metrics as a seeding aid, and pass.
+        cur_doc = load(cur_path)
+        print(
+            f"compare_bench: WARNING: baseline {base_path} does not exist — "
+            "nothing gated this run. Seed it from the block below."
+        )
+        print(json.dumps(cur_doc.get("metrics", {}), indent=2))
+        sys.exit(0)
+    base_doc, cur_doc = load(base_path), load(cur_path)
     base = base_doc.get("metrics", {})
     cur = cur_doc.get("metrics", {})
     if base_doc.get("quick") is not None and cur_doc.get("quick") is not None:
@@ -71,8 +93,8 @@ def main():
         if bv is None:
             rows.append((label, bv, cv, unit, "seed-me"))
             continue
-        if unit == "ms":
-            limit = bv * (1.0 + rel) + 1.0
+        if unit in GATED_REL:
+            limit = bv * (1.0 + rel) + GATED_REL[unit]
             verdict = "FAIL" if cv > limit else "ok"
         elif unit == "%":
             limit = bv + max(2.0, rel * bv)
@@ -86,12 +108,28 @@ def main():
             )
         rows.append((label, bv, cv, unit, verdict))
 
+    # Metrics the current run reports but the baseline does not know —
+    # warn so they get seeded instead of silently never gating.
+    unbaselined = [
+        label
+        for label in cur
+        if not label.startswith("_") and label not in base
+    ]
+    for label in unbaselined:
+        cv = (cur.get(label) or {}).get("value")
+        rows.append((label, None, cv, (cur.get(label) or {}).get("unit", ""), "unbased"))
+
     name = base_doc.get("bench", "?")
-    print(f"perf gate: {name} ({sys.argv[2]} vs {sys.argv[1]})")
+    print(f"perf gate: {name} ({cur_path} vs {base_path})")
     for label, bv, cv, unit, verdict in rows:
         btxt = "-" if bv is None else f"{bv:.3f}"
         ctxt = "-" if cv is None else f"{cv:.3f}"
-        print(f"  [{verdict:>7}] {label:<44} base {btxt:>10} {unit:<3} now {ctxt:>10} {unit}")
+        print(f"  [{verdict:>7}] {label:<44} base {btxt:>10} {unit:<5} now {ctxt:>10} {unit}")
+    if unbaselined:
+        print(
+            "compare_bench: WARNING: current run has metrics the baseline "
+            f"lacks (not gated): {unbaselined} — add them to {base_path} to gate."
+        )
 
     # Refreshed baseline block for maintainers tightening provisional seeds.
     refreshed = {
