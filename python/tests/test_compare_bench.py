@@ -1,0 +1,147 @@
+"""CI-gate correctness: tools/compare_bench.py is the only thing standing
+between a perf regression and a green check, so its verdict logic gets the
+same test treatment as the code it gates. Pure stdlib (subprocess + tmp
+JSON files) — no jax/numpy needed, so the CI lint job can run this file
+alone."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[2]
+SCRIPT = REPO_ROOT / "tools" / "compare_bench.py"
+
+
+def _doc(metrics, bench="testbench", quick=True):
+    return {"bench": bench, "quick": quick, "metrics": metrics}
+
+
+def _write(tmp_path, name, doc):
+    p = tmp_path / name
+    p.write_text(json.dumps(doc))
+    return p
+
+
+def _run(*args):
+    return subprocess.run(
+        [sys.executable, str(SCRIPT)] + [str(a) for a in args],
+        capture_output=True,
+        text=True,
+    )
+
+
+def test_within_tolerance_passes(tmp_path):
+    base = _write(
+        tmp_path,
+        "base.json",
+        _doc({"p99": {"value": 10.0, "unit": "ms"}, "miss": {"value": 5.0, "unit": "%"}}),
+    )
+    cur = _write(
+        tmp_path,
+        "cur.json",
+        _doc({"p99": {"value": 10.5, "unit": "ms"}, "miss": {"value": 6.0, "unit": "%"}}),
+    )
+    r = _run(base, cur)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "perf gate passed" in r.stdout
+
+
+def test_regression_detected(tmp_path):
+    # 10 ms baseline at rel 0.10 → limit 10*1.1 + 1.0 = 12 ms; 50 ms fails.
+    base = _write(tmp_path, "base.json", _doc({"p99": {"value": 10.0, "unit": "ms"}}))
+    cur = _write(tmp_path, "cur.json", _doc({"p99": {"value": 50.0, "unit": "ms"}}))
+    r = _run(base, cur)
+    assert r.returncode == 1
+    assert "PERF REGRESSION" in r.stdout
+    assert "p99" in r.stdout
+
+
+def test_percent_unit_has_two_point_floor(tmp_path):
+    # Near-zero % baselines get an absolute 2-point floor: 0.5 → 2.0 is
+    # ok, 0.5 → 3.0 fails.
+    base = _write(tmp_path, "base.json", _doc({"miss": {"value": 0.5, "unit": "%"}}))
+    ok = _write(tmp_path, "ok.json", _doc({"miss": {"value": 2.0, "unit": "%"}}))
+    bad = _write(tmp_path, "bad.json", _doc({"miss": {"value": 3.0, "unit": "%"}}))
+    assert _run(base, ok).returncode == 0
+    assert _run(base, bad).returncode == 1
+
+
+def test_improvements_never_fail(tmp_path):
+    base = _write(tmp_path, "base.json", _doc({"p99": {"value": 10.0, "unit": "ms"}}))
+    cur = _write(tmp_path, "cur.json", _doc({"p99": {"value": 1.0, "unit": "ms"}}))
+    assert _run(base, cur).returncode == 0
+
+
+def test_unbaselined_current_metric_warns_but_passes(tmp_path):
+    base = _write(tmp_path, "base.json", _doc({"p99": {"value": 10.0, "unit": "ms"}}))
+    cur = _write(
+        tmp_path,
+        "cur.json",
+        _doc(
+            {
+                "p99": {"value": 10.0, "unit": "ms"},
+                "brand new metric": {"value": 7.0, "unit": "ms"},
+            }
+        ),
+    )
+    r = _run(base, cur)
+    assert r.returncode == 0
+    assert "WARNING" in r.stdout
+    assert "brand new metric" in r.stdout
+
+
+def test_missing_baseline_file_warns_and_passes(tmp_path):
+    cur = _write(tmp_path, "cur.json", _doc({"p99": {"value": 10.0, "unit": "ms"}}))
+    r = _run(tmp_path / "nonexistent.json", cur)
+    assert r.returncode == 0
+    assert "WARNING" in r.stdout
+    assert "does not exist" in r.stdout
+
+
+def test_baseline_metric_missing_from_current_fails(tmp_path):
+    # A metric the baseline gates MUST be reported — a silently dropped
+    # metric is indistinguishable from hiding a regression.
+    base = _write(tmp_path, "base.json", _doc({"p99": {"value": 10.0, "unit": "ms"}}))
+    cur = _write(tmp_path, "cur.json", _doc({"other": {"value": 1.0, "unit": "ms"}}))
+    r = _run(base, cur)
+    assert r.returncode == 1
+    assert "missing from current run" in r.stdout
+
+
+def test_underscore_labels_are_skipped(tmp_path):
+    # `_comment` blocks in the checked-in baselines are documentation, not
+    # metrics — even a null value must not gate.
+    base = _write(
+        tmp_path,
+        "base.json",
+        _doc(
+            {
+                "_comment": {"value": None, "unit": "", "note": "doc"},
+                "p99": {"value": 10.0, "unit": "ms"},
+            }
+        ),
+    )
+    cur = _write(tmp_path, "cur.json", _doc({"p99": {"value": 10.0, "unit": "ms"}}))
+    r = _run(base, cur)
+    assert r.returncode == 0
+    assert "_comment" not in [line.split()[1] for line in r.stdout.splitlines() if line.startswith("  [")]
+
+
+def test_per_metric_rel_override(tmp_path):
+    # rel 1.0 widens the ms gate to 2x + 1 ms: 19 ms passes, 22 ms fails.
+    base = _write(
+        tmp_path, "base.json", _doc({"p99": {"value": 10.0, "unit": "ms", "rel": 1.0}})
+    )
+    ok = _write(tmp_path, "ok.json", _doc({"p99": {"value": 19.0, "unit": "ms"}}))
+    bad = _write(tmp_path, "bad.json", _doc({"p99": {"value": 22.0, "unit": "ms"}}))
+    assert _run(base, ok).returncode == 0
+    assert _run(base, bad).returncode == 1
+
+
+def test_bad_usage_and_bad_json_exit_2(tmp_path):
+    assert _run().returncode == 2
+    garbage = tmp_path / "garbage.json"
+    garbage.write_text("{not json")
+    cur = _write(tmp_path, "cur.json", _doc({}))
+    assert _run(garbage, cur).returncode == 2

@@ -123,6 +123,7 @@ fn main() {
         max_batch: 4,
         window: Duration::from_micros(0),
         deadline_margin: Duration::from_micros(0),
+        ..BatcherConfig::default()
     });
     let now = Instant::now();
     let mut chans = Vec::with_capacity(n_req);
@@ -140,6 +141,7 @@ fn main() {
             image: Vec::new(),
             enqueued: now,
             deadline: now + Duration::from_secs(3600),
+            class: superlip::fleet::SloClass::BestEffort,
             reply: tx,
         })
         .unwrap();

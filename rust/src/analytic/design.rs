@@ -53,6 +53,21 @@ impl Design {
         }
     }
 
+    /// The 8-bit brownout lane: same ⟨Ip,Wp,Op⟩ = ⟨4,8,4⟩ streams as
+    /// fixed16 (halved data width, higher clock).
+    pub fn fixed8(tm: u64, tn: u64, tr: u64, tc: u64) -> Self {
+        Design {
+            tm,
+            tn,
+            tr,
+            tc,
+            ip: 4,
+            wp: 8,
+            op: 4,
+            precision: Precision::Fixed8,
+        }
+    }
+
     /// Override stream widths.
     pub fn with_streams(mut self, ip: u64, wp: u64, op: u64) -> Self {
         self.ip = ip;

@@ -77,11 +77,28 @@ impl Args {
     }
 }
 
+/// Parse and validate a `--surge-factor` value. The planner scores every
+/// gold-class workload's miss risk at `rate × surge_factor`, reserving
+/// flash-crowd headroom, so the factor must be finite and ≥ 1 (1 = score
+/// at the declared rate, no reserved headroom).
+pub fn parse_surge_factor(s: &str) -> Result<f64> {
+    let v: f64 = s
+        .parse()
+        .map_err(|e| Error::InvalidArg(format!("--surge-factor {s}: {e}")))?;
+    if !v.is_finite() || v < 1.0 {
+        return Err(Error::InvalidArg(format!(
+            "--surge-factor {s}: must be finite and ≥ 1 (1 disables reserved headroom)"
+        )));
+    }
+    Ok(v)
+}
+
 /// Parse a precision flag value.
 pub fn parse_precision(s: &str) -> Result<crate::platform::Precision> {
     match s.to_ascii_lowercase().as_str() {
         "f32" | "float32" | "float" => Ok(crate::platform::Precision::Float32),
         "fx16" | "fixed16" | "fixed" | "int16" => Ok(crate::platform::Precision::Fixed16),
+        "fx8" | "fixed8" | "int8" => Ok(crate::platform::Precision::Fixed8),
         other => Err(Error::InvalidArg(format!("unknown precision: {other}"))),
     }
 }
@@ -128,9 +145,21 @@ mod tests {
     }
 
     #[test]
+    fn surge_factor_validated_without_panicking() {
+        assert!((parse_surge_factor("1.5").unwrap() - 1.5).abs() < 1e-12);
+        assert!((parse_surge_factor("1").unwrap() - 1.0).abs() < 1e-12);
+        // Sub-1, non-finite, and non-numeric values all return typed
+        // errors — never a panic.
+        for bad in ["0.5", "0", "-2", "nan", "inf", "fast", ""] {
+            assert!(parse_surge_factor(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
     fn precision_parse() {
         assert_eq!(parse_precision("f32").unwrap(), Precision::Float32);
         assert_eq!(parse_precision("FIXED16").unwrap(), Precision::Fixed16);
-        assert!(parse_precision("int8").is_err());
+        assert_eq!(parse_precision("int8").unwrap(), Precision::Fixed8);
+        assert!(parse_precision("int4").is_err());
     }
 }

@@ -1,0 +1,291 @@
+//! The brownout ladder: graceful, per-class overload control.
+//!
+//! Overload used to be a failure mode — queues grow, every class misses
+//! together. The ladder makes it a controlled, *ordered* phenomenon: under
+//! sustained pressure the controller climbs one rung per decision, each
+//! rung trading best-effort quality for gold headroom, and climbs back
+//! down when the pressure clears:
+//!
+//! | rung | action | who pays |
+//! |------|--------|----------|
+//! | 0 `Normal`    | —                                          | nobody |
+//! | 1 `Shed`      | tighten the victim class's queue caps      | victim queue tail (explicit `Shed` rejections) |
+//! | 2 `Degrade`   | swap victim lanes one precision rung down  | victim accuracy (fx16 → fx8 runs 1.5× faster) |
+//! | 3 `Admission` | raise the ingress admission floor          | victim admission (typed rejection at submit) |
+//!
+//! This module is the pure decision logic — no clocks, no serving
+//! handles — in the same shape as [`super::drift`]: climbing needs
+//! `enter_hysteresis` CONSECUTIVE pressured windows, descending needs
+//! `exit_hysteresis` consecutive calm ones, and every transition resets
+//! both streaks, so a flapping load signal holds the current rung instead
+//! of oscillating (flap-proof, same argument as the drift detector's).
+//!
+//! The pressure signal deliberately uses the **offered** rate
+//! (`arrivals + shed`): once rung 1+ sheds traffic, served arrivals fall
+//! back under the planned rate, and a naive signal would immediately read
+//! "calm" and descend into a flap. Offered load keeps seeing the surge
+//! until the surge actually ends.
+
+use super::telemetry::ModelObs;
+
+/// Ladder tuning.
+#[derive(Debug, Clone, Copy)]
+pub struct BrownoutConfig {
+    /// A victim-class window with a miss rate above this is pressure.
+    pub miss_rate: f64,
+    /// ... as is an offered/planned rate ratio above this.
+    pub surge_ratio: f64,
+    /// Consecutive pressured windows before climbing one rung.
+    pub enter_hysteresis: usize,
+    /// Consecutive calm windows before descending one rung.
+    pub exit_hysteresis: usize,
+    /// Ignore windows with fewer offered requests than this (a handful of
+    /// Poisson samples is noise, not an overload).
+    pub min_offered: u64,
+}
+
+impl Default for BrownoutConfig {
+    fn default() -> Self {
+        // Exit slower than enter (3 > 2): recovering a rung re-admits
+        // load, so the ladder demands more evidence that the surge is
+        // really over than it demanded to believe the surge was real.
+        BrownoutConfig {
+            miss_rate: 0.15,
+            surge_ratio: 1.5,
+            enter_hysteresis: 2,
+            exit_hysteresis: 3,
+            min_offered: 15,
+        }
+    }
+}
+
+/// The ladder's rungs, in climbing order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum BrownoutRung {
+    Normal = 0,
+    Shed = 1,
+    Degrade = 2,
+    Admission = 3,
+}
+
+impl BrownoutRung {
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BrownoutRung::Normal => "normal",
+            BrownoutRung::Shed => "shed",
+            BrownoutRung::Degrade => "degrade",
+            BrownoutRung::Admission => "admission",
+        }
+    }
+
+    fn up(self) -> BrownoutRung {
+        match self {
+            BrownoutRung::Normal => BrownoutRung::Shed,
+            BrownoutRung::Shed => BrownoutRung::Degrade,
+            BrownoutRung::Degrade | BrownoutRung::Admission => BrownoutRung::Admission,
+        }
+    }
+
+    fn down(self) -> BrownoutRung {
+        match self {
+            BrownoutRung::Normal | BrownoutRung::Shed => BrownoutRung::Normal,
+            BrownoutRung::Degrade => BrownoutRung::Shed,
+            BrownoutRung::Admission => BrownoutRung::Degrade,
+        }
+    }
+}
+
+/// What one observed window did to the ladder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BrownoutStep {
+    /// No transition (stable, or a streak still building).
+    Hold,
+    /// Climbed to this rung (enter its action).
+    Climb(BrownoutRung),
+    /// Descended to this rung (exit the rung above's action).
+    Descend(BrownoutRung),
+}
+
+/// The flap-proof rung state machine. The controller computes the boolean
+/// pressure verdict per window ([`BrownoutLadder::pressured`]) and feeds
+/// it to [`BrownoutLadder::observe`]; the returned step names the rung
+/// action to apply or undo.
+#[derive(Debug)]
+pub struct BrownoutLadder {
+    cfg: BrownoutConfig,
+    rung: BrownoutRung,
+    pressure_streak: usize,
+    calm_streak: usize,
+}
+
+impl BrownoutLadder {
+    pub fn new(cfg: BrownoutConfig) -> Self {
+        assert!(cfg.enter_hysteresis >= 1 && cfg.exit_hysteresis >= 1);
+        assert!(cfg.surge_ratio > 1.0);
+        BrownoutLadder {
+            cfg,
+            rung: BrownoutRung::Normal,
+            pressure_streak: 0,
+            calm_streak: 0,
+        }
+    }
+
+    pub fn config(&self) -> BrownoutConfig {
+        self.cfg
+    }
+
+    pub fn rung(&self) -> BrownoutRung {
+        self.rung
+    }
+
+    /// True once any rung action is in force — the controller suppresses
+    /// drift re-plans while engaged (the ladder IS the overload response;
+    /// a concurrent migration would fight it).
+    pub fn engaged(&self) -> bool {
+        self.rung != BrownoutRung::Normal
+    }
+
+    /// Is this victim-class window overload pressure? Either the victim
+    /// misses hard, or the OFFERED load (served arrivals + ingress sheds)
+    /// runs past the planned rate — both gated on a minimum sample.
+    pub fn pressured(&self, obs: &ModelObs, planned_rate_rps: f64) -> bool {
+        let offered = obs.arrivals + obs.shed;
+        if offered < self.cfg.min_offered {
+            return false;
+        }
+        if obs.completed >= self.cfg.min_offered && obs.miss_rate > self.cfg.miss_rate {
+            return true;
+        }
+        planned_rate_rps > 0.0 && obs.offered_rps() / planned_rate_rps > self.cfg.surge_ratio
+    }
+
+    /// Feed one window's pressure verdict; returns the transition (if
+    /// any). One climb or descent per window, one rung at a time — the
+    /// ladder never jumps.
+    pub fn observe(&mut self, pressured: bool) -> BrownoutStep {
+        if pressured {
+            self.calm_streak = 0;
+            self.pressure_streak += 1;
+            if self.pressure_streak >= self.cfg.enter_hysteresis && self.rung.up() != self.rung {
+                self.pressure_streak = 0;
+                self.rung = self.rung.up();
+                return BrownoutStep::Climb(self.rung);
+            }
+        } else {
+            self.pressure_streak = 0;
+            if self.rung == BrownoutRung::Normal {
+                return BrownoutStep::Hold;
+            }
+            self.calm_streak += 1;
+            if self.calm_streak >= self.cfg.exit_hysteresis {
+                self.calm_streak = 0;
+                self.rung = self.rung.down();
+                return BrownoutStep::Descend(self.rung);
+            }
+        }
+        BrownoutStep::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ladder(enter: usize, exit: usize) -> BrownoutLadder {
+        BrownoutLadder::new(BrownoutConfig {
+            enter_hysteresis: enter,
+            exit_hysteresis: exit,
+            ..BrownoutConfig::default()
+        })
+    }
+
+    #[test]
+    fn climbs_one_rung_per_sustained_breach() {
+        let mut l = ladder(2, 3);
+        assert_eq!(l.observe(true), BrownoutStep::Hold);
+        assert_eq!(l.observe(true), BrownoutStep::Climb(BrownoutRung::Shed));
+        assert!(l.engaged());
+        // The next climb needs a fresh streak — no double-jump.
+        assert_eq!(l.observe(true), BrownoutStep::Hold);
+        assert_eq!(l.observe(true), BrownoutStep::Climb(BrownoutRung::Degrade));
+        assert_eq!(l.observe(true), BrownoutStep::Hold);
+        assert_eq!(l.observe(true), BrownoutStep::Climb(BrownoutRung::Admission));
+        // Top rung: sustained pressure holds, never overflows.
+        for _ in 0..5 {
+            assert_eq!(l.observe(true), BrownoutStep::Hold);
+            assert_eq!(l.rung(), BrownoutRung::Admission);
+        }
+    }
+
+    #[test]
+    fn descends_fully_after_sustained_calm() {
+        let mut l = ladder(1, 2);
+        l.observe(true);
+        l.observe(true);
+        l.observe(true);
+        assert_eq!(l.rung(), BrownoutRung::Admission);
+        let mut descents = Vec::new();
+        for _ in 0..10 {
+            if let BrownoutStep::Descend(r) = l.observe(false) {
+                descents.push(r);
+            }
+        }
+        assert_eq!(
+            descents,
+            vec![
+                BrownoutRung::Degrade,
+                BrownoutRung::Shed,
+                BrownoutRung::Normal
+            ],
+            "full recovery, one rung at a time"
+        );
+        assert!(!l.engaged());
+        // Fully recovered: calm windows are pure holds.
+        assert_eq!(l.observe(false), BrownoutStep::Hold);
+    }
+
+    #[test]
+    fn flapping_pressure_holds_the_rung() {
+        // Alternating pressure/calm satisfies NEITHER streak: the ladder
+        // must sit still wherever it is.
+        let mut l = ladder(2, 2);
+        l.observe(true);
+        l.observe(true); // → Shed
+        assert_eq!(l.rung(), BrownoutRung::Shed);
+        for i in 0..20 {
+            let step = l.observe(i % 2 == 0);
+            assert_eq!(step, BrownoutStep::Hold, "window {i}");
+            assert_eq!(l.rung(), BrownoutRung::Shed);
+        }
+    }
+
+    #[test]
+    fn pressure_signal_uses_offered_load_and_gates_samples() {
+        let l = ladder(2, 3);
+        let obs = |arrivals: u64, shed: u64, miss_rate: f64| ModelObs {
+            model: "m".into(),
+            arrivals,
+            completed: arrivals,
+            misses: 0,
+            shed,
+            window_s: 1.0,
+            rate_rps: arrivals as f64,
+            p50_ms: 1.0,
+            p99_ms: 2.0,
+            miss_rate,
+        };
+        // Under-sampled windows are never pressure, however wild.
+        assert!(!l.pressured(&obs(5, 0, 1.0), 1.0));
+        // Served arrivals at plan, but heavy ingress shedding: the OFFERED
+        // ratio sees the hidden surge (this is what stops descent-flap).
+        assert!(l.pressured(&obs(100, 100, 0.0), 100.0));
+        // Same served load with no sheds: calm.
+        assert!(!l.pressured(&obs(100, 0, 0.0), 100.0));
+        // Miss-rate trigger fires independently of rate.
+        assert!(l.pressured(&obs(100, 0, 0.5), 1000.0));
+    }
+}

@@ -40,11 +40,12 @@
 //! time, not bitstream reconfiguration, so the overlap is a modeling
 //! shortcut (a real deployment would drain before reprogramming).
 
+use super::brownout::{BrownoutConfig, BrownoutLadder, BrownoutStep};
 use super::drift::{DriftConfig, DriftDecision, DriftDetector};
 use super::replanner::{diff_plans, Replanner};
 use super::telemetry::{TelemetryFrame, TelemetryHub};
 use crate::energy::BOARD_IDLE_W;
-use crate::fleet::{lane_spec_for, Deployment, FleetHealth, FleetPlan, WorkloadSpec};
+use crate::fleet::{lane_spec_for, Deployment, FleetHealth, FleetPlan, SloClass, WorkloadSpec};
 use crate::power::{FleetPower, PowerState};
 use crate::serving::Server;
 use crate::{Error, Result};
@@ -75,6 +76,10 @@ pub struct ControlConfig {
     /// same machine into `health` (`FleetHealth::with_power`) so the
     /// serving gate enforces it.
     pub power: Option<FleetPower>,
+    /// Brownout ladder (graceful per-class overload): armed only when the
+    /// mix declares at least two distinct SLO classes — with one class
+    /// there is no one to protect and no one to sacrifice.
+    pub brownout: Option<BrownoutConfig>,
 }
 
 impl Default for ControlConfig {
@@ -87,6 +92,7 @@ impl Default for ControlConfig {
             window: Duration::from_micros(200),
             health: None,
             power: None,
+            brownout: None,
         }
     }
 }
@@ -157,6 +163,14 @@ pub struct Controller {
     /// Lane → (consecutive starved windows, arrivals accumulated over
     /// them) — the telemetry-fallback death evidence.
     dead_streak: HashMap<usize, (usize, u64)>,
+    /// The brownout rung state machine (None: disarmed — no config, or a
+    /// single-class mix).
+    ladder: Option<BrownoutLadder>,
+    /// The class the ladder sacrifices first (lowest class in the mix).
+    victim_class: SloClass,
+    /// Pre-degrade deployments of the victim lanes, for the rung-2 exit
+    /// swap back to full precision.
+    degraded_originals: Vec<Deployment>,
     /// Human-readable event log (benches/CLI print it).
     pub events: Vec<String>,
     replans: usize,
@@ -226,6 +240,26 @@ impl Controller {
                 ));
             }
         }
+        // Arm the brownout ladder only for a genuinely multi-class mix.
+        let n_classes = {
+            let mut cs: Vec<SloClass> = mix.iter().map(|w| w.class).collect();
+            cs.sort_unstable();
+            cs.dedup();
+            cs.len()
+        };
+        let victim_class = mix
+            .iter()
+            .map(|w| w.class)
+            .min()
+            .unwrap_or(SloClass::BestEffort);
+        let ladder = match &cfg.brownout {
+            Some(bc) if n_classes >= 2 => Some(BrownoutLadder::new(*bc)),
+            Some(_) => {
+                events.push("brownout ladder disarmed (single-class mix)".into());
+                None
+            }
+            None => None,
+        };
         Ok(Controller {
             server,
             hub,
@@ -240,6 +274,9 @@ impl Controller {
             pending_adds: Vec::new(),
             deferred_retires: Vec::new(),
             dead_streak: HashMap::new(),
+            ladder,
+            victim_class,
+            degraded_originals: Vec::new(),
             events,
             replans: 0,
         })
@@ -345,20 +382,234 @@ impl Controller {
         let decision = self.detector.observe(&self.mix, &frame.models);
         let mut migrated_to = None;
         if let DriftDecision::Replan { reason } = &decision {
-            self.events.push(format!("drift: {reason}"));
-            let observed = self.hub.observed_mix(&self.mix);
-            match self.replanner.plan(&observed) {
-                Ok(new_plan) => {
-                    migrated_to = Some(self.migrate_to(new_plan, observed));
+            if self.brownout_engaged() {
+                // The ladder IS the overload response: a concurrent
+                // drift migration would fight the rung actions (and the
+                // overload that tripped drift is exactly what the ladder
+                // is already digesting).
+                self.events.push(format!(
+                    "re-plan suppressed (brownout rung `{}`): {reason}",
+                    self.ladder.as_ref().map_or("?", |l| l.rung().name())
+                ));
+            } else {
+                self.events.push(format!("drift: {reason}"));
+                let observed = self.hub.observed_mix(&self.mix);
+                match self.replanner.plan(&observed) {
+                    Ok(new_plan) => {
+                        migrated_to = Some(self.migrate_to(new_plan, observed));
+                    }
+                    Err(e) => self.events.push(format!("re-plan failed: {e}")),
                 }
-                Err(e) => self.events.push(format!("re-plan failed: {e}")),
             }
         }
+        self.step_brownout(&frame);
         TickReport {
             frame,
             decision,
             migrated_to,
         }
+    }
+
+    /// Current brownout rung index (0 = normal; also 0 when disarmed).
+    pub fn brownout_rung(&self) -> usize {
+        self.ladder.as_ref().map_or(0, |l| l.rung().index())
+    }
+
+    /// True while any rung action is in force.
+    pub fn brownout_engaged(&self) -> bool {
+        self.ladder.as_ref().is_some_and(|l| l.engaged())
+    }
+
+    /// Feed this window's victim-class pressure verdict to the ladder and
+    /// apply (or undo) the rung action of any transition. Pressure is ANY
+    /// victim-class model under miss or offered-rate breach; one rung per
+    /// window, with enter/exit hysteresis inside the ladder.
+    fn step_brownout(&mut self, frame: &TelemetryFrame) {
+        let Some(ladder) = &self.ladder else {
+            return;
+        };
+        let mut pressured = false;
+        for w in self.mix.iter().filter(|w| w.class == self.victim_class) {
+            if let Some(o) = frame.models.iter().find(|o| o.model == w.model) {
+                pressured |= ladder.pressured(o, w.rate_rps);
+            }
+        }
+        let step = self
+            .ladder
+            .as_mut()
+            .expect("checked above")
+            .observe(pressured);
+        match step {
+            BrownoutStep::Hold => {}
+            BrownoutStep::Climb(r) => {
+                self.events
+                    .push(format!("brownout: climbed to rung `{}`", r.name()));
+                match r {
+                    super::brownout::BrownoutRung::Shed => self.apply_victim_caps(true),
+                    super::brownout::BrownoutRung::Degrade => self.enter_degrade(),
+                    super::brownout::BrownoutRung::Admission => {
+                        let floor = self.victim_class.index() + 1;
+                        self.server.set_admission_floor(floor);
+                        self.events.push(format!(
+                            "brownout: admission floor raised — class `{}` refused at ingress",
+                            self.victim_class.name()
+                        ));
+                    }
+                    super::brownout::BrownoutRung::Normal => unreachable!("never climbs to normal"),
+                }
+            }
+            BrownoutStep::Descend(r) => {
+                self.events
+                    .push(format!("brownout: descended to rung `{}`", r.name()));
+                // Undo the action of the rung we just LEFT (one above `r`).
+                match r {
+                    super::brownout::BrownoutRung::Degrade => {
+                        self.server.set_admission_floor(0);
+                        self.events
+                            .push("brownout: admission floor lowered — all classes admitted".into());
+                    }
+                    super::brownout::BrownoutRung::Shed => self.exit_degrade(),
+                    super::brownout::BrownoutRung::Normal => self.apply_victim_caps(false),
+                    super::brownout::BrownoutRung::Admission => {
+                        unreachable!("nothing above the top rung")
+                    }
+                }
+            }
+        }
+    }
+
+    /// Rung 1 enter/exit: tighten every victim-model lane's victim-class
+    /// queue cap to its planned batch (the queue serves what is already
+    /// in flight, the tail sheds with typed rejections) — or restore the
+    /// mix-declared quota on the way down.
+    fn apply_victim_caps(&mut self, tighten: bool) {
+        let victims: Vec<(String, usize)> = self
+            .mix
+            .iter()
+            .filter(|w| w.class == self.victim_class)
+            .map(|w| {
+                let cap = if tighten {
+                    w.max_batch.max(1)
+                } else {
+                    w.class_quota
+                };
+                (w.model.clone(), cap)
+            })
+            .collect();
+        for (model, cap) in victims {
+            for bi in 0..self.books.len() {
+                if self.books[bi].model == model {
+                    let lane = self.books[bi].lane;
+                    self.server.set_lane_class_cap(lane, self.victim_class, cap);
+                }
+            }
+            self.events.push(format!(
+                "brownout: {} `{}` class-`{}` queue cap → {}",
+                if tighten { "tightened" } else { "restored" },
+                model,
+                self.victim_class.name(),
+                if cap == 0 { "unlimited".to_string() } else { cap.to_string() },
+            ));
+        }
+    }
+
+    /// Rung 2 enter: swap every victim-model lane to the same sub-cluster
+    /// re-planned one precision rung down (fx16 → fx8 runs the service
+    /// ~1.5× faster at lower accuracy), make-before-break on the same
+    /// boards. Originals are kept for the exit swap.
+    fn enter_degrade(&mut self) {
+        let victims: Vec<String> = self
+            .mix
+            .iter()
+            .filter(|w| w.class == self.victim_class)
+            .map(|w| w.model.clone())
+            .collect();
+        let mut swapped_books: Vec<usize> = Vec::new();
+        for di in 0..self.plan.deployments.len() {
+            if !victims.contains(&self.plan.deployments[di].workload.model) {
+                continue;
+            }
+            let d = self.plan.deployments[di].clone();
+            let deg = match self.replanner.degraded_deployment(&d) {
+                Ok(deg) => deg,
+                Err(e) => {
+                    self.events
+                        .push(format!("brownout: cannot degrade `{}`: {e}", d.workload.model));
+                    continue;
+                }
+            };
+            if let Some(bi) = self.swap_lane(&d, &deg, &swapped_books) {
+                swapped_books.push(bi);
+                self.plan.deployments[di] = deg;
+                self.degraded_originals.push(d);
+            }
+        }
+        // Fresh lanes spawn with the mix-declared quota; rung 1 is still
+        // in force beneath rung 2 — re-tighten them.
+        self.apply_victim_caps(true);
+    }
+
+    /// Rung 2 exit: swap every degraded lane back to its stored original.
+    fn exit_degrade(&mut self) {
+        let mut swapped_books: Vec<usize> = Vec::new();
+        for orig in std::mem::take(&mut self.degraded_originals) {
+            let Some(di) = self.plan.deployments.iter().position(|d| {
+                d.workload.model == orig.workload.model && d.replica == orig.replica
+            }) else {
+                continue; // a migration replaced the lane meanwhile
+            };
+            let cur = self.plan.deployments[di].clone();
+            if let Some(bi) = self.swap_lane(&cur, &orig, &swapped_books) {
+                swapped_books.push(bi);
+                self.plan.deployments[di] = orig;
+            }
+        }
+        // Still on rung 1 after this exit — keep the swapped-back lanes'
+        // caps tight until the ladder fully descends.
+        self.apply_victim_caps(true);
+    }
+
+    /// Make-before-break swap of one live lane: stand up `to` on the same
+    /// boards, route it, then retire the lane serving `from` (it drains;
+    /// reaped on later ticks — the same drain-overlap modeling shortcut
+    /// as plan migration). Returns the swapped book index.
+    fn swap_lane(
+        &mut self,
+        from: &Deployment,
+        to: &Deployment,
+        skip_books: &[usize],
+    ) -> Option<usize> {
+        let bi = self.books.iter().enumerate().find_map(|(i, b)| {
+            (!skip_books.contains(&i)
+                && b.model == from.workload.model
+                && b.boards.len() == from.n_boards)
+                .then_some(i)
+        })?;
+        let boards = self.books[bi].boards.clone();
+        let health = self.cfg.health.clone().map(|h| (h, boards.clone()));
+        let spec = lane_spec_for(to, self.cfg.time_scale, self.cfg.window, health);
+        let lane = self.server.add_lane(spec);
+        let old = self.books[bi].clone();
+        self.books[bi] = LaneBook {
+            model: to.workload.model.clone(),
+            lane,
+            boards,
+            watts: to.watts,
+        };
+        if self.server.begin_retire(old.lane).is_ok() {
+            self.retiring.push(RetiringLane {
+                lane: old.lane,
+                boards: old.boards,
+            });
+        }
+        self.events.push(format!(
+            "brownout: lane {} for `{}` swapped to {} (lane {lane}, {:.3} ms service)",
+            old.lane,
+            to.workload.model,
+            to.design.precision.name(),
+            to.service_ms
+        ));
+        Some(bi)
     }
 
     /// Out-of-band health event: `board` (ORIGINAL index) died. Retires
@@ -901,6 +1152,119 @@ mod tests {
         assert!(ctl.retiring.iter().any(|r| r.lane == 1), "{:?}", ctl.events);
         assert!(!ctl.retiring.iter().any(|r| r.lane == 0), "{:?}", ctl.events);
         assert!(!ctl.fleet_ids.contains(&2));
+        server.shutdown();
+    }
+
+    #[test]
+    fn brownout_ladder_climbs_under_flood_and_recovers() {
+        use crate::platform::Precision;
+        let fleet = FleetSpec::homogeneous(2, FpgaSpec::zcu102());
+        let pcfg = PlannerConfig::default();
+        let planner = Planner::new(fleet.clone(), pcfg);
+        let a1 = planner.service_ms("alexnet", 1).unwrap();
+        let s1 = planner.service_ms("squeezenet", 1).unwrap();
+        let mix = vec![
+            WorkloadSpec::new(
+                "alexnet",
+                0.2 / (a1 / 1e3),
+                Duration::from_secs_f64(8.0 * a1 / 1e3),
+            )
+            .with_class(crate::fleet::SloClass::Gold),
+            WorkloadSpec::new(
+                "squeezenet",
+                0.2 / (s1 / 1e3),
+                Duration::from_secs_f64(8.0 * s1 / 1e3),
+            ),
+        ];
+        let plan = planner.plan(&mix).unwrap();
+        let scen = ScenarioConfig::default();
+        let lanes = plan
+            .deployments
+            .iter()
+            .map(|d| crate::fleet::lane_spec_for(d, 1.0, scen.window, None))
+            .collect();
+        let server = Arc::new(Server::start_plan(lanes, ServerConfig::default()));
+        let replanner = Replanner::new(fleet, pcfg);
+        replanner.adopt_cache(&planner);
+        let mut ccfg = ControlConfig::default();
+        ccfg.brownout = Some(super::BrownoutConfig {
+            enter_hysteresis: 1,
+            exit_hysteresis: 1,
+            min_offered: 10,
+            ..super::BrownoutConfig::default()
+        });
+        let mut ctl = Controller::new(server.clone(), replanner, plan, ccfg).unwrap();
+        assert_eq!(ctl.brownout_rung(), 0);
+
+        // Flash flood: each window offers squeezenet far more than its
+        // planned trickle; the ladder climbs exactly one rung per window.
+        let d = Duration::from_secs(5);
+        for expect_rung in 1..=3usize {
+            let mut rxs = Vec::new();
+            for _ in 0..20 {
+                if let Ok(rx) = server.submit_to("squeezenet", vec![0.2; 64], d) {
+                    rxs.push(rx);
+                }
+            }
+            for rx in rxs {
+                let _ = rx.recv_timeout(d);
+            }
+            ctl.tick();
+            assert_eq!(ctl.brownout_rung(), expect_rung, "{:?}", ctl.events);
+        }
+        // Rung 2 swapped the best-effort lane one precision down...
+        assert_eq!(
+            ctl.plan()
+                .model_deployments("squeezenet")
+                .next()
+                .unwrap()
+                .design
+                .precision,
+            Precision::Fixed8,
+            "{:?}",
+            ctl.events
+        );
+        // ...and rung 3 refuses best-effort at ingress with a typed shed,
+        // while gold still flows.
+        assert!(server
+            .try_submit_to(
+                "squeezenet",
+                vec![0.2; 64],
+                d,
+                crate::fleet::SloClass::BestEffort
+            )
+            .is_err());
+        let rx = server
+            .try_submit_to("alexnet", vec![0.2; 64], d, crate::fleet::SloClass::Gold)
+            .unwrap();
+        assert!(rx.recv_timeout(d).is_ok());
+
+        // Flood over: calm windows walk the ladder all the way back down,
+        // restoring admission, full precision, and unlimited caps.
+        for _ in 0..6 {
+            if ctl.brownout_rung() == 0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+            ctl.tick();
+        }
+        assert_eq!(ctl.brownout_rung(), 0, "{:?}", ctl.events);
+        assert_eq!(server.admission_floor(), 0);
+        assert_eq!(
+            ctl.plan()
+                .model_deployments("squeezenet")
+                .next()
+                .unwrap()
+                .design
+                .precision,
+            Precision::Fixed16,
+            "full recovery restores the lane: {:?}",
+            ctl.events
+        );
+        let rx = server
+            .submit_to("squeezenet", vec![0.2; 64], d)
+            .unwrap();
+        assert!(rx.recv_timeout(d).is_ok());
         server.shutdown();
     }
 

@@ -187,6 +187,7 @@ mod tests {
             arrivals,
             completed: arrivals,
             misses: (miss_rate * arrivals as f64) as u64,
+            shed: 0,
             // Window consistent with the observed rate.
             window_s: arrivals as f64 / rate.max(1e-9),
             rate_rps: rate,
@@ -295,6 +296,7 @@ mod tests {
             arrivals: 0,
             completed: 0,
             misses: 0,
+            shed: 0,
             window_s: 0.5, // planned 100 rps × 0.5 s = 50 expected
             rate_rps: 0.0,
             p50_ms: f64::NAN,
@@ -325,6 +327,7 @@ mod tests {
             arrivals: 100,
             completed: 100,
             misses: 0,
+            shed: 0,
             window_s: 1e-4,
             rate_rps: 1e6,
             p50_ms: 1.0,

@@ -29,18 +29,29 @@
 //!    exactly one response (hitless handoff; `tests/control_migration.rs`
 //!    property-tests this).
 //!
+//! 5. **Degrade gracefully** — under sustained overload (offered load or
+//!    victim-class misses past thresholds, with hysteresis) the
+//!    [`BrownoutLadder`] climbs one rung at a time — tighten the lowest
+//!    class's queue caps, swap its lanes one precision rung down
+//!    (fx16 → fx8 via `Planner::degraded_deployment`), raise the ingress
+//!    admission floor — and climbs back down when the surge clears, so
+//!    gold-class p99 holds while best-effort sheds with explicit typed
+//!    rejections instead of silent misses.
+//!
 //! [`run_drift_scenario`] drives the whole loop against the cluster
 //! simulator under piecewise-stationary Poisson traffic and board-failure
 //! injection (`fleet::scenario`); the `control_drift` bench and
 //! `fleet --online` CLI mode contrast a static plan with the controlled
 //! one through a mid-run mix flip.
 
+mod brownout;
 mod controller;
 mod drift;
 mod replanner;
 mod runner;
 mod telemetry;
 
+pub use brownout::{BrownoutConfig, BrownoutLadder, BrownoutRung, BrownoutStep};
 pub use controller::{ControlConfig, Controller, TickReport};
 pub use drift::{DriftConfig, DriftDecision, DriftDetector};
 pub use replanner::{diff_plans, PlanDelta, Replanner};

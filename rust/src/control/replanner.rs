@@ -54,6 +54,15 @@ impl Replanner {
     pub fn plan(&self, mix: &[WorkloadSpec]) -> Result<FleetPlan> {
         self.planner.plan(mix)
     }
+
+    /// One deployment re-planned a precision rung down (the brownout
+    /// ladder's degrade action) — see `Planner::degraded_deployment`.
+    pub fn degraded_deployment(
+        &self,
+        d: &crate::fleet::Deployment,
+    ) -> Result<crate::fleet::Deployment> {
+        self.planner.degraded_deployment(d)
+    }
 }
 
 /// The minimal lane changes migrating `old` → `new`. Entries appear with

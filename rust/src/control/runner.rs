@@ -10,7 +10,7 @@ use crate::fleet::{
     PlannerConfig, WorkloadSpec, SCENARIO_IMAGE_ELEMS,
 };
 use crate::power::{EnergyLedger, FleetPower};
-use crate::serving::{InferenceResponse, Server, ServerConfig};
+use crate::serving::{InferenceResponse, Server, ServerConfig, SubmitError};
 use crate::util::{SplitMix64, Summary};
 use crate::{Error, Result};
 use std::sync::{mpsc, Arc};
@@ -98,6 +98,9 @@ pub struct OnlineOutcome {
     /// Serve-gate trips: requests that reached a non-Active board. The
     /// consolidation property tests pin this to zero.
     pub power_violations: u64,
+    /// Brownout-ladder rung at run end (0 = fully recovered / never
+    /// engaged). The overload bench pins this to 0 after the surge.
+    pub final_rung: usize,
 }
 
 impl OnlineOutcome {
@@ -114,6 +117,12 @@ impl OnlineOutcome {
             .iter()
             .map(|m| m.miss_rate)
             .fold(f64::NAN, f64::max)
+    }
+
+    /// Ingress sheds across all models in one phase (explicit typed
+    /// rejections, never silent drops).
+    pub fn total_shed(&self, phase: usize) -> usize {
+        self.phase_stats[phase].iter().map(|m| m.shed).sum()
     }
 }
 
@@ -270,6 +279,7 @@ pub fn run_drift_scenario(
         .map(|_| (0..mix.len()).map(|_| Vec::new()).collect())
         .collect();
     let mut dropped: Vec<Vec<usize>> = vec![vec![0; mix.len()]; phases.len()];
+    let mut shed: Vec<Vec<usize>> = vec![vec![0; mix.len()]; phases.len()];
     let mut payload_rng = SplitMix64::new(cfg.seed.wrapping_mul(0xC0FFEE));
     let t0 = Instant::now();
     for (t, ev) in timeline {
@@ -285,11 +295,17 @@ pub fn run_drift_scenario(
                     .collect();
                 let checksum: f32 = img.iter().sum();
                 let w = &mix[entry];
-                match server.submit_to(&w.model, img, w.deadline.mul_f64(ts)) {
+                match server.try_submit_to(&w.model, img, w.deadline.mul_f64(ts), w.class) {
                     Ok(rx) => pending[phase][entry].push((checksum, rx)),
+                    // Brownout refusal (class quota, admission floor, or an
+                    // exhausted re-route budget): an EXPLICIT rejection the
+                    // caller saw — counted as a shed, not a miss.
+                    Err(SubmitError::Shed { .. } | SubmitError::Overloaded(_)) => {
+                        shed[phase][entry] += 1
+                    }
                     // Unroutable (e.g. dead lane, repair failed): a lost
                     // request — charged as a miss below.
-                    Err(_) => dropped[phase][entry] += 1,
+                    Err(SubmitError::NoRoute(_)) => dropped[phase][entry] += 1,
                 }
             }
             Ev::Tick => {
@@ -328,7 +344,11 @@ pub fn run_drift_scenario(
         let (p_start, p_end) = phase_bounds[pi];
         let mut rows = Vec::with_capacity(mix.len());
         for (ei, pend) in per_entry.iter_mut().enumerate() {
-            let sent = pend.len() + dropped[pi][ei];
+            // Sheds were explicitly refused at submit; `attempted` is what
+            // actually entered (or was lost by) the serving path, and only
+            // that denominates the miss rate.
+            let attempted = pend.len() + dropped[pi][ei];
+            let sent = attempted + shed[pi][ei];
             let mut lat_ms = Vec::new();
             let mut batches = Vec::new();
             let mut misses = 0usize;
@@ -357,9 +377,11 @@ pub fn run_drift_scenario(
             };
             rows.push(ModelStats {
                 model: mix[ei].model.clone(),
+                class: mix[ei].class,
                 n_boards: final_alloc[ei],
                 sent,
                 completed,
+                shed: shed[pi][ei],
                 p50_ms: p50,
                 p99_ms: p99,
                 mean_batch: if completed > 0 {
@@ -369,9 +391,10 @@ pub fn run_drift_scenario(
                 },
                 // An idle entry (nothing sent this phase) is not failing —
                 // score 0, not 100%, so worst_miss_rate compares what was
-                // actually served.
-                miss_rate: if sent > 0 {
-                    (misses + (sent - completed)) as f64 / sent as f64
+                // actually served. Sheds are excluded: they were refused
+                // with a typed error, not silently missed.
+                miss_rate: if attempted > 0 {
+                    (misses + (attempted - completed)) as f64 / attempted as f64
                 } else {
                     0.0
                 },
@@ -393,9 +416,9 @@ pub fn run_drift_scenario(
         }
         None => (0, 0),
     };
-    let (replans, events) = match controller {
-        Some(c) => (c.replans(), c.events.clone()),
-        None => (0, Vec::new()),
+    let (replans, events, final_rung) = match controller {
+        Some(c) => (c.replans(), c.events.clone(), c.brownout_rung()),
+        None => (0, Vec::new(), 0),
     };
     Ok(OnlineOutcome {
         phase_stats,
@@ -406,6 +429,7 @@ pub fn run_drift_scenario(
         fleet_joules: ledger.joules(0),
         powered_off,
         power_violations,
+        final_rung,
     })
 }
 

@@ -28,6 +28,11 @@ pub struct ModelObs {
     pub arrivals: u64,
     pub completed: u64,
     pub misses: u64,
+    /// Requests refused at ingress this window (admission floor or class
+    /// quota) — they never became arrivals, so the OFFERED load is
+    /// `arrivals + shed` (the brownout ladder's pressure signal; without
+    /// it, shedding would hide the very overload that caused it).
+    pub shed: u64,
     /// Length of the window these counts cover (model-time seconds) —
     /// the drift detector needs it to compute EXPECTED arrivals for the
     /// rate-collapse trigger (a collapsed stream produces no observed
@@ -40,6 +45,14 @@ pub struct ModelObs {
     pub p99_ms: f64,
     /// Fraction of the window's completions that missed (0 when idle).
     pub miss_rate: f64,
+}
+
+impl ModelObs {
+    /// Offered arrival rate including ingress-shed requests (model-time
+    /// rps) — what the brownout ladder compares against planned capacity.
+    pub fn offered_rps(&self) -> f64 {
+        (self.arrivals + self.shed) as f64 / self.window_s.max(1e-9)
+    }
 }
 
 /// One telemetry tick: every live lane's window, pooled per model.
@@ -109,6 +122,7 @@ impl TelemetryHub {
                     arrivals: s.arrivals,
                     completed: s.completed,
                     misses: s.misses,
+                    shed: s.shed,
                     window_s: w,
                     rate_rps: s.arrivals as f64 / w.max(1e-9),
                     p50_ms: p50,

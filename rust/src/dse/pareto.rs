@@ -29,6 +29,7 @@ pub fn roofline_scatter(layer: &ConvLayer, fpga: &FpgaSpec, p: Precision) -> Vec
             let d = match p {
                 Precision::Float32 => Design::float32(tm, tn, layer.r, layer.c),
                 Precision::Fixed16 => Design::fixed16(tm, tn, layer.r, layer.c),
+                Precision::Fixed8 => Design::fixed8(tm, tn, layer.r, layer.c),
             };
             if check_feasible(&d, fpga, layer.k).is_err() {
                 continue;

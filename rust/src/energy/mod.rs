@@ -25,6 +25,9 @@ fn dsp_w_per_100mhz(p: Precision) -> f64 {
     match p {
         Precision::Float32 => 0.00225,
         Precision::Fixed16 => 0.00110,
+        // 8-bit MACs toggle half the datapath of fx16 in the same slice;
+        // no Table 3 wall reading exists, so extrapolate conservatively.
+        Precision::Fixed8 => 0.00090,
     }
 }
 /// Dynamic power per BRAM18K block in W at 100 MHz.

@@ -38,4 +38,6 @@ pub use scenario::{
     lane_spec_for, piecewise_arrivals, run_scenario, stats_table, worst_miss_rate, worst_p99,
     FleetHealth, ModelStats, PhaseSpec, ScenarioConfig, SCENARIO_CLASSES, SCENARIO_IMAGE_ELEMS,
 };
-pub use workload::{parse_mix, reference_design, FleetSpec, ReplicaPolicy, WorkloadSpec};
+pub use workload::{
+    parse_mix, reference_design, FleetSpec, ReplicaPolicy, SloClass, WorkloadSpec, N_CLASSES,
+};

@@ -33,7 +33,7 @@
 //! uniform design) and, as an alternative, with the rate-proportional row
 //! partition of `partition::hetero`; the faster estimate wins.
 
-use super::workload::{reference_design, FleetSpec, ReplicaPolicy, WorkloadSpec};
+use super::workload::{reference_design, FleetSpec, ReplicaPolicy, SloClass, WorkloadSpec};
 use crate::analytic::{is_feasible, Design};
 use crate::coordinator::SuperLip;
 use crate::model::zoo;
@@ -71,6 +71,11 @@ pub struct PlannerConfig {
     /// is the inflated p99-ish sojourn as a fraction of the deadline, so
     /// 0.5 means half the deadline budget).
     pub energy_risk_floor: f64,
+    /// Surge headroom for gold-class workloads: their risk is scored at
+    /// `rate × surge_factor`, so composition search reserves capacity for
+    /// a flash crowd and gold p99 holds while best-effort degrades through
+    /// the brownout ladder. 1.0 (the default) scores at the declared rate.
+    pub surge_factor: f64,
 }
 
 impl Default for PlannerConfig {
@@ -81,6 +86,7 @@ impl Default for PlannerConfig {
             wait_inflation: 3.0,
             energy_tolerance: 0.05,
             energy_risk_floor: 0.5,
+            surge_factor: 1.0,
         }
     }
 }
@@ -395,7 +401,7 @@ struct CompositionScore {
 pub struct Planner {
     fleet: FleetSpec,
     cfg: PlannerConfig,
-    cache: Mutex<HashMap<(String, usize, usize), SubPlan>>,
+    cache: Mutex<HashMap<(String, usize, usize, Precision), SubPlan>>,
 }
 
 impl Planner {
@@ -445,6 +451,16 @@ impl Planner {
     /// construct mixes with known headroom.
     pub fn service_ms(&self, model: &str, n_boards: usize) -> Result<f64> {
         Ok(self.subplan(model, 0, n_boards)?.service_ms)
+    }
+
+    /// The rate a workload's risk is scored at: gold reserves
+    /// `surge_factor` headroom, everything else scores at face value.
+    fn scoring_rate(&self, w: &WorkloadSpec) -> f64 {
+        if w.class == SloClass::Gold {
+            w.rate_rps * self.cfg.surge_factor
+        } else {
+            w.rate_rps
+        }
     }
 
     /// Best fleet split for the mix: search all compositions of the fleet
@@ -577,6 +593,9 @@ impl Planner {
             })?;
             let (r_count, k) = (split.n_replicas, split.boards_each);
             let share_rate = w.rate_rps / r_count as f64;
+            // Risk (and the batch it picks) scores at the surged rate for
+            // gold; `share_rate_rps` below stays the true traffic share.
+            let score_share = self.scoring_rate(w) / r_count as f64;
             for r in 0..r_count {
                 let rep_start = start + r * k;
                 let sp = self.subplan(&w.model, rep_start, k)?;
@@ -584,7 +603,7 @@ impl Planner {
                 let (risk, planned_batch) = miss_risk_batched(
                     &sp.service_ms_batch,
                     w.deadline_ms(),
-                    share_rate,
+                    score_share,
                     self.cfg.wait_inflation,
                     w.max_batch,
                 );
@@ -735,7 +754,7 @@ impl Planner {
                 let (rep_risk, _) = miss_risk_batched(
                     &sp.service_ms_batch,
                     w.deadline_ms(),
-                    w.rate_rps / r_count as f64,
+                    self.scoring_rate(w) / r_count as f64,
                     self.cfg.wait_inflation,
                     w.max_batch,
                 );
@@ -771,9 +790,18 @@ impl Planner {
         Ok(Some(scored.swap_remove(best_i)))
     }
 
-    /// Plan one sub-cluster (cached). Homogeneous fleets normalize the
-    /// range start so every equally-sized range shares one entry.
+    /// Plan one sub-cluster (cached) at the configured precision.
+    /// Homogeneous fleets normalize the range start so every equally-sized
+    /// range shares one entry.
     fn subplan(&self, model: &str, start: usize, n: usize) -> Result<SubPlan> {
+        self.subplan_at(model, start, n, self.cfg.precision)
+    }
+
+    /// Plan one sub-cluster at an explicit precision — the brownout
+    /// ladder's degraded lanes re-plan the same board range one precision
+    /// rung down (cache keyed by precision, so normal and degraded plans
+    /// coexist).
+    fn subplan_at(&self, model: &str, start: usize, n: usize, p: Precision) -> Result<SubPlan> {
         if n == 0 || start + n > self.fleet.len() {
             return Err(Error::InvalidArg(format!(
                 "sub-cluster {start}..{} exceeds fleet of {}",
@@ -782,19 +810,69 @@ impl Planner {
             )));
         }
         let key_start = if self.fleet.is_homogeneous() { 0 } else { start };
-        let key = (model.to_string(), key_start, n);
+        let key = (model.to_string(), key_start, n, p);
         if let Some(sp) = self.cache.lock().unwrap().get(&key) {
             return Ok(sp.clone());
         }
-        let sp = self.build_subplan(model, start, n)?;
+        let sp = self.build_subplan(model, start, n, p)?;
         self.cache.lock().unwrap().insert(key, sp.clone());
         Ok(sp)
     }
 
-    fn build_subplan(&self, model: &str, start: usize, n: usize) -> Result<SubPlan> {
+    /// Re-plan one deployment's sub-cluster at the next precision down the
+    /// degrade chain (f32 → fx16 → fx8), re-scoring risk and the planned
+    /// batch against the degraded service table. The returned deployment
+    /// keeps the same board range and replica structure — it is a drop-in
+    /// migration target for the brownout ladder's rung 2. Errors when the
+    /// lane's precision has no degraded form (already at the bottom).
+    pub fn degraded_deployment(&self, d: &Deployment) -> Result<Deployment> {
+        let p = d.design.precision.degraded().ok_or_else(|| {
+            Error::InvalidArg(format!(
+                "model `{}`: {} has no lower precision to degrade to",
+                d.workload.model,
+                d.design.precision.name()
+            ))
+        })?;
+        let sp = self.subplan_at(&d.workload.model, d.start, d.n_boards, p)?;
+        let torus = Torus::for_factors(&sp.factors);
+        let w = &d.workload;
+        let score_share = self.scoring_rate(w) / d.n_replicas as f64;
+        let (risk, planned_batch) = miss_risk_batched(
+            &sp.service_ms_batch,
+            w.deadline_ms(),
+            score_share,
+            self.cfg.wait_inflation,
+            w.max_batch,
+        );
+        let s_b = service_at_batch(&sp.service_ms_batch, planned_batch);
+        let rho = d.share_rate_rps * s_b / planned_batch as f64 / 1e3;
+        Ok(Deployment {
+            workload: d.workload.clone(),
+            start: d.start,
+            n_boards: d.n_boards,
+            replica: d.replica,
+            n_replicas: d.n_replicas,
+            model_boards: d.model_boards,
+            share_rate_rps: d.share_rate_rps,
+            fpga: sp.fpga,
+            sim_cfg: sp.sim_cfg,
+            design: sp.design,
+            factors: sp.factors,
+            torus: (torus.rows, torus.cols),
+            service_cycles: sp.service_cycles,
+            service_ms: sp.service_ms,
+            service_ms_batch: sp.service_ms_batch.clone(),
+            planned_batch,
+            utilization: rho,
+            risk,
+            watts: sp.watts,
+            hetero: sp.hetero,
+        })
+    }
+
+    fn build_subplan(&self, model: &str, start: usize, n: usize, p: Precision) -> Result<SubPlan> {
         let net = zoo::by_name(model)
             .ok_or_else(|| Error::InvalidArg(format!("unknown model: {model}")))?;
-        let p = self.cfg.precision;
         let eff = self.fleet.effective_spec(start, n);
         let sim_cfg = SimConfig::zcu102(&eff);
         let slip = SuperLip { fpga: eff, sim_cfg };
@@ -992,6 +1070,54 @@ mod tests {
         let other = Planner::new(FleetSpec::homogeneous(2, weak), PlannerConfig::default());
         other.adopt_cache(&big);
         assert!(other.cache.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn degraded_deployment_is_faster_one_rung_down() {
+        let planner = Planner::new(fleet(2), PlannerConfig::default());
+        let mix = vec![w("alexnet", 10.0, 100.0).with_max_batch(4)];
+        let plan = planner.plan(&mix).unwrap();
+        let d = &plan.deployments[0];
+        assert_eq!(d.design.precision, Precision::Fixed16);
+        let deg = planner.degraded_deployment(d).unwrap();
+        assert_eq!(deg.design.precision, Precision::Fixed8);
+        // Same board range and replica structure — a drop-in lane swap.
+        assert_eq!((deg.start, deg.n_boards, deg.n_replicas), (d.start, d.n_boards, d.n_replicas));
+        assert!(
+            deg.service_ms < d.service_ms,
+            "fx8 at 300 MHz must beat fx16 at 200 MHz: {} vs {}",
+            deg.service_ms,
+            d.service_ms
+        );
+        assert!(deg.risk <= d.risk, "faster service cannot raise risk");
+        // The chain bottoms out with a typed error, not a panic.
+        let deg2 = planner.degraded_deployment(&deg).unwrap_err();
+        assert!(deg2.to_string().contains("no lower precision"));
+    }
+
+    #[test]
+    fn surge_factor_reserves_gold_headroom() {
+        // Same mix, same fleet; gold with surge headroom must be scored at
+        // the surged rate, so its reported risk strictly rises with the
+        // factor (capacity is reserved for the flash crowd).
+        let mk = |surge: f64, class: SloClass| {
+            let cfg = PlannerConfig {
+                surge_factor: surge,
+                ..PlannerConfig::default()
+            };
+            let planner = Planner::new(fleet(2), cfg);
+            let mut wl = w("alexnet", 40.0, 100.0).with_max_batch(4);
+            wl = wl.with_class(class);
+            planner.plan(&[wl]).unwrap().worst_risk
+        };
+        let base = mk(1.0, SloClass::Gold);
+        let surged = mk(2.0, SloClass::Gold);
+        assert!(
+            surged > base,
+            "surge factor must inflate gold's scored risk: {surged} vs {base}"
+        );
+        // Best-effort ignores the factor entirely.
+        assert_eq!(mk(2.0, SloClass::BestEffort), mk(1.0, SloClass::BestEffort));
     }
 
     #[test]

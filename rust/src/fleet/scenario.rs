@@ -6,6 +6,7 @@
 
 use super::backend::{HealthGatedBackend, SimClusterBackend};
 use super::planner::{Deployment, FleetPlan};
+use super::workload::SloClass;
 use crate::analytic::XferMode;
 use crate::model::zoo;
 use crate::report::{self, Table};
@@ -164,9 +165,17 @@ pub fn piecewise_arrivals(
 #[derive(Debug, Clone)]
 pub struct ModelStats {
     pub model: String,
+    /// The mix entry's SLO class (`BestEffort` unless the mix declares one).
+    pub class: SloClass,
     pub n_boards: usize,
     pub sent: usize,
     pub completed: usize,
+    /// Requests refused at ingress with an explicit typed rejection
+    /// (`SubmitError::Shed` / `Overloaded`): class quota, admission floor,
+    /// or exhausted re-route budget. Sheds are NOT misses — the caller got
+    /// an answer, just not the one it wanted — so they are accounted
+    /// separately and `completed + shed + (lost in flight) == sent`.
+    pub shed: usize,
     pub p50_ms: f64,
     pub p99_ms: f64,
     pub mean_batch: f64,
@@ -187,15 +196,17 @@ pub struct ModelStats {
 /// `fleet_scenarios` / `energy_consolidation` benches).
 pub fn stats_table(stats: &[ModelStats]) -> String {
     let mut t = Table::new(&[
-        "Model", "Boards", "Sent", "Done", "p50(ms)", "p99(ms)", "Batch", "Miss%", "Watts",
-        "J/inf",
+        "Model", "Class", "Boards", "Sent", "Done", "Shed", "p50(ms)", "p99(ms)", "Batch", "Miss%",
+        "Watts", "J/inf",
     ]);
     for s in stats {
         t.row(&[
             s.model.clone(),
+            s.class.name().to_string(),
             s.n_boards.to_string(),
             s.sent.to_string(),
             s.completed.to_string(),
+            s.shed.to_string(),
             report::ms(s.p50_ms),
             report::ms(s.p99_ms),
             format!("{:.2}", s.mean_batch),
@@ -281,10 +292,14 @@ pub fn run_scenario(plan: &FleetPlan, cfg: &ScenarioConfig) -> Result<Vec<ModelS
     }
     events.sort_by(|a, b| a.partial_cmp(b).unwrap());
 
-    // Open-loop submission at scaled wall-clock pace.
+    // Open-loop submission at scaled wall-clock pace. Class-quota / floor
+    // refusals are explicit typed sheds (counted, not errors); anything
+    // else aborts the run — a static plan has no migrations to re-route
+    // around, so `NoRoute` / `Overloaded` means the scenario is broken.
     let mut payload_rng = SplitMix64::new(cfg.seed.wrapping_mul(0xC0FFEE));
     let mut pending: Vec<Vec<(f32, mpsc::Receiver<InferenceResponse>)>> =
         entries.iter().map(|_| Vec::new()).collect();
+    let mut sheds = vec![0usize; entries.len()];
     let t0 = Instant::now();
     for &(t, si) in &events {
         let target = t0 + Duration::from_secs_f64(t * ts);
@@ -297,8 +312,16 @@ pub fn run_scenario(plan: &FleetPlan, cfg: &ScenarioConfig) -> Result<Vec<ModelS
             .collect();
         let checksum: f32 = img.iter().sum();
         let d = entries[si];
-        let rx = server.submit_to(&d.workload.model, img, d.workload.deadline.mul_f64(ts))?;
-        pending[si].push((checksum, rx));
+        match server.try_submit_to(
+            &d.workload.model,
+            img,
+            d.workload.deadline.mul_f64(ts),
+            d.workload.class,
+        ) {
+            Ok(rx) => pending[si].push((checksum, rx)),
+            Err(crate::serving::SubmitError::Shed { .. }) => sheds[si] += 1,
+            Err(e) => return Err(e.into()),
+        }
     }
 
     // Static-plan energy accounting: every board stays powered for the
@@ -323,7 +346,8 @@ pub fn run_scenario(plan: &FleetPlan, cfg: &ScenarioConfig) -> Result<Vec<ModelS
         let mut lat_ms = Vec::new();
         let mut batches = Vec::new();
         let mut misses = 0usize;
-        let sent = pending[si].len();
+        let accepted = pending[si].len();
+        let sent = accepted + sheds[si];
         for (checksum, rx) in pending[si].drain(..) {
             let Ok(r) = rx.recv_timeout(Duration::from_secs(120)) else {
                 continue; // dropped (backend failure) — counted via `completed`
@@ -349,10 +373,12 @@ pub fn run_scenario(plan: &FleetPlan, cfg: &ScenarioConfig) -> Result<Vec<ModelS
         };
         stats.push(ModelStats {
             model: d.workload.model.clone(),
+            class: d.workload.class,
             // Boards actually serving the model across its replicas.
             n_boards: d.n_boards * d.n_replicas,
             sent,
             completed,
+            shed: sheds[si],
             p50_ms: p50,
             p99_ms: p99,
             mean_batch: if completed > 0 {
@@ -362,8 +388,10 @@ pub fn run_scenario(plan: &FleetPlan, cfg: &ScenarioConfig) -> Result<Vec<ModelS
             },
             // An idle entry (possible in `duration_s` mode when the rate
             // is tiny) is not failing — score 0, as in the online runner.
-            miss_rate: if sent > 0 {
-                (misses + (sent - completed)) as f64 / sent as f64
+            // Sheds got their explicit rejection up front: they are not
+            // silent misses, only lost-in-flight requests are.
+            miss_rate: if accepted > 0 {
+                (misses + (accepted - completed)) as f64 / accepted as f64
             } else {
                 0.0
             },
@@ -403,6 +431,11 @@ pub fn lane_spec_for(
             max_batch: d.workload.max_batch,
             window,
             deadline_margin: window,
+            class_caps: {
+                let mut caps = [0; crate::fleet::N_CLASSES];
+                caps[d.workload.class.index()] = d.workload.class_quota;
+                caps
+            },
         },
     }
 }

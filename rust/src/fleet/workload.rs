@@ -23,6 +23,88 @@ pub enum ReplicaPolicy {
     Fixed(usize),
 }
 
+/// Number of SLO classes (`SloClass::index` fits metric arrays this wide).
+pub const N_CLASSES: usize = 3;
+
+/// Tenant/SLO class of a workload's traffic. Classes order the serving
+/// stack's overload response: the batcher's EDF queue is class-major
+/// (higher class strictly preempts), the brownout ladder sheds / degrades
+/// the lowest declared class first, and the planner reserves surge
+/// headroom for `Gold` (risk scored at `rate × surge_factor`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum SloClass {
+    /// Droppable background traffic — first up the brownout ladder.
+    BestEffort,
+    /// Latency-sensitive but degradable.
+    Silver,
+    /// Hard-deadline tenants: never shed, never precision-degraded; the
+    /// planner reserves surge capacity for them.
+    Gold,
+}
+
+impl SloClass {
+    /// Strict scheduling priority (higher preempts in the batcher queue).
+    pub fn priority(self) -> u8 {
+        match self {
+            SloClass::BestEffort => 0,
+            SloClass::Silver => 1,
+            SloClass::Gold => 2,
+        }
+    }
+
+    /// Dense index for per-class metric arrays (`0..N_CLASSES`).
+    pub fn index(self) -> usize {
+        self.priority() as usize
+    }
+
+    /// Inverse of `index` (panics outside `0..N_CLASSES`).
+    pub fn from_index(i: usize) -> SloClass {
+        match i {
+            0 => SloClass::BestEffort,
+            1 => SloClass::Silver,
+            2 => SloClass::Gold,
+            _ => panic!("SloClass index {i} out of range"),
+        }
+    }
+
+    /// Gold deadlines are hard: the brownout ladder never sheds or
+    /// degrades gold lanes, it sacrifices lower classes instead.
+    pub fn is_hard_deadline(self) -> bool {
+        matches!(self, SloClass::Gold)
+    }
+
+    /// Default per-class batcher queue cap when the mix declares the class
+    /// without an explicit `@quota` (0 would mean unlimited; declared
+    /// classes opt into bounded queues so overload sheds instead of
+    /// building unbounded backlog).
+    pub fn default_queue_quota(self) -> usize {
+        match self {
+            SloClass::BestEffort => 64,
+            SloClass::Silver => 128,
+            SloClass::Gold => 256,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SloClass::BestEffort => "best-effort",
+            SloClass::Silver => "silver",
+            SloClass::Gold => "gold",
+        }
+    }
+
+    /// Parse a mix-grammar class name (`bronze` is accepted as an alias
+    /// for `best-effort`).
+    pub fn parse(s: &str) -> Option<SloClass> {
+        match s.to_ascii_lowercase().as_str() {
+            "gold" => Some(SloClass::Gold),
+            "silver" => Some(SloClass::Silver),
+            "bronze" | "best-effort" | "besteffort" | "be" => Some(SloClass::BestEffort),
+            _ => None,
+        }
+    }
+}
+
 /// One model's serving requirement in a mixed-traffic scenario.
 #[derive(Debug, Clone)]
 pub struct WorkloadSpec {
@@ -37,6 +119,13 @@ pub struct WorkloadSpec {
     pub max_batch: usize,
     /// Replica sub-cluster policy (default `Auto`).
     pub replicas: ReplicaPolicy,
+    /// Tenant/SLO class (default `BestEffort` — a classless mix behaves
+    /// exactly as before classes existed).
+    pub class: SloClass,
+    /// Per-class batcher queue cap for this model's lanes (0 = unlimited,
+    /// the classless default; `parse_mix` sets the class default or the
+    /// explicit `@quota` when the entry declares a class).
+    pub class_quota: usize,
 }
 
 impl WorkloadSpec {
@@ -47,7 +136,23 @@ impl WorkloadSpec {
             deadline,
             max_batch: 1,
             replicas: ReplicaPolicy::Auto,
+            class: SloClass::BestEffort,
+            class_quota: 0,
         }
+    }
+
+    /// Declare the SLO class, opting into its default queue quota (an
+    /// explicit `with_class_quota` afterwards overrides it).
+    pub fn with_class(mut self, class: SloClass) -> Self {
+        self.class = class;
+        self.class_quota = class.default_queue_quota();
+        self
+    }
+
+    /// Override the per-class queue cap (0 = unlimited).
+    pub fn with_class_quota(mut self, quota: usize) -> Self {
+        self.class_quota = quota;
+        self
     }
 
     pub fn with_max_batch(mut self, max_batch: usize) -> Self {
@@ -75,16 +180,21 @@ impl WorkloadSpec {
 }
 
 /// Parse a traffic mix from
-/// `model:rate_rps:deadline_ms[:max_batch[:replicas]]` entries separated
-/// by commas, e.g. `alexnet:200:20,vgg16:25:100:2,yolo:8:150:1:2`.
-/// `replicas` is a count (≥ 1) or `auto` (default: the planner decides).
+/// `model:rate_rps:deadline_ms[:max_batch[:replicas[:class]]]` entries
+/// separated by commas, e.g.
+/// `alexnet:200:20,vgg16:25:100:2,yolo:8:150:1:2:gold`.
+/// `replicas` is a count (≥ 1) or `auto` (default: the planner decides);
+/// `class` is `gold`, `silver` or `best-effort`/`bronze`, optionally with
+/// an `@quota` queue-cap suffix (e.g. `best-effort@32`). A classless entry
+/// is `best-effort` with an unlimited queue — the pre-class behavior.
 pub fn parse_mix(s: &str) -> Result<Vec<WorkloadSpec>> {
     let mut out = Vec::new();
     for entry in s.split(',').filter(|e| !e.trim().is_empty()) {
         let parts: Vec<&str> = entry.trim().split(':').collect();
-        if !(3..=5).contains(&parts.len()) {
+        if !(3..=6).contains(&parts.len()) {
             return Err(Error::InvalidArg(format!(
-                "mix entry `{entry}`: expected model:rate_rps:deadline_ms[:max_batch[:replicas]]"
+                "mix entry `{entry}`: expected \
+                 model:rate_rps:deadline_ms[:max_batch[:replicas[:class]]]"
             )));
         }
         let model = parts[0].to_ascii_lowercase();
@@ -117,7 +227,7 @@ pub fn parse_mix(s: &str) -> Result<Vec<WorkloadSpec>> {
             }
             w = w.with_max_batch(mb);
         }
-        if parts.len() == 5 {
+        if parts.len() >= 5 {
             let spec = parts[4].trim().to_ascii_lowercase();
             if spec != "auto" {
                 let r: usize = spec.parse().map_err(|e| {
@@ -131,6 +241,31 @@ pub fn parse_mix(s: &str) -> Result<Vec<WorkloadSpec>> {
                     )));
                 }
                 w = w.with_replicas(r);
+            }
+        }
+        if parts.len() == 6 {
+            let spec = parts[5].trim();
+            let (class_name, quota) = match spec.split_once('@') {
+                Some((c, q)) => (c, Some(q)),
+                None => (spec, None),
+            };
+            let class = SloClass::parse(class_name).ok_or_else(|| {
+                Error::InvalidArg(format!(
+                    "mix entry `{entry}`: unknown class `{class_name}` \
+                     (choose gold, silver or best-effort, optionally with `@quota`)"
+                ))
+            })?;
+            w = w.with_class(class);
+            if let Some(q) = quota {
+                let q: usize = q.parse().map_err(|e| {
+                    Error::InvalidArg(format!("mix entry `{entry}`: class quota: {e}"))
+                })?;
+                if !(1..=1_000_000).contains(&q) {
+                    return Err(Error::InvalidArg(format!(
+                        "mix entry `{entry}`: class quota must be in 1..=1000000"
+                    )));
+                }
+                w = w.with_class_quota(q);
             }
         }
         out.push(w);
@@ -201,6 +336,13 @@ pub fn reference_design(model: &str, p: Precision) -> Option<Design> {
         ("vgg" | "vgg16", Precision::Fixed16) => Some(Design::fixed16(64, 25, 7, 14)),
         ("yolo" | "yolov1", Precision::Fixed16) => Some(Design::fixed16(64, 25, 7, 14)),
         ("alexnet", Precision::Float32) => Some(Design::float32(64, 7, 7, 14)),
+        // The 8-bit brownout lane reuses the fx16 tilings: halved data
+        // width means every fx16-feasible tiling fits a fortiori, and the
+        // higher clock gives the degraded lane its throughput headroom.
+        ("alexnet", Precision::Fixed8) => Some(Design::fixed8(128, 10, 7, 14)),
+        ("squeezenet", Precision::Fixed8) => Some(Design::fixed8(64, 16, 7, 14)),
+        ("vgg" | "vgg16", Precision::Fixed8) => Some(Design::fixed8(64, 25, 7, 14)),
+        ("yolo" | "yolov1", Precision::Fixed8) => Some(Design::fixed8(64, 25, 7, 14)),
         _ => None,
     }
 }
@@ -231,7 +373,51 @@ mod tests {
         assert_eq!(mix[2].replicas, ReplicaPolicy::Fixed(1));
         assert!(parse_mix("alexnet:10:10:1:0").is_err(), "0 replicas");
         assert!(parse_mix("alexnet:10:10:1:two").is_err());
-        assert!(parse_mix("alexnet:10:10:1:2:9").is_err(), "too many fields");
+        // `9` sits in the class slot now — not a class name.
+        assert!(parse_mix("alexnet:10:10:1:2:9").is_err(), "bad class");
+        assert!(
+            parse_mix("alexnet:10:10:1:2:gold:x").is_err(),
+            "too many fields"
+        );
+    }
+
+    #[test]
+    fn parse_mix_class_field() {
+        let mix =
+            parse_mix("alexnet:200:20:1:auto:gold,squeezenet:60:60:4:auto:best-effort@32")
+                .unwrap();
+        assert_eq!(mix[0].class, SloClass::Gold);
+        assert_eq!(mix[0].class_quota, SloClass::Gold.default_queue_quota());
+        assert_eq!(mix[1].class, SloClass::BestEffort);
+        assert_eq!(mix[1].class_quota, 32);
+        // Classless entries default to best-effort with an unlimited queue
+        // (the pre-class behavior, bit-for-bit).
+        let plain = parse_mix("alexnet:10:10").unwrap();
+        assert_eq!(plain[0].class, SloClass::BestEffort);
+        assert_eq!(plain[0].class_quota, 0);
+        // `bronze` aliases best-effort; case-insensitive.
+        let bronze = parse_mix("alexnet:10:10:1:auto:Bronze").unwrap();
+        assert_eq!(bronze[0].class, SloClass::BestEffort);
+        // Bad class names and out-of-range quotas are typed errors.
+        assert!(parse_mix("alexnet:10:10:1:auto:platinum").is_err());
+        assert!(parse_mix("alexnet:10:10:1:auto:gold@0").is_err());
+        assert!(parse_mix("alexnet:10:10:1:auto:gold@-3").is_err());
+        assert!(parse_mix("alexnet:10:10:1:auto:gold@1000001").is_err());
+        assert!(parse_mix("alexnet:10:10:1:auto:gold@ten").is_err());
+    }
+
+    #[test]
+    fn slo_class_ordering_and_parse() {
+        assert!(SloClass::Gold.priority() > SloClass::Silver.priority());
+        assert!(SloClass::Silver.priority() > SloClass::BestEffort.priority());
+        assert!(SloClass::Gold.is_hard_deadline());
+        assert!(!SloClass::Silver.is_hard_deadline());
+        for i in 0..N_CLASSES {
+            assert_eq!(SloClass::from_index(i).index(), i);
+        }
+        assert_eq!(SloClass::parse("GOLD"), Some(SloClass::Gold));
+        assert_eq!(SloClass::parse("bronze"), Some(SloClass::BestEffort));
+        assert_eq!(SloClass::parse("9"), None);
     }
 
     #[test]
@@ -266,6 +452,12 @@ mod tests {
             assert!(
                 reference_design(name, Precision::Fixed16).is_some(),
                 "{name} needs a pinned fx16 tiling"
+            );
+            // The brownout degrade rung needs an 8-bit lane for every
+            // model the fx16 default can serve.
+            assert!(
+                reference_design(name, Precision::Fixed8).is_some(),
+                "{name} needs a pinned fx8 tiling"
             );
         }
         assert!(reference_design("vgg16", Precision::Float32).is_none());

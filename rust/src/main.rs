@@ -12,7 +12,7 @@
 
 use std::time::{Duration, Instant};
 use superlip::analytic::{detect, Design, XferMode};
-use superlip::cli::{parse_precision, Args};
+use superlip::cli::{parse_precision, parse_surge_factor, Args};
 use superlip::control;
 use superlip::coordinator::SuperLip;
 use superlip::fleet::{self, FleetSpec, Planner, PlannerConfig, ScenarioConfig};
@@ -61,8 +61,9 @@ USAGE: superlip <command> [--flags]
 
 COMMANDS:
   plan      --net <alexnet|squeezenet|vgg16|yolo> --fpgas N --precision <f32|fx16>
-  fleet     --fpgas N --mix model:rate_rps:deadline_ms[:max_batch[:replicas]],...
+  fleet     --fpgas N --mix model:rate_rps:deadline_ms[:max_batch[:replicas[:class[@quota]]]],...
             [--requests N] [--naive] [--time-scale X] [--co-optimize] [--qsfp]
+            [--surge-factor X]
             [--online [--flip-after S] [--post S] [--tick S] [--kill-board I --kill-at S]
                       [--power [--wake-latency S]]]
             (replicas: a count, or `auto` (default) — the planner may serve a
@@ -70,13 +71,22 @@ COMMANDS:
              Poisson stream R ways, whenever that beats one R*k lock-step torus;
              among plans within a risk tolerance it prefers the lowest fleet
              watts and lists idle-remainder boards as power-down candidates)
+            (class: `gold` | `silver` | `best-effort` (default) — the entry's
+             SLO class. Higher classes win EDF ties in every lane queue; an
+             optional `@quota` caps the class's queue depth per lane (explicit
+             typed Shed past it). --surge-factor X ≥ 1 makes the planner score
+             gold entries at X× their declared rate, reserving flash-crowd
+             headroom)
             (--online: serve the mix, flip the entries' rates mid-run, and
              contrast the frozen static plan with the telemetry-driven
              controller re-planning + hitlessly migrating lanes; --kill-board
              inside one replica quarantines only that replica's lane;
              --power arms elastic consolidation: the controller powers down
              boards a cooled-off mix frees and wakes them, --wake-latency
-             seconds ahead of routing, when traffic returns)
+             seconds ahead of routing, when traffic returns. A multi-class mix
+             arms the brownout ladder: under sustained overload the controller
+             sheds, precision-degrades, then admission-controls the lowest
+             class — one rung at a time, with hysteresis — so gold p99 holds)
   dse       --net <name> --precision <f32|fx16>
   scale     --net <name> --max-fpgas N [--precision fx16]
   validate
@@ -130,6 +140,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         )));
     }
     let p = precision_arg(args)?;
+    let surge = parse_surge_factor(args.flag_or("surge-factor", "1"))?;
     let board = if args.has("qsfp") {
         FpgaSpec::zcu102_qsfp()
     } else {
@@ -140,6 +151,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         PlannerConfig {
             precision: p,
             co_optimize: args.has("co-optimize"),
+            surge_factor: surge,
             ..Default::default()
         },
     );
@@ -149,7 +161,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     println!("{}", superlip::power::plan_power(&plan).summary());
 
     if args.has("online") {
-        return cmd_fleet_online(args, &mix, n, board, p, ts);
+        return cmd_fleet_online(args, &mix, n, board, p, ts, surge);
     }
 
     let requests = args.flag_u64("requests", 0)? as usize;
@@ -188,6 +200,7 @@ fn cmd_fleet_online(
     board: FpgaSpec,
     p: Precision,
     ts: f64,
+    surge: f64,
 ) -> Result<()> {
     if mix.len() < 2 {
         return Err(Error::InvalidArg(
@@ -247,9 +260,16 @@ fn cmd_fleet_online(
             "--wake-latency {wake}: must be ≥ 0 and finite"
         )));
     }
+    // Arm the brownout ladder — the controller disarms itself on a
+    // single-class mix, so this only bites when the mix declares classes.
+    let ccfg = control::ControlConfig {
+        brownout: Some(control::BrownoutConfig::default()),
+        ..Default::default()
+    };
     let cfg = control::OnlineConfig {
         time_scale: ts,
         tick_s: tick,
+        control: ccfg,
         kill,
         power: args
             .has("power")
@@ -260,6 +280,7 @@ fn cmd_fleet_online(
     let pcfg = PlannerConfig {
         precision: p,
         co_optimize: args.has("co-optimize"),
+        surge_factor: surge,
         ..Default::default()
     };
     println!(
@@ -278,7 +299,10 @@ fn cmd_fleet_online(
             println!("{}", fleet::stats_table(rows));
         }
         if controlled {
-            println!("re-plans: {}", out.replans);
+            println!(
+                "re-plans: {}  final brownout rung: {}",
+                out.replans, out.final_rung
+            );
             for e in &out.events {
                 println!("  [control] {e}");
             }

@@ -1,12 +1,17 @@
 //! Numeric precision of the accelerator datapath (paper §3 ②-2 and §5A).
 
-/// Datapath precision. The paper evaluates both.
+/// Datapath precision. The paper evaluates float and 16-bit fixed; the
+/// 8-bit lane is the accelerator-survey int8 point used as the brownout
+/// ladder's precision-degrade rung (accuracy-for-throughput trade).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Precision {
     /// 32-bit IEEE float: 5 DSP slices per MAC (eq 1), 100 MHz.
     Float32,
     /// 16-bit fixed point: 1 DSP slice per MAC (eq 2), 200 MHz.
     Fixed16,
+    /// 8-bit fixed point: 1 DSP slice per MAC, 300 MHz — halved buffers
+    /// relative to fx16 at the same tiling, higher clock.
+    Fixed8,
 }
 
 impl Precision {
@@ -15,6 +20,7 @@ impl Precision {
         match self {
             Precision::Float32 => 32,
             Precision::Fixed16 => 16,
+            Precision::Fixed8 => 8,
         }
     }
 
@@ -23,6 +29,7 @@ impl Precision {
         match self {
             Precision::Float32 => 5,
             Precision::Fixed16 => 1,
+            Precision::Fixed8 => 1,
         }
     }
 
@@ -31,6 +38,17 @@ impl Precision {
         match self {
             Precision::Float32 => 100,
             Precision::Fixed16 => 200,
+            Precision::Fixed8 => 300,
+        }
+    }
+
+    /// Next rung down the accuracy-for-throughput ladder (the brownout
+    /// controller's precision-degrade step); `None` at the bottom.
+    pub fn degraded(self) -> Option<Precision> {
+        match self {
+            Precision::Float32 => Some(Precision::Fixed16),
+            Precision::Fixed16 => Some(Precision::Fixed8),
+            Precision::Fixed8 => None,
         }
     }
 
@@ -48,6 +66,7 @@ impl Precision {
         match self {
             Precision::Float32 => "32bits float",
             Precision::Fixed16 => "16bits fixed",
+            Precision::Fixed8 => "8bits fixed",
         }
     }
 }
@@ -67,5 +86,20 @@ mod tests {
     fn dsp_cost() {
         assert_eq!(Precision::Float32.dsp_per_mac(), 5);
         assert_eq!(Precision::Fixed16.dsp_per_mac(), 1);
+        assert_eq!(Precision::Fixed8.dsp_per_mac(), 1);
+    }
+
+    #[test]
+    fn degrade_chain_descends_to_the_bottom() {
+        assert_eq!(Precision::Float32.degraded(), Some(Precision::Fixed16));
+        assert_eq!(Precision::Fixed16.degraded(), Some(Precision::Fixed8));
+        assert_eq!(Precision::Fixed8.degraded(), None);
+        // Each rung narrows the datapath and never slows the clock.
+        let mut p = Precision::Float32;
+        while let Some(d) = p.degraded() {
+            assert!(d.bits() < p.bits());
+            assert!(d.freq_mhz() >= p.freq_mhz());
+            p = d;
+        }
     }
 }

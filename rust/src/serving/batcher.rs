@@ -1,12 +1,17 @@
 //! Deadline-aware low-batch dynamic batcher.
 //!
 //! Real-time inference runs at "low or even no batching" (§1): batches are
-//! capped small (the artifact set tops out at B = 4), formed by earliest-
-//! deadline-first order, and a batch closes as soon as (a) it is full,
-//! (b) the batching window expires, or (c) the earliest deadline would be
-//! at risk by waiting longer.
+//! capped small (the artifact set tops out at B = 4), formed by class-major
+//! earliest-deadline-first order (a higher SLO class strictly preempts
+//! within the queue; EDF inside a class — a classless stream is plain
+//! EDF), and a batch closes as soon as (a) it is full, (b) the batching
+//! window expires, or (c) the earliest deadline would be at risk by
+//! waiting longer. Per-class queue caps (brownout rung 1) refuse overflow
+//! at ingress — a queued request is always served, so exactly-one-response
+//! needs no queue surgery.
 
 use super::InferenceRequest;
+use crate::fleet::{SloClass, N_CLASSES};
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -21,6 +26,10 @@ pub struct BatcherConfig {
     /// Safety margin: close the batch early if the earliest deadline is
     /// within this margin.
     pub deadline_margin: Duration,
+    /// Per-class queue caps, indexed by `SloClass::index` (0 = unlimited,
+    /// the classless default). The brownout controller tightens these at
+    /// run time via `set_class_cap`.
+    pub class_caps: [usize; N_CLASSES],
 }
 
 impl Default for BatcherConfig {
@@ -29,12 +38,37 @@ impl Default for BatcherConfig {
             max_batch: 4,
             window: Duration::from_millis(2),
             deadline_margin: Duration::from_millis(5),
+            class_caps: [0; N_CLASSES],
+        }
+    }
+}
+
+/// Why `try_push` handed a request back.
+#[derive(Debug)]
+pub enum PushRefusal {
+    /// The queue is closed (lane retiring) — the server re-routes.
+    Closed(InferenceRequest),
+    /// The request's class is at its queue cap — shed it with an explicit
+    /// rejection (brownout rung 1), never silently.
+    Quota(InferenceRequest),
+}
+
+impl PushRefusal {
+    /// The refused request, whatever the reason.
+    pub fn into_request(self) -> InferenceRequest {
+        match self {
+            PushRefusal::Closed(r) | PushRefusal::Quota(r) => r,
         }
     }
 }
 
 struct Queue {
     items: VecDeque<InferenceRequest>,
+    /// Queued requests per class (`SloClass::index`).
+    class_counts: [usize; N_CLASSES],
+    /// Live per-class caps (0 = unlimited); start at `cfg.class_caps`,
+    /// adjustable by the brownout controller.
+    class_caps: [usize; N_CLASSES],
     closed: bool,
 }
 
@@ -52,6 +86,8 @@ impl Batcher {
             cfg,
             q: Mutex::new(Queue {
                 items: VecDeque::new(),
+                class_counts: [0; N_CLASSES],
+                class_caps: cfg.class_caps,
                 closed: false,
             }),
             cv: Condvar::new(),
@@ -69,28 +105,40 @@ impl Batcher {
         self.q.lock().unwrap_or_else(|e| e.into_inner())
     }
 
-    /// Enqueue a request in earliest-deadline-first position.
+    /// Enqueue a request in class-major earliest-deadline-first position.
     pub fn push(&self, req: InferenceRequest) -> crate::Result<()> {
-        self.try_push(req)
-            .map_err(|_| crate::Error::Serving("batcher closed".into()))
+        self.try_push(req).map_err(|r| match r {
+            PushRefusal::Closed(_) => crate::Error::Serving("batcher closed".into()),
+            PushRefusal::Quota(_) => crate::Error::Serving("class queue cap reached".into()),
+        })
     }
 
-    /// Like `push`, but a refused request (closed queue) is handed back to
-    /// the caller so it can be re-routed to another lane — the server's
-    /// hitless-migration path relies on this to lose nothing while a lane
-    /// drains.
-    pub fn try_push(&self, req: InferenceRequest) -> std::result::Result<(), InferenceRequest> {
+    /// Like `push`, but a refused request is handed back to the caller:
+    /// `Closed` (retiring lane) so it can be re-routed to another lane —
+    /// the server's hitless-migration path relies on this to lose nothing
+    /// while a lane drains — and `Quota` (per-class cap reached) so the
+    /// server can shed it with an explicit typed rejection.
+    pub fn try_push(&self, req: InferenceRequest) -> std::result::Result<(), PushRefusal> {
         let mut q = self.locked();
         if q.closed {
-            return Err(req);
+            return Err(PushRefusal::Closed(req));
         }
-        // EDF insertion (queues are short — linear scan is the fast path).
+        let ci = req.class.index();
+        let cap = q.class_caps[ci];
+        if cap != 0 && q.class_counts[ci] >= cap {
+            return Err(PushRefusal::Quota(req));
+        }
+        // Class-major EDF insertion: strictly higher class first, earliest
+        // deadline within a class (queues are short — linear scan is the
+        // fast path; a uniform-class queue reduces to plain EDF).
+        let key = (std::cmp::Reverse(req.class.priority()), req.deadline);
         let pos = q
             .items
             .iter()
-            .position(|r| r.deadline > req.deadline)
+            .position(|r| (std::cmp::Reverse(r.class.priority()), r.deadline) > key)
             .unwrap_or(q.items.len());
         q.items.insert(pos, req);
+        q.class_counts[ci] += 1;
         drop(q);
         self.cv.notify_one();
         Ok(())
@@ -99,6 +147,19 @@ impl Batcher {
     /// Number of queued requests (diagnostics).
     pub fn depth(&self) -> usize {
         self.locked().items.len()
+    }
+
+    /// Queued requests of one class (diagnostics).
+    pub fn class_depth(&self, class: SloClass) -> usize {
+        self.locked().class_counts[class.index()]
+    }
+
+    /// Adjust one class's queue cap at run time (0 = unlimited). The
+    /// brownout controller tightens the victim class here on rung 1;
+    /// already-queued requests above the new cap still get served — caps
+    /// only refuse new ingress.
+    pub fn set_class_cap(&self, class: SloClass, cap: usize) {
+        self.locked().class_caps[class.index()] = cap;
     }
 
     /// Close the queue; blocked workers drain remaining items then get
@@ -158,7 +219,11 @@ impl Batcher {
                 continue 'restart;
             }
             let n = q.items.len().min(self.cfg.max_batch);
-            return Some(q.items.drain(..n).collect());
+            let batch: Vec<InferenceRequest> = q.items.drain(..n).collect();
+            for r in &batch {
+                q.class_counts[r.class.index()] -= 1;
+            }
+            return Some(batch);
         }
     }
 }
@@ -171,6 +236,14 @@ mod tests {
     use std::time::Duration;
 
     fn req(id: u64, deadline_ms: u64) -> (InferenceRequest, mpsc::Receiver<super::super::InferenceResponse>) {
+        req_class(id, deadline_ms, SloClass::BestEffort)
+    }
+
+    fn req_class(
+        id: u64,
+        deadline_ms: u64,
+        class: SloClass,
+    ) -> (InferenceRequest, mpsc::Receiver<super::super::InferenceResponse>) {
         let (tx, rx) = mpsc::channel();
         let now = Instant::now();
         (
@@ -179,6 +252,7 @@ mod tests {
                 image: vec![0.0; 4],
                 enqueued: now,
                 deadline: now + Duration::from_millis(deadline_ms),
+                class,
                 reply: tx,
             },
             rx,
@@ -191,6 +265,7 @@ mod tests {
             max_batch: 2,
             window: Duration::from_millis(1),
             deadline_margin: Duration::from_millis(0),
+            ..BatcherConfig::default()
         });
         let mut rxs = Vec::new();
         for i in 0..5 {
@@ -223,7 +298,75 @@ mod tests {
         b.close();
         let (r, _x) = req(7, 100);
         let back = b.try_push(r).expect_err("closed queue hands the request back");
-        assert_eq!(back.id, 7, "same request, ready to re-route");
+        assert!(matches!(back, PushRefusal::Closed(_)));
+        assert_eq!(back.into_request().id, 7, "same request, ready to re-route");
+    }
+
+    #[test]
+    fn higher_class_preempts_within_the_queue() {
+        // Class-major: gold pops before silver before best-effort, EDF
+        // inside each class — regardless of push order or deadlines.
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 8,
+            ..BatcherConfig::default()
+        });
+        let (r1, _x1) = req_class(1, 50, SloClass::BestEffort); // tightest deadline
+        let (r2, _x2) = req_class(2, 900, SloClass::Gold);
+        let (r3, _x3) = req_class(3, 400, SloClass::Silver);
+        let (r4, _x4) = req_class(4, 100, SloClass::Gold); // urgent gold
+        b.push(r1).unwrap();
+        b.push(r2).unwrap();
+        b.push(r3).unwrap();
+        b.push(r4).unwrap();
+        assert_eq!(b.class_depth(SloClass::Gold), 2);
+        let ids: Vec<u64> = b.next_batch().unwrap().iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![4, 2, 3, 1]);
+        assert_eq!(b.class_depth(SloClass::Gold), 0);
+    }
+
+    #[test]
+    fn class_cap_refuses_overflow_with_quota() {
+        let mut caps = [0; N_CLASSES];
+        caps[SloClass::BestEffort.index()] = 2;
+        let b = Batcher::new(BatcherConfig {
+            class_caps: caps,
+            ..BatcherConfig::default()
+        });
+        let mut rxs = Vec::new();
+        for i in 0..2 {
+            let (r, rx) = req_class(i, 1000, SloClass::BestEffort);
+            b.try_push(r).unwrap();
+            rxs.push(rx);
+        }
+        let (r, _x) = req_class(9, 1000, SloClass::BestEffort);
+        let back = b.try_push(r).expect_err("cap reached");
+        assert!(matches!(back, PushRefusal::Quota(_)));
+        assert_eq!(back.into_request().id, 9);
+        // Other classes are unaffected by this class's cap.
+        let (g, _xg) = req_class(10, 1000, SloClass::Gold);
+        b.try_push(g).unwrap();
+        // Draining frees quota again.
+        let drained = b.next_batch().unwrap();
+        assert_eq!(drained.len(), 3);
+        let (r, _x2) = req_class(11, 1000, SloClass::BestEffort);
+        b.try_push(r).unwrap();
+    }
+
+    #[test]
+    fn set_class_cap_tightens_and_releases_at_runtime() {
+        let b = Batcher::new(BatcherConfig::default());
+        let (r, _x) = req_class(1, 1000, SloClass::BestEffort);
+        b.try_push(r).unwrap();
+        b.set_class_cap(SloClass::BestEffort, 1);
+        let (r2, _x2) = req_class(2, 1000, SloClass::BestEffort);
+        assert!(matches!(
+            b.try_push(r2),
+            Err(PushRefusal::Quota(_))
+        ));
+        b.set_class_cap(SloClass::BestEffort, 0);
+        let (r3, _x3) = req_class(3, 1000, SloClass::BestEffort);
+        b.try_push(r3).unwrap();
+        assert_eq!(b.depth(), 2);
     }
 
     #[test]
@@ -244,6 +387,7 @@ mod tests {
             max_batch: 4,
             window: Duration::from_millis(50),
             deadline_margin: Duration::from_millis(0),
+            ..BatcherConfig::default()
         }));
         let b2 = b.clone();
         let (r, _x) = req(1, 10_000);
@@ -265,6 +409,7 @@ mod tests {
             max_batch: 4,
             window: Duration::from_secs(5), // huge window...
             deadline_margin: Duration::from_millis(50),
+            ..BatcherConfig::default()
         });
         let (r, _x) = req(1, 10); // ...but a deadline inside the margin
         b.push(r).unwrap();

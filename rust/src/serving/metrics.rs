@@ -14,6 +14,7 @@
 //! submit time) so a window can expose the *offered* rate and expose dead
 //! lanes (arrivals with no completions).
 
+use crate::fleet::{SloClass, N_CLASSES};
 use crate::util::Summary;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -31,6 +32,10 @@ struct Inner {
     batch_sizes: Vec<usize>,
     deadline_misses: u64,
     arrivals: u64,
+    shed: u64,
+    class_completed: [u64; N_CLASSES],
+    class_misses: [u64; N_CLASSES],
+    class_shed: [u64; N_CLASSES],
     started: Instant,
     // Window (since last `snapshot_and_reset`).
     win_latencies_ms: Vec<f64>,
@@ -38,6 +43,10 @@ struct Inner {
     win_batch_total: u64,
     win_misses: u64,
     win_arrivals: u64,
+    win_shed: u64,
+    win_class_completed: [u64; N_CLASSES],
+    win_class_misses: [u64; N_CLASSES],
+    win_class_shed: [u64; N_CLASSES],
     win_started: Instant,
 }
 
@@ -55,6 +64,16 @@ pub struct MetricsSnapshot {
     pub completed: u64,
     /// Completed requests that missed their deadline.
     pub misses: u64,
+    /// Requests refused at ingress during the interval (class-quota or
+    /// admission-control sheds — every one received an explicit typed
+    /// rejection, they are NOT silent misses).
+    pub shed: u64,
+    /// Per-class completions (`SloClass::index`).
+    pub class_completed: [u64; N_CLASSES],
+    /// Per-class deadline misses.
+    pub class_misses: [u64; N_CLASSES],
+    /// Per-class sheds.
+    pub class_shed: [u64; N_CLASSES],
     /// Raw per-request latencies (ms) completed in the interval.
     pub latencies_ms: Vec<f64>,
     /// Sum of served batch sizes over the interval.
@@ -70,6 +89,10 @@ impl MetricsSnapshot {
             arrivals: 0,
             completed: 0,
             misses: 0,
+            shed: 0,
+            class_completed: [0; N_CLASSES],
+            class_misses: [0; N_CLASSES],
+            class_shed: [0; N_CLASSES],
             latencies_ms: Vec::new(),
             batch_total: 0,
         };
@@ -78,6 +101,12 @@ impl MetricsSnapshot {
             out.arrivals += p.arrivals;
             out.completed += p.completed;
             out.misses += p.misses;
+            out.shed += p.shed;
+            for c in 0..N_CLASSES {
+                out.class_completed[c] += p.class_completed[c];
+                out.class_misses[c] += p.class_misses[c];
+                out.class_shed[c] += p.class_shed[c];
+            }
             out.latencies_ms.extend_from_slice(&p.latencies_ms);
             out.batch_total += p.batch_total;
         }
@@ -128,12 +157,20 @@ impl Metrics {
                 batch_sizes: Vec::new(),
                 deadline_misses: 0,
                 arrivals: 0,
+                shed: 0,
+                class_completed: [0; N_CLASSES],
+                class_misses: [0; N_CLASSES],
+                class_shed: [0; N_CLASSES],
                 started: now,
                 win_latencies_ms: Vec::new(),
                 win_completed: 0,
                 win_batch_total: 0,
                 win_misses: 0,
                 win_arrivals: 0,
+                win_shed: 0,
+                win_class_completed: [0; N_CLASSES],
+                win_class_misses: [0; N_CLASSES],
+                win_class_shed: [0; N_CLASSES],
                 win_started: now,
             }),
         }
@@ -151,13 +188,28 @@ impl Metrics {
     /// — and any real windowing caller drains far below this.
     const WINDOW_SAMPLE_CAP: usize = 1 << 18;
 
-    /// Record one served request.
+    /// Record one served request (classless paths — accounted to
+    /// `BestEffort`, which IS the default class).
     pub fn record(&self, latency: Duration, batch: usize, deadline_met: bool) {
+        self.record_class(latency, batch, deadline_met, SloClass::BestEffort);
+    }
+
+    /// Record one served request under its SLO class.
+    pub fn record_class(
+        &self,
+        latency: Duration,
+        batch: usize,
+        deadline_met: bool,
+        class: SloClass,
+    ) {
         let ms = latency.as_secs_f64() * 1e3;
+        let ci = class.index();
         let mut m = self.locked();
         m.latencies_ms.push(ms);
         m.batch_sizes.push(batch);
         m.win_completed += 1;
+        m.class_completed[ci] += 1;
+        m.win_class_completed[ci] += 1;
         if m.win_latencies_ms.len() < Self::WINDOW_SAMPLE_CAP {
             m.win_latencies_ms.push(ms);
         }
@@ -165,7 +217,20 @@ impl Metrics {
         if !deadline_met {
             m.deadline_misses += 1;
             m.win_misses += 1;
+            m.class_misses[ci] += 1;
+            m.win_class_misses[ci] += 1;
         }
+    }
+
+    /// Record one request refused at ingress (class-quota or admission
+    /// shed — the caller delivered an explicit typed rejection).
+    pub fn record_shed(&self, class: SloClass) {
+        let ci = class.index();
+        let mut m = self.locked();
+        m.shed += 1;
+        m.win_shed += 1;
+        m.class_shed[ci] += 1;
+        m.win_class_shed[ci] += 1;
     }
 
     /// Record one submitted request (before it is served).
@@ -184,12 +249,20 @@ impl Metrics {
         m.batch_sizes.clear();
         m.deadline_misses = 0;
         m.arrivals = 0;
+        m.shed = 0;
+        m.class_completed = [0; N_CLASSES];
+        m.class_misses = [0; N_CLASSES];
+        m.class_shed = [0; N_CLASSES];
         m.started = now;
         m.win_latencies_ms.clear();
         m.win_completed = 0;
         m.win_batch_total = 0;
         m.win_misses = 0;
         m.win_arrivals = 0;
+        m.win_shed = 0;
+        m.win_class_completed = [0; N_CLASSES];
+        m.win_class_misses = [0; N_CLASSES];
+        m.win_class_shed = [0; N_CLASSES];
         m.win_started = now;
     }
 
@@ -203,6 +276,10 @@ impl Metrics {
             arrivals: m.win_arrivals,
             completed: m.win_completed,
             misses: m.win_misses,
+            shed: m.win_shed,
+            class_completed: m.win_class_completed,
+            class_misses: m.win_class_misses,
+            class_shed: m.win_class_shed,
             latencies_ms: std::mem::take(&mut m.win_latencies_ms),
             batch_total: m.win_batch_total,
         };
@@ -210,6 +287,10 @@ impl Metrics {
         m.win_batch_total = 0;
         m.win_misses = 0;
         m.win_arrivals = 0;
+        m.win_shed = 0;
+        m.win_class_completed = [0; N_CLASSES];
+        m.win_class_misses = [0; N_CLASSES];
+        m.win_class_shed = [0; N_CLASSES];
         m.win_started = now;
         snap
     }
@@ -227,6 +308,21 @@ impl Metrics {
 
     pub fn deadline_misses(&self) -> u64 {
         self.locked().deadline_misses
+    }
+
+    /// Requests shed at ingress so far (explicit rejections).
+    pub fn shed(&self) -> u64 {
+        self.locked().shed
+    }
+
+    /// Cumulative per-class (completed, misses, shed) counters.
+    pub fn class_counters(&self) -> [(u64, u64, u64); N_CLASSES] {
+        let m = self.locked();
+        let mut out = [(0, 0, 0); N_CLASSES];
+        for c in 0..N_CLASSES {
+            out[c] = (m.class_completed[c], m.class_misses[c], m.class_shed[c]);
+        }
+        out
     }
 
     /// Latency summary (ms). `None` if nothing served yet.
@@ -334,6 +430,10 @@ mod tests {
             arrivals: 3,
             completed: 2,
             misses: 1,
+            shed: 1,
+            class_completed: [2, 0, 0],
+            class_misses: [1, 0, 0],
+            class_shed: [1, 0, 0],
             latencies_ms: vec![1.0, 2.0],
             batch_total: 2,
         };
@@ -342,14 +442,46 @@ mod tests {
             arrivals: 1,
             completed: 1,
             misses: 0,
+            shed: 0,
+            class_completed: [0, 0, 1],
+            class_misses: [0; N_CLASSES],
+            class_shed: [0; N_CLASSES],
             latencies_ms: vec![9.0],
             batch_total: 3,
         };
         let m = MetricsSnapshot::merge(&[a, b]);
         assert_eq!(m.window, Duration::from_millis(100));
         assert_eq!((m.arrivals, m.completed, m.misses), (4, 3, 1));
+        assert_eq!(m.shed, 1);
+        assert_eq!(m.class_completed, [2, 0, 1]);
         assert_eq!(m.latencies_ms, vec![1.0, 2.0, 9.0]);
         assert!((m.arrival_rate_rps() - 40.0).abs() < 1e-6);
         assert!((m.mean_batch() - 5.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn class_counters_split_by_class() {
+        let m = Metrics::new();
+        m.record_class(Duration::from_millis(5), 1, true, SloClass::Gold);
+        m.record_class(Duration::from_millis(9), 1, false, SloClass::Gold);
+        m.record_class(Duration::from_millis(7), 2, true, SloClass::BestEffort);
+        m.record_shed(SloClass::BestEffort);
+        m.record_shed(SloClass::BestEffort);
+        // The classless path accounts to BestEffort (the default class).
+        m.record(Duration::from_millis(3), 1, true);
+        let c = m.class_counters();
+        assert_eq!(c[SloClass::Gold.index()], (2, 1, 0));
+        assert_eq!(c[SloClass::BestEffort.index()], (2, 0, 2));
+        assert_eq!(m.shed(), 2);
+        assert_eq!(m.completed(), 4);
+        // Windowed snapshot carries the same split, then resets.
+        let s = m.snapshot_and_reset();
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.class_completed[SloClass::Gold.index()], 2);
+        assert_eq!(s.class_misses[SloClass::Gold.index()], 1);
+        assert_eq!(s.class_shed[SloClass::BestEffort.index()], 2);
+        let s2 = m.snapshot_and_reset();
+        assert_eq!(s2.shed, 0);
+        assert_eq!(s2.class_completed, [0; N_CLASSES]);
     }
 }

@@ -15,8 +15,8 @@ mod request;
 mod router;
 mod server;
 
-pub use batcher::{Batcher, BatcherConfig};
+pub use batcher::{Batcher, BatcherConfig, PushRefusal};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use request::{InferBackend, InferenceRequest, InferenceResponse};
 pub use router::{PlanRouter, RoutePolicy, Router};
-pub use server::{BackendFactory, LaneSpec, Server, ServerConfig};
+pub use server::{BackendFactory, LaneSpec, Server, ServerConfig, SubmitError};

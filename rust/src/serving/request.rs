@@ -1,5 +1,6 @@
 //! Request/response types and the compute-backend abstraction.
 
+use crate::fleet::SloClass;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
@@ -11,8 +12,12 @@ pub struct InferenceRequest {
     pub image: Vec<f32>,
     /// Enqueue timestamp (set by the server on submit).
     pub enqueued: Instant,
-    /// Absolute deadline; the batcher orders by earliest deadline first.
+    /// Absolute deadline; the batcher orders by earliest deadline first
+    /// within a class.
     pub deadline: Instant,
+    /// Tenant/SLO class: higher classes strictly preempt in the batcher
+    /// queue and survive the brownout ladder longest.
+    pub class: SloClass,
     /// Where to deliver the response.
     pub reply: mpsc::Sender<InferenceResponse>,
 }

@@ -19,14 +19,51 @@
 //! lane (make-before-break). Lane indices are stable: retired lanes leave
 //! a tombstone slot and indices are never reused.
 
+use super::batcher::PushRefusal;
 use super::{
     Batcher, BatcherConfig, InferBackend, InferenceRequest, InferenceResponse, Metrics,
     PlanRouter, RoutePolicy,
 };
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::fleet::SloClass;
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Why a submit was refused — typed so ingress backpressure is explicit
+/// (the brownout ladder's contract: a refused request gets a rejection,
+/// never a silent miss).
+#[derive(Debug)]
+pub enum SubmitError {
+    /// No lane serves the model (not an overload condition).
+    NoRoute(String),
+    /// The bounded re-route budget ran out — every candidate lane closed
+    /// its queue mid-migration. Back off and retry.
+    Overloaded(String),
+    /// Shed by class policy: the class hit its queue quota (brownout
+    /// rung 1) or the admission floor (rung 3).
+    Shed { class: SloClass, reason: String },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::NoRoute(m) => write!(f, "no lane serves model `{m}`"),
+            SubmitError::Overloaded(m) => write!(f, "overloaded: {m}"),
+            SubmitError::Shed { class, reason } => {
+                write!(f, "shed ({}): {reason}", class.name())
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+impl From<SubmitError> for crate::Error {
+    fn from(e: SubmitError) -> Self {
+        crate::Error::Serving(e.to_string())
+    }
+}
 
 /// Server tuning.
 #[derive(Debug, Clone, Copy)]
@@ -77,6 +114,10 @@ pub struct Server {
     router: Arc<PlanRouter>,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
+    /// Admission floor (brownout rung 3): classes with
+    /// `SloClass::index() < floor` are refused at submit with an explicit
+    /// `SubmitError::Shed`. 0 (default) admits everything.
+    admission_floor: AtomicU8,
     cfg: ServerConfig,
 }
 
@@ -103,6 +144,7 @@ impl Server {
             router: Arc::new(PlanRouter::new(cfg.policy, 0)),
             metrics: Arc::new(Metrics::new()),
             next_id: AtomicU64::new(0),
+            admission_floor: AtomicU8::new(0),
             cfg,
         };
         for spec in specs {
@@ -277,15 +319,45 @@ impl Server {
     }
 
     /// Submit a request for `model`, routed by the plan router to one of
-    /// the model's lanes. If the chosen lane is torn down between routing
-    /// and enqueue (a migration in flight), the request transparently
-    /// re-routes to a surviving lane — it is never half-accepted.
+    /// the model's lanes (classless — `BestEffort`, the default class).
+    /// Typed refusals collapse into `Error::Serving`; class-aware callers
+    /// use `try_submit_to`.
     pub fn submit_to(
         &self,
         model: &str,
         image: Vec<f32>,
         deadline: Duration,
     ) -> crate::Result<mpsc::Receiver<InferenceResponse>> {
+        self.try_submit_to(model, image, deadline, SloClass::BestEffort)
+            .map_err(crate::Error::from)
+    }
+
+    /// Set the admission floor (brownout rung 3): refuse classes below
+    /// `floor` (`SloClass::index() < floor`) at submit. 0 admits all.
+    pub fn set_admission_floor(&self, floor: usize) {
+        self.admission_floor.store(floor as u8, Ordering::Release);
+    }
+
+    /// Current admission floor.
+    pub fn admission_floor(&self) -> usize {
+        self.admission_floor.load(Ordering::Acquire) as usize
+    }
+
+    /// Submit a request for `model` under an SLO class. If the chosen lane
+    /// is torn down between routing and enqueue (a migration in flight),
+    /// the request transparently re-routes to a surviving lane — it is
+    /// never half-accepted — with a bounded retry budget so a migration
+    /// storm surfaces as typed backpressure (`Overloaded`) instead of a
+    /// spin. A class below the admission floor or over its queue quota is
+    /// refused with `Shed` — the explicit rejection the brownout ladder
+    /// promises (and counted in lane + aggregate shed metrics).
+    pub fn try_submit_to(
+        &self,
+        model: &str,
+        image: Vec<f32>,
+        deadline: Duration,
+        class: SloClass,
+    ) -> std::result::Result<mpsc::Receiver<InferenceResponse>, SubmitError> {
         // A handful of attempts vastly exceeds any real migration churn —
         // each retry means the routed lane closed in the microseconds since
         // `route()`, and make-before-break guarantees a sibling exists.
@@ -297,12 +369,14 @@ impl Server {
             image,
             enqueued: now,
             deadline: now + deadline,
+            class,
             reply: tx,
         };
         for _ in 0..MAX_REROUTES {
-            let lane = self.router.route(model).ok_or_else(|| {
-                crate::Error::Serving(format!("no lane serves model `{model}`"))
-            })?;
+            let lane = self
+                .router
+                .route(model)
+                .ok_or_else(|| SubmitError::NoRoute(model.to_string()))?;
             let target = {
                 let lanes = self.read_lanes();
                 lanes
@@ -315,13 +389,36 @@ impl Server {
                 self.router.complete(lane);
                 continue;
             };
+            // Admission floor (rung 3) — checked after routing so the shed
+            // lands on the lane that would have served the request.
+            if class.index() < self.admission_floor() {
+                self.router.complete(lane);
+                lane_metrics.record_shed(class);
+                self.metrics.record_shed(class);
+                return Err(SubmitError::Shed {
+                    class,
+                    reason: "below admission floor".into(),
+                });
+            }
             match batcher.try_push(req) {
                 Ok(()) => {
                     lane_metrics.record_arrival();
                     self.metrics.record_arrival();
                     return Ok(rx);
                 }
-                Err(back) => {
+                Err(PushRefusal::Quota(_)) => {
+                    // Class queue cap (rung 1): shed with an explicit
+                    // rejection — the request is dropped here, its reply
+                    // channel disconnects, and the shed is accounted.
+                    self.router.complete(lane);
+                    lane_metrics.record_shed(class);
+                    self.metrics.record_shed(class);
+                    return Err(SubmitError::Shed {
+                        class,
+                        reason: "class queue cap reached".into(),
+                    });
+                }
+                Err(PushRefusal::Closed(back)) => {
                     // The queue closed under us — undo the outstanding
                     // account and re-route the untouched request.
                     self.router.complete(lane);
@@ -329,8 +426,8 @@ impl Server {
                 }
             }
         }
-        Err(crate::Error::Serving(format!(
-            "model `{model}`: no lane accepted the request (migration storm?)"
+        Err(SubmitError::Overloaded(format!(
+            "model `{model}`: no lane accepted the request after {MAX_REROUTES} re-routes"
         )))
     }
 
@@ -375,6 +472,14 @@ impl Server {
     /// Outstanding requests per lane (diagnostics).
     pub fn lane_load(&self) -> Vec<u64> {
         self.router.load()
+    }
+
+    /// Adjust one live lane's queue cap for a class (brownout rung 1;
+    /// 0 = unlimited). No-op on retired lanes.
+    pub fn set_lane_class_cap(&self, lane: usize, class: SloClass, cap: usize) {
+        if let Some(l) = self.read_lanes().get(lane).and_then(|s| s.as_ref()) {
+            l.batcher.set_class_cap(class, cap);
+        }
     }
 
     /// Stop accepting requests, drain the queues, join workers. Idempotent
@@ -436,8 +541,8 @@ fn worker_loop(
                     for (i, req) in chunk.iter().enumerate() {
                         let latency = now - req.enqueued;
                         let deadline_met = now <= req.deadline;
-                        metrics.record(latency, n, deadline_met);
-                        lane_metrics.record(latency, n, deadline_met);
+                        metrics.record_class(latency, n, deadline_met, req.class);
+                        lane_metrics.record_class(latency, n, deadline_met, req.class);
                         // Un-account BEFORE replying: a client that has its
                         // response must never observe the request as still
                         // outstanding.
@@ -754,6 +859,66 @@ mod tests {
         let m = srv.shutdown();
         assert_eq!(m.completed(), n, "every request exactly one response");
         assert_eq!(m.arrivals(), n as u64);
+    }
+
+    #[test]
+    fn admission_floor_sheds_low_classes_with_typed_rejection() {
+        let srv = Server::start_plan(vec![lane_spec("m", 0)], ServerConfig::default());
+        let d = Duration::from_secs(5);
+        srv.set_admission_floor(SloClass::Silver.index());
+        // Best-effort is refused with a typed Shed...
+        match srv.try_submit_to("m", vec![0.0; 4], d, SloClass::BestEffort) {
+            Err(SubmitError::Shed { class, .. }) => assert_eq!(class, SloClass::BestEffort),
+            other => panic!("expected Shed, got {other:?}"),
+        }
+        // ...while silver and gold still flow.
+        let rx = srv
+            .try_submit_to("m", vec![1.0; 4], d, SloClass::Gold)
+            .unwrap();
+        assert!(rx.recv_timeout(d).is_ok());
+        srv.set_admission_floor(0);
+        let rx = srv
+            .try_submit_to("m", vec![1.0; 4], d, SloClass::BestEffort)
+            .unwrap();
+        assert!(rx.recv_timeout(d).is_ok());
+        let m = srv.shutdown();
+        assert_eq!(m.shed(), 1);
+        assert_eq!(m.completed(), 2);
+        assert_eq!(m.class_counters()[SloClass::BestEffort.index()].2, 1);
+        // Outstanding accounting was unwound for the shed request.
+        assert_eq!(srv.lane_load().iter().sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn class_quota_sheds_at_ingress_but_serves_the_queue() {
+        // One slow worker, best-effort capped at 2: the 4th push sheds,
+        // everything accepted is still served (exactly-one-response).
+        let mut caps = [0; crate::fleet::N_CLASSES];
+        caps[SloClass::BestEffort.index()] = 2;
+        let mut spec = lane_spec("m", 20);
+        spec.batcher = BatcherConfig {
+            max_batch: 1,
+            class_caps: caps,
+            ..BatcherConfig::default()
+        };
+        let srv = Server::start_plan(vec![spec], ServerConfig::default());
+        let d = Duration::from_secs(30);
+        let mut rxs = Vec::new();
+        let mut sheds = 0;
+        for _ in 0..4 {
+            match srv.try_submit_to("m", vec![0.0; 4], d, SloClass::BestEffort) {
+                Ok(rx) => rxs.push(rx),
+                Err(SubmitError::Shed { .. }) => sheds += 1,
+                Err(e) => panic!("unexpected: {e:?}"),
+            }
+        }
+        assert!(sheds >= 1, "cap of 2 with a 20 ms worker must shed");
+        for rx in &rxs {
+            assert!(rx.recv_timeout(Duration::from_secs(5)).is_ok());
+        }
+        let m = srv.shutdown();
+        assert_eq!(m.completed() + m.shed() as usize, 4, "every request accounted");
+        assert_eq!(srv.lane_load().iter().sum::<u64>(), 0);
     }
 
     #[test]

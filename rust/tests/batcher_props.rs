@@ -7,6 +7,7 @@
 
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
+use superlip::fleet::SloClass;
 use superlip::serving::{Batcher, BatcherConfig, InferenceRequest, InferenceResponse};
 use superlip::util::proptest::forall;
 use superlip::util::SplitMix64;
@@ -16,6 +17,15 @@ fn req(
     now: Instant,
     deadline_ms: u64,
 ) -> (InferenceRequest, mpsc::Receiver<InferenceResponse>) {
+    req_class(id, now, deadline_ms, SloClass::BestEffort)
+}
+
+fn req_class(
+    id: u64,
+    now: Instant,
+    deadline_ms: u64,
+    class: SloClass,
+) -> (InferenceRequest, mpsc::Receiver<InferenceResponse>) {
     let (tx, rx) = mpsc::channel();
     (
         InferenceRequest {
@@ -23,6 +33,7 @@ fn req(
             image: Vec::new(),
             enqueued: now,
             deadline: now + Duration::from_millis(deadline_ms),
+            class,
             reply: tx,
         },
         rx,
@@ -49,6 +60,7 @@ fn batches_bounded_edf_ordered_and_lossless() {
                 max_batch: *max_batch,
                 window: Duration::ZERO,
                 deadline_margin: Duration::ZERO,
+                ..BatcherConfig::default()
             });
             let now = Instant::now();
             let mut rxs = Vec::new();
@@ -80,6 +92,49 @@ fn batches_bounded_edf_ordered_and_lossless() {
 }
 
 #[test]
+fn class_major_edf_order_holds_under_random_mixes() {
+    // With mixed SLO classes the drain order must be class-major (higher
+    // priority strictly first), EDF within each class, still lossless.
+    forall(
+        0xC1A5,
+        200,
+        |r| {
+            let n = r.range(0, 40) as usize;
+            (0..n)
+                .map(|_| (r.range(0, 10_000), r.below(3) as usize))
+                .collect::<Vec<(u64, usize)>>()
+        },
+        |reqs| {
+            let b = Batcher::new(BatcherConfig {
+                max_batch: 4,
+                window: Duration::ZERO,
+                deadline_margin: Duration::ZERO,
+                ..BatcherConfig::default()
+            });
+            let now = Instant::now();
+            let mut rxs = Vec::new();
+            for (i, &(d, c)) in reqs.iter().enumerate() {
+                let (rq, rx) = req_class(i as u64, now, d, SloClass::from_index(c));
+                b.push(rq).unwrap();
+                rxs.push(rx);
+            }
+            b.close();
+            let mut seen: Vec<(std::cmp::Reverse<u8>, Instant)> = Vec::new();
+            let mut count = 0usize;
+            while let Some(batch) = b.next_batch() {
+                count += batch.len();
+                seen.extend(
+                    batch
+                        .into_iter()
+                        .map(|r| (std::cmp::Reverse(r.class.priority()), r.deadline)),
+                );
+            }
+            count == reqs.len() && seen.windows(2).all(|w| w[0] <= w[1])
+        },
+    );
+}
+
+#[test]
 fn urgent_deadline_closes_batch_before_window() {
     // A 30 s window would sink any real-time deadline; the margin check
     // must close the batch immediately when the EDF head is urgent.
@@ -87,6 +142,7 @@ fn urgent_deadline_closes_batch_before_window() {
         max_batch: 8,
         window: Duration::from_secs(30),
         deadline_margin: Duration::from_millis(100),
+        ..BatcherConfig::default()
     });
     let now = Instant::now();
     let (far, _x1) = req(2, now, 60_000);
@@ -112,6 +168,7 @@ fn relaxed_deadlines_wait_for_the_window() {
         max_batch: 4,
         window: Duration::from_millis(60),
         deadline_margin: Duration::from_millis(1),
+        ..BatcherConfig::default()
     }));
     let now = Instant::now();
     let (first, _x1) = req(0, now, 60_000);
@@ -137,6 +194,7 @@ fn random_concurrent_bursts_never_drop_requests() {
         max_batch: 3,
         window: Duration::from_micros(200),
         deadline_margin: Duration::from_micros(50),
+        ..BatcherConfig::default()
     }));
     let total: u64 = 300;
     let drained: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));

@@ -49,6 +49,7 @@ fn lane(model: &str, delay: Duration, tag: f32) -> LaneSpec {
             max_batch: 3,
             window: Duration::from_micros(300),
             deadline_margin: Duration::from_micros(300),
+            ..BatcherConfig::default()
         },
     }
 }

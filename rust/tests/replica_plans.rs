@@ -193,6 +193,7 @@ fn lane(tag: f32) -> LaneSpec {
             max_batch: 2,
             window: Duration::from_micros(300),
             deadline_margin: Duration::from_micros(300),
+            ..BatcherConfig::default()
         },
     }
 }
