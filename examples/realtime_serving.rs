@@ -86,12 +86,15 @@ fn main() -> superlip::Result<()> {
     }
     let wall = t0.elapsed().as_secs_f64();
     let m = server.shutdown();
-    let s = m.latency_summary().unwrap();
+    let s = m.latency_stats().unwrap();
     println!("\n=== end-to-end serving (TinyCNN over PJRT, {replicas} replicas) ===");
     println!("  requests:        {}", m.completed());
     println!("  offered load:    {rate_rps:.0} req/s (Poisson)");
     println!("  throughput:      {:.1} req/s", m.completed() as f64 / wall);
-    println!("  latency p50/p99: {:.2} / {:.2} ms", s.p50(), s.p99());
+    println!(
+        "  latency p50/p99/p99.9: {:.2} / {:.2} / {:.2} ms",
+        s.p50_ms, s.p99_ms, s.p999_ms
+    );
     println!("  mean batch:      {:.2}", m.mean_batch());
     println!("  deadline misses: {}/{}", m.deadline_misses(), m.completed());
 

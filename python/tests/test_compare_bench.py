@@ -139,6 +139,41 @@ def test_per_metric_rel_override(tmp_path):
     assert _run(base, bad).returncode == 1
 
 
+def test_ns_per_request_gates_lower_is_worse(tmp_path):
+    # 2000 ns at rel 0.10 → limit 2000*1.1 + 50 = 2250 ns; 2200 passes,
+    # 2400 fails, and a big improvement sails through.
+    base = _write(
+        tmp_path, "base.json", _doc({"hotpath": {"value": 2000.0, "unit": "ns/req"}})
+    )
+    ok = _write(tmp_path, "ok.json", _doc({"hotpath": {"value": 2200.0, "unit": "ns/req"}}))
+    bad = _write(tmp_path, "bad.json", _doc({"hotpath": {"value": 2400.0, "unit": "ns/req"}}))
+    fast = _write(tmp_path, "fast.json", _doc({"hotpath": {"value": 100.0, "unit": "ns/req"}}))
+    assert _run(base, ok).returncode == 0
+    r = _run(base, bad)
+    assert r.returncode == 1
+    assert "exceeds baseline" in r.stdout
+    assert _run(base, fast).returncode == 0
+
+
+def test_rps_per_core_gates_higher_is_better(tmp_path):
+    # 100k rps/core at rel 0.10 → floor 100000*0.9 - 1000 = 89000; a drop
+    # to 95k passes, 80k fails (with a direction-aware message), and a
+    # throughput GAIN never fails.
+    base = _write(
+        tmp_path, "base.json", _doc({"tput": {"value": 100000.0, "unit": "rps/core"}})
+    )
+    ok = _write(tmp_path, "ok.json", _doc({"tput": {"value": 95000.0, "unit": "rps/core"}}))
+    bad = _write(tmp_path, "bad.json", _doc({"tput": {"value": 80000.0, "unit": "rps/core"}}))
+    gain = _write(
+        tmp_path, "gain.json", _doc({"tput": {"value": 500000.0, "unit": "rps/core"}})
+    )
+    assert _run(base, ok).returncode == 0
+    r = _run(base, bad)
+    assert r.returncode == 1
+    assert "fell below baseline" in r.stdout
+    assert _run(base, gain).returncode == 0
+
+
 def test_bad_usage_and_bad_json_exit_2(tmp_path):
     assert _run().returncode == 2
     garbage = tmp_path / "garbage.json"

@@ -1,0 +1,154 @@
+//! Serving hot-path microbench (EXPERIMENTS.md §Hotpath): drive the full
+//! `try_submit_to` → route → batch → complete pipeline against a **null
+//! backend** (infer returns instantly) so the measured cost is the serving
+//! machinery itself — the lock-free route snapshot, the sharded per-class
+//! queues, the condvar handshake, the histogram metrics — not compute.
+//!
+//! Closed-loop load: each submitter keeps a bounded window of in-flight
+//! requests (submit one, and once the window is full, reap the oldest
+//! response), so the pipeline stays saturated without unbounded queues.
+//! Reported metrics, both gated by CI against `BENCH_serving.json`:
+//!
+//! * **ns/request** (lower is better) — wall nanoseconds per completed
+//!   request, first submit to last response;
+//! * **rps/core** (higher is better) — completed requests per second
+//!   divided by the threads doing the work (submitters + lane workers),
+//!   the honest per-core figure that a super-linear claim must not hide
+//!   behind added parallelism.
+//!
+//! Tail percentiles (p99.9/p99.99) come from the server's bounded HDR
+//! histograms and are recorded informationally — they prove the metrics
+//! path survives million-RPS accounting without unbounded Vec growth.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+use superlip::bench::Harness;
+use superlip::fleet::SloClass;
+use superlip::serving::{
+    BackendFactory, BatcherConfig, InferBackend, LaneSpec, RoutePolicy, Server, ServerConfig,
+};
+
+/// The null backend: one scalar in, one logit out, no work. `max_batch`
+/// is wide so the batcher's coalescing (not the backend) sets batch size.
+struct NullBackend;
+
+impl InferBackend for NullBackend {
+    fn image_elems(&self) -> usize {
+        1
+    }
+    fn classes(&self) -> usize {
+        1
+    }
+    fn max_batch(&self) -> usize {
+        64
+    }
+    fn infer(&self, _images: &[f32], n: usize) -> superlip::Result<Vec<f32>> {
+        Ok(vec![0.0; n])
+    }
+}
+
+const MODEL: &str = "null";
+const LANES: usize = 2;
+const WORKERS_PER_LANE: usize = 2;
+const SUBMITTERS: usize = 3;
+/// In-flight window per submitter — deep enough to saturate, bounded so
+/// queues stay small and latency stays meaningful.
+const PIPELINE: usize = 64;
+
+fn lane() -> LaneSpec {
+    LaneSpec {
+        model: MODEL.into(),
+        factories: (0..WORKERS_PER_LANE)
+            .map(|_| {
+                Box::new(|| Ok(Box::new(NullBackend) as Box<dyn InferBackend>)) as BackendFactory
+            })
+            .collect(),
+        batcher: BatcherConfig {
+            max_batch: 32,
+            // No coalescing wait: a null backend has nothing to amortize,
+            // so the bench measures queue mechanics, not sleep.
+            window: Duration::from_millis(0),
+            ..BatcherConfig::default()
+        },
+    }
+}
+
+/// One saturated closed-loop run; returns (completed requests, wall secs).
+fn drive(server: &Server, per_submitter: usize) -> (u64, f64) {
+    let completed = AtomicU64::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..SUBMITTERS {
+            let completed = &completed;
+            s.spawn(move || {
+                let deadline = Duration::from_secs(5);
+                // Rotate classes so the sharded sub-queues all see traffic.
+                let class = match t % 3 {
+                    0 => SloClass::Gold,
+                    1 => SloClass::Silver,
+                    _ => SloClass::BestEffort,
+                };
+                let mut inflight = std::collections::VecDeque::with_capacity(PIPELINE);
+                let mut done = 0u64;
+                for _ in 0..per_submitter {
+                    let rx = server
+                        .try_submit_to(MODEL, vec![0.0], deadline, class)
+                        .expect("null lane accepts");
+                    inflight.push_back(rx);
+                    if inflight.len() >= PIPELINE {
+                        let oldest = inflight.pop_front().unwrap();
+                        oldest.recv().expect("response");
+                        done += 1;
+                    }
+                }
+                for rx in inflight {
+                    rx.recv().expect("response");
+                    done += 1;
+                }
+                completed.fetch_add(done, Ordering::Relaxed);
+            });
+        }
+    });
+    (completed.load(Ordering::Relaxed), t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    let mut h = Harness::new("serving_hotpath");
+    let per_submitter: usize = if h.is_quick() { 20_000 } else { 200_000 };
+
+    let server = Server::start_plan(
+        (0..LANES).map(|_| lane()).collect(),
+        ServerConfig {
+            policy: RoutePolicy::LeastOutstanding,
+            ..ServerConfig::default()
+        },
+    );
+
+    // Warmup: page in the pipeline, then reset metrics so the measured
+    // window is steady-state only.
+    drive(&server, per_submitter / 10);
+    server.metrics().reset();
+
+    let (n, wall) = drive(&server, per_submitter);
+    assert_eq!(n as usize, SUBMITTERS * per_submitter, "exactly-one-response");
+
+    let throughput = n as f64 / wall;
+    let cores = (SUBMITTERS + LANES * WORKERS_PER_LANE) as f64;
+    let ns_per_req = wall * 1e9 / n as f64;
+    h.record("hot path, submit→complete", ns_per_req, "ns/req");
+    h.record("hot path throughput per core", throughput / cores, "rps/core");
+    h.record("hot path aggregate throughput", throughput, "req/s");
+
+    // Tail latencies from the bounded histograms (informational: the
+    // p99.9/p99.99 upgrade the HDR buckets bought, within 1.5625%).
+    let m = server.metrics();
+    if let Some(l) = m.latency_stats() {
+        h.record("end-to-end p50", l.p50_ms, "lat-ms");
+        h.record("end-to-end p99.9", l.p999_ms, "lat-ms");
+        h.record("end-to-end p99.99", l.p9999_ms, "lat-ms");
+    }
+    h.record("mean batch", m.mean_batch(), "req");
+
+    server.shutdown();
+    h.finish();
+}

@@ -276,6 +276,8 @@ mod tests {
             rate_rps: arrivals as f64,
             p50_ms: 1.0,
             p99_ms: 2.0,
+            p999_ms: 2.5,
+            p9999_ms: 3.0,
             miss_rate,
         };
         // Under-sampled windows are never pressure, however wild.

@@ -193,6 +193,8 @@ mod tests {
             rate_rps: rate,
             p50_ms: 1.0,
             p99_ms: 2.0,
+            p999_ms: 2.5,
+            p9999_ms: 3.0,
             miss_rate,
         }]
     }
@@ -301,6 +303,8 @@ mod tests {
             rate_rps: 0.0,
             p50_ms: f64::NAN,
             p99_ms: f64::NAN,
+            p999_ms: f64::NAN,
+            p9999_ms: f64::NAN,
             miss_rate: 0.0,
         }];
         assert!(matches!(
@@ -332,6 +336,8 @@ mod tests {
             rate_rps: 1e6,
             p50_ms: 1.0,
             p99_ms: 1.0,
+            p999_ms: 1.0,
+            p9999_ms: 1.0,
             miss_rate: 0.0,
         }];
         assert_eq!(d.observe(&p, &stray), DriftDecision::Stable);

@@ -369,11 +369,11 @@ pub fn run_drift_scenario(
                 }
             }
             let completed = lat_ms.len();
-            let (p50, p99) = if completed > 0 {
+            let (p50, p99, p999, p9999) = if completed > 0 {
                 let s = Summary::of(&lat_ms);
-                (s.p50(), s.p99())
+                (s.p50(), s.p99(), s.p999(), s.p9999())
             } else {
-                (f64::NAN, f64::NAN)
+                (f64::NAN, f64::NAN, f64::NAN, f64::NAN)
             };
             rows.push(ModelStats {
                 model: mix[ei].model.clone(),
@@ -384,6 +384,8 @@ pub fn run_drift_scenario(
                 shed: shed[pi][ei],
                 p50_ms: p50,
                 p99_ms: p99,
+                p999_ms: p999,
+                p9999_ms: p9999,
                 mean_batch: if completed > 0 {
                     batches.iter().sum::<usize>() as f64 / completed as f64
                 } else {

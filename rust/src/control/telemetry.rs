@@ -40,9 +40,12 @@ pub struct ModelObs {
     pub window_s: f64,
     /// Observed arrival rate over the window (model-time rps).
     pub rate_rps: f64,
-    /// Window latency percentiles (model-time ms; NaN when idle).
+    /// Window latency percentiles (model-time ms; NaN when idle). The
+    /// tail pair comes free from the bounded histograms the lanes keep.
     pub p50_ms: f64,
     pub p99_ms: f64,
+    pub p999_ms: f64,
+    pub p9999_ms: f64,
     /// Fraction of the window's completions that missed (0 when idle).
     pub miss_rate: f64,
 }
@@ -113,9 +116,14 @@ impl TelemetryHub {
                 let s = MetricsSnapshot::merge(&snaps);
                 let w = s.window.as_secs_f64() / ts;
                 window_s = window_s.max(w);
-                let (p50, p99) = match s.latency_summary() {
-                    Some(sum) => (sum.p50() / ts, sum.p99() / ts),
-                    None => (f64::NAN, f64::NAN),
+                let (p50, p99, p999, p9999) = match s.latency_stats() {
+                    Some(l) => (
+                        l.p50_ms / ts,
+                        l.p99_ms / ts,
+                        l.p999_ms / ts,
+                        l.p9999_ms / ts,
+                    ),
+                    None => (f64::NAN, f64::NAN, f64::NAN, f64::NAN),
                 };
                 ModelObs {
                     model,
@@ -127,7 +135,11 @@ impl TelemetryHub {
                     rate_rps: s.arrivals as f64 / w.max(1e-9),
                     p50_ms: p50,
                     p99_ms: p99,
-                    miss_rate: if s.completed > 0 { s.miss_rate() } else { 0.0 },
+                    p999_ms: p999,
+                    p9999_ms: p9999,
+                    // `miss_rate()` is 0.0 on an idle window by contract
+                    // now (the NaN bugfix) — no guard needed here.
+                    miss_rate: s.miss_rate(),
                 }
             })
             .collect();
@@ -246,6 +258,7 @@ mod tests {
         assert_eq!((a.arrivals, a.completed), (6, 6), "replica lanes pooled");
         assert_eq!(b.arrivals, 2);
         assert!(a.p99_ms >= a.p50_ms);
+        assert!(a.p999_ms >= a.p99_ms && a.p9999_ms >= a.p999_ms);
         // Model-time window is twice the wall window; observed rate is
         // arrivals over model seconds and ~3× b's.
         assert!(frame.window_s >= 0.02 / 0.5 * 0.9);
@@ -263,6 +276,31 @@ mod tests {
         assert!((obs[0].rate_rps - sm).abs() < 1e-9);
         assert!((obs[1].rate_rps - 0.5).abs() < 1e-9, "unseen model floors at 1%");
         assert_eq!(obs[1].deadline, planned[1].deadline);
+        srv.shutdown();
+    }
+
+    // Regression (BUGFIX), end-to-end: an idle window used to flow
+    // 0/0 = NaN miss rates into the pooled frame, where every threshold
+    // comparison is false. The hub must report 0.0 for idle models.
+    #[test]
+    fn idle_window_reports_zero_miss_rate_not_nan() {
+        let srv = Arc::new(Server::start_plan(
+            vec![lane("a"), lane("a")],
+            ServerConfig::default(),
+        ));
+        let mut hub = TelemetryHub::new(srv.clone(), 1.0, 4);
+        std::thread::sleep(Duration::from_millis(5));
+        let frame = hub.tick(); // nothing submitted: every lane idle
+        let a = frame.models.iter().find(|m| m.model == "a").unwrap();
+        assert_eq!(a.completed, 0);
+        assert_eq!(a.miss_rate, 0.0, "idle miss rate must be 0.0, not NaN");
+        assert!(!a.miss_rate.is_nan());
+        // A threshold gate behaves consistently on the idle value.
+        let trips_gate = a.miss_rate > 0.01;
+        assert!(!trips_gate, "idle lane must not trip gates");
+        // Latency percentiles stay NaN when idle (explicitly no data) —
+        // that is a separate, intentional signal.
+        assert!(a.p50_ms.is_nan() && a.p9999_ms.is_nan());
         srv.shutdown();
     }
 }

@@ -178,6 +178,8 @@ pub struct ModelStats {
     pub shed: usize,
     pub p50_ms: f64,
     pub p99_ms: f64,
+    pub p999_ms: f64,
+    pub p9999_ms: f64,
     pub mean_batch: f64,
     /// Fraction of SENT requests that missed their deadline — requests that
     /// were never served (dropped on backend failure / timed out waiting)
@@ -196,8 +198,8 @@ pub struct ModelStats {
 /// `fleet_scenarios` / `energy_consolidation` benches).
 pub fn stats_table(stats: &[ModelStats]) -> String {
     let mut t = Table::new(&[
-        "Model", "Class", "Boards", "Sent", "Done", "Shed", "p50(ms)", "p99(ms)", "Batch", "Miss%",
-        "Watts", "J/inf",
+        "Model", "Class", "Boards", "Sent", "Done", "Shed", "p50(ms)", "p99(ms)", "p99.9(ms)",
+        "Batch", "Miss%", "Watts", "J/inf",
     ]);
     for s in stats {
         t.row(&[
@@ -209,6 +211,7 @@ pub fn stats_table(stats: &[ModelStats]) -> String {
             s.shed.to_string(),
             report::ms(s.p50_ms),
             report::ms(s.p99_ms),
+            report::ms(s.p999_ms),
             format!("{:.2}", s.mean_batch),
             format!("{:.1}", s.miss_rate * 100.0),
             format!("{:.1}", s.avg_watts),
@@ -365,11 +368,11 @@ pub fn run_scenario(plan: &FleetPlan, cfg: &ScenarioConfig) -> Result<Vec<ModelS
             }
         }
         let completed = lat_ms.len();
-        let (p50, p99) = if completed > 0 {
+        let (p50, p99, p999, p9999) = if completed > 0 {
             let s = Summary::of(&lat_ms);
-            (s.p50(), s.p99())
+            (s.p50(), s.p99(), s.p999(), s.p9999())
         } else {
-            (f64::NAN, f64::NAN)
+            (f64::NAN, f64::NAN, f64::NAN, f64::NAN)
         };
         stats.push(ModelStats {
             model: d.workload.model.clone(),
@@ -381,6 +384,8 @@ pub fn run_scenario(plan: &FleetPlan, cfg: &ScenarioConfig) -> Result<Vec<ModelS
             shed: sheds[si],
             p50_ms: p50,
             p99_ms: p99,
+            p999_ms: p999,
+            p9999_ms: p9999,
             mean_batch: if completed > 0 {
                 batches.iter().sum::<usize>() as f64 / completed as f64
             } else {

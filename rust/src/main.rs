@@ -457,14 +457,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let wall = t0.elapsed().as_secs_f64();
     let m = server.shutdown();
-    let s = m.latency_summary().expect("served requests");
+    let s = m.latency_stats().expect("served requests");
     println!(
-        "served {} requests in {:.2}s ({:.1} req/s): p50 {:.2} ms  p99 {:.2} ms  mean batch {:.2}  deadline misses {}",
+        "served {} requests in {:.2}s ({:.1} req/s): p50 {:.2} ms  p99 {:.2} ms  p99.9 {:.2} ms  mean batch {:.2}  deadline misses {}",
         m.completed(),
         wall,
         m.completed() as f64 / wall,
-        s.p50(),
-        s.p99(),
+        s.p50_ms,
+        s.p99_ms,
+        s.p999_ms,
         m.mean_batch(),
         m.deadline_misses()
     );

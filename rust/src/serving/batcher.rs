@@ -9,11 +9,29 @@
 //! waiting longer. Per-class queue caps (brownout rung 1) refuse overflow
 //! at ingress — a queued request is always served, so exactly-one-response
 //! needs no queue surgery.
+//!
+//! **Sharded queue.** The queue is one MPSC-style sub-queue *per SLO
+//! class*, each behind its own short mutex, instead of one global
+//! `Mutex<VecDeque>`: concurrent producers of different classes never
+//! contend, a producer's critical section is a single EDF insert into a
+//! short per-class deque, and the global invariants live in atomics (total
+//! `depth`, `closed`). Class-major drain order falls out structurally —
+//! the worker empties sub-queues in descending class priority — and EDF
+//! within a class is the sub-queue's sort invariant, so the sharding
+//! preserves the exact pop order of the old single-queue implementation
+//! (property-tested against a reference sort below). Per-class `@quota`
+//! caps live inside the owning shard, making the cap check and the insert
+//! one atomic step.
+//!
+//! Workers park on a separate sleep mutex + condvar; producers only touch
+//! it when a sleeper is registered (`sleepers` counter, SeqCst
+//! handshake), so the steady-state push path is class-lock + two atomics.
 
 use super::InferenceRequest;
 use crate::fleet::{SloClass, N_CLASSES};
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 /// Batcher tuning.
@@ -62,21 +80,30 @@ impl PushRefusal {
     }
 }
 
-struct Queue {
+/// One class's shard: EDF-sorted deque + its live quota cap. All state a
+/// push of this class needs sits behind this one short lock.
+#[derive(Default)]
+struct SubQueue {
+    /// Sorted by deadline ascending; FIFO among equal deadlines.
     items: VecDeque<InferenceRequest>,
-    /// Queued requests per class (`SloClass::index`).
-    class_counts: [usize; N_CLASSES],
-    /// Live per-class caps (0 = unlimited); start at `cfg.class_caps`,
-    /// adjustable by the brownout controller.
-    class_caps: [usize; N_CLASSES],
-    closed: bool,
+    /// Live cap (0 = unlimited), adjustable by the brownout controller.
+    cap: usize,
 }
 
 /// Thread-safe request queue + batch former shared by all worker threads.
 pub struct Batcher {
     cfg: BatcherConfig,
-    q: Mutex<Queue>,
+    /// Per-class shards, indexed by `SloClass::index`.
+    classes: [Mutex<SubQueue>; N_CLASSES],
+    /// Total queued across shards (SeqCst: pairs with the sleeper
+    /// handshake and the close linearization).
+    depth: AtomicUsize,
+    closed: AtomicBool,
+    /// Parking lot for workers with nothing to drain. Producers skip it
+    /// entirely unless `sleepers > 0`.
+    sleep: Mutex<()>,
     cv: Condvar,
+    sleepers: AtomicUsize,
 }
 
 impl Batcher {
@@ -84,13 +111,17 @@ impl Batcher {
         assert!(cfg.max_batch >= 1);
         Batcher {
             cfg,
-            q: Mutex::new(Queue {
-                items: VecDeque::new(),
-                class_counts: [0; N_CLASSES],
-                class_caps: cfg.class_caps,
-                closed: false,
+            classes: std::array::from_fn(|ci| {
+                Mutex::new(SubQueue {
+                    items: VecDeque::new(),
+                    cap: cfg.class_caps[ci],
+                })
             }),
+            depth: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+            sleep: Mutex::new(()),
             cv: Condvar::new(),
+            sleepers: AtomicUsize::new(0),
         }
     }
 
@@ -99,10 +130,24 @@ impl Batcher {
     }
 
     /// Poison-resilient lock: a panicking client thread must not wedge the
-    /// whole serving queue (the queue data stays consistent — every
-    /// mutation is a single insert/drain/flag write).
-    fn locked(&self) -> std::sync::MutexGuard<'_, Queue> {
-        self.q.lock().unwrap_or_else(|e| e.into_inner())
+    /// whole serving queue (shard data stays consistent — every mutation
+    /// is a single insert/drain under the lock).
+    fn shard(&self, ci: usize) -> MutexGuard<'_, SubQueue> {
+        self.classes[ci].lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn sleep_lock(&self) -> MutexGuard<'_, ()> {
+        self.sleep.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Wake a worker if any is parked. Producers call this after the
+    /// depth increment is published; the SeqCst `sleepers` read pairs with
+    /// the sleeper's register-then-recheck, so a wakeup is never lost.
+    fn wake_one(&self) {
+        if self.sleepers.load(Ordering::SeqCst) > 0 {
+            let _g = self.sleep_lock();
+            self.cv.notify_one();
+        }
     }
 
     /// Enqueue a request in class-major earliest-deadline-first position.
@@ -119,39 +164,47 @@ impl Batcher {
     /// while a lane drains — and `Quota` (per-class cap reached) so the
     /// server can shed it with an explicit typed rejection.
     pub fn try_push(&self, req: InferenceRequest) -> std::result::Result<(), PushRefusal> {
-        let mut q = self.locked();
-        if q.closed {
+        if self.closed.load(Ordering::SeqCst) {
             return Err(PushRefusal::Closed(req));
         }
         let ci = req.class.index();
-        let cap = q.class_caps[ci];
-        if cap != 0 && q.class_counts[ci] >= cap {
+        let mut q = self.shard(ci);
+        // Re-check under the shard lock: `close` acquires every shard lock
+        // after setting the flag, so a push that passes this check is
+        // ordered before the close and its item is seen by the drain.
+        if self.closed.load(Ordering::SeqCst) {
+            drop(q);
+            return Err(PushRefusal::Closed(req));
+        }
+        if q.cap != 0 && q.items.len() >= q.cap {
+            drop(q);
             return Err(PushRefusal::Quota(req));
         }
-        // Class-major EDF insertion: strictly higher class first, earliest
-        // deadline within a class (queues are short — linear scan is the
-        // fast path; a uniform-class queue reduces to plain EDF).
-        let key = (std::cmp::Reverse(req.class.priority()), req.deadline);
+        // EDF insertion within the class (class-major order is structural:
+        // higher-class shards drain first). Strict `>` keeps FIFO among
+        // equal deadlines. Queues are short — linear scan is the fast path.
         let pos = q
             .items
             .iter()
-            .position(|r| (std::cmp::Reverse(r.class.priority()), r.deadline) > key)
+            .position(|r| r.deadline > req.deadline)
             .unwrap_or(q.items.len());
         q.items.insert(pos, req);
-        q.class_counts[ci] += 1;
+        // Publish the depth before releasing the shard lock so the item
+        // can never be queued-but-invisible across a close.
+        self.depth.fetch_add(1, Ordering::SeqCst);
         drop(q);
-        self.cv.notify_one();
+        self.wake_one();
         Ok(())
     }
 
     /// Number of queued requests (diagnostics).
     pub fn depth(&self) -> usize {
-        self.locked().items.len()
+        self.depth.load(Ordering::SeqCst)
     }
 
     /// Queued requests of one class (diagnostics).
     pub fn class_depth(&self, class: SloClass) -> usize {
-        self.locked().class_counts[class.index()]
+        self.shard(class.index()).items.len()
     }
 
     /// Adjust one class's queue cap at run time (0 = unlimited). The
@@ -159,14 +212,85 @@ impl Batcher {
     /// already-queued requests above the new cap still get served — caps
     /// only refuse new ingress.
     pub fn set_class_cap(&self, class: SloClass, cap: usize) {
-        self.locked().class_caps[class.index()] = cap;
+        self.shard(class.index()).cap = cap;
     }
 
     /// Close the queue; blocked workers drain remaining items then get
     /// `None`.
     pub fn close(&self) {
-        self.locked().closed = true;
+        self.closed.store(true, Ordering::SeqCst);
+        // Linearize against in-flight pushes: any push that read
+        // `closed == false` under its shard lock finished its insert (and
+        // depth increment) before we acquire that lock here — no request
+        // is accepted-but-stranded.
+        for ci in 0..N_CLASSES {
+            drop(self.shard(ci));
+        }
+        let _g = self.sleep_lock();
         self.cv.notify_all();
+    }
+
+    /// Earliest deadline the next batch would start with: the front of the
+    /// highest-priority non-empty shard (the class-major pop order).
+    fn front_deadline(&self) -> Option<Instant> {
+        for ci in (0..N_CLASSES).rev() {
+            if let Some(d) = self.shard(ci).items.front().map(|r| r.deadline) {
+                return Some(d);
+            }
+        }
+        None
+    }
+
+    /// Pop up to `max` requests in class-major EDF order, newest-deadline
+    /// last. Decrements `depth` as it goes.
+    fn drain(&self, max: usize) -> Vec<InferenceRequest> {
+        let mut batch = Vec::new();
+        for ci in (0..N_CLASSES).rev() {
+            if batch.len() == max {
+                break;
+            }
+            let mut q = self.shard(ci);
+            while batch.len() < max {
+                match q.items.pop_front() {
+                    Some(r) => {
+                        self.depth.fetch_sub(1, Ordering::SeqCst);
+                        batch.push(r);
+                    }
+                    None => break,
+                }
+            }
+        }
+        batch
+    }
+
+    /// Park on the sleep condvar unless work (or close) raced in after
+    /// registering as a sleeper; `until` bounds the nap (window wait).
+    fn park(&self, until: Option<Instant>) {
+        let g = self.sleep_lock();
+        self.sleepers.fetch_add(1, Ordering::SeqCst);
+        // Re-check AFTER registering: a producer that increments depth and
+        // then reads `sleepers` (both SeqCst) either sees us registered —
+        // and will take the sleep lock we hold, queueing its notify behind
+        // our wait — or its increment is already visible to this load.
+        let should_sleep = !self.closed.load(Ordering::SeqCst)
+            && (until.is_some() || self.depth.load(Ordering::SeqCst) == 0);
+        if should_sleep {
+            match until {
+                Some(t) => {
+                    let now = Instant::now();
+                    if t > now {
+                        let _ = self
+                            .cv
+                            .wait_timeout(g, t - now)
+                            .unwrap_or_else(|e| e.into_inner());
+                    }
+                }
+                None => {
+                    let _ = self.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+                }
+            }
+        }
+        self.sleepers.fetch_sub(1, Ordering::SeqCst);
     }
 
     /// Blocking: form the next batch (≥1 request) or `None` if closed and
@@ -174,56 +298,49 @@ impl Batcher {
     /// while this worker sits in the batching window, in which case we go
     /// back to waiting instead of returning an empty batch.
     pub fn next_batch(&self) -> Option<Vec<InferenceRequest>> {
-        let mut q = self.locked();
-        'restart: loop {
+        loop {
             // Wait for the first request.
             loop {
-                if !q.items.is_empty() {
+                if self.depth.load(Ordering::SeqCst) > 0 {
                     break;
                 }
-                if q.closed {
+                if self.closed.load(Ordering::SeqCst) {
                     return None;
                 }
-                q = self
-                    .cv
-                    .wait(q)
-                    .unwrap_or_else(|e| e.into_inner());
+                self.park(None);
             }
             // Window: wait (bounded) for the batch to fill.
             let window_end = Instant::now() + self.cfg.window;
-            while q.items.len() < self.cfg.max_batch && !q.closed {
+            loop {
+                let depth = self.depth.load(Ordering::SeqCst);
+                if depth >= self.cfg.max_batch || self.closed.load(Ordering::SeqCst) {
+                    break;
+                }
+                if depth == 0 {
+                    break; // sibling drained everything — restart outer
+                }
                 let now = Instant::now();
                 if now >= window_end {
                     break;
                 }
-                // A sibling worker may have taken everything while we
-                // waited — restart from the empty-queue wait.
-                let Some(urgent) = q.items.front().map(|r| r.deadline) else {
-                    continue 'restart;
+                let Some(urgent) = self.front_deadline() else {
+                    break; // raced empty — restart outer
                 };
                 // Close early if the most urgent deadline is at risk.
                 if urgent <= now + self.cfg.deadline_margin {
                     break;
                 }
-                let wait = (window_end - now).min(urgent.saturating_duration_since(now));
-                let (guard, _timeout) = self
-                    .cv
-                    .wait_timeout(q, wait)
-                    .unwrap_or_else(|e| e.into_inner());
-                q = guard;
+                let nap_end = window_end.min(urgent);
+                self.park(Some(nap_end));
             }
-            if q.items.is_empty() {
-                if q.closed {
-                    return None;
-                }
-                continue 'restart;
+            let batch = self.drain(self.cfg.max_batch);
+            if !batch.is_empty() {
+                return Some(batch);
             }
-            let n = q.items.len().min(self.cfg.max_batch);
-            let batch: Vec<InferenceRequest> = q.items.drain(..n).collect();
-            for r in &batch {
-                q.class_counts[r.class.index()] -= 1;
+            if self.closed.load(Ordering::SeqCst) && self.depth.load(Ordering::SeqCst) == 0 {
+                return None;
             }
-            return Some(batch);
+            // Sibling won the race for the items — back to waiting.
         }
     }
 }
@@ -231,6 +348,7 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest::forall;
     use std::sync::mpsc;
     use std::sync::Arc;
     use std::time::Duration;
@@ -417,5 +535,105 @@ mod tests {
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.len(), 1);
         assert!(t0.elapsed() < Duration::from_secs(1), "must not wait the window");
+    }
+
+    // Property: the sharded queue pops in exactly the order of the old
+    // single-queue implementation — a stable sort by (class priority
+    // descending, deadline ascending) over arrival order.
+    #[test]
+    fn sharded_drain_matches_reference_class_major_edf() {
+        forall(
+            0xba7c4,
+            60,
+            |rng| {
+                let n = rng.range(1, 24) as usize;
+                (0..n)
+                    .map(|_| (rng.range(0, (N_CLASSES - 1) as u64), rng.range(0, 5)))
+                    .collect::<Vec<(u64, u64)>>()
+            },
+            |case| {
+                let b = Batcher::new(BatcherConfig {
+                    max_batch: usize::MAX,
+                    window: Duration::from_millis(0),
+                    ..BatcherConfig::default()
+                });
+                // One shared base so equal grid offsets are exact deadline
+                // ties, exercising the FIFO tiebreak.
+                let base = Instant::now() + Duration::from_secs(3600);
+                let mut keep = Vec::new();
+                let mut reference: Vec<(std::cmp::Reverse<u8>, Instant, u64)> = Vec::new();
+                for (i, &(ci, dl)) in case.iter().enumerate() {
+                    let class = SloClass::from_index(ci as usize);
+                    let (mut r, rx) = req_class(i as u64, 0, class);
+                    // Coarse shared deadline grid so ties exercise FIFO.
+                    r.deadline = base + Duration::from_millis(dl * 100);
+                    reference.push((std::cmp::Reverse(class.priority()), r.deadline, i as u64));
+                    b.push(r).unwrap();
+                    keep.push(rx);
+                }
+                // Stable sort = arrival order among equal (class, deadline).
+                let mut sorted = reference.clone();
+                sorted.sort_by_key(|&(c, d, _)| (c, d));
+                let want: Vec<u64> = sorted.iter().map(|&(_, _, id)| id).collect();
+                let got: Vec<u64> = b.next_batch().unwrap().iter().map(|r| r.id).collect();
+                got == want
+            },
+        );
+    }
+
+    // Hammer the MPSC path: concurrent producers across classes + two
+    // consumers; every accepted request is drained exactly once and every
+    // batch is internally class-major EDF.
+    #[test]
+    fn concurrent_producers_and_consumers_conserve_requests() {
+        const PRODUCERS: usize = 3;
+        const PER_PRODUCER: u64 = 200;
+        let b = Arc::new(Batcher::new(BatcherConfig {
+            max_batch: 4,
+            window: Duration::from_micros(200),
+            deadline_margin: Duration::from_millis(0),
+            ..BatcherConfig::default()
+        }));
+        let mut workers = Vec::new();
+        for _ in 0..2 {
+            let b = b.clone();
+            workers.push(std::thread::spawn(move || {
+                let mut ids = Vec::new();
+                while let Some(batch) = b.next_batch() {
+                    assert!(!batch.is_empty(), "empty batch");
+                    for w in batch.windows(2) {
+                        let ka = (std::cmp::Reverse(w[0].class.priority()), w[0].deadline);
+                        let kb = (std::cmp::Reverse(w[1].class.priority()), w[1].deadline);
+                        assert!(ka <= kb, "batch not class-major EDF");
+                    }
+                    ids.extend(batch.iter().map(|r| r.id));
+                }
+                ids
+            }));
+        }
+        let mut producers = Vec::new();
+        for p in 0..PRODUCERS {
+            let b = b.clone();
+            producers.push(std::thread::spawn(move || {
+                for i in 0..PER_PRODUCER {
+                    let class = SloClass::from_index(((p as u64 + i) % N_CLASSES as u64) as usize);
+                    let (r, x) = req_class(p as u64 * PER_PRODUCER + i, 10_000, class);
+                    b.try_push(r).expect("open, uncapped queue accepts");
+                    std::mem::forget(x);
+                }
+            }));
+        }
+        for h in producers {
+            h.join().unwrap();
+        }
+        b.close();
+        let mut seen: Vec<u64> = workers
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        seen.sort_unstable();
+        let want: Vec<u64> = (0..PRODUCERS as u64 * PER_PRODUCER).collect();
+        assert_eq!(seen, want, "each request served exactly once");
+        assert_eq!(b.depth(), 0);
     }
 }

@@ -13,47 +13,100 @@
 //! Arrivals are recorded separately from completions (`record_arrival` at
 //! submit time) so a window can expose the *offered* rate and expose dead
 //! lanes (arrivals with no completions).
+//!
+//! **Hot-path cost.** Recording is lock-free: counters are relaxed
+//! atomics and latencies go into fixed-bucket HDR histograms
+//! ([`crate::util::AtomicHist`], ~30 KB each, bounded regardless of
+//! traffic) instead of the old unbounded per-request `Vec<f64>`s. The
+//! bounded buckets are also what makes p99.9/p99.99 reporting free — the
+//! full CDF is always on, with worst-case percentile overestimate
+//! 1/64 ≈ 1.6 % ([`crate::util::hist::WORST_CASE_REL_ERROR`]).
+//! Snapshot drains swap each counter individually; a request racing the
+//! drain lands wholly in one window or the next per counter — never lost.
 
 use crate::fleet::{SloClass, N_CLASSES};
-use crate::util::Summary;
+use crate::util::{AtomicHist, Hist};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-/// Thread-safe metrics collector.
-#[derive(Debug)]
-pub struct Metrics {
-    inner: Mutex<Inner>,
+const R: Ordering = Ordering::Relaxed;
+
+fn load_arr(a: &[AtomicU64; N_CLASSES]) -> [u64; N_CLASSES] {
+    std::array::from_fn(|i| a[i].load(R))
 }
 
+fn swap_arr(a: &[AtomicU64; N_CLASSES]) -> [u64; N_CLASSES] {
+    std::array::from_fn(|i| a[i].swap(0, R))
+}
+
+fn zero_arr() -> [AtomicU64; N_CLASSES] {
+    std::array::from_fn(|_| AtomicU64::new(0))
+}
+
+/// Thread-safe, lock-free metrics collector.
 #[derive(Debug)]
-struct Inner {
+pub struct Metrics {
     // Cumulative (since creation / last `reset`).
-    latencies_ms: Vec<f64>,
-    batch_sizes: Vec<usize>,
-    deadline_misses: u64,
-    arrivals: u64,
-    shed: u64,
-    class_completed: [u64; N_CLASSES],
-    class_misses: [u64; N_CLASSES],
-    class_shed: [u64; N_CLASSES],
-    started: Instant,
+    completed: AtomicU64,
+    deadline_misses: AtomicU64,
+    arrivals: AtomicU64,
+    shed: AtomicU64,
+    batch_total: AtomicU64,
+    class_completed: [AtomicU64; N_CLASSES],
+    class_misses: [AtomicU64; N_CLASSES],
+    class_shed: [AtomicU64; N_CLASSES],
+    hist: AtomicHist,
+    /// Throughput clock (cold: touched by `reset` only).
+    started: Mutex<Instant>,
     // Window (since last `snapshot_and_reset`).
-    win_latencies_ms: Vec<f64>,
-    win_completed: u64,
-    win_batch_total: u64,
-    win_misses: u64,
-    win_arrivals: u64,
-    win_shed: u64,
-    win_class_completed: [u64; N_CLASSES],
-    win_class_misses: [u64; N_CLASSES],
-    win_class_shed: [u64; N_CLASSES],
-    win_started: Instant,
+    win_completed: AtomicU64,
+    win_misses: AtomicU64,
+    win_arrivals: AtomicU64,
+    win_shed: AtomicU64,
+    win_batch_total: AtomicU64,
+    win_class_completed: [AtomicU64; N_CLASSES],
+    win_class_misses: [AtomicU64; N_CLASSES],
+    win_class_shed: [AtomicU64; N_CLASSES],
+    win_hist: AtomicHist,
+    win_started: Mutex<Instant>,
+}
+
+/// Hist-derived latency stats (ms). Percentiles above p99 are the point of
+/// the histogram upgrade: tail behavior at real-time SLOs.
+#[derive(Debug, Clone, Copy)]
+pub struct LatencyStats {
+    pub count: u64,
+    pub mean_ms: f64,
+    pub max_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+    pub p9999_ms: f64,
+}
+
+impl LatencyStats {
+    fn of(h: &Hist) -> Option<LatencyStats> {
+        if h.is_empty() {
+            return None;
+        }
+        Some(LatencyStats {
+            count: h.count(),
+            mean_ms: h.mean_ms(),
+            max_ms: h.max_ms(),
+            p50_ms: h.percentile_ms(50.0),
+            p99_ms: h.percentile_ms(99.0),
+            p999_ms: h.percentile_ms(99.9),
+            p9999_ms: h.percentile_ms(99.99),
+        })
+    }
 }
 
 /// One interval's worth of serving activity, drained by
-/// [`Metrics::snapshot_and_reset`]. Latency samples are the raw window so
-/// callers can pool several lanes' snapshots exactly before taking
-/// percentiles.
+/// [`Metrics::snapshot_and_reset`]. Latencies travel as a bounded
+/// histogram; pooling several lanes' snapshots (`merge`) is a bucket-wise
+/// sum, exact up to bucket resolution — identical to pooling the raw
+/// samples and then bucketing.
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
     /// Wall-clock length of the interval.
@@ -74,17 +127,16 @@ pub struct MetricsSnapshot {
     pub class_misses: [u64; N_CLASSES],
     /// Per-class sheds.
     pub class_shed: [u64; N_CLASSES],
-    /// Raw per-request latencies (ms) completed in the interval.
-    pub latencies_ms: Vec<f64>,
+    /// Latency histogram of the interval's completions (ns buckets).
+    pub hist: Hist,
     /// Sum of served batch sizes over the interval.
     pub batch_total: u64,
 }
 
 impl MetricsSnapshot {
-    /// Pool several snapshots (e.g. replica lanes of one model) into one.
-    /// The window is the max of the parts (they are ticked together).
-    pub fn merge(parts: &[MetricsSnapshot]) -> MetricsSnapshot {
-        let mut out = MetricsSnapshot {
+    /// An empty snapshot (zero window, nothing recorded).
+    pub fn empty() -> MetricsSnapshot {
+        MetricsSnapshot {
             window: Duration::ZERO,
             arrivals: 0,
             completed: 0,
@@ -93,9 +145,15 @@ impl MetricsSnapshot {
             class_completed: [0; N_CLASSES],
             class_misses: [0; N_CLASSES],
             class_shed: [0; N_CLASSES],
-            latencies_ms: Vec::new(),
+            hist: Hist::empty(),
             batch_total: 0,
-        };
+        }
+    }
+
+    /// Pool several snapshots (e.g. replica lanes of one model) into one.
+    /// The window is the max of the parts (they are ticked together).
+    pub fn merge(parts: &[MetricsSnapshot]) -> MetricsSnapshot {
+        let mut out = MetricsSnapshot::empty();
         for p in parts {
             out.window = out.window.max(p.window);
             out.arrivals += p.arrivals;
@@ -107,7 +165,7 @@ impl MetricsSnapshot {
                 out.class_misses[c] += p.class_misses[c];
                 out.class_shed[c] += p.class_shed[c];
             }
-            out.latencies_ms.extend_from_slice(&p.latencies_ms);
+            out.hist.merge_from(&p.hist);
             out.batch_total += p.batch_total;
         }
         out
@@ -119,9 +177,15 @@ impl MetricsSnapshot {
         self.arrivals as f64 / self.window.as_secs_f64().max(1e-9)
     }
 
-    /// Fraction of completed requests that missed (NaN when idle).
+    /// Fraction of completed requests that missed. An idle window is 0.0,
+    /// not NaN — NaN compared false against every threshold, so idle lanes
+    /// used to poison pooled telemetry and gate logic inconsistently.
     pub fn miss_rate(&self) -> f64 {
-        self.misses as f64 / self.completed as f64
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.misses as f64 / self.completed as f64
+        }
     }
 
     pub fn mean_batch(&self) -> f64 {
@@ -132,13 +196,9 @@ impl MetricsSnapshot {
         }
     }
 
-    /// Window latency summary (`None` when nothing completed).
-    pub fn latency_summary(&self) -> Option<Summary> {
-        if self.latencies_ms.is_empty() {
-            None
-        } else {
-            Some(Summary::of(&self.latencies_ms))
-        }
+    /// Window latency stats (`None` when nothing completed).
+    pub fn latency_stats(&self) -> Option<LatencyStats> {
+        LatencyStats::of(&self.hist)
     }
 }
 
@@ -152,41 +212,32 @@ impl Metrics {
     pub fn new() -> Self {
         let now = Instant::now();
         Metrics {
-            inner: Mutex::new(Inner {
-                latencies_ms: Vec::new(),
-                batch_sizes: Vec::new(),
-                deadline_misses: 0,
-                arrivals: 0,
-                shed: 0,
-                class_completed: [0; N_CLASSES],
-                class_misses: [0; N_CLASSES],
-                class_shed: [0; N_CLASSES],
-                started: now,
-                win_latencies_ms: Vec::new(),
-                win_completed: 0,
-                win_batch_total: 0,
-                win_misses: 0,
-                win_arrivals: 0,
-                win_shed: 0,
-                win_class_completed: [0; N_CLASSES],
-                win_class_misses: [0; N_CLASSES],
-                win_class_shed: [0; N_CLASSES],
-                win_started: now,
-            }),
+            completed: AtomicU64::new(0),
+            deadline_misses: AtomicU64::new(0),
+            arrivals: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            batch_total: AtomicU64::new(0),
+            class_completed: zero_arr(),
+            class_misses: zero_arr(),
+            class_shed: zero_arr(),
+            hist: AtomicHist::new(),
+            started: Mutex::new(now),
+            win_completed: AtomicU64::new(0),
+            win_misses: AtomicU64::new(0),
+            win_arrivals: AtomicU64::new(0),
+            win_shed: AtomicU64::new(0),
+            win_batch_total: AtomicU64::new(0),
+            win_class_completed: zero_arr(),
+            win_class_misses: zero_arr(),
+            win_class_shed: zero_arr(),
+            win_hist: AtomicHist::new(),
+            win_started: Mutex::new(now),
         }
     }
 
-    fn locked(&self) -> std::sync::MutexGuard<'_, Inner> {
-        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    fn clock(m: &Mutex<Instant>) -> Instant {
+        *m.lock().unwrap_or_else(|e| e.into_inner())
     }
-
-    /// Raw latency samples retained per window. Callers that never drain
-    /// windows (`snapshot_and_reset`) must not pay an unbounded second
-    /// copy of every sample, so the window buffer saturates here; the
-    /// window COUNTERS (arrivals/completions/misses/batches) stay exact
-    /// regardless, only window percentiles degrade to the first N samples
-    /// — and any real windowing caller drains far below this.
-    const WINDOW_SAMPLE_CAP: usize = 1 << 18;
 
     /// Record one served request (classless paths — accounted to
     /// `BestEffort`, which IS the default class).
@@ -194,7 +245,7 @@ impl Metrics {
         self.record_class(latency, batch, deadline_met, SloClass::BestEffort);
     }
 
-    /// Record one served request under its SLO class.
+    /// Record one served request under its SLO class. Lock-free.
     pub fn record_class(
         &self,
         latency: Duration,
@@ -202,23 +253,21 @@ impl Metrics {
         deadline_met: bool,
         class: SloClass,
     ) {
-        let ms = latency.as_secs_f64() * 1e3;
+        let ns = latency.as_nanos().min(u64::MAX as u128) as u64;
         let ci = class.index();
-        let mut m = self.locked();
-        m.latencies_ms.push(ms);
-        m.batch_sizes.push(batch);
-        m.win_completed += 1;
-        m.class_completed[ci] += 1;
-        m.win_class_completed[ci] += 1;
-        if m.win_latencies_ms.len() < Self::WINDOW_SAMPLE_CAP {
-            m.win_latencies_ms.push(ms);
-        }
-        m.win_batch_total += batch as u64;
+        self.hist.record(ns);
+        self.win_hist.record(ns);
+        self.completed.fetch_add(1, R);
+        self.win_completed.fetch_add(1, R);
+        self.class_completed[ci].fetch_add(1, R);
+        self.win_class_completed[ci].fetch_add(1, R);
+        self.batch_total.fetch_add(batch as u64, R);
+        self.win_batch_total.fetch_add(batch as u64, R);
         if !deadline_met {
-            m.deadline_misses += 1;
-            m.win_misses += 1;
-            m.class_misses[ci] += 1;
-            m.win_class_misses[ci] += 1;
+            self.deadline_misses.fetch_add(1, R);
+            self.win_misses.fetch_add(1, R);
+            self.class_misses[ci].fetch_add(1, R);
+            self.win_class_misses[ci].fetch_add(1, R);
         }
     }
 
@@ -226,136 +275,126 @@ impl Metrics {
     /// shed — the caller delivered an explicit typed rejection).
     pub fn record_shed(&self, class: SloClass) {
         let ci = class.index();
-        let mut m = self.locked();
-        m.shed += 1;
-        m.win_shed += 1;
-        m.class_shed[ci] += 1;
-        m.win_class_shed[ci] += 1;
+        self.shed.fetch_add(1, R);
+        self.win_shed.fetch_add(1, R);
+        self.class_shed[ci].fetch_add(1, R);
+        self.win_class_shed[ci].fetch_add(1, R);
     }
 
     /// Record one submitted request (before it is served).
     pub fn record_arrival(&self) {
-        let mut m = self.locked();
-        m.arrivals += 1;
-        m.win_arrivals += 1;
+        self.arrivals.fetch_add(1, R);
+        self.win_arrivals.fetch_add(1, R);
     }
 
     /// Clear all recorded samples (e.g. after a warmup phase), restart the
     /// throughput clock, and open a fresh window.
     pub fn reset(&self) {
-        let mut m = self.locked();
         let now = Instant::now();
-        m.latencies_ms.clear();
-        m.batch_sizes.clear();
-        m.deadline_misses = 0;
-        m.arrivals = 0;
-        m.shed = 0;
-        m.class_completed = [0; N_CLASSES];
-        m.class_misses = [0; N_CLASSES];
-        m.class_shed = [0; N_CLASSES];
-        m.started = now;
-        m.win_latencies_ms.clear();
-        m.win_completed = 0;
-        m.win_batch_total = 0;
-        m.win_misses = 0;
-        m.win_arrivals = 0;
-        m.win_shed = 0;
-        m.win_class_completed = [0; N_CLASSES];
-        m.win_class_misses = [0; N_CLASSES];
-        m.win_class_shed = [0; N_CLASSES];
-        m.win_started = now;
+        self.completed.store(0, R);
+        self.deadline_misses.store(0, R);
+        self.arrivals.store(0, R);
+        self.shed.store(0, R);
+        self.batch_total.store(0, R);
+        for c in 0..N_CLASSES {
+            self.class_completed[c].store(0, R);
+            self.class_misses[c].store(0, R);
+            self.class_shed[c].store(0, R);
+            self.win_class_completed[c].store(0, R);
+            self.win_class_misses[c].store(0, R);
+            self.win_class_shed[c].store(0, R);
+        }
+        self.hist.reset();
+        self.win_completed.store(0, R);
+        self.win_misses.store(0, R);
+        self.win_arrivals.store(0, R);
+        self.win_shed.store(0, R);
+        self.win_batch_total.store(0, R);
+        self.win_hist.reset();
+        *self.started.lock().unwrap_or_else(|e| e.into_inner()) = now;
+        *self.win_started.lock().unwrap_or_else(|e| e.into_inner()) = now;
     }
 
     /// Drain the current window into a snapshot and open a new one.
     /// Cumulative counters are untouched.
     pub fn snapshot_and_reset(&self) -> MetricsSnapshot {
-        let mut m = self.locked();
+        let mut clock = self.win_started.lock().unwrap_or_else(|e| e.into_inner());
         let now = Instant::now();
-        let snap = MetricsSnapshot {
-            window: now - m.win_started,
-            arrivals: m.win_arrivals,
-            completed: m.win_completed,
-            misses: m.win_misses,
-            shed: m.win_shed,
-            class_completed: m.win_class_completed,
-            class_misses: m.win_class_misses,
-            class_shed: m.win_class_shed,
-            latencies_ms: std::mem::take(&mut m.win_latencies_ms),
-            batch_total: m.win_batch_total,
-        };
-        m.win_completed = 0;
-        m.win_batch_total = 0;
-        m.win_misses = 0;
-        m.win_arrivals = 0;
-        m.win_shed = 0;
-        m.win_class_completed = [0; N_CLASSES];
-        m.win_class_misses = [0; N_CLASSES];
-        m.win_class_shed = [0; N_CLASSES];
-        m.win_started = now;
-        snap
+        let window = now - *clock;
+        *clock = now;
+        drop(clock);
+        MetricsSnapshot {
+            window,
+            arrivals: self.win_arrivals.swap(0, R),
+            completed: self.win_completed.swap(0, R),
+            misses: self.win_misses.swap(0, R),
+            shed: self.win_shed.swap(0, R),
+            class_completed: swap_arr(&self.win_class_completed),
+            class_misses: swap_arr(&self.win_class_misses),
+            class_shed: swap_arr(&self.win_class_shed),
+            hist: self.win_hist.drain(),
+            batch_total: self.win_batch_total.swap(0, R),
+        }
     }
 
     /// Requests served so far.
     pub fn completed(&self) -> usize {
-        self.locked().latencies_ms.len()
+        self.completed.load(R) as usize
     }
 
     /// Requests submitted so far (0 on paths that never call
     /// `record_arrival`).
     pub fn arrivals(&self) -> u64 {
-        self.locked().arrivals
+        self.arrivals.load(R)
     }
 
     pub fn deadline_misses(&self) -> u64 {
-        self.locked().deadline_misses
+        self.deadline_misses.load(R)
     }
 
     /// Requests shed at ingress so far (explicit rejections).
     pub fn shed(&self) -> u64 {
-        self.locked().shed
+        self.shed.load(R)
     }
 
     /// Cumulative per-class (completed, misses, shed) counters.
     pub fn class_counters(&self) -> [(u64, u64, u64); N_CLASSES] {
-        let m = self.locked();
-        let mut out = [(0, 0, 0); N_CLASSES];
-        for c in 0..N_CLASSES {
-            out[c] = (m.class_completed[c], m.class_misses[c], m.class_shed[c]);
-        }
-        out
+        let completed = load_arr(&self.class_completed);
+        let misses = load_arr(&self.class_misses);
+        let shed = load_arr(&self.class_shed);
+        std::array::from_fn(|c| (completed[c], misses[c], shed[c]))
     }
 
-    /// Latency summary (ms). `None` if nothing served yet.
-    pub fn latency_summary(&self) -> Option<Summary> {
-        let m = self.locked();
-        if m.latencies_ms.is_empty() {
-            None
-        } else {
-            Some(Summary::of(&m.latencies_ms))
-        }
+    /// Cumulative latency stats (ms). `None` if nothing served yet.
+    pub fn latency_stats(&self) -> Option<LatencyStats> {
+        LatencyStats::of(&self.hist.snapshot())
     }
 
     /// Mean batch size actually served (batching effectiveness).
     pub fn mean_batch(&self) -> f64 {
-        let m = self.locked();
-        if m.batch_sizes.is_empty() {
+        let n = self.completed.load(R);
+        if n == 0 {
             0.0
         } else {
-            m.batch_sizes.iter().sum::<usize>() as f64 / m.batch_sizes.len() as f64
+            self.batch_total.load(R) as f64 / n as f64
         }
     }
 
     /// Requests/second since collector creation.
     pub fn throughput_rps(&self) -> f64 {
-        let m = self.locked();
-        let secs = m.started.elapsed().as_secs_f64().max(1e-9);
-        m.latencies_ms.len() as f64 / secs
+        let secs = Self::clock(&self.started).elapsed().as_secs_f64().max(1e-9);
+        self.completed.load(R) as f64 / secs
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Hist percentiles overestimate by at most 1/64; tests allow that.
+    fn close(got: f64, want: f64) -> bool {
+        got >= want - 1e-9 && got <= want * (1.0 + crate::util::hist::WORST_CASE_REL_ERROR) + 1e-9
+    }
 
     #[test]
     fn records_and_summarizes() {
@@ -365,8 +404,10 @@ mod tests {
         assert_eq!(m.completed(), 2);
         assert_eq!(m.deadline_misses(), 1);
         assert!((m.mean_batch() - 3.0).abs() < 1e-9);
-        let s = m.latency_summary().unwrap();
-        assert!((s.mean - 15.0).abs() < 1e-9);
+        let s = m.latency_stats().unwrap();
+        assert!((s.mean_ms - 15.0).abs() < 1e-9, "sum/count mean is exact");
+        assert!((s.max_ms - 20.0).abs() < 1e-9, "recorded max is exact");
+        assert!(close(s.p50_ms, 10.0));
         assert!(m.throughput_rps() > 0.0);
     }
 
@@ -379,7 +420,7 @@ mod tests {
         assert_eq!(m.completed(), 0);
         assert_eq!(m.deadline_misses(), 0);
         assert_eq!(m.arrivals(), 0);
-        assert!(m.latency_summary().is_none());
+        assert!(m.latency_stats().is_none());
         let s = m.snapshot_and_reset();
         assert_eq!((s.arrivals, s.completed, s.misses), (0, 0, 0));
     }
@@ -387,8 +428,24 @@ mod tests {
     #[test]
     fn empty_metrics() {
         let m = Metrics::new();
-        assert!(m.latency_summary().is_none());
+        assert!(m.latency_stats().is_none());
         assert_eq!(m.mean_batch(), 0.0);
+    }
+
+    // Regression (BUGFIX): an idle window's miss rate used to be 0/0 =
+    // NaN, which compares false against every threshold and poisoned
+    // pooled telemetry. It must be 0.0.
+    #[test]
+    fn idle_window_miss_rate_is_zero_not_nan() {
+        let m = Metrics::new();
+        let s = m.snapshot_and_reset();
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.miss_rate(), 0.0, "idle window must not be NaN");
+        // Merging an idle lane into a busy one stays finite.
+        let busy = Metrics::new();
+        busy.record(Duration::from_millis(5), 1, false);
+        let pooled = MetricsSnapshot::merge(&[s, busy.snapshot_and_reset()]);
+        assert!((pooled.miss_rate() - 1.0).abs() < 1e-9);
     }
 
     #[test]
@@ -402,7 +459,7 @@ mod tests {
         assert_eq!(w1.arrivals, 2);
         assert_eq!(w1.completed, 2);
         assert_eq!(w1.misses, 1);
-        assert_eq!(w1.latencies_ms.len(), 2);
+        assert_eq!(w1.hist.count(), 2);
         assert!((w1.mean_batch() - 1.5).abs() < 1e-9);
         assert!((w1.miss_rate() - 0.5).abs() < 1e-9);
 
@@ -413,50 +470,42 @@ mod tests {
         assert_eq!(w2.arrivals, 1);
         assert_eq!(w2.completed, 1);
         assert_eq!(w2.misses, 0);
-        assert!((w2.latencies_ms[0] - 50.0).abs() < 1e-9);
+        assert_eq!(w2.hist.count(), 1);
         assert_eq!(m.completed(), 3);
         assert_eq!(m.arrivals(), 3);
         assert_eq!(m.deadline_misses(), 1);
 
-        // Window percentiles reflect the window, not the run.
-        let s = w2.latency_summary().unwrap();
-        assert!((s.p50() - 50.0).abs() < 1e-9);
+        // Window percentiles reflect the window, not the run (a single
+        // 50 ms sample: every percentile clamps to the exact max).
+        let s = w2.latency_stats().unwrap();
+        assert!((s.p50_ms - 50.0).abs() < 1e-9);
+        assert!((s.p9999_ms - 50.0).abs() < 1e-9);
     }
 
     #[test]
     fn snapshots_merge_across_lanes() {
-        let a = MetricsSnapshot {
-            window: Duration::from_millis(100),
-            arrivals: 3,
-            completed: 2,
-            misses: 1,
-            shed: 1,
-            class_completed: [2, 0, 0],
-            class_misses: [1, 0, 0],
-            class_shed: [1, 0, 0],
-            latencies_ms: vec![1.0, 2.0],
-            batch_total: 2,
-        };
-        let b = MetricsSnapshot {
-            window: Duration::from_millis(90),
-            arrivals: 1,
-            completed: 1,
-            misses: 0,
-            shed: 0,
-            class_completed: [0, 0, 1],
-            class_misses: [0; N_CLASSES],
-            class_shed: [0; N_CLASSES],
-            latencies_ms: vec![9.0],
-            batch_total: 3,
-        };
+        let la = Metrics::new();
+        for _ in 0..3 {
+            la.record_arrival();
+        }
+        la.record(Duration::from_millis(1), 1, true);
+        la.record(Duration::from_millis(2), 1, false);
+        la.record_shed(SloClass::BestEffort);
+        let lb = Metrics::new();
+        lb.record_arrival();
+        lb.record_class(Duration::from_millis(9), 3, true, SloClass::Gold);
+        let (a, b) = (la.snapshot_and_reset(), lb.snapshot_and_reset());
         let m = MetricsSnapshot::merge(&[a, b]);
-        assert_eq!(m.window, Duration::from_millis(100));
         assert_eq!((m.arrivals, m.completed, m.misses), (4, 3, 1));
         assert_eq!(m.shed, 1);
-        assert_eq!(m.class_completed, [2, 0, 1]);
-        assert_eq!(m.latencies_ms, vec![1.0, 2.0, 9.0]);
-        assert!((m.arrival_rate_rps() - 40.0).abs() < 1e-6);
+        assert_eq!(m.class_completed[SloClass::BestEffort.index()], 2);
+        assert_eq!(m.class_completed[SloClass::Gold.index()], 1);
+        assert_eq!(m.hist.count(), 3, "pooled histogram holds all samples");
+        assert!((m.hist.max_ms() - 9.0).abs() < 1e-9);
         assert!((m.mean_batch() - 5.0 / 3.0).abs() < 1e-9);
+        // Pooled percentiles == percentiles of the pooled samples.
+        let s = m.latency_stats().unwrap();
+        assert!(close(s.p50_ms, 2.0), "p50 {}", s.p50_ms);
     }
 
     #[test]
@@ -483,5 +532,20 @@ mod tests {
         let s2 = m.snapshot_and_reset();
         assert_eq!(s2.shed, 0);
         assert_eq!(s2.class_completed, [0; N_CLASSES]);
+    }
+
+    #[test]
+    fn tail_percentiles_from_bounded_buckets() {
+        // 10k samples, 1..=10000 µs: p99.9/p99.99 come out of ~30 KB of
+        // buckets, no per-request growth.
+        let m = Metrics::new();
+        for i in 1..=10_000u64 {
+            m.record(Duration::from_micros(i), 1, true);
+        }
+        let s = m.latency_stats().unwrap();
+        assert!(close(s.p99_ms, 9.9), "p99 {}", s.p99_ms);
+        assert!(close(s.p999_ms, 9.99), "p99.9 {}", s.p999_ms);
+        assert!(close(s.p9999_ms, 10.0), "p99.99 {}", s.p9999_ms);
+        assert!(s.p99_ms <= s.p999_ms && s.p999_ms <= s.p9999_ms);
     }
 }

@@ -16,7 +16,7 @@ mod router;
 mod server;
 
 pub use batcher::{Batcher, BatcherConfig, PushRefusal};
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{LatencyStats, Metrics, MetricsSnapshot};
 pub use request::{InferBackend, InferenceRequest, InferenceResponse};
 pub use router::{PlanRouter, RoutePolicy, Router};
 pub use server::{BackendFactory, LaneSpec, Server, ServerConfig, SubmitError};

@@ -13,11 +13,24 @@
 //! for the lifetime of the server (retired lanes leave a hole, they are
 //! never reused).
 //!
+//! **Hot path is lock-free.** The table lives in a [`SnapCell`]: `route`
+//! and `complete` do one atomic snapshot load and touch per-lane atomic
+//! counters — no `RwLock`, so a control-plane mutation can never stall the
+//! submit path behind a writer. Mutators clone-and-publish; the per-lane
+//! outstanding slots are `Arc`-shared across snapshots so counts survive
+//! republication, and a `route` that began on the old snapshot still
+//! decrements the same slot a later `complete` sees. Once `deroute`
+//! returns, any subsequently started `route` observes the new table
+//! (publish is Release, load is Acquire) — a retired lane receives no new
+//! routes.
+//!
 //! The original single-model replica `Router` is retained as a thin wrapper
 //! over a one-entry `PlanRouter`, so pre-fleet callers keep working.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
+use std::sync::Arc;
+
+use crate::util::SnapCell;
 
 /// Routing policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -28,22 +41,46 @@ pub enum RoutePolicy {
     LeastOutstanding,
 }
 
-/// One model's routing entry: the lanes able to serve it.
+/// Per-lane accounting, `Arc`-shared across route-table snapshots so the
+/// outstanding count is one counter regardless of how many republications
+/// happen while a request is in flight.
+#[derive(Debug, Default)]
+struct LaneSlot {
+    outstanding: AtomicU64,
+}
+
+/// One model's routing entry: the lanes able to serve it. The round-robin
+/// cursor is `Arc`-shared across snapshots while the lane set is unchanged,
+/// and **replaced with a fresh counter whenever the set mutates** — a `t %
+/// len` cursor that survives a size change would favor one lane
+/// indefinitely (the cycle-skew bug).
+#[derive(Debug, Clone)]
 struct ModelRoutes {
     model: String,
     lanes: Vec<usize>,
-    rr: AtomicU64,
+    rr: Arc<AtomicU64>,
 }
 
-struct RouterInner {
+impl ModelRoutes {
+    fn new(model: String, lanes: Vec<usize>) -> Self {
+        ModelRoutes {
+            model,
+            lanes,
+            rr: Arc::new(AtomicU64::new(0)),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+struct RouteTable {
     models: Vec<ModelRoutes>,
-    outstanding: Vec<AtomicU64>,
+    lanes: Vec<Arc<LaneSlot>>,
 }
 
 /// Router over a fleet plan: model name → replica lane set → lane index.
 pub struct PlanRouter {
     policy: RoutePolicy,
-    inner: RwLock<RouterInner>,
+    table: SnapCell<RouteTable>,
 }
 
 impl PlanRouter {
@@ -52,9 +89,9 @@ impl PlanRouter {
     pub fn new(policy: RoutePolicy, n_lanes: usize) -> Self {
         PlanRouter {
             policy,
-            inner: RwLock::new(RouterInner {
+            table: SnapCell::new(RouteTable {
                 models: Vec::new(),
-                outstanding: (0..n_lanes).map(|_| AtomicU64::new(0)).collect(),
+                lanes: (0..n_lanes).map(|_| Arc::new(LaneSlot::default())).collect(),
             }),
         }
     }
@@ -72,115 +109,146 @@ impl PlanRouter {
         r
     }
 
-    fn read(&self) -> std::sync::RwLockReadGuard<'_, RouterInner> {
-        self.inner.read().unwrap_or_else(|e| e.into_inner())
-    }
-
-    fn write(&self) -> std::sync::RwLockWriteGuard<'_, RouterInner> {
-        self.inner.write().unwrap_or_else(|e| e.into_inner())
-    }
-
     /// Register a model's replica lane set.
     pub fn add_route<S: Into<String>>(&self, model: S, lanes: Vec<usize>) {
         let model = model.into();
-        let mut inner = self.write();
-        assert!(!lanes.is_empty(), "model {model}: empty lane set");
-        assert!(
-            lanes.iter().all(|&l| l < inner.outstanding.len()),
-            "model {model}: lane index out of range"
-        );
-        assert!(
-            inner.models.iter().all(|m| m.model != model),
-            "model {model}: duplicate route"
-        );
-        inner.models.push(ModelRoutes {
-            model,
-            lanes,
-            rr: AtomicU64::new(0),
+        self.table.update(|cur| {
+            assert!(!lanes.is_empty(), "model {model}: empty lane set");
+            assert!(
+                lanes.iter().all(|&l| l < cur.lanes.len()),
+                "model {model}: lane index out of range"
+            );
+            assert!(
+                cur.models.iter().all(|m| m.model != model),
+                "model {model}: duplicate route"
+            );
+            let mut next = cur.clone();
+            next.models.push(ModelRoutes::new(model.clone(), lanes.clone()));
+            (next, ())
         });
     }
 
     /// Grow the lane table by one; returns the new lane's index. The lane
     /// serves nothing until `add_lane_route` points a model at it.
     pub fn add_lane(&self) -> usize {
-        let mut inner = self.write();
-        inner.outstanding.push(AtomicU64::new(0));
-        inner.outstanding.len() - 1
+        self.table.update(|cur| {
+            let mut next = cur.clone();
+            next.lanes.push(Arc::new(LaneSlot::default()));
+            let idx = next.lanes.len() - 1;
+            (next, idx)
+        })
     }
 
     /// Point `model` at one more lane (creating the model's entry if this
-    /// is its first).
+    /// is its first). Resets the model's round-robin cursor: the cycle
+    /// restarts balanced over the widened set.
     pub fn add_lane_route(&self, model: &str, lane: usize) {
-        let mut inner = self.write();
-        assert!(lane < inner.outstanding.len(), "lane index out of range");
-        // position()+index, not iter_mut().find(): the held `find` borrow
-        // would conflict with the push in the miss arm.
-        match inner.models.iter().position(|m| m.model == model) {
-            Some(i) => {
-                if !inner.models[i].lanes.contains(&lane) {
-                    inner.models[i].lanes.push(lane);
+        self.table.update(|cur| {
+            assert!(lane < cur.lanes.len(), "lane index out of range");
+            let mut next = cur.clone();
+            match next.models.iter().position(|m| m.model == model) {
+                Some(i) => {
+                    if !next.models[i].lanes.contains(&lane) {
+                        next.models[i].lanes.push(lane);
+                        // Lane set mutated: fresh cursor (shared Arc would
+                        // carry the stale phase into the new cycle length).
+                        next.models[i].rr = Arc::new(AtomicU64::new(0));
+                    }
                 }
+                None => next
+                    .models
+                    .push(ModelRoutes::new(model.to_string(), vec![lane])),
             }
-            None => inner.models.push(ModelRoutes {
-                model: model.to_string(),
-                lanes: vec![lane],
-                rr: AtomicU64::new(0),
-            }),
-        }
+            (next, ())
+        });
     }
 
     /// Remove `lane` from every model's lane set (retirement / quarantine
     /// of a failed backend). Models left with no lanes stop routing
     /// (`route` returns `None`) but keep their entry, so a replacement lane
-    /// can be attached later.
+    /// can be attached later. Once this returns, `route` calls started
+    /// afterwards never pick the lane.
     pub fn deroute(&self, lane: usize) {
-        let mut inner = self.write();
-        for entry in inner.models.iter_mut() {
-            entry.lanes.retain(|&l| l != lane);
-        }
+        self.table.update(|cur| {
+            let mut next = cur.clone();
+            for entry in next.models.iter_mut() {
+                if entry.lanes.contains(&lane) {
+                    entry.lanes.retain(|&l| l != lane);
+                    entry.rr = Arc::new(AtomicU64::new(0));
+                }
+            }
+            (next, ())
+        });
     }
 
     pub fn n_lanes(&self) -> usize {
-        self.read().outstanding.len()
+        self.table.load().lanes.len()
     }
 
     /// The registered model names, in registration order.
     pub fn models(&self) -> Vec<String> {
-        self.read().models.iter().map(|m| m.model.clone()).collect()
+        self.table.load().models.iter().map(|m| m.model.clone()).collect()
     }
 
     /// Choose a lane for the next request to `model` and account it
     /// outstanding. `None` if the model has no route (unknown, or all of
-    /// its lanes retired).
+    /// its lanes retired). Lock-free: one snapshot load + atomic counters.
     pub fn route(&self, model: &str) -> Option<usize> {
-        let inner = self.read();
-        let entry = inner.models.iter().find(|m| m.model == model)?;
+        let table = self.table.load();
+        let entry = table.models.iter().find(|m| m.model == model)?;
+        if entry.lanes.is_empty() {
+            return None;
+        }
         let idx = match self.policy {
             RoutePolicy::RoundRobin => {
                 let t = entry.rr.fetch_add(1, Ordering::Relaxed);
-                *entry.lanes.get((t % entry.lanes.len().max(1) as u64) as usize)?
+                entry.lanes[(t % entry.lanes.len() as u64) as usize]
             }
             RoutePolicy::LeastOutstanding => *entry
                 .lanes
                 .iter()
-                .min_by_key(|&&l| inner.outstanding[l].load(Ordering::Relaxed))?,
+                .min_by_key(|&&l| table.lanes[l].outstanding.load(Ordering::Relaxed))?,
         };
-        inner.outstanding[idx].fetch_add(1, Ordering::Relaxed);
+        table.lanes[idx].outstanding.fetch_add(1, Ordering::Relaxed);
         Some(idx)
     }
 
-    /// Mark a request complete on a lane.
+    /// Mark a request complete on a lane. Saturating: a double-complete
+    /// (or a complete racing a shed) must not wrap the counter to
+    /// ~`u64::MAX` and permanently poison LeastOutstanding for the lane —
+    /// it stops at zero (and trips a debug assertion, since the caller has
+    /// an accounting bug).
     pub fn complete(&self, lane: usize) {
-        self.read().outstanding[lane].fetch_sub(1, Ordering::Relaxed);
+        let slot = &self.table.load().lanes[lane].outstanding;
+        let mut cur = slot.load(Ordering::Relaxed);
+        loop {
+            if cur == 0 {
+                if cfg!(debug_assertions) {
+                    panic!("double-complete on lane {lane}: outstanding already zero");
+                }
+                return;
+            }
+            match slot.compare_exchange_weak(cur, cur - 1, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
     }
 
     /// Outstanding count per lane (diagnostics / tests).
     pub fn load(&self) -> Vec<u64> {
-        self.read()
-            .outstanding
+        self.table
+            .load()
+            .lanes
             .iter()
-            .map(|o| o.load(Ordering::Relaxed))
+            .map(|s| s.outstanding.load(Ordering::Relaxed))
             .collect()
+    }
+
+    /// Route-table snapshots retained since creation (diagnostics: memory
+    /// is bounded by control-plane mutations, not traffic).
+    pub fn snapshots_retained(&self) -> usize {
+        self.table.retained()
     }
 }
 
@@ -319,5 +387,62 @@ mod tests {
         for _ in 0..4 {
             r.complete(l1);
         }
+    }
+
+    // Regression (BUGFIX): a double-complete used to `fetch_sub` straight
+    // through zero, wrapping the lane's outstanding to ~u64::MAX and
+    // permanently repelling LeastOutstanding. Debug builds now assert on
+    // the accounting bug; release builds saturate at zero.
+    #[test]
+    #[cfg_attr(debug_assertions, should_panic(expected = "double-complete on lane"))]
+    fn double_complete_saturates_instead_of_wrapping() {
+        let r = PlanRouter::with_routes(RoutePolicy::LeastOutstanding, 2, [("m", vec![0, 1])]);
+        let lane = r.route("m").unwrap();
+        r.complete(lane);
+        r.complete(lane); // debug: panics here; release: saturates
+        assert_eq!(r.load()[lane], 0, "must stop at zero, not wrap");
+        // The lane is not poisoned: both lanes still receive traffic.
+        let picks: Vec<usize> = (0..2).map(|_| r.route("m").unwrap()).collect();
+        assert!(picks.contains(&0) && picks.contains(&1), "picks: {picks:?}");
+    }
+
+    // Regression (BUGFIX): the round-robin cursor never reset, so a
+    // lane-set size change mid-cycle skewed `t % len` and could favor one
+    // lane indefinitely. Any mutation now restarts the cycle.
+    #[test]
+    fn round_robin_rebalances_after_lane_set_mutation() {
+        let r = PlanRouter::new(RoutePolicy::RoundRobin, 2);
+        r.add_route("m", vec![0, 1]);
+        // Park the cursor at an odd phase.
+        for _ in 0..3 {
+            r.route("m");
+        }
+        // Grow the set: the widened cycle must hand out picks evenly.
+        let l2 = r.add_lane();
+        r.add_lane_route("m", l2);
+        let picks: Vec<usize> = (0..6).map(|_| r.route("m").unwrap()).collect();
+        for lane in [0, 1, l2] {
+            let n = picks.iter().filter(|&&p| p == lane).count();
+            assert_eq!(n, 2, "lane {lane} got {n} of {picks:?}");
+        }
+        // Shrink: retire lane 1, survivors still split evenly.
+        r.deroute(1);
+        let picks: Vec<usize> = (0..4).map(|_| r.route("m").unwrap()).collect();
+        for lane in [0, l2] {
+            let n = picks.iter().filter(|&&p| p == lane).count();
+            assert_eq!(n, 2, "lane {lane} got {n} of {picks:?}");
+        }
+    }
+
+    #[test]
+    fn snapshot_memory_bounded_by_mutations() {
+        let r = PlanRouter::new(RoutePolicy::RoundRobin, 1);
+        r.add_route("m", vec![0]);
+        let before = r.snapshots_retained();
+        for _ in 0..10_000 {
+            let lane = r.route("m").unwrap();
+            r.complete(lane);
+        }
+        assert_eq!(r.snapshots_retained(), before, "traffic must not allocate snapshots");
     }
 }

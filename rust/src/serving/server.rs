@@ -25,6 +25,7 @@ use super::{
     PlanRouter, RoutePolicy,
 };
 use crate::fleet::SloClass;
+use crate::util::SnapCell;
 use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, RwLock};
 use std::thread::JoinHandle;
@@ -107,10 +108,25 @@ struct Lane {
     workers: Vec<JoinHandle<()>>,
 }
 
+/// The submit-path view of a lane: everything `try_submit_to` needs,
+/// published in a lock-free snapshot so submits never touch the lane
+/// lifecycle `RwLock`. Indices mirror `Server::lanes`; `None` = reaped.
+#[derive(Clone)]
+struct LaneEndpoint {
+    model: String,
+    batcher: Arc<Batcher>,
+    metrics: Arc<Metrics>,
+}
+
 /// A running server (drop or `shutdown()` to stop).
 pub struct Server {
     /// Slot per lane ever started; `None` = retired (indices stay stable).
+    /// Cold path only (lifecycle: spawn/retire/join) — the submit hot path
+    /// reads `endpoints` instead.
     lanes: RwLock<Vec<Option<Lane>>>,
+    /// Lock-free mirror of `lanes` for the submit path (model + batcher +
+    /// metrics per slot). Mutated only by lane lifecycle events.
+    endpoints: SnapCell<Vec<Option<LaneEndpoint>>>,
     router: Arc<PlanRouter>,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
@@ -141,6 +157,7 @@ impl Server {
         assert!(!specs.is_empty());
         let server = Server {
             lanes: RwLock::new(Vec::new()),
+            endpoints: SnapCell::new(Vec::new()),
             router: Arc::new(PlanRouter::new(cfg.policy, 0)),
             metrics: Arc::new(Metrics::new()),
             next_id: AtomicU64::new(0),
@@ -214,6 +231,19 @@ impl Server {
                 metrics: lane_metrics.clone(),
                 workers,
             }));
+            // Publish the submit-path endpoint before the route lands (the
+            // route publish below orders after this, so a submit that
+            // routes here always finds the endpoint).
+            self.endpoints.update(|cur| {
+                let mut next = cur.clone();
+                next.push(Some(LaneEndpoint {
+                    model: spec.model.clone(),
+                    batcher: batcher.clone(),
+                    metrics: lane_metrics.clone(),
+                }));
+                debug_assert_eq!(next.len(), lanes.len(), "endpoint table in lock-step");
+                (next, ())
+            });
             lane_idx
         };
         // Route last: requests only land once the lane can serve them.
@@ -264,6 +294,7 @@ impl Server {
         }
         let taken = self.write_lanes().get_mut(lane).and_then(Option::take);
         if let Some(l) = taken {
+            self.clear_endpoint(lane);
             for w in l.workers {
                 let _ = w.join();
             }
@@ -283,10 +314,24 @@ impl Server {
                 "lane {lane} was reaped concurrently"
             )));
         };
+        self.clear_endpoint(lane);
         for w in l.workers {
             let _ = w.join();
         }
         Ok(l.metrics)
+    }
+
+    /// Tombstone a reaped lane's submit-path endpoint. (A retiring-but-
+    /// undrained lane keeps its endpoint — its closed batcher already
+    /// refuses pushes, which is what triggers the submit re-route.)
+    fn clear_endpoint(&self, lane: usize) {
+        self.endpoints.update(|cur| {
+            let mut next = cur.clone();
+            if let Some(slot) = next.get_mut(lane) {
+                *slot = None;
+            }
+            (next, ())
+        });
     }
 
     fn read_lanes(&self) -> std::sync::RwLockReadGuard<'_, Vec<Option<Lane>>> {
@@ -311,9 +356,10 @@ impl Server {
         deadline: Duration,
     ) -> crate::Result<mpsc::Receiver<InferenceResponse>> {
         let model = self
-            .read_lanes()
+            .endpoints
+            .load()
             .iter()
-            .find_map(|s| s.as_ref().map(|l| l.model.clone()))
+            .find_map(|s| s.as_ref().map(|e| e.model.clone()))
             .ok_or_else(|| crate::Error::Serving("no live lanes".into()))?;
         self.submit_to(&model, image, deadline)
     }
@@ -351,6 +397,12 @@ impl Server {
     /// spin. A class below the admission floor or over its queue quota is
     /// refused with `Shed` — the explicit rejection the brownout ladder
     /// promises (and counted in lane + aggregate shed metrics).
+    ///
+    /// **Lock-free.** The whole submit path — route, endpoint lookup,
+    /// enqueue, metrics — takes no `RwLock`: routing and the endpoint
+    /// table are snapshot loads, the queue insert is a short per-class
+    /// mutex, and counters are atomics. Lane lifecycle writers can never
+    /// stall ingress.
     pub fn try_submit_to(
         &self,
         model: &str,
@@ -377,18 +429,13 @@ impl Server {
                 .router
                 .route(model)
                 .ok_or_else(|| SubmitError::NoRoute(model.to_string()))?;
-            let target = {
-                let lanes = self.read_lanes();
-                lanes
-                    .get(lane)
-                    .and_then(|s| s.as_ref())
-                    .map(|l| (l.batcher.clone(), l.metrics.clone()))
-            };
-            let Some((batcher, lane_metrics)) = target else {
+            let endpoints = self.endpoints.load();
+            let Some(ep) = endpoints.get(lane).and_then(|s| s.as_ref()) else {
                 // Routed to a lane reaped in the meantime; undo and retry.
                 self.router.complete(lane);
                 continue;
             };
+            let (batcher, lane_metrics) = (&ep.batcher, &ep.metrics);
             // Admission floor (rung 3) — checked after routing so the shed
             // lands on the lane that would have served the request.
             if class.index() < self.admission_floor() {
@@ -919,6 +966,30 @@ mod tests {
         let m = srv.shutdown();
         assert_eq!(m.completed() + m.shed() as usize, 4, "every request accounted");
         assert_eq!(srv.lane_load().iter().sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn submit_path_does_not_block_on_lane_table_writers() {
+        let srv = Server::start(vec![stub(0)], ServerConfig::default());
+        let srv_ref = &srv;
+        std::thread::scope(|s| {
+            // Hold the lifecycle write lock (as a slow control-plane
+            // mutation would): ingress must still flow, because the submit
+            // path reads only lock-free snapshots.
+            let guard = srv.write_lanes();
+            let (done_tx, done_rx) = mpsc::channel();
+            s.spawn(move || {
+                let rx = srv_ref.submit(vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+                let _ = done_tx.send(rx);
+            });
+            let got = done_rx.recv_timeout(Duration::from_secs(2));
+            // Release before asserting so a (buggy) lock-taking submit can
+            // unblock and the scope can exit with the real failure.
+            drop(guard);
+            let rx = got.expect("submit must not block while the lane table is write-locked");
+            assert!(rx.recv_timeout(Duration::from_secs(5)).is_ok());
+        });
+        srv.shutdown();
     }
 
     #[test]

@@ -1,0 +1,360 @@
+//! Fixed-bucket log-linear latency histograms (HDR-histogram idiom,
+//! std-only) — full latency CDFs cheap enough to keep always-on.
+//!
+//! Values are nanoseconds in `[0, u64::MAX]`. Buckets are log-linear: the
+//! 64 smallest values get exact unit buckets, then every power-of-two
+//! octave is split into 64 linear sub-buckets (`SUB_BITS = 6`), so a
+//! bucket's width is at most `value / 64` — percentile reads taken at the
+//! bucket's inclusive upper bound overestimate by **at most 1/64 ≈ 1.5625
+//! %** (and the recorded maximum clamps them, so p100 is exact). The whole
+//! table is `64 + 58 × 64 = 3776` buckets ≈ 30 KB — bounded regardless of
+//! how many samples are recorded, unlike the per-request `Vec<f64>` it
+//! replaces in `serving::Metrics`.
+//!
+//! Two forms share the bucket math:
+//!
+//! * [`AtomicHist`] — the live collector: `record` is a single relaxed
+//!   `fetch_add` per bucket plus count/sum/max upkeep (lock-free, safe for
+//!   any number of writer threads);
+//! * [`Hist`] — an owned snapshot drained from it, mergeable bucket-wise
+//!   (exact — merging replica lanes then taking percentiles equals pooling
+//!   their samples up to bucket resolution).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Sub-bucket resolution: 2^6 = 64 linear sub-buckets per octave.
+const SUB_BITS: u32 = 6;
+const SUB_COUNT: usize = 1 << SUB_BITS;
+/// Octaves above the exact range: exponents `SUB_BITS..=63`.
+const OCTAVES: usize = 64 - SUB_BITS as usize;
+/// Total bucket count (exact unit buckets + 64 per octave).
+pub const N_BUCKETS: usize = SUB_COUNT + OCTAVES * SUB_COUNT;
+
+/// Worst-case relative overestimate of a percentile read (bucket width /
+/// bucket value): `1 / 64`.
+pub const WORST_CASE_REL_ERROR: f64 = 1.0 / SUB_COUNT as f64;
+
+/// Bucket index for a value (total order preserving: `v1 <= v2` implies
+/// `index(v1) <= index(v2)`).
+#[inline]
+fn bucket_index(v: u64) -> usize {
+    if v < SUB_COUNT as u64 {
+        v as usize
+    } else {
+        // v >= 64: exponent of the leading bit, then the next SUB_BITS
+        // mantissa bits pick the linear sub-bucket within the octave.
+        let exp = 63 - v.leading_zeros();
+        let mantissa = ((v >> (exp - SUB_BITS)) as usize) & (SUB_COUNT - 1);
+        SUB_COUNT + (exp - SUB_BITS) as usize * SUB_COUNT + mantissa
+    }
+}
+
+/// Largest value mapping into bucket `idx` (inclusive upper bound).
+#[inline]
+fn bucket_max(idx: usize) -> u64 {
+    if idx < SUB_COUNT {
+        idx as u64
+    } else {
+        let rel = idx - SUB_COUNT;
+        let exp = (rel / SUB_COUNT) as u32 + SUB_BITS;
+        let mantissa = (rel % SUB_COUNT) as u64;
+        // Bucket covers [(64 + m) << s, (64 + m + 1) << s) with
+        // s = exp - SUB_BITS; compute the exclusive bound in u128 (the top
+        // octave's last bucket would overflow u64) and saturate.
+        let upper = ((SUB_COUNT as u64 + mantissa + 1) as u128) << (exp - SUB_BITS);
+        (upper - 1).min(u64::MAX as u128) as u64
+    }
+}
+
+/// Lock-free live histogram: bounded memory, relaxed-atomic recording.
+#[derive(Debug)]
+pub struct AtomicHist {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for AtomicHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AtomicHist {
+    pub fn new() -> Self {
+        AtomicHist {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value (ns). Lock-free: one relaxed add per counter.
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Number of recorded values.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Drain into an owned snapshot and reset to empty. Exact when no
+    /// writer races the drain; under concurrent recording a sample may
+    /// land after its bucket was swapped (it then counts toward the NEXT
+    /// window — never lost, never double-counted per counter).
+    pub fn drain(&self) -> Hist {
+        let buckets: Vec<u64> = self
+            .buckets
+            .iter()
+            .map(|b| b.swap(0, Ordering::Relaxed))
+            .collect();
+        Hist {
+            buckets: buckets.into_boxed_slice(),
+            count: self.count.swap(0, Ordering::Relaxed),
+            sum: self.sum.swap(0, Ordering::Relaxed),
+            max: self.max.swap(0, Ordering::Relaxed),
+        }
+    }
+
+    /// Copy into an owned snapshot without resetting (cumulative reads).
+    pub fn snapshot(&self) -> Hist {
+        let buckets: Vec<u64> = self
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        Hist {
+            buckets: buckets.into_boxed_slice(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Reset to empty (discard all recorded values).
+    pub fn reset(&self) {
+        let _ = self.drain();
+    }
+}
+
+/// Owned histogram snapshot: mergeable, percentile-readable.
+#[derive(Debug, Clone)]
+pub struct Hist {
+    buckets: Box<[u64]>,
+    count: u64,
+    sum: u64,
+    max: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
+impl Hist {
+    pub fn empty() -> Self {
+        Hist {
+            buckets: vec![0; N_BUCKETS].into_boxed_slice(),
+            count: 0,
+            sum: 0,
+            max: 0,
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact maximum recorded value (ns); 0 when empty.
+    pub fn max_ns(&self) -> u64 {
+        self.max
+    }
+
+    /// Exact mean (ns); NaN when empty.
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Merge another histogram in (bucket-wise sum — exact).
+    pub fn merge_from(&mut self, other: &Hist) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
+    /// Nearest-rank percentile (`p` in `[0, 100]`), reported at the
+    /// bucket's inclusive upper bound and clamped to the exact recorded
+    /// maximum — overestimates by at most [`WORST_CASE_REL_ERROR`].
+    /// Returns `None` when empty.
+    pub fn percentile_ns(&self, p: f64) -> Option<u64> {
+        assert!((0.0..=100.0).contains(&p));
+        if self.count == 0 {
+            return None;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let rank = rank.min(self.count);
+        let mut seen = 0u64;
+        for (idx, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Some(bucket_max(idx).min(self.max));
+            }
+        }
+        // Unreachable when counters are consistent; be safe under racy
+        // drains (count swapped before a concurrent record's bucket add).
+        Some(self.max)
+    }
+
+    /// Percentile in milliseconds (`NaN` when empty).
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        match self.percentile_ns(p) {
+            Some(ns) => ns as f64 / 1e6,
+            None => f64::NAN,
+        }
+    }
+
+    /// Exact mean in milliseconds (`NaN` when empty).
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns() / 1e6
+    }
+
+    /// Exact maximum in milliseconds (0 when empty).
+    pub fn max_ms(&self) -> f64 {
+        self.max as f64 / 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_is_monotone_and_in_range() {
+        let probes: Vec<u64> = (0..2000)
+            .chain((0..58).flat_map(|e| {
+                let base = 64u64 << e;
+                [base - 1, base, base + 1, base + base / 2]
+            }))
+            .chain([u64::MAX - 1, u64::MAX])
+            .collect();
+        let mut sorted = probes.clone();
+        sorted.sort_unstable();
+        let mut prev = 0usize;
+        for &v in &sorted {
+            let idx = bucket_index(v);
+            assert!(idx < N_BUCKETS, "v={v} idx={idx}");
+            assert!(idx >= prev, "monotone: v={v}");
+            prev = idx;
+        }
+    }
+
+    #[test]
+    fn bucket_bounds_bracket_their_values() {
+        for &v in &[0u64, 1, 63, 64, 65, 127, 128, 1000, 123_456_789, u64::MAX] {
+            let idx = bucket_index(v);
+            let hi = bucket_max(idx);
+            assert!(v <= hi, "v={v} above its bucket max {hi}");
+            // Relative width bound: (hi - v) <= v / 64 for v >= 64.
+            if v >= 64 {
+                assert!(
+                    (hi - v) as f64 <= v as f64 * WORST_CASE_REL_ERROR,
+                    "v={v} hi={hi}"
+                );
+            } else {
+                assert_eq!(hi, v, "exact unit bucket below 64");
+            }
+        }
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        let h = AtomicHist::new();
+        for v in 0..64u64 {
+            h.record(v);
+        }
+        let s = h.drain();
+        assert_eq!(s.count(), 64);
+        assert_eq!(s.percentile_ns(50.0), Some(31));
+        assert_eq!(s.percentile_ns(100.0), Some(63));
+        assert!((s.mean_ns() - 31.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles_within_error_bound() {
+        // 1..=10_000 µs in ns — p50/p99/p99.9 within 1/64 relative error.
+        let h = AtomicHist::new();
+        for v in 1..=10_000u64 {
+            h.record(v * 1000);
+        }
+        let s = h.snapshot();
+        for (p, exact) in [(50.0, 5_000_000.0), (99.0, 9_900_000.0), (99.9, 9_990_000.0)] {
+            let got = s.percentile_ns(p).unwrap() as f64;
+            assert!(got >= exact * 0.999, "p{p}: {got} under exact {exact}");
+            assert!(
+                got <= exact * (1.0 + WORST_CASE_REL_ERROR) + 1.0,
+                "p{p}: {got} above bound of {exact}"
+            );
+        }
+        // p100 clamps to the exact recorded max.
+        assert_eq!(s.percentile_ns(100.0), Some(10_000_000));
+        assert_eq!(s.max_ns(), 10_000_000);
+        // snapshot() did not reset; drain() does.
+        assert_eq!(h.drain().count(), 10_000);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn merge_equals_pooling() {
+        let (a, b) = (AtomicHist::new(), AtomicHist::new());
+        let pooled = AtomicHist::new();
+        let mut x = 0x2026u64;
+        for i in 0..5000u64 {
+            // Cheap xorshift spread over ~6 decades.
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let v = x % 1_000_000_000;
+            if i % 2 == 0 { &a } else { &b }.record(v);
+            pooled.record(v);
+        }
+        let mut m = a.drain();
+        m.merge_from(&b.drain());
+        let p = pooled.drain();
+        assert_eq!(m.count(), p.count());
+        assert_eq!(m.max_ns(), p.max_ns());
+        for q in [10.0, 50.0, 90.0, 99.0, 99.9, 99.99] {
+            assert_eq!(m.percentile_ns(q), p.percentile_ns(q), "p{q}");
+        }
+    }
+
+    #[test]
+    fn empty_hist_reads_safely() {
+        let s = AtomicHist::new().drain();
+        assert!(s.is_empty());
+        assert_eq!(s.percentile_ns(99.0), None);
+        assert!(s.percentile_ms(99.0).is_nan());
+        assert!(s.mean_ns().is_nan());
+        assert_eq!(s.max_ns(), 0);
+        let mut m = Hist::empty();
+        m.merge_from(&s);
+        assert!(m.is_empty());
+    }
+}

@@ -1,14 +1,20 @@
 //! Supporting substrates built in-crate (the offline image vendors no
 //! general-purpose crates): a deterministic PRNG, summary statistics,
 //! fixed-point quantization helpers, a miniature property-testing harness,
-//! and a scoped fork-join parallelism helper (`par`, rayon-shaped).
+//! a scoped fork-join parallelism helper (`par`, rayon-shaped), a lock-free
+//! snapshot cell (`snapcell`, arc-swap-shaped), and fixed-bucket HDR
+//! latency histograms (`hist`).
 
+pub mod hist;
 pub mod par;
 mod prng;
 pub mod proptest;
 mod quant;
+pub mod snapcell;
 mod stats;
 
+pub use hist::{AtomicHist, Hist};
 pub use prng::SplitMix64;
 pub use quant::{dequantize_fx16, quantize_fx16, FX16_FRAC_BITS};
+pub use snapcell::SnapCell;
 pub use stats::Summary;

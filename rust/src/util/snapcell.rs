@@ -1,0 +1,139 @@
+//! Lock-free snapshot cell (arc-swap idiom, std-only).
+//!
+//! `SnapCell<T>` publishes an immutable value that readers load with one
+//! atomic pointer read — no lock, no reference counting on the read path —
+//! while writers clone-modify-publish under a private mutex. This is the
+//! substrate for the serving hot path: the route table and the lane
+//! endpoint table are read on every request submit but mutated only by
+//! control-plane events (lane adds, retirements, deroutes), so the classic
+//! read-mostly trade applies.
+//!
+//! **Reclamation.** Every value ever published is retained (an `Arc` per
+//! publish) until the cell itself drops. A reader holding `&T` from
+//! [`SnapCell::load`] is therefore always valid: values live on the heap,
+//! never move, and are only freed in `Drop`, which requires exclusive
+//! access — no reader can still exist. Retention is bounded by the number
+//! of *mutations* (control-plane events, typically dozens per run), not by
+//! traffic; this is the deliberate epoch-less simplification of
+//! arc-swap/crossbeam-epoch that a dependency-free crate can afford.
+
+use std::sync::atomic::{AtomicPtr, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A read-mostly cell: lock-free snapshot loads, clone-and-publish stores.
+pub struct SnapCell<T> {
+    /// Points at the payload of the most recently published Arc below.
+    current: AtomicPtr<T>,
+    /// Writer serialization + ownership of every published value (freed
+    /// when the cell drops). `published[last]` is what `current` points at.
+    published: Mutex<Vec<Arc<T>>>,
+}
+
+impl<T> SnapCell<T> {
+    pub fn new(value: T) -> Self {
+        let first = Arc::new(value);
+        let ptr = Arc::as_ptr(&first) as *mut T;
+        SnapCell {
+            current: AtomicPtr::new(ptr),
+            published: Mutex::new(vec![first]),
+        }
+    }
+
+    /// Lock-free snapshot load. The returned reference is valid for the
+    /// borrow of `self`: published values are never freed (or moved) until
+    /// the cell drops, and dropping requires `&mut self`.
+    pub fn load(&self) -> &T {
+        let ptr = self.current.load(Ordering::Acquire);
+        // SAFETY: `ptr` was produced by `Arc::as_ptr` on an Arc that the
+        // `published` vec keeps alive until `Drop` (exclusive `&mut self`),
+        // so it outlives any `&self` borrow, and Arc payloads never move.
+        unsafe { &*ptr }
+    }
+
+    fn publish_locked(&self, guard: &mut Vec<Arc<T>>, next: T) {
+        let next = Arc::new(next);
+        let ptr = Arc::as_ptr(&next) as *mut T;
+        // Release pairs with the Acquire in `load`: a reader that sees the
+        // new pointer sees the fully constructed value behind it.
+        self.current.store(ptr, Ordering::Release);
+        guard.push(next);
+    }
+
+    /// Clone-modify-publish: `f` receives the current value and returns
+    /// the replacement (plus a result handed back to the caller). Writers
+    /// serialize on an internal mutex; readers are never blocked and
+    /// observe either the old or the new value, atomically.
+    pub fn update<R>(&self, f: impl FnOnce(&T) -> (T, R)) -> R {
+        let mut guard = self.published.lock().unwrap_or_else(|e| e.into_inner());
+        // Under the writer lock the last published entry IS the current
+        // value (no other writer can intervene).
+        let cur = guard.last().expect("SnapCell always holds a value").clone();
+        let (next, out) = f(&cur);
+        self.publish_locked(&mut guard, next);
+        out
+    }
+
+    /// Number of values retained since creation (diagnostics: 1 + number
+    /// of publishes).
+    pub fn retained(&self) -> usize {
+        self.published.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for SnapCell<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SnapCell").field("current", self.load()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+
+    #[test]
+    fn load_sees_latest_publish() {
+        let c = SnapCell::new(vec![1, 2]);
+        assert_eq!(c.load(), &[1, 2]);
+        let got = c.update(|v| {
+            let mut next = v.clone();
+            next.push(3);
+            (next, v.len())
+        });
+        assert_eq!(got, 2, "update returns the closure's result");
+        assert_eq!(c.load(), &[1, 2, 3]);
+        assert_eq!(c.retained(), 2);
+    }
+
+    #[test]
+    fn readers_race_writers_without_tearing() {
+        // Invariant: every published vec is [k; k] for some k — a reader
+        // must never observe a half-updated value.
+        let c = std::sync::Arc::new(SnapCell::new(vec![0usize; 0]));
+        let stop = std::sync::Arc::new(AtomicBool::new(false));
+        let mut readers = Vec::new();
+        for _ in 0..3 {
+            let c = c.clone();
+            let stop = stop.clone();
+            readers.push(std::thread::spawn(move || {
+                let mut max_seen = 0;
+                while !stop.load(Ordering::Relaxed) {
+                    let v = c.load();
+                    assert!(v.iter().all(|&x| x == v.len()), "torn value: {v:?}");
+                    max_seen = max_seen.max(v.len());
+                }
+                max_seen
+            }));
+        }
+        for k in 1..=200 {
+            c.update(|_| (vec![k; k], ()));
+        }
+        stop.store(true, Ordering::Relaxed);
+        for r in readers {
+            let seen = r.join().unwrap();
+            assert!(seen <= 200);
+        }
+        assert_eq!(c.load().len(), 200);
+        assert_eq!(c.retained(), 201);
+    }
+}

@@ -47,6 +47,14 @@ impl Summary {
         self.percentile(99.0)
     }
 
+    pub fn p999(&self) -> f64 {
+        self.percentile(99.9)
+    }
+
+    pub fn p9999(&self) -> f64 {
+        self.percentile(99.99)
+    }
+
     pub fn len(&self) -> usize {
         self.sorted.len()
     }
@@ -74,6 +82,8 @@ mod tests {
         let s = Summary::of(&(1..=100).map(|i| i as f64).collect::<Vec<_>>());
         assert_eq!(s.p50(), 50.0);
         assert_eq!(s.p99(), 99.0);
+        assert_eq!(s.p999(), 100.0, "99.9th of 100 rounds up to the max");
+        assert_eq!(s.p9999(), 100.0);
         assert_eq!(s.percentile(100.0), 100.0);
         assert_eq!(s.percentile(0.0), 1.0);
     }

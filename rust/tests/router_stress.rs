@@ -1,0 +1,132 @@
+//! Concurrency stress for the lock-free `PlanRouter`: submitters hammer
+//! `route`/`complete` while a control-plane thread grows and retires lanes
+//! (`add_lane` + `add_lane_route` + `deroute`) the whole time.
+//!
+//! Three properties must hold under the race, for both policies:
+//!
+//! 1. **No panic / no wrap** — the snapshot swap and the saturating
+//!    outstanding counters never trip an assertion or index out of range.
+//! 2. **Conservation** — at any quiescent point, the summed per-lane
+//!    outstanding equals routes minus completes (each submitter completes
+//!    exactly the lanes it routed, exactly once).
+//! 3. **Retirement is clean** — once `deroute(lane)` has returned, a
+//!    `route` that STARTS afterwards never picks that lane. Each submitter
+//!    snapshots the retirement flags before routing; the mutator raises a
+//!    lane's flag only after its `deroute` call returned, so a pre-raised
+//!    flag on the picked lane is a linearization violation.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use superlip::serving::{PlanRouter, RoutePolicy};
+use superlip::util::SplitMix64;
+
+const MODEL: &str = "m";
+const SUBMITTERS: usize = 3;
+const SUBMIT_ITERS: usize = 4_000;
+const MUTATIONS: usize = 150;
+/// 2 seed lanes + one lane added per mutator iteration.
+const MAX_LANES: usize = 2 + MUTATIONS;
+
+fn stress(policy: RoutePolicy) {
+    let router = Arc::new(PlanRouter::new(policy, 2));
+    router.add_route(MODEL, vec![0, 1]);
+
+    // retired[l] is raised strictly AFTER deroute(l) returns.
+    let retired: Arc<Vec<AtomicBool>> =
+        Arc::new((0..MAX_LANES).map(|_| AtomicBool::new(false)).collect());
+    let routed_total = AtomicU64::new(0);
+    let completed_total = AtomicU64::new(0);
+
+    std::thread::scope(|s| {
+        // Control plane: stand a new lane up, point the model at it, then
+        // (usually) retire the oldest still-active lane — a rolling
+        // migration that keeps 2-3 lanes live at all times.
+        s.spawn(|| {
+            let mut rng = SplitMix64::new(0xc0117e57);
+            let mut active: Vec<usize> = vec![0, 1];
+            for _ in 0..MUTATIONS {
+                let l = router.add_lane();
+                router.add_lane_route(MODEL, l);
+                active.push(l);
+                if active.len() > 2 && rng.below(4) != 0 {
+                    let victim = active.remove(0);
+                    router.deroute(victim);
+                    retired[victim].store(true, Ordering::SeqCst);
+                }
+                if rng.below(8) == 0 {
+                    std::thread::yield_now();
+                }
+            }
+        });
+
+        for t in 0..SUBMITTERS {
+            let router = Arc::clone(&router);
+            let retired = Arc::clone(&retired);
+            let (routed_total, completed_total) = (&routed_total, &completed_total);
+            s.spawn(move || {
+                let mut rng = SplitMix64::new(0x5eed ^ t as u64);
+                // Routes not yet completed (lane indices, possibly dups).
+                let mut in_flight: Vec<usize> = Vec::new();
+                let mut routed = 0u64;
+                let mut completed = 0u64;
+                for _ in 0..SUBMIT_ITERS {
+                    // Snapshot retirement flags BEFORE the route starts.
+                    let pre: Vec<bool> =
+                        retired.iter().map(|f| f.load(Ordering::SeqCst)).collect();
+                    if let Some(lane) = router.route(MODEL) {
+                        assert!(lane < MAX_LANES);
+                        assert!(
+                            !pre[lane],
+                            "lane {lane} was retired before this route started"
+                        );
+                        in_flight.push(lane);
+                        routed += 1;
+                    }
+                    // Complete a random in-flight request about as often
+                    // as we route, keeping a small standing backlog.
+                    if !in_flight.is_empty() && rng.below(3) != 0 {
+                        let i = rng.below(in_flight.len() as u64) as usize;
+                        router.complete(in_flight.swap_remove(i));
+                        completed += 1;
+                    }
+                }
+                // Drain the backlog so the final census is exact.
+                for lane in in_flight {
+                    router.complete(lane);
+                    completed += 1;
+                }
+                routed_total.fetch_add(routed, Ordering::SeqCst);
+                completed_total.fetch_add(completed, Ordering::SeqCst);
+            });
+        }
+    });
+
+    // Quiescent: every route was completed exactly once, so every lane's
+    // outstanding must be back to zero — wrap or a lost decrement would
+    // leave a nonzero (possibly enormous) residue.
+    let routed = routed_total.load(Ordering::SeqCst);
+    let completed = completed_total.load(Ordering::SeqCst);
+    assert_eq!(routed, completed);
+    assert!(routed > 0, "stress must actually route");
+    let residue: u64 = router.load().iter().sum();
+    assert_eq!(residue, 0, "conservation violated: load {:?}", router.load());
+    // Memory: snapshots retained are bounded by mutations, not traffic.
+    // (2 per mutator iteration: add_lane + add_lane_route, +1 per deroute,
+    // +1 initial add_route.)
+    assert!(
+        router.snapshots_retained() <= 1 + 3 * MUTATIONS + 1,
+        "retained {} snapshots for {} mutations",
+        router.snapshots_retained(),
+        MUTATIONS
+    );
+}
+
+#[test]
+fn stress_least_outstanding_under_live_mutation() {
+    stress(RoutePolicy::LeastOutstanding);
+}
+
+#[test]
+fn stress_round_robin_under_live_mutation() {
+    stress(RoutePolicy::RoundRobin);
+}

@@ -13,10 +13,15 @@ Rules (per metric listed in the BASELINE):
       current > baseline * (1 + rel) + 1.0 ms
 * unit "W" (fleet watts) / "J/inf" (energy per inference): FAIL when
       current > baseline * (1 + rel) + 0.5
+* unit "ns/req" (hot-path cost per request): FAIL when
+      current > baseline * (1 + rel) + 50.0 ns
 * unit "%" (miss rates): FAIL when
       current > baseline + max(2.0, rel * 100 * baseline / 100) points
   (i.e. an absolute 2-point floor so near-zero baselines are not
   infinitely strict)
+* unit "rps/core" (hot-path throughput per core — HIGHER is better):
+  FAIL when
+      current < baseline * (1 - rel) - 1000.0
 * other units: informational only.
 
 Metrics present in the CURRENT run but missing from the baseline are
@@ -27,10 +32,10 @@ bench can land one PR before its baseline is seeded.
 `rel` defaults to 0.10 (the ">10% regression" contract) and can be
 overridden per metric with a `"rel"` key in the baseline entry — used for
 provisional baselines seeded from the analytic event-sim port rather than
-a real CI run (see the `_comment` in each baseline file). Lower-is-worse
-metrics only: improvements never fail, and the script prints a refreshed
-baseline block so maintainers can tighten provisional entries once real
-runner numbers exist.
+a real CI run (see the `_comment` in each baseline file). Improvements
+never fail (in the metric's good direction), and the script prints a
+refreshed baseline block so maintainers can tighten provisional entries
+once real runner numbers exist.
 
 Exit code: 0 = within tolerance (or baseline missing), 1 = regression,
 2 = usage/format error.
@@ -40,7 +45,10 @@ import os
 import sys
 
 # Lower-is-worse units gated multiplicatively, with their absolute slack.
-GATED_REL = {"ms": 1.0, "W": 0.5, "J/inf": 0.5}
+GATED_REL = {"ms": 1.0, "W": 0.5, "J/inf": 0.5, "ns/req": 50.0}
+# Higher-is-better units (throughputs): a DROP past rel fails, with an
+# absolute slack floor so tiny baselines are not infinitely strict.
+GATED_HIGHER = {"rps/core": 1000.0}
 
 
 def load(path):
@@ -96,14 +104,18 @@ def main():
         if unit in GATED_REL:
             limit = bv * (1.0 + rel) + GATED_REL[unit]
             verdict = "FAIL" if cv > limit else "ok"
+        elif unit in GATED_HIGHER:
+            limit = bv * (1.0 - rel) - GATED_HIGHER[unit]
+            verdict = "FAIL" if cv < limit else "ok"
         elif unit == "%":
             limit = bv + max(2.0, rel * bv)
             verdict = "FAIL" if cv > limit else "ok"
         else:
             limit, verdict = None, "info"
         if verdict == "FAIL":
+            direction = "fell below" if unit in GATED_HIGHER else "exceeds"
             failures.append(
-                f"{label}: {cv:.3f}{unit} exceeds baseline {bv:.3f}{unit} "
+                f"{label}: {cv:.3f}{unit} {direction} baseline {bv:.3f}{unit} "
                 f"(limit {limit:.3f}{unit}, rel {rel:.0%})"
             )
         rows.append((label, bv, cv, unit, verdict))
