@@ -174,6 +174,51 @@ def test_rps_per_core_gates_higher_is_better(tmp_path):
     assert _run(base, gain).returncode == 0
 
 
+def test_informational_units_never_gate(tmp_path):
+    # Units outside the gated tables (like the transport bench's `desc`
+    # in-flight depth, or `req/s` aggregates) are trajectory-only: a wild
+    # swing in either direction must not fail the gate — but a gated
+    # metric in the same document still does.
+    base = _write(
+        tmp_path,
+        "base.json",
+        _doc(
+            {
+                "qp echo mean in-flight": {"value": 6.0, "unit": "desc"},
+                "aggregate": {"value": 100000.0, "unit": "req/s"},
+                "hotpath": {"value": 2000.0, "unit": "ns/req"},
+            }
+        ),
+    )
+    wild = _write(
+        tmp_path,
+        "wild.json",
+        _doc(
+            {
+                "qp echo mean in-flight": {"value": 0.01, "unit": "desc"},
+                "aggregate": {"value": 5.0, "unit": "req/s"},
+                "hotpath": {"value": 2000.0, "unit": "ns/req"},
+            }
+        ),
+    )
+    r = _run(base, wild)
+    assert r.returncode == 0, r.stdout + r.stderr
+    both = _write(
+        tmp_path,
+        "both.json",
+        _doc(
+            {
+                "qp echo mean in-flight": {"value": 0.01, "unit": "desc"},
+                "aggregate": {"value": 5.0, "unit": "req/s"},
+                "hotpath": {"value": 9000.0, "unit": "ns/req"},
+            }
+        ),
+    )
+    r = _run(base, both)
+    assert r.returncode == 1
+    assert "hotpath" in r.stdout
+
+
 def test_bad_usage_and_bad_json_exit_2(tmp_path):
     assert _run().returncode == 2
     garbage = tmp_path / "garbage.json"

@@ -1,0 +1,188 @@
+//! Transport-layer microbench (EXPERIMENTS.md §Transport): price the
+//! queue-pair machinery itself — submit/completion rings, doorbells,
+//! pooled zero-copy buffers, FNV checksums, and the shim device thread —
+//! with the link model at zero latency / infinite bandwidth so every
+//! measured nanosecond is transport overhead, not modeled wire time.
+//!
+//! Two sections:
+//!
+//! * **qp echo** — a single client drives one `TransportBackend` closed
+//!   loop (submit to pipeline depth, reap, refill) against a null device.
+//!   `ns/req` here is the per-descriptor round trip through both rings.
+//! * **shim-lane hot path** — the serving_hotpath bench shape (3
+//!   submitters, 2 lanes × 2 workers, LeastOutstanding routing), but with
+//!   every worker's backend behind `shim_factory`. Comparing its `ns/req`
+//!   against BENCH_serving.json prices the whole transport detour under
+//!   real batching; the acceptance envelope is ≤25% over the direct path.
+//!
+//! Gated metrics (`ns/req`, `rps/core`) land in BENCH_transport.json; the
+//! mean in-flight descriptor depth is recorded informationally in `desc`
+//! units — it proves the pipelining actually overlaps, but it is
+//! scheduler-sensitive and must never gate.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+use superlip::bench::Harness;
+use superlip::fleet::SloClass;
+use superlip::serving::{
+    BackendFactory, BatcherConfig, InferBackend, LaneSpec, PipelinedBackend, RoutePolicy, Server,
+    ServerConfig,
+};
+use superlip::transport::{TransportBackend, TransportConfig};
+
+/// One scalar in, one logit out, no work — same null device as the
+/// serving_hotpath baseline so the delta is pure transport.
+struct NullBackend;
+
+impl InferBackend for NullBackend {
+    fn image_elems(&self) -> usize {
+        1
+    }
+    fn classes(&self) -> usize {
+        1
+    }
+    fn max_batch(&self) -> usize {
+        64
+    }
+    fn infer(&self, _images: &[f32], n: usize) -> superlip::Result<Vec<f32>> {
+        Ok(vec![0.0; n])
+    }
+}
+
+fn null_factory() -> BackendFactory {
+    Box::new(|| Ok(Box::new(NullBackend) as Box<dyn InferBackend>))
+}
+
+/// Ideal-link transport: every nanosecond measured is ring machinery.
+fn transport_cfg() -> TransportConfig {
+    TransportConfig {
+        ring_capacity: 32,
+        pipeline_depth: 8,
+        ..TransportConfig::default()
+    }
+}
+
+/// Closed-loop echo through one queue pair: keep `depth` descriptors in
+/// flight, reap, refill. Returns (completions, wall secs, mean in-flight).
+fn qp_echo(n_total: usize) -> (u64, f64, f64) {
+    let tb = TransportBackend::over_shim(transport_cfg(), null_factory()).expect("shim bring-up");
+    let depth = tb.depth();
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut fill = |dst: &mut [f32]| dst.fill(0.0);
+    let mut submitted = 0usize;
+    let mut reaped = 0u64;
+    let mut inflight_samples = 0u64;
+    let mut inflight_sum = 0u64;
+    let t0 = Instant::now();
+    while (reaped as usize) < n_total {
+        while submitted < n_total && tb.in_flight() < depth {
+            if tb.submit_batch(1, deadline, &mut fill).is_err() {
+                break; // typed backpressure: reap below, then refill
+            }
+            submitted += 1;
+        }
+        inflight_sum += tb.in_flight() as u64;
+        inflight_samples += 1;
+        reaped += tb.reap_batches(Duration::from_micros(200)).len() as u64;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let mean_inflight = inflight_sum as f64 / inflight_samples.max(1) as f64;
+    (reaped, wall, mean_inflight)
+}
+
+const MODEL: &str = "null";
+const LANES: usize = 2;
+const WORKERS_PER_LANE: usize = 2;
+const SUBMITTERS: usize = 3;
+const PIPELINE: usize = 64;
+
+fn shim_lane() -> LaneSpec {
+    LaneSpec {
+        model: MODEL.into(),
+        factories: (0..WORKERS_PER_LANE)
+            .map(|_| TransportBackend::shim_factory(transport_cfg(), null_factory()))
+            .collect(),
+        batcher: BatcherConfig {
+            max_batch: 32,
+            window: Duration::from_millis(0),
+            ..BatcherConfig::default()
+        },
+    }
+}
+
+/// The serving_hotpath closed loop, verbatim shape: bounded in-flight
+/// window per submitter so the pipeline saturates without queue blowup.
+fn drive(server: &Server, per_submitter: usize) -> (u64, f64) {
+    let completed = AtomicU64::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..SUBMITTERS {
+            let completed = &completed;
+            s.spawn(move || {
+                let deadline = Duration::from_secs(5);
+                let class = match t % 3 {
+                    0 => SloClass::Gold,
+                    1 => SloClass::Silver,
+                    _ => SloClass::BestEffort,
+                };
+                let mut inflight = std::collections::VecDeque::with_capacity(PIPELINE);
+                let mut done = 0u64;
+                for _ in 0..per_submitter {
+                    let rx = server
+                        .try_submit_to(MODEL, vec![0.0], deadline, class)
+                        .expect("shim lane accepts");
+                    inflight.push_back(rx);
+                    if inflight.len() >= PIPELINE {
+                        let oldest = inflight.pop_front().unwrap();
+                        oldest.recv().expect("response");
+                        done += 1;
+                    }
+                }
+                for rx in inflight {
+                    rx.recv().expect("response");
+                    done += 1;
+                }
+                completed.fetch_add(done, Ordering::Relaxed);
+            });
+        }
+    });
+    (completed.load(Ordering::Relaxed), t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    let mut h = Harness::new("transport_rings");
+    let n_echo: usize = if h.is_quick() { 20_000 } else { 200_000 };
+    let per_submitter: usize = if h.is_quick() { 10_000 } else { 100_000 };
+
+    // §1: raw queue-pair round trip, no serving machinery above it.
+    qp_echo(n_echo / 10); // warmup
+    let (n, wall, mean_inflight) = qp_echo(n_echo);
+    assert_eq!(n as usize, n_echo, "every descriptor reaped exactly once");
+    h.record("qp echo, submit→reap", wall * 1e9 / n as f64, "ns/req");
+    h.record("qp echo mean in-flight", mean_inflight, "desc");
+
+    // §2: the full serving hot path with the transport under every lane.
+    let server = Server::start_plan(
+        (0..LANES).map(|_| shim_lane()).collect(),
+        ServerConfig {
+            policy: RoutePolicy::LeastOutstanding,
+            ..ServerConfig::default()
+        },
+    );
+    drive(&server, per_submitter / 10); // warmup
+    server.metrics().reset();
+    let (n, wall) = drive(&server, per_submitter);
+    assert_eq!(n as usize, SUBMITTERS * per_submitter, "exactly-one-response");
+
+    let throughput = n as f64 / wall;
+    // Honest core count: the shim moved the (null) inference onto device
+    // threads, so they join the denominator alongside submitters + workers.
+    let cores = (SUBMITTERS + 2 * LANES * WORKERS_PER_LANE) as f64;
+    h.record("shim-lane hot path, submit→complete", wall * 1e9 / n as f64, "ns/req");
+    h.record("shim-lane throughput per core", throughput / cores, "rps/core");
+    h.record("shim-lane aggregate throughput", throughput, "req/s");
+    h.record("mean batch", server.metrics().mean_batch(), "req");
+
+    server.shutdown();
+    h.finish();
+}

@@ -93,6 +93,98 @@ pub fn parse_surge_factor(s: &str) -> Result<f64> {
     Ok(v)
 }
 
+/// Parse a `--transport` value: `shim[:lat_us[:gbps]]` stands a queue-pair
+/// transport (software shim device) under every lane, with an optional
+/// modeled link latency (µs) and bandwidth (Gbit/s; 0 = infinite).
+/// Anything else is a typed error — never a panic.
+pub fn parse_transport(s: &str) -> Result<crate::transport::TransportConfig> {
+    let mut parts = s.split(':');
+    let kind = parts.next().unwrap_or_default();
+    if kind != "shim" {
+        return Err(Error::InvalidArg(format!(
+            "--transport {s}: unknown transport `{kind}` (only `shim[:lat_us[:gbps]]`)"
+        )));
+    }
+    let mut cfg = crate::transport::TransportConfig::default();
+    if let Some(lat) = parts.next() {
+        let v: f64 = lat
+            .parse()
+            .map_err(|e| Error::InvalidArg(format!("--transport {s}: latency `{lat}`: {e}")))?;
+        if !v.is_finite() || v < 0.0 {
+            return Err(Error::InvalidArg(format!(
+                "--transport {s}: latency must be finite and ≥ 0 µs"
+            )));
+        }
+        cfg.link.latency = std::time::Duration::from_secs_f64(v * 1e-6);
+    }
+    if let Some(bw) = parts.next() {
+        let v: f64 = bw
+            .parse()
+            .map_err(|e| Error::InvalidArg(format!("--transport {s}: bandwidth `{bw}`: {e}")))?;
+        if !v.is_finite() || v < 0.0 {
+            return Err(Error::InvalidArg(format!(
+                "--transport {s}: bandwidth must be finite Gbit/s ≥ 0 (0 = infinite)"
+            )));
+        }
+        cfg.link.gbps = v;
+    }
+    if let Some(extra) = parts.next() {
+        return Err(Error::InvalidArg(format!(
+            "--transport {s}: trailing `{extra}` (grammar is shim[:lat_us[:gbps]])"
+        )));
+    }
+    Ok(cfg)
+}
+
+/// Parse a `--transport-faults` plan: comma-separated `key=value` pairs
+/// from `drop`, `dup`, `reorder`, `corrupt` (probabilities in [0, 1]),
+/// `stall` (descriptors before the device wedges), and `seed`. Returns a
+/// typed error on unknown keys or out-of-range values — never a panic.
+pub fn parse_transport_faults(s: &str) -> Result<crate::transport::FaultPlan> {
+    let mut plan = crate::transport::FaultPlan::default();
+    for pair in s.split(',').filter(|p| !p.is_empty()) {
+        let Some((k, v)) = pair.split_once('=') else {
+            return Err(Error::InvalidArg(format!(
+                "--transport-faults `{pair}`: expected key=value"
+            )));
+        };
+        let prob = |key: &str| -> Result<f64> {
+            let p: f64 = v
+                .parse()
+                .map_err(|e| Error::InvalidArg(format!("--transport-faults {key}={v}: {e}")))?;
+            if !(0.0..=1.0).contains(&p) {
+                return Err(Error::InvalidArg(format!(
+                    "--transport-faults {key}={v}: probability must be in [0, 1]"
+                )));
+            }
+            Ok(p)
+        };
+        match k {
+            "drop" => plan.drop = prob(k)?,
+            "dup" | "duplicate" => plan.duplicate = prob(k)?,
+            "reorder" => plan.reorder = prob(k)?,
+            "corrupt" => plan.corrupt = prob(k)?,
+            "stall" => {
+                plan.stall_after = Some(v.parse().map_err(|e| {
+                    Error::InvalidArg(format!("--transport-faults stall={v}: {e}"))
+                })?)
+            }
+            "seed" => {
+                plan.seed = v.parse().map_err(|e| {
+                    Error::InvalidArg(format!("--transport-faults seed={v}: {e}"))
+                })?
+            }
+            other => {
+                return Err(Error::InvalidArg(format!(
+                    "--transport-faults: unknown key `{other}` \
+                     (drop, dup, reorder, corrupt, stall, seed)"
+                )))
+            }
+        }
+    }
+    Ok(plan)
+}
+
 /// Parse a precision flag value.
 pub fn parse_precision(s: &str) -> Result<crate::platform::Precision> {
     match s.to_ascii_lowercase().as_str() {
@@ -152,6 +244,48 @@ mod tests {
         // errors — never a panic.
         for bad in ["0.5", "0", "-2", "nan", "inf", "fast", ""] {
             assert!(parse_surge_factor(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn transport_flag_validated_without_panicking() {
+        let t = parse_transport("shim").unwrap();
+        assert_eq!(t.link.latency, std::time::Duration::ZERO);
+        assert_eq!(t.link.gbps, 0.0);
+        assert!(t.faults.is_none(), "faults ride a separate flag");
+        let t = parse_transport("shim:50").unwrap();
+        assert_eq!(t.link.latency, std::time::Duration::from_micros(50));
+        let t = parse_transport("shim:12.5:16").unwrap();
+        assert!((t.link.latency.as_secs_f64() - 12.5e-6).abs() < 1e-12);
+        assert!((t.link.gbps - 16.0).abs() < 1e-12);
+        // Unknown kinds, malformed numbers, negatives, non-finite values,
+        // and trailing junk all return typed errors — never a panic.
+        for bad in [
+            "", "xdma", "shim:", "shim:fast", "shim:-1", "shim:nan", "shim:1:inf", "shim:1:-2",
+            "shim:1:2:3",
+        ] {
+            assert!(parse_transport(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn transport_faults_validated_without_panicking() {
+        let p = parse_transport_faults("drop=0.05,dup=0.02,reorder=0.1,corrupt=0.01").unwrap();
+        assert!((p.drop - 0.05).abs() < 1e-12);
+        assert!((p.duplicate - 0.02).abs() < 1e-12);
+        assert!((p.reorder - 0.1).abs() < 1e-12);
+        assert!((p.corrupt - 0.01).abs() < 1e-12);
+        assert!(p.stall_after.is_none());
+        let p = parse_transport_faults("stall=100,seed=7").unwrap();
+        assert_eq!(p.stall_after, Some(100));
+        assert_eq!(p.seed, 7);
+        let p = parse_transport_faults("").unwrap();
+        assert_eq!(p.drop, 0.0, "empty plan is the default plan");
+        for bad in ["drop", "drop=1.5", "drop=-0.1", "drop=x", "stall=-1", "flip=0.5"] {
+            assert!(
+                parse_transport_faults(bad).is_err(),
+                "{bad:?} must be rejected"
+            );
         }
     }
 

@@ -80,6 +80,10 @@ pub struct ControlConfig {
     /// mix declares at least two distinct SLO classes — with one class
     /// there is no one to protect and no one to sacrifice.
     pub brownout: Option<BrownoutConfig>,
+    /// Queue-pair transport under newly added lanes (`None` = direct
+    /// in-process dispatch). Lanes the controller stands up mid-flight
+    /// inherit this, so a migration never silently changes the data path.
+    pub transport: Option<crate::transport::TransportConfig>,
 }
 
 impl Default for ControlConfig {
@@ -93,6 +97,7 @@ impl Default for ControlConfig {
             health: None,
             power: None,
             brownout: None,
+            transport: None,
         }
     }
 }
@@ -587,7 +592,13 @@ impl Controller {
         })?;
         let boards = self.books[bi].boards.clone();
         let health = self.cfg.health.clone().map(|h| (h, boards.clone()));
-        let spec = lane_spec_for(to, self.cfg.time_scale, self.cfg.window, health);
+        let spec = lane_spec_for(
+            to,
+            self.cfg.time_scale,
+            self.cfg.window,
+            health,
+            self.cfg.transport.as_ref(),
+        );
         let lane = self.server.add_lane(spec);
         let old = self.books[bi].clone();
         self.books[bi] = LaneBook {
@@ -660,7 +671,11 @@ impl Controller {
     /// flight), AND — when board health switches are wired — a dead flag
     /// on one of **that lane's** boards (all-alive switches mean slow,
     /// not dead; a sibling replica's dead board never convicts this
-    /// lane). Returns the book index of the lane to repair.
+    /// lane). One escape hatch: a lane starved for `2 * dead_after`
+    /// windows is convicted even with every board switch alive — a
+    /// stalled transport ring (wedged device, lost doorbells) kills a
+    /// lane without tripping any board's health flag, and telemetry is
+    /// the only witness. Returns the book index of the lane to repair.
     fn scan_for_dead_lanes(&mut self, frame: &TelemetryFrame) -> Option<usize> {
         let min_arrivals = self.cfg.drift.min_arrivals;
         let mut dead: Option<usize> = None;
@@ -676,7 +691,12 @@ impl Controller {
                 if *streak >= self.cfg.dead_after && *starved >= min_arrivals && dead.is_none() {
                     if let Some(bi) = book_idx {
                         let confirmed = match &self.cfg.health {
-                            Some(h) => self.books[bi].boards.iter().any(|&b| h.is_dead(b)),
+                            Some(h) => {
+                                self.books[bi].boards.iter().any(|&b| h.is_dead(b))
+                                    // Stalled-ring fallback: boards healthy,
+                                    // lane starved twice the normal patience.
+                                    || *streak >= self.cfg.dead_after * 2
+                            }
                             None => true, // no health channel — telemetry is all we have
                         };
                         if confirmed {
@@ -787,7 +807,13 @@ impl Controller {
                 continue;
             }
             let health = self.cfg.health.clone().map(|h| (h, pa.boards.clone()));
-            let spec = lane_spec_for(&pa.dep, self.cfg.time_scale, self.cfg.window, health);
+            let spec = lane_spec_for(
+                &pa.dep,
+                self.cfg.time_scale,
+                self.cfg.window,
+                health,
+                self.cfg.transport.as_ref(),
+            );
             let lane = self.server.add_lane(spec);
             self.events.push(format!(
                 "boards {:?} awake — lane {lane} live for {}",
@@ -950,7 +976,13 @@ impl Controller {
                     }
                 }
                 let health = self.cfg.health.clone().map(|h| (h, ids.clone()));
-                let spec = lane_spec_for(d, self.cfg.time_scale, self.cfg.window, health);
+                let spec = lane_spec_for(
+                    d,
+                    self.cfg.time_scale,
+                    self.cfg.window,
+                    health,
+                    self.cfg.transport.as_ref(),
+                );
                 let lane = self.server.add_lane(spec);
                 fresh.push(LaneBook {
                     model: d.workload.model.clone(),
@@ -1050,7 +1082,7 @@ mod tests {
         let lanes = plan
             .deployments
             .iter()
-            .map(|d| crate::fleet::lane_spec_for(d, 1.0, scen.window, None))
+            .map(|d| crate::fleet::lane_spec_for(d, 1.0, scen.window, None, None))
             .collect();
         let server = Arc::new(Server::start_plan(lanes, ServerConfig::default()));
         let replanner = Replanner::new(fleet, pcfg);
@@ -1118,7 +1150,7 @@ mod tests {
         let lanes = plan
             .deployments
             .iter()
-            .map(|d| crate::fleet::lane_spec_for(d, 1.0, scen.window, None))
+            .map(|d| crate::fleet::lane_spec_for(d, 1.0, scen.window, None, None))
             .collect();
         let server = Arc::new(Server::start_plan(lanes, ServerConfig::default()));
         let replanner = Replanner::new(fleet, pcfg);
@@ -1155,6 +1187,105 @@ mod tests {
         server.shutdown();
     }
 
+    /// Regression (transport stall drill): a lane wedged by a stalled
+    /// transport ring starves — arrivals keep landing, completions stay
+    /// at zero — while every board health switch reads alive (a wedged
+    /// device trips no board flag). The plain telemetry fallback must
+    /// keep refusing to convict on healthy switches; the stalled-ring
+    /// escape hatch convicts after `2 * dead_after` starved windows and
+    /// quarantines the lane without panicking.
+    #[test]
+    fn stalled_transport_lane_is_convicted_despite_healthy_boards() {
+        let fleet = FleetSpec::homogeneous(3, FpgaSpec::zcu102());
+        let pcfg = PlannerConfig::default();
+        let planner = Planner::new(fleet.clone(), pcfg);
+        let a1 = planner.service_ms("alexnet", 1).unwrap();
+        let s1 = planner.service_ms("squeezenet", 1).unwrap();
+        let mix = vec![
+            WorkloadSpec::new(
+                "alexnet",
+                0.2 / (a1 / 1e3),
+                Duration::from_secs_f64(8.0 * a1 / 1e3),
+            ),
+            WorkloadSpec::new(
+                "squeezenet",
+                0.2 / (s1 / 1e3),
+                Duration::from_secs_f64(8.0 * s1 / 1e3),
+            ),
+        ];
+        // Pin alexnet to ONE board so writing its lane off leaves two
+        // survivors — enough for the repair re-plan to fit both models.
+        let plan = planner.plan_allocation(&mix, &[1, 2]).unwrap();
+        let health = FleetHealth::new(3); // every switch stays alive
+        // Wedge alexnet's transport from the first descriptor; short
+        // timeouts so its queued requests convert to disconnects fast.
+        let tcfg = crate::transport::TransportConfig {
+            reap_timeout: Duration::from_millis(5),
+            max_retries: 0,
+            faults: Some(crate::transport::FaultPlan {
+                stall_after: Some(0),
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let scen = ScenarioConfig::default();
+        let lanes = plan
+            .deployments
+            .iter()
+            .map(|d| {
+                let h = Some((health.clone(), (d.start..d.start + d.n_boards).collect()));
+                let t = (d.workload.model == "alexnet").then_some(&tcfg);
+                crate::fleet::lane_spec_for(d, 1.0, scen.window, h, t)
+            })
+            .collect();
+        let server = Arc::new(Server::start_plan(lanes, ServerConfig::default()));
+        let replanner = Replanner::new(fleet, pcfg);
+        replanner.adopt_cache(&planner);
+        let mut ccfg = ControlConfig::default();
+        ccfg.health = Some(health.clone());
+        // dead_after = 2 (default): conviction needs 4 starved windows.
+        let mut ctl = Controller::new(server.clone(), replanner, plan, ccfg).unwrap();
+
+        let d = Duration::from_secs(5);
+        let mut convicted_at = None;
+        for window in 0..8 {
+            let mut rxs = Vec::new();
+            for _ in 0..6 {
+                if let Ok(rx) = server.submit_to("alexnet", vec![0.1; 64], d) {
+                    rxs.push(rx);
+                }
+            }
+            std::thread::sleep(Duration::from_millis(10));
+            drop(rxs); // stalled lane fails them closed — don't block on replies
+            let tick = ctl.tick();
+            if tick.migrated_to.is_some() {
+                convicted_at = Some(window);
+                break;
+            }
+        }
+        let convicted_at =
+            convicted_at.unwrap_or_else(|| panic!("stalled lane never convicted: {:?}", ctl.events));
+        // Healthy switches held the plain fallback off through windows
+        // 0..3 (streak < 2 * dead_after); the escape hatch fired on the
+        // 4th starved window.
+        assert!(convicted_at >= 3, "convicted too early: {:?}", ctl.events);
+        assert_eq!(ctl.replans(), 1, "{:?}", ctl.events);
+        assert!(
+            ctl.events.iter().any(|e| e.contains("dead (telemetry)")),
+            "{:?}",
+            ctl.events
+        );
+        // The wedged lane was quarantined (draining toward reap), and the
+        // repair stood up a replacement — alexnet is routable again.
+        assert!(!ctl.retiring.is_empty(), "{:?}", ctl.events);
+        assert!(ctl.lanes_for("alexnet") >= 1, "{:?}", ctl.events);
+        let rx = server
+            .submit_to("alexnet", vec![0.1; 64], Duration::from_secs(5))
+            .unwrap();
+        assert!(rx.recv_timeout(Duration::from_secs(5)).is_ok());
+        server.shutdown();
+    }
+
     #[test]
     fn brownout_ladder_climbs_under_flood_and_recovers() {
         use crate::platform::Precision;
@@ -1181,7 +1312,7 @@ mod tests {
         let lanes = plan
             .deployments
             .iter()
-            .map(|d| crate::fleet::lane_spec_for(d, 1.0, scen.window, None))
+            .map(|d| crate::fleet::lane_spec_for(d, 1.0, scen.window, None, None))
             .collect();
         let server = Arc::new(Server::start_plan(lanes, ServerConfig::default()));
         let replanner = Replanner::new(fleet, pcfg);

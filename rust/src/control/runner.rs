@@ -60,6 +60,9 @@ pub struct OnlineConfig {
     /// Wall-clock budget for collecting each response after submission
     /// ends (an unstable static lane drains a deep backlog here).
     pub recv_timeout: Duration,
+    /// Queue-pair transport under every lane — initial AND
+    /// controller-added (`None` = direct in-process dispatch).
+    pub transport: Option<crate::transport::TransportConfig>,
 }
 
 impl Default for OnlineConfig {
@@ -73,6 +76,7 @@ impl Default for OnlineConfig {
             kill: None,
             power: None,
             recv_timeout: Duration::from_secs(60),
+            transport: None,
         }
     }
 }
@@ -191,6 +195,7 @@ pub fn run_drift_scenario(
                 ts,
                 cfg.window,
                 Some((health.clone(), (d.start..d.start + d.n_boards).collect())),
+                cfg.transport.as_ref(),
             )
         })
         .collect();
@@ -204,6 +209,7 @@ pub fn run_drift_scenario(
         ccfg.window = cfg.window;
         ccfg.health = Some(health.clone());
         ccfg.power = power.clone();
+        ccfg.transport = cfg.transport;
         Some(Controller::new(server.clone(), replanner, plan.clone(), ccfg)?)
     } else {
         None

@@ -45,6 +45,10 @@ pub struct ScenarioConfig {
     pub time_scale: f64,
     /// Batching window per lane (scaled like everything else).
     pub window: Duration,
+    /// Interpose a queue-pair shim transport under every lane (`None` =
+    /// direct in-process dispatch, bit-identical to the pre-transport
+    /// path).
+    pub transport: Option<crate::transport::TransportConfig>,
 }
 
 impl Default for ScenarioConfig {
@@ -55,6 +59,7 @@ impl Default for ScenarioConfig {
             seed: 2026,
             time_scale: 1.0,
             window: Duration::from_micros(200),
+            transport: None,
         }
     }
 }
@@ -262,7 +267,7 @@ pub fn run_scenario(plan: &FleetPlan, cfg: &ScenarioConfig) -> Result<Vec<ModelS
     let lanes: Vec<LaneSpec> = plan
         .deployments
         .iter()
-        .map(|d| lane_spec_for(d, ts, cfg.window, None))
+        .map(|d| lane_spec_for(d, ts, cfg.window, None, cfg.transport.as_ref()))
         .collect();
     let server = Server::start_plan(lanes, ServerConfig::default());
 
@@ -422,16 +427,25 @@ pub fn run_scenario(plan: &FleetPlan, cfg: &ScenarioConfig) -> Result<Vec<ModelS
 /// scenario runner, the `fleet` CLI, and the control plane's live plan
 /// migrations. `health` attaches a board-failure gate: `(switches,
 /// board_ids)` — the ORIGINAL fleet indices this sub-cluster occupies.
+/// `transport` interposes a queue-pair shim device between the worker and
+/// the backend (`--transport shim`); `None` keeps the direct in-process
+/// call path bit-identical to before.
 pub fn lane_spec_for(
     d: &Deployment,
     time_scale: f64,
     window: Duration,
     health: Option<(FleetHealth, Vec<usize>)>,
+    transport: Option<&crate::transport::TransportConfig>,
 ) -> LaneSpec {
     let window = window.mul_f64(time_scale);
+    let inner = backend_factory(d, time_scale, health);
+    let factory = match transport {
+        Some(t) => crate::transport::TransportBackend::shim_factory(t.clone(), inner),
+        None => inner,
+    };
     LaneSpec {
         model: d.workload.model.clone(),
-        factories: vec![backend_factory(d, time_scale, health)],
+        factories: vec![factory],
         batcher: BatcherConfig {
             max_batch: d.workload.max_batch,
             window,

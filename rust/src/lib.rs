@@ -39,6 +39,7 @@ pub mod report;
 pub mod runtime;
 pub mod serving;
 pub mod sim;
+pub mod transport;
 pub mod util;
 
 /// Crate-wide result alias.
@@ -56,6 +57,10 @@ pub enum Error {
     Runtime(String),
     /// Serving-path failure (queue closed, worker died, ...).
     Serving(String),
+    /// Transport-layer failure (ring full, buffer pool exhausted,
+    /// descriptor timeout, ...). Typed so callers can distinguish
+    /// backpressure from device death.
+    Transport(crate::transport::TransportError),
     /// I/O failure (artifacts, reports).
     Io(std::io::Error),
 }
@@ -67,6 +72,7 @@ impl std::fmt::Display for Error {
             Error::InvalidArg(m) => write!(f, "invalid argument: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Serving(m) => write!(f, "serving error: {m}"),
+            Error::Transport(e) => write!(f, "transport error: {e}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }

@@ -12,7 +12,7 @@
 
 use std::time::{Duration, Instant};
 use superlip::analytic::{detect, Design, XferMode};
-use superlip::cli::{parse_precision, parse_surge_factor, Args};
+use superlip::cli::{parse_precision, parse_surge_factor, parse_transport, parse_transport_faults, Args};
 use superlip::control;
 use superlip::coordinator::SuperLip;
 use superlip::fleet::{self, FleetSpec, Planner, PlannerConfig, ScenarioConfig};
@@ -64,6 +64,8 @@ COMMANDS:
   fleet     --fpgas N --mix model:rate_rps:deadline_ms[:max_batch[:replicas[:class[@quota]]]],...
             [--requests N] [--naive] [--time-scale X] [--co-optimize] [--qsfp]
             [--surge-factor X]
+            [--transport shim[:lat_us[:gbps]]]
+            [--transport-faults drop=P,dup=P,reorder=P,corrupt=P,stall=N,seed=S]
             [--online [--flip-after S] [--post S] [--tick S] [--kill-board I --kill-at S]
                       [--power [--wake-latency S]]]
             (replicas: a count, or `auto` (default) — the planner may serve a
@@ -87,12 +89,42 @@ COMMANDS:
              arms the brownout ladder: under sustained overload the controller
              sheds, precision-degrades, then admission-controls the lowest
              class — one rung at a time, with hysteresis — so gold p99 holds)
+            (--transport shim stands a DMA-style queue-pair transport — rings,
+             registered buffers, a software device thread — under every lane,
+             with an optional modeled link latency (µs) and bandwidth (Gbit/s);
+             --transport-faults injects seeded device misbehavior: completion
+             drops, duplicates, reorders, payload corruption, or a stall after
+             N descriptors — the exactly-one-response drill)
   dse       --net <name> --precision <f32|fx16>
   scale     --net <name> --max-fpgas N [--precision fx16]
   validate
   serve     --artifacts <dir> --requests N --rate RPS --replicas N
+            [--transport shim[:lat_us[:gbps]]] [--transport-faults ...]
   tables
 ";
+
+/// Resolve the `--transport` / `--transport-faults` pair. Faults are only
+/// honored when a transport is selected (the direct path has no device to
+/// misbehave), and both values are validated with typed errors.
+fn transport_args(args: &Args) -> Result<Option<superlip::transport::TransportConfig>> {
+    match args.flag("transport") {
+        Some(s) => {
+            let mut t = parse_transport(s)?;
+            if let Some(f) = args.flag("transport-faults") {
+                t.faults = Some(parse_transport_faults(f)?);
+            }
+            Ok(Some(t))
+        }
+        None => {
+            if args.flag("transport-faults").is_some() {
+                return Err(Error::InvalidArg(
+                    "--transport-faults needs --transport (the direct path has no device)".into(),
+                ));
+            }
+            Ok(None)
+        }
+    }
+}
 
 fn net_arg(args: &Args) -> Result<superlip::model::Network> {
     let name = args.flag_or("net", "alexnet");
@@ -160,8 +192,21 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     println!("{}", plan.summary());
     println!("{}", superlip::power::plan_power(&plan).summary());
 
+    let transport = transport_args(args)?;
+    if let Some(t) = &transport {
+        println!(
+            "transport: shim queue pairs under every lane (link {:.1} µs, {} Gbit/s{})",
+            t.link.latency.as_secs_f64() * 1e6,
+            if t.link.gbps > 0.0 {
+                format!("{:.1}", t.link.gbps)
+            } else {
+                "∞".into()
+            },
+            if t.faults.is_some() { ", faults armed" } else { "" },
+        );
+    }
     if args.has("online") {
-        return cmd_fleet_online(args, &mix, n, board, p, ts, surge);
+        return cmd_fleet_online(args, &mix, n, board, p, ts, surge, transport);
     }
 
     let requests = args.flag_u64("requests", 0)? as usize;
@@ -169,6 +214,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         let scen = ScenarioConfig {
             requests_per_model: requests,
             time_scale: ts,
+            transport,
             ..Default::default()
         };
         let stats = fleet::run_scenario(&plan, &scen)?;
@@ -193,6 +239,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
 /// takes entry (i+1)'s rate — the canonical "who is hot changed" drift),
 /// optionally kill a board, and contrast the frozen static plan with the
 /// controlled one.
+#[allow(clippy::too_many_arguments)]
 fn cmd_fleet_online(
     args: &Args,
     mix: &[fleet::WorkloadSpec],
@@ -201,6 +248,7 @@ fn cmd_fleet_online(
     p: Precision,
     ts: f64,
     surge: f64,
+    transport: Option<superlip::transport::TransportConfig>,
 ) -> Result<()> {
     if mix.len() < 2 {
         return Err(Error::InvalidArg(
@@ -274,6 +322,7 @@ fn cmd_fleet_online(
         power: args
             .has("power")
             .then_some(control::PowerGating { wake_latency_s: wake }),
+        transport,
         ..Default::default()
     };
     let fleet_spec = FleetSpec::homogeneous(n, board);
@@ -417,18 +466,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     // Probe the runtime + artifacts up front for a friendly error, then
     // hand each worker a factory (PJRT handles are not Send).
+    let transport = transport_args(args)?;
     let rt = PjrtRuntime::cpu()?;
     println!("PJRT platform: {}", rt.platform());
     drop(ModelExecutor::load(&rt, &dir)?);
     drop(rt);
+    if let Some(t) = &transport {
+        println!(
+            "transport: shim queue pairs (ring {}, depth {}{})",
+            t.ring_capacity,
+            t.pipeline_depth,
+            if t.faults.is_some() { ", faults armed" } else { "" },
+        );
+    }
     let factories: Vec<superlip::serving::BackendFactory> = (0..replicas)
         .map(|_| {
             let dir = dir.clone();
-            Box::new(move || {
+            let inner = Box::new(move || {
                 let rt = PjrtRuntime::cpu()?;
                 Ok(Box::new(ModelExecutor::load(&rt, &dir)?)
                     as Box<dyn superlip::serving::InferBackend>)
-            }) as superlip::serving::BackendFactory
+            }) as superlip::serving::BackendFactory;
+            match transport {
+                Some(t) => superlip::transport::TransportBackend::shim_factory(t, inner),
+                None => inner,
+            }
         })
         .collect();
     let image_elems = 3 * 32 * 32;

@@ -23,15 +23,20 @@
 //! caps live inside the owning shard, making the cap check and the insert
 //! one atomic step.
 //!
-//! Workers park on a separate sleep mutex + condvar; producers only touch
-//! it when a sleeper is registered (`sleepers` counter, SeqCst
-//! handshake), so the steady-state push path is class-lock + two atomics.
+//! **Sharded wakeups.** Idle workers park in per-shard sleeper lots
+//! (`std::thread::park`), not on one global condvar: a producer that needs
+//! to wake a worker pops a single thread handle from one short lot mutex
+//! and unparks it — there is no shared sleep mutex for every producer and
+//! every waking worker to serialize on, and `notify_one` thundering across
+//! unrelated shards goes away. Producers skip the lots entirely unless a
+//! sleeper is registered (`total_sleepers` counter, SeqCst handshake), so
+//! the steady-state push path is still class-lock + two atomics.
 
 use super::InferenceRequest;
 use crate::fleet::{SloClass, N_CLASSES};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex, MutexGuard};
+use std::sync::{Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 /// Batcher tuning.
@@ -80,6 +85,19 @@ impl PushRefusal {
     }
 }
 
+/// Result of a bounded-wait batch poll (`Batcher::poll_batch`) — the
+/// non-blocking surface the pipelined worker loop drives so it can keep
+/// reaping completions while the queue is quiet.
+#[derive(Debug)]
+pub enum BatchPoll {
+    /// A formed batch (≥ 1 request), same order contract as `next_batch`.
+    Batch(Vec<InferenceRequest>),
+    /// Nothing arrived within the wait budget.
+    Empty,
+    /// Closed and fully drained.
+    Closed,
+}
+
 /// One class's shard: EDF-sorted deque + its live quota cap. All state a
 /// push of this class needs sits behind this one short lock.
 #[derive(Default)]
@@ -99,11 +117,15 @@ pub struct Batcher {
     /// handshake and the close linearization).
     depth: AtomicUsize,
     closed: AtomicBool,
-    /// Parking lot for workers with nothing to drain. Producers skip it
-    /// entirely unless `sleepers > 0`.
-    sleep: Mutex<()>,
-    cv: Condvar,
-    sleepers: AtomicUsize,
+    /// Per-shard sleeper lots: parked worker thread handles. A producer of
+    /// class `c` probes lot `c` first, so concurrent producers of
+    /// different classes wake workers without touching the same lock.
+    lots: [Mutex<Vec<std::thread::Thread>>; N_CLASSES],
+    /// Sleepers across all lots. Producers skip the lots entirely while
+    /// this is 0 (SeqCst handshake with `park`'s register-then-recheck).
+    total_sleepers: AtomicUsize,
+    /// Round-robin lot assignment for parking workers.
+    lot_cursor: AtomicUsize,
 }
 
 impl Batcher {
@@ -119,9 +141,9 @@ impl Batcher {
             }),
             depth: AtomicUsize::new(0),
             closed: AtomicBool::new(false),
-            sleep: Mutex::new(()),
-            cv: Condvar::new(),
-            sleepers: AtomicUsize::new(0),
+            lots: std::array::from_fn(|_| Mutex::new(Vec::new())),
+            total_sleepers: AtomicUsize::new(0),
+            lot_cursor: AtomicUsize::new(0),
         }
     }
 
@@ -136,17 +158,41 @@ impl Batcher {
         self.classes[ci].lock().unwrap_or_else(|e| e.into_inner())
     }
 
-    fn sleep_lock(&self) -> MutexGuard<'_, ()> {
-        self.sleep.lock().unwrap_or_else(|e| e.into_inner())
+    fn lot(&self, li: usize) -> MutexGuard<'_, Vec<std::thread::Thread>> {
+        self.lots[li].lock().unwrap_or_else(|e| e.into_inner())
     }
 
-    /// Wake a worker if any is parked. Producers call this after the
-    /// depth increment is published; the SeqCst `sleepers` read pairs with
+    /// Wake one parked worker, if any. Producers call this after the depth
+    /// increment is published; the SeqCst `total_sleepers` read pairs with
     /// the sleeper's register-then-recheck, so a wakeup is never lost.
-    fn wake_one(&self) {
-        if self.sleepers.load(Ordering::SeqCst) > 0 {
-            let _g = self.sleep_lock();
-            self.cv.notify_one();
+    /// `start` is the producer's class index — probing that lot first
+    /// spreads concurrent producers across different lot mutexes.
+    fn wake_one(&self, start: usize) {
+        if self.total_sleepers.load(Ordering::SeqCst) == 0 {
+            return;
+        }
+        for k in 0..N_CLASSES {
+            let popped = self.lot((start + k) % N_CLASSES).pop();
+            if let Some(t) = popped {
+                // The waker owns the deregistration: `park` sees itself
+                // gone from the lot and skips its own decrement.
+                self.total_sleepers.fetch_sub(1, Ordering::SeqCst);
+                t.unpark();
+                return;
+            }
+        }
+        // Counter > 0 with every lot empty means the sleeper is mid-
+        // deregister (already awake) — nothing to wake.
+    }
+
+    /// Wake every parked worker (close path).
+    fn wake_all(&self) {
+        for li in 0..N_CLASSES {
+            let drained: Vec<_> = self.lot(li).drain(..).collect();
+            for t in drained {
+                self.total_sleepers.fetch_sub(1, Ordering::SeqCst);
+                t.unpark();
+            }
         }
     }
 
@@ -193,7 +239,7 @@ impl Batcher {
         // can never be queued-but-invisible across a close.
         self.depth.fetch_add(1, Ordering::SeqCst);
         drop(q);
-        self.wake_one();
+        self.wake_one(ci);
         Ok(())
     }
 
@@ -226,8 +272,7 @@ impl Batcher {
         for ci in 0..N_CLASSES {
             drop(self.shard(ci));
         }
-        let _g = self.sleep_lock();
-        self.cv.notify_all();
+        self.wake_all();
     }
 
     /// Earliest deadline the next batch would start with: the front of the
@@ -263,34 +308,76 @@ impl Batcher {
         batch
     }
 
-    /// Park on the sleep condvar unless work (or close) raced in after
-    /// registering as a sleeper; `until` bounds the nap (window wait).
-    fn park(&self, until: Option<Instant>) {
-        let g = self.sleep_lock();
-        self.sleepers.fetch_add(1, Ordering::SeqCst);
-        // Re-check AFTER registering: a producer that increments depth and
-        // then reads `sleepers` (both SeqCst) either sees us registered —
-        // and will take the sleep lock we hold, queueing its notify behind
-        // our wait — or its increment is already visible to this load.
+    /// Park in a sleeper lot unless work (or close) raced in after
+    /// registering. `until` bounds the nap (`None` = indefinite);
+    /// `wait_for_work` makes the post-register re-check skip the sleep
+    /// when the queue is non-empty (first-request wait), while a window
+    /// nap sleeps regardless of depth.
+    fn park(&self, until: Option<Instant>, wait_for_work: bool) {
+        let li = self.lot_cursor.fetch_add(1, Ordering::Relaxed) % N_CLASSES;
+        let me = std::thread::current();
+        let my_id = me.id();
+        // Register in the lot BEFORE bumping the counter: a producer that
+        // observes `total_sleepers > 0` and takes the lot lock must find
+        // us there.
+        self.lot(li).push(me);
+        self.total_sleepers.fetch_add(1, Ordering::SeqCst);
+        // Re-check AFTER registering: a producer increments depth and then
+        // reads `total_sleepers` (both SeqCst) — either it sees us
+        // registered and unparks, or its depth increment is already
+        // visible to this load and we skip the sleep.
         let should_sleep = !self.closed.load(Ordering::SeqCst)
-            && (until.is_some() || self.depth.load(Ordering::SeqCst) == 0);
+            && (!wait_for_work || self.depth.load(Ordering::SeqCst) == 0);
         if should_sleep {
             match until {
                 Some(t) => {
                     let now = Instant::now();
                     if t > now {
-                        let _ = self
-                            .cv
-                            .wait_timeout(g, t - now)
-                            .unwrap_or_else(|e| e.into_inner());
+                        std::thread::park_timeout(t - now);
                     }
                 }
-                None => {
-                    let _ = self.cv.wait(g).unwrap_or_else(|e| e.into_inner());
-                }
+                None => std::thread::park(),
             }
         }
-        self.sleepers.fetch_sub(1, Ordering::SeqCst);
+        // Deregister — unless a waker already popped us (it then owns the
+        // counter decrement). A stale unpark token from that race makes
+        // the next park return immediately; callers re-check in a loop,
+        // so a spurious pass-through is benign.
+        let mut l = self.lot(li);
+        if let Some(pos) = l.iter().position(|t| t.id() == my_id) {
+            l.remove(pos);
+            drop(l);
+            self.total_sleepers.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Sit out the batching window: bounded naps until the batch is full,
+    /// the window or the most urgent deadline closes it, the queue closes,
+    /// or a sibling drains everything.
+    fn fill_window(&self) {
+        let window_end = Instant::now() + self.cfg.window;
+        loop {
+            let depth = self.depth.load(Ordering::SeqCst);
+            if depth >= self.cfg.max_batch || self.closed.load(Ordering::SeqCst) {
+                break;
+            }
+            if depth == 0 {
+                break; // sibling drained everything — restart outer
+            }
+            let now = Instant::now();
+            if now >= window_end {
+                break;
+            }
+            let Some(urgent) = self.front_deadline() else {
+                break; // raced empty — restart outer
+            };
+            // Close early if the most urgent deadline is at risk.
+            if urgent <= now + self.cfg.deadline_margin {
+                break;
+            }
+            let nap_end = window_end.min(urgent);
+            self.park(Some(nap_end), false);
+        }
     }
 
     /// Blocking: form the next batch (≥1 request) or `None` if closed and
@@ -307,32 +394,9 @@ impl Batcher {
                 if self.closed.load(Ordering::SeqCst) {
                     return None;
                 }
-                self.park(None);
+                self.park(None, true);
             }
-            // Window: wait (bounded) for the batch to fill.
-            let window_end = Instant::now() + self.cfg.window;
-            loop {
-                let depth = self.depth.load(Ordering::SeqCst);
-                if depth >= self.cfg.max_batch || self.closed.load(Ordering::SeqCst) {
-                    break;
-                }
-                if depth == 0 {
-                    break; // sibling drained everything — restart outer
-                }
-                let now = Instant::now();
-                if now >= window_end {
-                    break;
-                }
-                let Some(urgent) = self.front_deadline() else {
-                    break; // raced empty — restart outer
-                };
-                // Close early if the most urgent deadline is at risk.
-                if urgent <= now + self.cfg.deadline_margin {
-                    break;
-                }
-                let nap_end = window_end.min(urgent);
-                self.park(Some(nap_end));
-            }
+            self.fill_window();
             let batch = self.drain(self.cfg.max_batch);
             if !batch.is_empty() {
                 return Some(batch);
@@ -341,6 +405,40 @@ impl Batcher {
                 return None;
             }
             // Sibling won the race for the items — back to waiting.
+        }
+    }
+
+    /// Bounded-wait variant of `next_batch` for submit-then-reap workers:
+    /// returns `Empty` once `wait` lapses with nothing queued instead of
+    /// blocking, so the caller can interleave completion reaping. The
+    /// batching-window semantics after the first request are identical.
+    pub fn poll_batch(&self, wait: Duration) -> BatchPoll {
+        let wait_end = Instant::now() + wait;
+        loop {
+            // Wait (bounded) for the first request.
+            loop {
+                if self.depth.load(Ordering::SeqCst) > 0 {
+                    break;
+                }
+                if self.closed.load(Ordering::SeqCst) {
+                    return BatchPoll::Closed;
+                }
+                if Instant::now() >= wait_end {
+                    return BatchPoll::Empty;
+                }
+                self.park(Some(wait_end), true);
+            }
+            self.fill_window();
+            let batch = self.drain(self.cfg.max_batch);
+            if !batch.is_empty() {
+                return BatchPoll::Batch(batch);
+            }
+            if self.closed.load(Ordering::SeqCst) && self.depth.load(Ordering::SeqCst) == 0 {
+                return BatchPoll::Closed;
+            }
+            if Instant::now() >= wait_end {
+                return BatchPoll::Empty; // sibling won the race; budget spent
+            }
         }
     }
 }
@@ -635,5 +733,65 @@ mod tests {
         let want: Vec<u64> = (0..PRODUCERS as u64 * PER_PRODUCER).collect();
         assert_eq!(seen, want, "each request served exactly once");
         assert_eq!(b.depth(), 0);
+    }
+
+    #[test]
+    fn poll_batch_times_out_empty_then_delivers() {
+        let b = Batcher::new(BatcherConfig {
+            window: Duration::from_millis(0),
+            ..BatcherConfig::default()
+        });
+        let t0 = Instant::now();
+        assert!(matches!(
+            b.poll_batch(Duration::from_millis(20)),
+            BatchPoll::Empty
+        ));
+        assert!(t0.elapsed() >= Duration::from_millis(15), "waited the budget");
+        let (r, _x) = req(1, 1000);
+        b.push(r).unwrap();
+        match b.poll_batch(Duration::from_millis(20)) {
+            BatchPoll::Batch(batch) => assert_eq!(batch.len(), 1),
+            other => panic!("expected a batch, got {other:?}"),
+        }
+        b.close();
+        assert!(matches!(b.poll_batch(Duration::ZERO), BatchPoll::Closed));
+    }
+
+    #[test]
+    fn poll_batch_parked_waiter_is_woken_by_push() {
+        let b = Arc::new(Batcher::new(BatcherConfig {
+            window: Duration::from_millis(0),
+            ..BatcherConfig::default()
+        }));
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || b2.poll_batch(Duration::from_secs(10)));
+        std::thread::sleep(Duration::from_millis(10));
+        let t0 = Instant::now();
+        let (r, _x) = req(1, 1000);
+        b.push(r).unwrap();
+        match h.join().unwrap() {
+            BatchPoll::Batch(batch) => assert_eq!(batch[0].id, 1),
+            other => panic!("expected a batch, got {other:?}"),
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "push woke the parked poller, not the timeout"
+        );
+    }
+
+    #[test]
+    fn close_wakes_every_parked_worker() {
+        let b = Arc::new(Batcher::new(BatcherConfig::default()));
+        let workers: Vec<_> = (0..4)
+            .map(|_| {
+                let b = b.clone();
+                std::thread::spawn(move || b.next_batch())
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(20));
+        b.close();
+        for h in workers {
+            assert!(h.join().unwrap().is_none(), "woken and drained to None");
+        }
     }
 }

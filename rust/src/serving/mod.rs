@@ -15,8 +15,10 @@ mod request;
 mod router;
 mod server;
 
-pub use batcher::{Batcher, BatcherConfig, PushRefusal};
+pub use batcher::{BatchPoll, Batcher, BatcherConfig, PushRefusal};
 pub use metrics::{LatencyStats, Metrics, MetricsSnapshot};
-pub use request::{InferBackend, InferenceRequest, InferenceResponse};
+pub use request::{
+    InferBackend, InferenceRequest, InferenceResponse, PipelineOutcome, PipelinedBackend,
+};
 pub use router::{PlanRouter, RoutePolicy, Router};
 pub use server::{BackendFactory, LaneSpec, Server, ServerConfig, SubmitError};

@@ -52,6 +52,46 @@ pub trait InferBackend {
     /// Run a batch: `images.len() == n * image_elems()`; returns
     /// `n * classes()` logits.
     fn infer(&self, images: &[f32], n: usize) -> crate::Result<Vec<f32>>;
+    /// Submit-then-reap surface, if this backend supports keeping several
+    /// batches in flight (queue-pair transports do). `None` keeps the
+    /// worker on the classic blocking loop.
+    fn pipelined(&self) -> Option<&dyn PipelinedBackend> {
+        None
+    }
+}
+
+/// Terminal outcome of one pipelined batch, as seen by the worker loop.
+#[derive(Debug)]
+pub enum PipelineOutcome {
+    /// Verified logits (`n * classes` values).
+    Done(Vec<f32>),
+    /// Transient loss (timeout / corrupt completion): the worker still
+    /// holds the source requests and may resubmit within its retry budget.
+    Retry,
+    /// Terminal failure for this batch.
+    Failed(String),
+}
+
+/// A backend that accepts multiple outstanding batches. Each submit gets a
+/// ticket; `reap_batches` reports each ticket's outcome **exactly once**
+/// (duplicate device completions are deduplicated below this trait).
+pub trait PipelinedBackend {
+    /// Target number of batches to keep in flight.
+    fn depth(&self) -> usize;
+    /// Resubmissions allowed per batch after a `Retry` outcome.
+    fn max_retries(&self) -> usize;
+    /// Submit a batch of `n` images; `fill` writes the flattened payload
+    /// directly into the transfer buffer (zero-copy assembly). Errors of
+    /// kind `Error::Transport(PoolExhausted | RingFull)` are backpressure:
+    /// reap, then resubmit.
+    fn submit_batch(
+        &self,
+        n: usize,
+        deadline: Instant,
+        fill: &mut dyn FnMut(&mut [f32]),
+    ) -> crate::Result<u64>;
+    /// Collect finished tickets, blocking up to `wait` if none are ready.
+    fn reap_batches(&self, wait: Duration) -> Vec<(u64, PipelineOutcome)>;
 }
 
 impl InferBackend for crate::runtime::ModelExecutor {

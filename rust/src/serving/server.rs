@@ -19,13 +19,14 @@
 //! lane (make-before-break). Lane indices are stable: retired lanes leave
 //! a tombstone slot and indices are never reused.
 
-use super::batcher::PushRefusal;
+use super::batcher::{BatchPoll, PushRefusal};
 use super::{
     Batcher, BatcherConfig, InferBackend, InferenceRequest, InferenceResponse, Metrics,
-    PlanRouter, RoutePolicy,
+    PipelineOutcome, PipelinedBackend, PlanRouter, RoutePolicy,
 };
 use crate::fleet::SloClass;
 use crate::util::SnapCell;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, RwLock};
 use std::thread::JoinHandle;
@@ -202,7 +203,19 @@ impl Server {
                     std::thread::Builder::new()
                         .name(format!("superlip-lane{lane_idx}-worker{wid}"))
                         .spawn(move || match factory() {
-                            Ok(backend) => worker_loop(&*backend, &b, &g, &lm, &r, lane_idx),
+                            Ok(backend) => {
+                                // Backends with a submit-then-reap surface
+                                // (queue-pair transports) get the pipelined
+                                // loop; everything else keeps the classic
+                                // blocking loop bit-identically.
+                                if let Some(pipe) = backend.pipelined() {
+                                    worker_loop_pipelined(
+                                        &*backend, pipe, &b, &g, &lm, &r, lane_idx,
+                                    );
+                                } else {
+                                    worker_loop(&*backend, &b, &g, &lm, &r, lane_idx);
+                                }
+                            }
                             Err(e) => {
                                 eprintln!("lane {lane_idx} worker {wid}: backend init failed: {e}");
                                 // A lane whose LAST worker failed to start must
@@ -616,6 +629,189 @@ fn worker_loop(
     }
 }
 
+/// One batch in flight (or awaiting submission) on the pipelined path: the
+/// worker retains the requests so a lost completion can be resubmitted
+/// from their images.
+struct InFlightBatch {
+    reqs: Vec<InferenceRequest>,
+    retries: usize,
+    /// Backpressure patience bound: a chunk that cannot be (re)submitted
+    /// by this instant fails closed (complete + disconnect) instead of
+    /// wedging the worker — a stalled device must never block teardown.
+    give_up: Instant,
+}
+
+/// Submit-then-reap worker loop: keeps up to `pipe.depth()` batches in
+/// flight on a queue-pair transport, interleaving batcher polls with
+/// completion reaping instead of blocking a full round trip per batch.
+///
+/// Exactly-one-response on every path: completions arrive at most once per
+/// ticket (the transport dedups duplicates by sequence number), the worker
+/// calls `router.complete(lane)` exactly once per request — BEFORE the
+/// reply, same as the blocking loop — and a failed or abandoned chunk
+/// drops its reply senders so clients observe a disconnect, never a hang.
+fn worker_loop_pipelined(
+    backend: &dyn InferBackend,
+    pipe: &dyn PipelinedBackend,
+    batcher: &Batcher,
+    metrics: &Metrics,
+    lane_metrics: &Metrics,
+    router: &PlanRouter,
+    lane: usize,
+) {
+    /// How long a chunk may wait out transport backpressure before it
+    /// fails closed (covers a full retry budget of reap timeouts on any
+    /// sane config; a wedged device converts to client disconnects at
+    /// this cadence instead of an unbounded pile-up).
+    const SUBMIT_PATIENCE: Duration = Duration::from_secs(1);
+    /// Doorbell wait while work is outstanding.
+    const REAP_WAIT: Duration = Duration::from_millis(1);
+    /// Batcher park while fully idle.
+    const IDLE_POLL: Duration = Duration::from_millis(5);
+
+    let elems = backend.image_elems();
+    let classes = backend.classes();
+    let max_batch = backend.max_batch().max(1);
+    let depth = pipe.depth().max(1);
+    let max_retries = pipe.max_retries();
+    let mut inflight: HashMap<u64, InFlightBatch> = HashMap::new();
+    let mut pending: VecDeque<InFlightBatch> = VecDeque::new();
+    let mut closed = false;
+
+    let fail_chunk = |reqs: Vec<InferenceRequest>| {
+        // Complete-then-disconnect, mirroring the blocking loop's error
+        // path: receivers observe a closed channel, never a hang.
+        for _ in &reqs {
+            router.complete(lane);
+        }
+        drop(reqs);
+    };
+
+    loop {
+        // 1) Reap finished tickets. Wait on the completion doorbell only
+        //    when something is actually outstanding.
+        let wait = if inflight.is_empty() {
+            Duration::ZERO
+        } else {
+            REAP_WAIT
+        };
+        for (ticket, outcome) in pipe.reap_batches(wait) {
+            let Some(mut fl) = inflight.remove(&ticket) else {
+                continue; // ticket already resolved (defensive)
+            };
+            match outcome {
+                PipelineOutcome::Done(logits) => {
+                    let n = fl.reqs.len();
+                    if logits.len() != n * classes {
+                        fail_chunk(fl.reqs);
+                        continue;
+                    }
+                    let now = Instant::now();
+                    for (i, req) in fl.reqs.iter().enumerate() {
+                        let latency = now - req.enqueued;
+                        let deadline_met = now <= req.deadline;
+                        metrics.record_class(latency, n, deadline_met, req.class);
+                        lane_metrics.record_class(latency, n, deadline_met, req.class);
+                        // Un-account BEFORE replying (same invariant as the
+                        // blocking loop).
+                        router.complete(lane);
+                        let _ = req.reply.send(InferenceResponse {
+                            id: req.id,
+                            logits: logits[i * classes..(i + 1) * classes].to_vec(),
+                            latency,
+                            batch: n,
+                            deadline_met,
+                        });
+                    }
+                }
+                PipelineOutcome::Retry => {
+                    // Dropped or corrupt completion: the requests are still
+                    // ours — resubmit under a fresh ticket within budget.
+                    if fl.retries >= max_retries {
+                        fail_chunk(fl.reqs);
+                    } else {
+                        fl.retries += 1;
+                        fl.give_up = Instant::now() + SUBMIT_PATIENCE;
+                        pending.push_back(fl);
+                    }
+                }
+                PipelineOutcome::Failed(_) => fail_chunk(fl.reqs),
+            }
+        }
+        // 2) Push pending chunks (resubmits first, then admitted work)
+        //    while there is pipeline capacity. Typed backpressure leaves
+        //    the chunk queued for after the next reap frees a buffer.
+        while inflight.len() < depth {
+            let Some(fl) = pending.pop_front() else {
+                break;
+            };
+            let n = fl.reqs.len();
+            let deadline = fl
+                .reqs
+                .iter()
+                .map(|r| r.deadline)
+                .min()
+                .unwrap_or_else(Instant::now);
+            let mut fill = |dst: &mut [f32]| {
+                for (i, req) in fl.reqs.iter().enumerate() {
+                    debug_assert_eq!(req.image.len(), elems);
+                    dst[i * elems..(i + 1) * elems].copy_from_slice(&req.image);
+                }
+            };
+            match pipe.submit_batch(n, deadline, &mut fill) {
+                Ok(ticket) => {
+                    inflight.insert(ticket, fl);
+                }
+                Err(crate::Error::Transport(
+                    crate::transport::TransportError::PoolExhausted { .. }
+                    | crate::transport::TransportError::RingFull { .. },
+                )) => {
+                    if Instant::now() >= fl.give_up {
+                        fail_chunk(fl.reqs);
+                    } else {
+                        pending.push_front(fl);
+                        if inflight.is_empty() {
+                            // Nothing to reap but buffers stranded in the
+                            // device (stall): nap instead of spinning.
+                            std::thread::sleep(Duration::from_micros(100));
+                        }
+                    }
+                    break;
+                }
+                Err(_) => fail_chunk(fl.reqs),
+            }
+        }
+        // 3) Admit new work once the backlog is submitted and capacity
+        //    remains; park briefly in the batcher only when fully idle.
+        if !closed && pending.is_empty() && inflight.len() < depth {
+            let poll = if inflight.is_empty() {
+                IDLE_POLL
+            } else {
+                Duration::ZERO
+            };
+            match batcher.poll_batch(poll) {
+                BatchPoll::Batch(mut batch) => {
+                    while !batch.is_empty() {
+                        let take = batch.len().min(max_batch);
+                        let rest = batch.split_off(take);
+                        pending.push_back(InFlightBatch {
+                            reqs: batch,
+                            retries: 0,
+                            give_up: Instant::now() + SUBMIT_PATIENCE,
+                        });
+                        batch = rest;
+                    }
+                }
+                BatchPoll::Empty => {}
+                BatchPoll::Closed => closed = true,
+            }
+        }
+        if closed && inflight.is_empty() && pending.is_empty() {
+            return;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -990,6 +1186,30 @@ mod tests {
             assert!(rx.recv_timeout(Duration::from_secs(5)).is_ok());
         });
         srv.shutdown();
+    }
+
+    #[test]
+    fn pipelined_transport_lane_serves_correct_results() {
+        // A queue-pair transport wrapping the stub: the worker should take
+        // the submit-then-reap loop and still produce identical results.
+        let inner = stub(0);
+        let factory = crate::transport::TransportBackend::shim_factory(
+            crate::transport::TransportConfig::default(),
+            inner,
+        );
+        let mut cfg = ServerConfig::default();
+        cfg.batcher.window = Duration::from_millis(1);
+        let srv = Server::start(vec![factory], cfg);
+        let rxs: Vec<_> = (0..20)
+            .map(|i| srv.submit(vec![i as f32; 4]).unwrap())
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert_eq!(r.logits, vec![4.0 * i as f32, 4.0 * i as f32 + 1.0, 4.0 * i as f32 + 2.0]);
+        }
+        assert_eq!(srv.lane_load().iter().sum::<u64>(), 0);
+        let m = srv.shutdown();
+        assert_eq!(m.completed(), 20, "exactly one response each");
     }
 
     #[test]

@@ -1,0 +1,376 @@
+//! `TransportBackend` — the client side of a queue pair, adapted to both
+//! backend surfaces the server knows:
+//!
+//! * the synchronous `InferBackend` (submit one descriptor, reap until it
+//!   completes, bounded retry on timeout/corruption) so a shim-backed lane
+//!   is a drop-in for any existing lane, and
+//! * the `PipelinedBackend` submit-then-reap surface, which the server's
+//!   pipelined worker loop drives to keep `pipeline_depth` batches in
+//!   flight per lane instead of blocking per batch.
+//!
+//! Robustness contract (what the fault-plan soak pins): completions are
+//! deduplicated by sequence number — an in-flight seq is removed from the
+//! table on first delivery, so a duplicated or post-timeout straggler
+//! completion finds no entry, is counted, and is dropped (its buffer
+//! recycles); therefore the worker sees **at most one outcome per
+//! submitted descriptor** and `PlanRouter::complete` can never be called
+//! twice for one request (the PR-7 saturating-CAS path stays a backstop,
+//! not a crutch).
+
+use super::pool::BufferPool;
+use super::shim::{BackendMeta, ShimDevice, ShimHandle};
+use super::{
+    checksum_f32, Completion, CompletionStatus, Descriptor, QueuePair, TransportConfig,
+    TransportError,
+};
+use crate::serving::{BackendFactory, InferBackend, PipelineOutcome, PipelinedBackend};
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Per-attempt outcome of one submitted descriptor.
+#[derive(Debug)]
+pub enum ReapOutcome {
+    /// Verified logits (`n * classes` values).
+    Ok(Vec<f32>),
+    /// Completion arrived but failed its checksum — retryable.
+    Corrupt,
+    /// No completion within the reap timeout — retryable (the caller
+    /// still holds the source payload and resubmits under a fresh seq).
+    TimedOut,
+    /// The device-side backend failed — terminal.
+    DeviceFailed(String),
+}
+
+/// Client-side transport counters (monotone; diagnostics + soak asserts).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TransportStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub timeouts: u64,
+    pub corrupt: u64,
+    /// Duplicate or post-timeout straggler completions discarded by the
+    /// seq dedup (exactly-once enforcement).
+    pub ignored: u64,
+}
+
+struct Pending {
+    n: usize,
+    timeout_at: Instant,
+}
+
+/// `InferBackend` over a queue pair serviced by a shim device thread.
+/// Owned by exactly one worker thread (like every backend), so client
+/// state lives in `Cell`/`RefCell`.
+pub struct TransportBackend {
+    meta: BackendMeta,
+    cfg: TransportConfig,
+    qp: Arc<QueuePair>,
+    pool: BufferPool,
+    device: Option<ShimHandle>,
+    next_seq: Cell<u64>,
+    cq_seen: Cell<u64>,
+    inflight: RefCell<HashMap<u64, Pending>>,
+    stats: RefCell<TransportStats>,
+}
+
+impl TransportBackend {
+    /// Bring up a queue pair + shim device over `factory` (the wrapped
+    /// backend is constructed on the device thread; its metadata arrives
+    /// through a one-shot channel). Errors if the inner factory fails.
+    pub fn over_shim(cfg: TransportConfig, factory: BackendFactory) -> crate::Result<Self> {
+        let qp = Arc::new(QueuePair::new(cfg.ring_capacity));
+        let (device, meta_rx) =
+            ShimDevice::spawn(qp.clone(), factory, cfg.link, cfg.faults.clone());
+        let meta = meta_rx
+            .recv()
+            .map_err(|_| crate::Error::Runtime("shim device died during bring-up".into()))??;
+        let pool = BufferPool::new(cfg.effective_pool_buffers(), meta.max_batch * meta.elems);
+        Ok(TransportBackend {
+            meta,
+            cfg,
+            qp,
+            pool,
+            device: Some(device),
+            next_seq: Cell::new(0),
+            cq_seen: Cell::new(0),
+            inflight: RefCell::new(HashMap::new()),
+            stats: RefCell::new(TransportStats::default()),
+        })
+    }
+
+    /// A `BackendFactory` that wraps `inner` behind a shim queue pair —
+    /// what `fleet`/`cli` plug into existing lane construction.
+    pub fn shim_factory(cfg: TransportConfig, inner: BackendFactory) -> BackendFactory {
+        Box::new(move || {
+            Ok(Box::new(TransportBackend::over_shim(cfg, inner)?) as Box<dyn InferBackend>)
+        })
+    }
+
+    /// Descriptors currently awaiting completion.
+    pub fn in_flight(&self) -> usize {
+        self.inflight.borrow().len()
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> TransportStats {
+        *self.stats.borrow()
+    }
+
+    /// The registered buffer pool (clone it to watch recycling from tests).
+    pub fn pool(&self) -> &BufferPool {
+        &self.pool
+    }
+
+    /// Descriptors the shim device serviced so far.
+    pub fn device_serviced(&self) -> u64 {
+        self.device.as_ref().map_or(0, |d| d.serviced())
+    }
+
+    /// Submit one batch: acquire a registered buffer, let `fill` write the
+    /// payload directly into it (zero intermediate copies), push the
+    /// sequence-numbered descriptor, ring the doorbell. Backpressure
+    /// (`PoolExhausted` / `RingFull`) is typed — reap and resubmit.
+    pub fn submit_with(
+        &self,
+        n: usize,
+        deadline: Instant,
+        fill: &mut dyn FnMut(&mut [f32]),
+    ) -> std::result::Result<u64, TransportError> {
+        assert!(n >= 1 && n <= self.meta.max_batch, "batch size {n} out of range");
+        if self.qp.is_closed() {
+            return Err(TransportError::Closed);
+        }
+        let mut payload = self.pool.try_acquire()?;
+        payload.reset_len(n * self.meta.elems);
+        fill(&mut payload);
+        let checksum = checksum_f32(&payload);
+        let seq = self.next_seq.get();
+        let desc = Descriptor {
+            seq,
+            n,
+            elems: self.meta.elems,
+            deadline,
+            checksum,
+            payload,
+        };
+        match self.qp.sq.try_push(desc) {
+            Ok(()) => {
+                self.next_seq.set(seq + 1);
+                self.inflight.borrow_mut().insert(
+                    seq,
+                    Pending {
+                        n,
+                        timeout_at: Instant::now() + self.cfg.reap_timeout,
+                    },
+                );
+                self.stats.borrow_mut().submitted += 1;
+                self.qp.sq_bell.ring();
+                Ok(seq)
+            }
+            Err(desc_back) => {
+                // The payload buffer recycles as the descriptor drops.
+                drop(desc_back);
+                Err(TransportError::RingFull {
+                    capacity: self.qp.sq.capacity(),
+                })
+            }
+        }
+    }
+
+    /// Collect per-descriptor outcomes: verified completions, checksum
+    /// failures, and reap-timeout expiries. Blocks up to `wait` (on the
+    /// completion doorbell) only when nothing is immediately ready.
+    pub fn reap(&self, wait: Duration) -> Vec<(u64, ReapOutcome)> {
+        let mut out = Vec::new();
+        self.drain_cq(&mut out);
+        self.check_timeouts(&mut out);
+        if out.is_empty() && wait > Duration::ZERO && !self.inflight.borrow().is_empty() {
+            let latest = self.qp.cq_bell.wait(self.cq_seen.get(), wait);
+            self.cq_seen.set(latest);
+            self.drain_cq(&mut out);
+            self.check_timeouts(&mut out);
+        }
+        out
+    }
+
+    fn drain_cq(&self, out: &mut Vec<(u64, ReapOutcome)>) {
+        // Snapshot the bell BEFORE popping: a completion pushed after this
+        // snapshot re-rings relative to it, so `wait` never sleeps past
+        // one.
+        self.cq_seen.set(self.qp.cq_bell.count());
+        while let Some(c) = self.qp.cq.try_pop() {
+            let Completion {
+                seq,
+                status,
+                payload,
+                logits,
+                checksum,
+            } = c;
+            let pending = self.inflight.borrow_mut().remove(&seq);
+            let Some(p) = pending else {
+                // Duplicate or post-timeout straggler: the first delivery
+                // (or the timeout) already consumed this seq. Exactly-once
+                // means this copy is counted and dropped.
+                self.stats.borrow_mut().ignored += 1;
+                drop(payload);
+                continue;
+            };
+            match status {
+                CompletionStatus::Failed(msg) => {
+                    out.push((seq, ReapOutcome::DeviceFailed(msg)));
+                }
+                CompletionStatus::Ok => {
+                    let intact = logits.len() == p.n * self.meta.classes
+                        && checksum_f32(&logits) == checksum;
+                    if intact {
+                        self.stats.borrow_mut().completed += 1;
+                        out.push((seq, ReapOutcome::Ok(logits)));
+                    } else {
+                        self.stats.borrow_mut().corrupt += 1;
+                        out.push((seq, ReapOutcome::Corrupt));
+                    }
+                }
+            }
+            drop(payload);
+        }
+    }
+
+    fn check_timeouts(&self, out: &mut Vec<(u64, ReapOutcome)>) {
+        let now = Instant::now();
+        let mut inflight = self.inflight.borrow_mut();
+        let expired: Vec<u64> = inflight
+            .iter()
+            .filter(|(_, p)| now >= p.timeout_at)
+            .map(|(&s, _)| s)
+            .collect();
+        for seq in expired {
+            inflight.remove(&seq);
+            self.stats.borrow_mut().timeouts += 1;
+            out.push((seq, ReapOutcome::TimedOut));
+        }
+    }
+
+    /// Submit with bounded patience for transient backpressure. Only safe
+    /// on the synchronous path (≤ 1 descriptor in flight, so the interim
+    /// `reap` can't swallow outcomes the caller needed).
+    fn submit_sync(
+        &self,
+        n: usize,
+        fill: &mut dyn FnMut(&mut [f32]),
+    ) -> crate::Result<u64> {
+        let give_up = Instant::now() + self.cfg.reap_timeout;
+        loop {
+            let deadline = Instant::now() + self.cfg.reap_timeout;
+            match self.submit_with(n, deadline, fill) {
+                Ok(seq) => return Ok(seq),
+                Err(
+                    e @ (TransportError::PoolExhausted { .. } | TransportError::RingFull { .. }),
+                ) => {
+                    if Instant::now() >= give_up {
+                        return Err(e.into());
+                    }
+                    std::thread::sleep(Duration::from_micros(100));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+}
+
+impl Drop for TransportBackend {
+    fn drop(&mut self) {
+        self.qp.close();
+        // Joining the device drains the submit ring; any completions it
+        // pushed before exiting recycle here — the pool ends fully idle.
+        self.device.take();
+        while let Some(c) = self.qp.cq.try_pop() {
+            drop(c);
+        }
+        while let Some(d) = self.qp.sq.try_pop() {
+            drop(d);
+        }
+    }
+}
+
+impl InferBackend for TransportBackend {
+    fn image_elems(&self) -> usize {
+        self.meta.elems
+    }
+    fn classes(&self) -> usize {
+        self.meta.classes
+    }
+    fn max_batch(&self) -> usize {
+        self.meta.max_batch
+    }
+    /// Synchronous path: submit, reap until our seq resolves, retry on
+    /// timeout/corruption within the budget. Drop-in for any lane.
+    fn infer(&self, images: &[f32], n: usize) -> crate::Result<Vec<f32>> {
+        debug_assert_eq!(images.len(), n * self.meta.elems);
+        let mut fill = |dst: &mut [f32]| dst.copy_from_slice(&images[..dst.len()]);
+        let mut retries = 0usize;
+        let mut my = self.submit_sync(n, &mut fill)?;
+        loop {
+            for (seq, outcome) in self.reap(Duration::from_micros(200)) {
+                if seq != my {
+                    continue; // straggler of an abandoned retry — already untracked
+                }
+                match outcome {
+                    ReapOutcome::Ok(logits) => return Ok(logits),
+                    ReapOutcome::Corrupt => {
+                        if retries >= self.cfg.max_retries {
+                            return Err(TransportError::Corrupt { seq: my }.into());
+                        }
+                        retries += 1;
+                        my = self.submit_sync(n, &mut fill)?;
+                    }
+                    ReapOutcome::TimedOut => {
+                        if retries >= self.cfg.max_retries {
+                            return Err(TransportError::Timeout { seq: my, retries }.into());
+                        }
+                        retries += 1;
+                        my = self.submit_sync(n, &mut fill)?;
+                    }
+                    ReapOutcome::DeviceFailed(msg) => return Err(crate::Error::Runtime(msg)),
+                }
+            }
+            if self.qp.is_closed() && self.inflight.borrow().is_empty() {
+                return Err(TransportError::Closed.into());
+            }
+        }
+    }
+    fn pipelined(&self) -> Option<&dyn PipelinedBackend> {
+        Some(self)
+    }
+}
+
+impl PipelinedBackend for TransportBackend {
+    fn depth(&self) -> usize {
+        self.cfg.pipeline_depth.max(1)
+    }
+    fn max_retries(&self) -> usize {
+        self.cfg.max_retries
+    }
+    fn submit_batch(
+        &self,
+        n: usize,
+        deadline: Instant,
+        fill: &mut dyn FnMut(&mut [f32]),
+    ) -> crate::Result<u64> {
+        self.submit_with(n, deadline, fill).map_err(crate::Error::from)
+    }
+    fn reap_batches(&self, wait: Duration) -> Vec<(u64, PipelineOutcome)> {
+        self.reap(wait)
+            .into_iter()
+            .map(|(seq, o)| {
+                let mapped = match o {
+                    ReapOutcome::Ok(logits) => PipelineOutcome::Done(logits),
+                    ReapOutcome::Corrupt | ReapOutcome::TimedOut => PipelineOutcome::Retry,
+                    ReapOutcome::DeviceFailed(m) => PipelineOutcome::Failed(m),
+                };
+                (seq, mapped)
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,244 @@
+//! DMA-style transport layer under every serving lane.
+//!
+//! Super-LIP's core argument (§4) is that dedicated inter-FPGA links
+//! relieve the shared memory bus; the serving-stack analog is that compute
+//! dispatch should cross a *device boundary* — submission/completion rings
+//! over registered buffers — rather than a synchronous function call, so
+//! the same seam a real XDMA or PJRT device plugs into is exercised in CI
+//! by a software shim (the `xdma_shim.c` pattern: fake the device under
+//! the production API).
+//!
+//! Layout:
+//!
+//! * [`ring`] — bounded SPSC `Ring<T>` + `Doorbell` (the queue-pair
+//!   substrate).
+//! * [`pool`] — `BufferPool` of registered transfer buffers; batch
+//!   assembly writes payloads directly into a pooled buffer (zero copies
+//!   between batcher and device), exhaustion is typed backpressure.
+//! * [`shim`] — `ShimDevice`: an in-process device thread servicing a
+//!   queue pair under a configurable latency/bandwidth `LinkModel` and an
+//!   optional `FaultPlan` (drop / duplicate / reorder / corrupt / stall).
+//! * [`backend`] — `TransportBackend`: `InferBackend` over a queue pair
+//!   with sequence-numbered descriptors, per-descriptor deadlines,
+//!   timeout-based reaping and bounded retry; also the submit-then-reap
+//!   `PipelinedBackend` surface the server's pipelined worker loop drives.
+
+pub mod backend;
+pub mod pool;
+pub mod ring;
+pub mod shim;
+
+pub use backend::{ReapOutcome, TransportBackend, TransportStats};
+pub use pool::{BufferPool, PooledBuf};
+pub use ring::{Doorbell, Ring};
+pub use shim::{BackendMeta, FaultPlan, LinkModel, ShimDevice, ShimHandle};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+/// Typed transport failures. Backpressure variants (`PoolExhausted`,
+/// `RingFull`) are retry-after-reap conditions; the rest are per-descriptor
+/// or device-level outcomes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TransportError {
+    /// Every registered buffer is in flight — reap completions first.
+    PoolExhausted { total: usize },
+    /// The submit ring is full — reap completions first.
+    RingFull { capacity: usize },
+    /// A descriptor saw no completion within the reap timeout (dropped
+    /// completion or wedged device), and the retry budget is spent.
+    Timeout { seq: u64, retries: usize },
+    /// Completion payload failed its checksum after the retry budget.
+    Corrupt { seq: u64 },
+    /// The queue pair is shut down.
+    Closed,
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::PoolExhausted { total } => {
+                write!(f, "buffer pool exhausted (all {total} buffers in flight)")
+            }
+            TransportError::RingFull { capacity } => {
+                write!(f, "submit ring full (capacity {capacity})")
+            }
+            TransportError::Timeout { seq, retries } => {
+                write!(f, "descriptor seq {seq} timed out after {retries} retries")
+            }
+            TransportError::Corrupt { seq } => {
+                write!(f, "descriptor seq {seq} completion failed checksum")
+            }
+            TransportError::Closed => write!(f, "queue pair closed"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+impl From<TransportError> for crate::Error {
+    fn from(e: TransportError) -> Self {
+        crate::Error::Transport(e)
+    }
+}
+
+/// Transport tuning — threaded from the CLI / scenario configs down to
+/// each lane's queue pair.
+#[derive(Debug, Clone, Copy)]
+pub struct TransportConfig {
+    /// Slots per ring (submit and completion each).
+    pub ring_capacity: usize,
+    /// Registered buffers in the pool; 0 = auto (`pipeline_depth + 2`).
+    pub pool_buffers: usize,
+    /// Max descriptors a pipelined worker keeps in flight.
+    pub pipeline_depth: usize,
+    /// How long a descriptor may sit unreaped before it counts as lost.
+    pub reap_timeout: Duration,
+    /// Resubmissions allowed per batch after a timeout or corrupt
+    /// completion.
+    pub max_retries: usize,
+    /// Modeled link latency/bandwidth applied by the shim device.
+    pub link: LinkModel,
+    /// Fault injection (tests only; `None` in production paths).
+    pub faults: Option<FaultPlan>,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        TransportConfig {
+            ring_capacity: 16,
+            pool_buffers: 0,
+            pipeline_depth: 4,
+            reap_timeout: Duration::from_millis(250),
+            max_retries: 3,
+            link: LinkModel::default(),
+            faults: None,
+        }
+    }
+}
+
+impl TransportConfig {
+    /// Effective pool size (`pool_buffers`, or auto from the depth).
+    pub fn effective_pool_buffers(&self) -> usize {
+        if self.pool_buffers > 0 {
+            self.pool_buffers
+        } else {
+            self.pipeline_depth.max(1) + 2
+        }
+    }
+}
+
+/// One submitted transfer: a sequence-numbered batch riding a pooled
+/// payload buffer.
+#[derive(Debug)]
+pub struct Descriptor {
+    /// Monotone per-queue-pair sequence number.
+    pub seq: u64,
+    /// Images in the batch.
+    pub n: usize,
+    /// f32 elements per image (`payload.len() == n * elems`).
+    pub elems: usize,
+    /// The batch's most urgent request deadline (device hint + reap bound).
+    pub deadline: Instant,
+    /// FNV-1a over the payload bits — the device verifies the "DMA".
+    pub checksum: u64,
+    pub payload: PooledBuf,
+}
+
+/// Device-side verdict riding the completion ring.
+#[derive(Debug, Clone)]
+pub enum CompletionStatus {
+    /// Compute succeeded; `logits` + `checksum` are valid.
+    Ok,
+    /// The device-side backend failed (terminal for this descriptor).
+    Failed(String),
+}
+
+/// One completed transfer. The input `payload` buffer rides back so the
+/// client recycles it (or reuses it verbatim for a retry); a duplicated
+/// completion (fault injection) carries `payload: None` — the real buffer
+/// already went back with the first copy.
+#[derive(Debug)]
+pub struct Completion {
+    pub seq: u64,
+    pub status: CompletionStatus,
+    pub payload: Option<PooledBuf>,
+    /// `n * classes` logits (empty on failure).
+    pub logits: Vec<f32>,
+    /// FNV-1a over the logit bits as computed by the device — a mismatch
+    /// at the client means the completion path corrupted the payload.
+    pub checksum: u64,
+}
+
+/// A submit ring + completion ring pair with their doorbells — the
+/// interface a real device driver would mmap.
+pub struct QueuePair {
+    pub sq: Ring<Descriptor>,
+    pub cq: Ring<Completion>,
+    /// Rung by the client after submit-ring pushes; the device waits on it.
+    pub sq_bell: Doorbell,
+    /// Rung by the device after completion-ring pushes; the client waits.
+    pub cq_bell: Doorbell,
+    closed: AtomicBool,
+}
+
+impl QueuePair {
+    pub fn new(ring_capacity: usize) -> Self {
+        QueuePair {
+            sq: Ring::new(ring_capacity),
+            cq: Ring::new(ring_capacity),
+            sq_bell: Doorbell::new(),
+            cq_bell: Doorbell::new(),
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    /// Tear down: the device drains and exits, clients get `Closed`.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        self.sq_bell.ring();
+        self.cq_bell.ring();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::SeqCst)
+    }
+}
+
+/// FNV-1a over f32 bit patterns — the integrity check both ring directions
+/// carry (cheap, deterministic, and order-sensitive).
+pub fn checksum_f32(xs: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &x in xs {
+        for b in x.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checksum_is_order_and_value_sensitive() {
+        let a = checksum_f32(&[1.0, 2.0, 3.0]);
+        assert_eq!(a, checksum_f32(&[1.0, 2.0, 3.0]), "deterministic");
+        assert_ne!(a, checksum_f32(&[3.0, 2.0, 1.0]), "order-sensitive");
+        assert_ne!(a, checksum_f32(&[1.0, 2.0, 3.5]), "value-sensitive");
+        assert_ne!(a, checksum_f32(&[1.0, 2.0]), "length-sensitive");
+    }
+
+    #[test]
+    fn queue_pair_close_rings_both_bells() {
+        let qp = QueuePair::new(4);
+        assert!(!qp.is_closed());
+        let (s0, c0) = (qp.sq_bell.count(), qp.cq_bell.count());
+        qp.close();
+        assert!(qp.is_closed());
+        assert_eq!(qp.sq_bell.count(), s0 + 1);
+        assert_eq!(qp.cq_bell.count(), c0 + 1);
+    }
+}

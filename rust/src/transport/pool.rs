@@ -1,0 +1,178 @@
+//! Registered transfer-buffer pool — the software analog of pinned DMA
+//! memory. A fixed set of `Vec<f32>` buffers is allocated once at lane
+//! bring-up; batch assembly writes request payloads straight into an
+//! acquired buffer (no intermediate scratch copy between batcher and
+//! device), the buffer travels through the rings by ownership, and
+//! dropping the `PooledBuf` — on either side, on any path, including
+//! fault-injected ones — recycles it. Exhaustion is typed backpressure
+//! (`TransportError::PoolExhausted`), never a fresh allocation: the pool
+//! gauge (`in_use`) is how tests prove zero descriptor leaks at drain.
+
+use super::TransportError;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+struct PoolShared {
+    /// Recycled buffers, tagged with a stable id so tests can assert
+    /// recycle-before-reuse (an id is never handed out twice concurrently).
+    free: Mutex<Vec<(usize, Vec<f32>)>>,
+    total: usize,
+    buf_capacity: usize,
+    in_use: AtomicUsize,
+}
+
+/// A fixed-size pool of registered transfer buffers. Cloning shares the
+/// pool (both ends of a queue pair hold the same one).
+#[derive(Clone)]
+pub struct BufferPool {
+    shared: Arc<PoolShared>,
+}
+
+impl BufferPool {
+    /// Allocate `buffers` buffers of `buf_capacity` f32s up front.
+    pub fn new(buffers: usize, buf_capacity: usize) -> Self {
+        assert!(buffers >= 1, "pool needs at least one buffer");
+        BufferPool {
+            shared: Arc::new(PoolShared {
+                free: Mutex::new(
+                    (0..buffers)
+                        .map(|id| (id, Vec::with_capacity(buf_capacity)))
+                        .collect(),
+                ),
+                total: buffers,
+                buf_capacity,
+                in_use: AtomicUsize::new(0),
+            }),
+        }
+    }
+
+    fn free_list(&self) -> MutexGuard<'_, Vec<(usize, Vec<f32>)>> {
+        self.shared.free.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Take a buffer, or report typed backpressure when every buffer is in
+    /// flight. The returned buffer is empty (`len == 0`) with its full
+    /// registered capacity intact.
+    pub fn try_acquire(&self) -> std::result::Result<PooledBuf, TransportError> {
+        let popped = self.free_list().pop();
+        match popped {
+            Some((id, data)) => {
+                self.shared.in_use.fetch_add(1, Ordering::SeqCst);
+                Ok(PooledBuf {
+                    id,
+                    data,
+                    shared: self.shared.clone(),
+                })
+            }
+            None => Err(TransportError::PoolExhausted {
+                total: self.shared.total,
+            }),
+        }
+    }
+
+    /// Buffers currently out of the pool (0 = fully recycled).
+    pub fn in_use(&self) -> usize {
+        self.shared.in_use.load(Ordering::SeqCst)
+    }
+
+    /// Pool size chosen at construction.
+    pub fn total(&self) -> usize {
+        self.shared.total
+    }
+
+    /// Registered per-buffer capacity in f32 elements.
+    pub fn buf_capacity(&self) -> usize {
+        self.shared.buf_capacity
+    }
+}
+
+/// An acquired transfer buffer: owned `Vec<f32>` storage that returns to
+/// its pool on drop (cleared, capacity preserved — steady state never
+/// re-allocates).
+pub struct PooledBuf {
+    id: usize,
+    data: Vec<f32>,
+    shared: Arc<PoolShared>,
+}
+
+impl PooledBuf {
+    /// Stable buffer identity (for recycle-before-reuse assertions).
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// Grow to `len` elements (zero-filled) ready for payload assembly.
+    /// Within the registered capacity this never allocates.
+    pub fn reset_len(&mut self, len: usize) {
+        self.data.clear();
+        self.data.resize(len, 0.0);
+    }
+}
+
+impl std::ops::Deref for PooledBuf {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+impl std::ops::DerefMut for PooledBuf {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+}
+
+impl std::fmt::Debug for PooledBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PooledBuf(id={}, len={})", self.id, self.data.len())
+    }
+}
+
+impl Drop for PooledBuf {
+    fn drop(&mut self) {
+        let mut data = std::mem::take(&mut self.data);
+        data.clear();
+        self.shared
+            .free
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push((self.id, data));
+        self.shared.in_use.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exhaustion_is_typed_backpressure() {
+        let pool = BufferPool::new(2, 8);
+        let a = pool.try_acquire().unwrap();
+        let b = pool.try_acquire().unwrap();
+        assert_ne!(a.id(), b.id());
+        assert_eq!(pool.in_use(), 2);
+        match pool.try_acquire() {
+            Err(TransportError::PoolExhausted { total: 2 }) => {}
+            other => panic!("expected PoolExhausted, got {other:?}"),
+        }
+        drop(a);
+        assert_eq!(pool.in_use(), 1);
+        let c = pool.try_acquire().unwrap();
+        drop((b, c));
+        assert_eq!(pool.in_use(), 0, "fully recycled");
+    }
+
+    #[test]
+    fn recycled_buffer_keeps_capacity_and_clears() {
+        let pool = BufferPool::new(1, 16);
+        {
+            let mut b = pool.try_acquire().unwrap();
+            b.reset_len(16);
+            b[3] = 7.0;
+        }
+        let b = pool.try_acquire().unwrap();
+        assert_eq!(b.len(), 0, "recycled buffer comes back empty");
+        assert!(b.data.capacity() >= 16, "registered capacity preserved");
+    }
+}

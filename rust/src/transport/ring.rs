@@ -1,0 +1,251 @@
+//! Fixed-capacity descriptor rings and the doorbell primitive — the
+//! software analog of an XDMA queue pair's submission/completion queues.
+//!
+//! `Ring<T>` is a bounded single-producer / single-consumer ring: one side
+//! of a queue pair is always driven by exactly one thread (the lane worker
+//! owns the submit side, the device thread owns the completion side), so
+//! the ring needs no multi-producer arbitration. Slots sit behind short
+//! per-slot mutexes (the offline image vendors no crossbeam and this crate
+//! avoids `unsafe`); head/tail are monotonically increasing `AtomicU64`
+//! cursors, so wraparound is pure modular indexing and `len` never
+//! ambiguates full vs empty.
+//!
+//! `Doorbell` is the wakeup edge: a monotone ring counter plus a single
+//! registered waiter parked via `std::thread::park_timeout`. Producers pay
+//! one atomic increment and (only when a waiter is registered) one unpark
+//! — the same cheap-when-nobody-sleeps handshake the batcher uses.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Bounded SPSC ring. Capacity is fixed at construction; `try_push` on a
+/// full ring hands the value back (typed backpressure, never blocking).
+pub struct Ring<T> {
+    slots: Box<[Mutex<Option<T>>]>,
+    /// Next slot to pop (monotone; slot index = head % capacity).
+    head: AtomicU64,
+    /// Next slot to push (monotone).
+    tail: AtomicU64,
+}
+
+impl<T> Ring<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "ring needs at least one slot");
+        Ring {
+            slots: (0..capacity).map(|_| Mutex::new(None)).collect(),
+            head: AtomicU64::new(0),
+            tail: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Occupied slots (tail − head). Cursors only move forward, so this is
+    /// exact even across wraparound.
+    pub fn len(&self) -> usize {
+        let tail = self.tail.load(Ordering::Acquire);
+        let head = self.head.load(Ordering::Acquire);
+        tail.saturating_sub(head) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn slot(&self, cursor: u64) -> MutexGuard<'_, Option<T>> {
+        self.slots[(cursor % self.slots.len() as u64) as usize]
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Producer side: enqueue, or hand the value back if the ring is full.
+    pub fn try_push(&self, v: T) -> std::result::Result<(), T> {
+        let tail = self.tail.load(Ordering::Acquire);
+        let head = self.head.load(Ordering::Acquire);
+        if tail.saturating_sub(head) >= self.slots.len() as u64 {
+            return Err(v);
+        }
+        let mut slot = self.slot(tail);
+        debug_assert!(slot.is_none(), "ring slot reused before consumption");
+        *slot = Some(v);
+        drop(slot);
+        // Publish after the payload is in place: the consumer's Acquire
+        // load of `tail` orders after this store.
+        self.tail.store(tail + 1, Ordering::Release);
+        Ok(())
+    }
+
+    /// Consumer side: dequeue the oldest entry, if any.
+    pub fn try_pop(&self) -> Option<T> {
+        let head = self.head.load(Ordering::Acquire);
+        if head == self.tail.load(Ordering::Acquire) {
+            return None;
+        }
+        let v = self.slot(head).take();
+        debug_assert!(v.is_some(), "published ring slot was empty");
+        self.head.store(head + 1, Ordering::Release);
+        v
+    }
+}
+
+/// A monotone wakeup counter with one registered parked waiter. The ring
+/// side calls `ring()` after publishing work; the servicing side calls
+/// `wait(seen, timeout)` and returns when the counter moves past `seen`
+/// (or the timeout lapses — spurious returns are fine, callers re-poll).
+pub struct Doorbell {
+    rung: AtomicU64,
+    waiter: Mutex<Option<std::thread::Thread>>,
+}
+
+impl Default for Doorbell {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Doorbell {
+    pub fn new() -> Self {
+        Doorbell {
+            rung: AtomicU64::new(0),
+            waiter: Mutex::new(None),
+        }
+    }
+
+    fn waiter_slot(&self) -> MutexGuard<'_, Option<std::thread::Thread>> {
+        self.waiter.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Current ring count (pass back into `wait` as `seen`).
+    pub fn count(&self) -> u64 {
+        self.rung.load(Ordering::SeqCst)
+    }
+
+    /// Ring the bell: bump the counter and unpark the waiter, if any.
+    pub fn ring(&self) {
+        self.rung.fetch_add(1, Ordering::SeqCst);
+        let waiter = self.waiter_slot().clone();
+        if let Some(t) = waiter {
+            t.unpark();
+        }
+    }
+
+    /// Park the calling thread until the counter moves past `seen` or
+    /// `timeout` lapses; returns the latest count. Single-waiter: each
+    /// doorbell is owned by exactly one servicing thread.
+    pub fn wait(&self, seen: u64, timeout: Duration) -> u64 {
+        *self.waiter_slot() = Some(std::thread::current());
+        let deadline = Instant::now() + timeout;
+        loop {
+            // Re-check AFTER registering: a `ring()` that missed our
+            // registration published its increment first (SeqCst), so this
+            // load sees it; one that saw us will unpark.
+            let cur = self.rung.load(Ordering::SeqCst);
+            if cur != seen {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            std::thread::park_timeout(deadline - now);
+        }
+        *self.waiter_slot() = None;
+        self.rung.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_across_wraparound() {
+        let r = Ring::new(3);
+        let mut next = 0u64;
+        let mut expect = 0u64;
+        // Push/pop far past capacity so the cursors wrap the slot array
+        // many times over.
+        for _ in 0..50 {
+            while r.try_push(next).is_ok() {
+                next += 1;
+            }
+            assert_eq!(r.len(), 3, "full at capacity");
+            assert!(r.try_push(u64::MAX).is_err(), "full ring refuses");
+            while let Some(v) = r.try_pop() {
+                assert_eq!(v, expect, "strict FIFO");
+                expect += 1;
+            }
+            assert!(r.is_empty());
+        }
+        assert_eq!(next, expect);
+    }
+
+    #[test]
+    fn push_on_full_hands_value_back() {
+        let r = Ring::new(1);
+        r.try_push(7).unwrap();
+        assert_eq!(r.try_push(9), Err(9));
+        assert_eq!(r.try_pop(), Some(7));
+        assert_eq!(r.try_pop(), None);
+    }
+
+    #[test]
+    fn doorbell_wakes_waiter() {
+        let bell = Arc::new(Doorbell::new());
+        let b2 = bell.clone();
+        let seen = bell.count();
+        let h = std::thread::spawn(move || b2.wait(seen, Duration::from_secs(10)));
+        std::thread::sleep(Duration::from_millis(10));
+        bell.ring();
+        let got = h.join().unwrap();
+        assert_eq!(got, seen + 1, "wait observed the ring");
+    }
+
+    #[test]
+    fn doorbell_wait_times_out() {
+        let bell = Doorbell::new();
+        let t0 = Instant::now();
+        let got = bell.wait(bell.count(), Duration::from_millis(20));
+        assert_eq!(got, 0);
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn spsc_threads_conserve_items() {
+        let r = Arc::new(Ring::new(4));
+        let bell = Arc::new(Doorbell::new());
+        const N: u64 = 20_000;
+        let (r2, b2) = (r.clone(), bell.clone());
+        let consumer = std::thread::spawn(move || {
+            let mut got = Vec::with_capacity(N as usize);
+            let mut seen = 0;
+            while got.len() < N as usize {
+                match r2.try_pop() {
+                    Some(v) => got.push(v),
+                    None => seen = b2.wait(seen, Duration::from_millis(1)),
+                }
+            }
+            got
+        });
+        for i in 0..N {
+            let mut v = i;
+            loop {
+                match r.try_push(v) {
+                    Ok(()) => break,
+                    Err(back) => {
+                        v = back;
+                        std::thread::yield_now();
+                    }
+                }
+            }
+            bell.ring();
+        }
+        let got = consumer.join().unwrap();
+        let want: Vec<u64> = (0..N).collect();
+        assert_eq!(got, want, "in-order, exactly-once across threads");
+    }
+}

@@ -1,0 +1,327 @@
+//! The software device shim: an in-process thread that services a queue
+//! pair exactly as a real XDMA/PJRT device would — pop descriptors, dwell
+//! for the modeled link time, run the wrapped backend, push completions —
+//! with an optional **fault plan** so CI can rehearse every ugly thing a
+//! device can do: drop a completion, duplicate one, deliver out of order,
+//! corrupt the payload, or stall the ring entirely.
+//!
+//! The wrapped `InferBackend` is constructed *on the device thread* from a
+//! `Send` factory (backends themselves are not `Send` — same contract as
+//! the server's worker threads), and its metadata is reported back through
+//! a one-shot channel during bring-up.
+
+use super::{checksum_f32, Completion, CompletionStatus, Descriptor, QueuePair};
+use crate::serving::{BackendFactory, InferBackend};
+use crate::util::SplitMix64;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Modeled link: a fixed per-transfer latency plus a bandwidth term.
+/// The default is an ideal link (zero latency, infinite bandwidth) so the
+/// ring machinery itself can be benchmarked without modeled dwell.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkModel {
+    /// Fixed per-descriptor latency (DMA setup + link propagation).
+    pub latency: Duration,
+    /// Link bandwidth in Gbit/s; `<= 0` means infinite.
+    pub gbps: f64,
+}
+
+impl Default for LinkModel {
+    fn default() -> Self {
+        LinkModel {
+            latency: Duration::ZERO,
+            gbps: 0.0,
+        }
+    }
+}
+
+impl LinkModel {
+    /// Serialization time for `bytes` over this link.
+    pub fn transfer_time(&self, bytes: usize) -> Duration {
+        if self.gbps <= 0.0 {
+            Duration::ZERO
+        } else {
+            Duration::from_secs_f64(bytes as f64 * 8.0 / (self.gbps * 1e9))
+        }
+    }
+
+    /// Total modeled dwell for one descriptor of `bytes`.
+    pub fn dwell(&self, bytes: usize) -> Duration {
+        self.latency + self.transfer_time(bytes)
+    }
+}
+
+/// Deterministic device-misbehavior plan (seeded — every soak replays).
+/// Probabilities are per serviced descriptor, applied in the order
+/// drop → corrupt → duplicate → reorder.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// P(completion is silently dropped) — client must timeout + retry.
+    pub drop: f64,
+    /// P(a phantom duplicate completion follows the real one) — client
+    /// must dedup by sequence number (exactly-one-response).
+    pub duplicate: f64,
+    /// P(completion is held back and delivered after a later one).
+    pub reorder: f64,
+    /// P(logits corrupted after the device computed their checksum) —
+    /// client must detect the mismatch and retry.
+    pub corrupt: f64,
+    /// Service this many descriptors, then wedge the ring forever (the
+    /// stalled-device drill: telemetry must quarantine the lane).
+    pub stall_after: Option<u64>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0x5eed,
+            drop: 0.0,
+            duplicate: 0.0,
+            reorder: 0.0,
+            corrupt: 0.0,
+            stall_after: None,
+        }
+    }
+}
+
+/// Metadata the device thread reports after constructing its backend.
+#[derive(Debug, Clone, Copy)]
+pub struct BackendMeta {
+    pub elems: usize,
+    pub classes: usize,
+    pub max_batch: usize,
+}
+
+/// Namespace for spawning shim device threads.
+pub struct ShimDevice;
+
+/// Owner handle for a running shim device thread; dropping it stops and
+/// joins the thread (after which the queue pair is drained).
+pub struct ShimHandle {
+    qp: Arc<QueuePair>,
+    stop: Arc<AtomicBool>,
+    serviced: Arc<AtomicU64>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl ShimHandle {
+    /// Descriptors the device has serviced (diagnostics; excludes
+    /// descriptors stranded by a stall).
+    pub fn serviced(&self) -> u64 {
+        self.serviced.load(Ordering::SeqCst)
+    }
+}
+
+impl Drop for ShimHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.qp.sq_bell.ring();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl ShimDevice {
+    /// Start a device thread over `qp`. The backend is built from
+    /// `factory` on the device thread; its metadata (or the construction
+    /// error) arrives on the returned channel before the first completion.
+    pub fn spawn(
+        qp: Arc<QueuePair>,
+        factory: BackendFactory,
+        link: LinkModel,
+        faults: Option<FaultPlan>,
+    ) -> (ShimHandle, mpsc::Receiver<crate::Result<BackendMeta>>) {
+        let stop = Arc::new(AtomicBool::new(false));
+        let serviced = Arc::new(AtomicU64::new(0));
+        let (meta_tx, meta_rx) = mpsc::channel();
+        let (qp2, stop2, serviced2) = (qp.clone(), stop.clone(), serviced.clone());
+        let join = std::thread::Builder::new()
+            .name("superlip-shim-device".into())
+            .spawn(move || match factory() {
+                Ok(backend) => {
+                    let _ = meta_tx.send(Ok(BackendMeta {
+                        elems: backend.image_elems(),
+                        classes: backend.classes(),
+                        max_batch: backend.max_batch().max(1),
+                    }));
+                    service(&qp2, &*backend, link, faults, &stop2, &serviced2);
+                }
+                Err(e) => {
+                    let _ = meta_tx.send(Err(e));
+                }
+            })
+            .expect("spawn shim device thread");
+        (
+            ShimHandle {
+                qp,
+                stop,
+                serviced,
+                join: Some(join),
+            },
+            meta_rx,
+        )
+    }
+}
+
+/// Push one completion, waiting out transient completion-ring fullness.
+/// Returns `false` on shutdown.
+fn deliver(qp: &QueuePair, mut c: Completion, stop: &AtomicBool) -> bool {
+    loop {
+        if stop.load(Ordering::SeqCst) || qp.is_closed() {
+            return false;
+        }
+        match qp.cq.try_push(c) {
+            Ok(()) => {
+                qp.cq_bell.ring();
+                return true;
+            }
+            Err(back) => {
+                c = back;
+                std::thread::sleep(Duration::from_micros(50));
+            }
+        }
+    }
+}
+
+/// Service one descriptor: verify the "DMA'd" payload, run the backend,
+/// checksum the logits. The input buffer always rides back (recycling and
+/// retry both need it).
+fn complete_one(backend: &dyn InferBackend, desc: Descriptor) -> Completion {
+    let Descriptor {
+        seq,
+        n,
+        elems,
+        payload,
+        checksum,
+        ..
+    } = desc;
+    if payload.len() != n * elems || checksum_f32(&payload) != checksum {
+        return Completion {
+            seq,
+            status: CompletionStatus::Failed("submit payload failed checksum".into()),
+            payload: Some(payload),
+            logits: Vec::new(),
+            checksum: 0,
+        };
+    }
+    match backend.infer(&payload, n) {
+        Ok(logits) => {
+            let ck = checksum_f32(&logits);
+            Completion {
+                seq,
+                status: CompletionStatus::Ok,
+                payload: Some(payload),
+                logits,
+                checksum: ck,
+            }
+        }
+        Err(e) => Completion {
+            seq,
+            status: CompletionStatus::Failed(e.to_string()),
+            payload: Some(payload),
+            logits: Vec::new(),
+            checksum: 0,
+        },
+    }
+}
+
+fn service(
+    qp: &QueuePair,
+    backend: &dyn InferBackend,
+    link: LinkModel,
+    faults: Option<FaultPlan>,
+    stop: &AtomicBool,
+    serviced: &AtomicU64,
+) {
+    let mut rng = faults.as_ref().map(|f| SplitMix64::new(f.seed));
+    let stall_after = faults.as_ref().and_then(|f| f.stall_after);
+    // Reorder fault: completions held back to land after a later one.
+    let mut holdback: Vec<Completion> = Vec::new();
+    let mut bell_seen = 0u64;
+    let mut done = 0u64;
+    'run: loop {
+        if stop.load(Ordering::SeqCst) || qp.is_closed() {
+            break;
+        }
+        if stall_after.is_some_and(|n| done >= n) {
+            // Wedged device: never pops, never completes. Descriptors pile
+            // up in the submit ring until teardown drains them.
+            bell_seen = qp.sq_bell.wait(bell_seen, Duration::from_millis(5));
+            continue;
+        }
+        let Some(desc) = qp.sq.try_pop() else {
+            // Idle: anything the reorder fault was holding has, by now,
+            // been passed by every completion it could be reordered with.
+            for held in holdback.drain(..) {
+                if !deliver(qp, held, stop) {
+                    break 'run;
+                }
+            }
+            bell_seen = qp.sq_bell.wait(bell_seen, Duration::from_millis(2));
+            continue;
+        };
+        let dwell = link.dwell(desc.n * desc.elems * 4);
+        if dwell > Duration::ZERO {
+            std::thread::sleep(dwell);
+        }
+        let mut c = complete_one(backend, desc);
+        done += 1;
+        serviced.fetch_add(1, Ordering::SeqCst);
+        let Some((f, rng)) = faults.as_ref().zip(rng.as_mut()) else {
+            if !deliver(qp, c, stop) {
+                break 'run;
+            }
+            continue;
+        };
+        if rng.f64() < f.drop {
+            // Completion vanishes; the payload buffer recycles here (a
+            // real device would have DMA'd and released it) — the CLIENT
+            // only recovers by timeout + resubmit.
+            continue;
+        }
+        if rng.f64() < f.corrupt && !c.logits.is_empty() {
+            // Flip a logit AFTER the checksum was computed: the client's
+            // verify must catch the mismatch and retry.
+            let k = rng.below(c.logits.len() as u64) as usize;
+            c.logits[k] += 1.0e6;
+        }
+        let phantom = (rng.f64() < f.duplicate).then(|| Completion {
+            seq: c.seq,
+            status: c.status.clone(),
+            payload: None,
+            logits: c.logits.clone(),
+            checksum: c.checksum,
+        });
+        if rng.f64() < f.reorder {
+            holdback.push(c);
+        } else {
+            if !deliver(qp, c, stop) {
+                break 'run;
+            }
+            // A newer completion just landed — anything held back is now
+            // officially out of order; release one.
+            if !holdback.is_empty() {
+                let held = holdback.remove(0);
+                if !deliver(qp, held, stop) {
+                    break 'run;
+                }
+            }
+        }
+        if let Some(p) = phantom {
+            if !deliver(qp, p, stop) {
+                break 'run;
+            }
+        }
+    }
+    // Teardown: recycle everything still in flight on the device side so
+    // the pool drains to zero (no descriptor leaks).
+    holdback.clear();
+    while let Some(d) = qp.sq.try_pop() {
+        drop(d);
+    }
+}

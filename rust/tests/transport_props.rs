@@ -1,0 +1,446 @@
+//! Transport-layer properties and fault-plan soaks.
+//!
+//! * Ring wraparound behaves as a bounded FIFO (model-checked against a
+//!   `VecDeque` reference under random op sequences).
+//! * Sequence numbers are strictly monotone across backpressure.
+//! * The buffer pool never hands one registered buffer to two owners and
+//!   recycles buffers zeroed.
+//! * Under a hostile fault plan (drops + duplicates + reorders +
+//!   corruption) every request still gets exactly one outcome, duplicate
+//!   completions die in the seq dedup (never reaching the router's
+//!   saturating-CAS backstop), and the pool drains to zero at teardown —
+//!   no descriptor leaks.
+//! * A stalled device converts to typed client failures, never a hang or
+//!   a panic.
+//! * The exactly-one-response migration contract holds with shim-backed
+//!   lanes under fault injection.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Duration;
+use superlip::serving::{
+    BackendFactory, BatcherConfig, InferBackend, LaneSpec, PipelinedBackend, Server, ServerConfig,
+};
+use superlip::transport::{
+    BufferPool, FaultPlan, LinkModel, Ring, TransportBackend, TransportConfig,
+};
+use superlip::util::proptest::forall;
+use superlip::util::SplitMix64;
+
+/// Deterministic stub: logits[c] = sum(image) + c.
+struct Stub {
+    elems: usize,
+    classes: usize,
+    max_batch: usize,
+    delay: Duration,
+}
+
+impl InferBackend for Stub {
+    fn image_elems(&self) -> usize {
+        self.elems
+    }
+    fn classes(&self) -> usize {
+        self.classes
+    }
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+    fn infer(&self, images: &[f32], n: usize) -> superlip::Result<Vec<f32>> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        let mut out = Vec::with_capacity(n * self.classes);
+        for i in 0..n {
+            let s: f32 = images[i * self.elems..(i + 1) * self.elems].iter().sum();
+            for c in 0..self.classes {
+                out.push(s + c as f32);
+            }
+        }
+        Ok(out)
+    }
+}
+
+fn stub_factory(delay: Duration) -> BackendFactory {
+    Box::new(move || {
+        Ok(Box::new(Stub {
+            elems: 4,
+            classes: 2,
+            max_batch: 4,
+            delay,
+        }) as Box<dyn InferBackend>)
+    })
+}
+
+#[test]
+fn ring_wraparound_matches_fifo_model() {
+    // Random push/pop sequences over a tiny ring, long enough that the
+    // monotone head/tail wrap the slot array many times; a VecDeque is
+    // the reference semantics.
+    forall(
+        0x81b6,
+        60,
+        |r| (0..200).map(|_| r.below(5) < 3).collect::<Vec<bool>>(),
+        |ops| {
+            let ring: Ring<u64> = Ring::new(4);
+            let mut model: VecDeque<u64> = VecDeque::new();
+            let mut next = 0u64;
+            for &push in ops {
+                if push {
+                    match ring.try_push(next) {
+                        Ok(()) => {
+                            if model.len() >= 4 {
+                                return false; // accepted past capacity
+                            }
+                            model.push_back(next);
+                        }
+                        Err(v) => {
+                            // Full hands the value back untouched.
+                            if v != next || model.len() != 4 {
+                                return false;
+                            }
+                        }
+                    }
+                    next += 1;
+                } else if ring.try_pop() != model.pop_front() {
+                    return false;
+                }
+                if ring.len() != model.len() {
+                    return false;
+                }
+            }
+            // Drain: FIFO order must survive every wraparound.
+            while let Some(got) = ring.try_pop() {
+                if model.pop_front() != Some(got) {
+                    return false;
+                }
+            }
+            model.is_empty()
+        },
+    );
+}
+
+#[test]
+fn sequence_numbers_are_strictly_monotone_across_backpressure() {
+    let cfg = TransportConfig {
+        ring_capacity: 4,
+        pool_buffers: 3,
+        pipeline_depth: 3,
+        // A visible dwell so submits genuinely outrun the device and hit
+        // typed backpressure mid-stream.
+        link: LinkModel {
+            latency: Duration::from_micros(300),
+            gbps: 0.0,
+        },
+        ..TransportConfig::default()
+    };
+    let tb = TransportBackend::over_shim(cfg, stub_factory(Duration::ZERO)).unwrap();
+    let mut last: Option<u64> = None;
+    let mut accepted = 0usize;
+    let mut refused = 0usize;
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while accepted < 40 {
+        let mut fill = |dst: &mut [f32]| dst.fill(1.0);
+        match tb.submit_batch(1, deadline, &mut fill) {
+            Ok(seq) => {
+                // Strictly monotone: a refused submit must not have
+                // consumed (or reused) a sequence number.
+                if let Some(p) = last {
+                    assert_eq!(seq, p + 1, "seq gap or reuse after backpressure");
+                }
+                last = Some(seq);
+                accepted += 1;
+            }
+            Err(_) => refused += 1,
+        }
+        for _ in tb.reap(Duration::from_micros(200)) {}
+    }
+    while tb.in_flight() > 0 {
+        for _ in tb.reap(Duration::from_millis(1)) {}
+    }
+    assert!(refused > 0, "backpressure never exercised");
+    assert_eq!(tb.stats().submitted, 40);
+}
+
+#[test]
+fn pool_never_duplicates_an_owner_and_recycles_zeroed() {
+    forall(
+        0x9001,
+        40,
+        |r| (0..120).map(|_| r.below(6)).collect::<Vec<u64>>(),
+        |ops| {
+            let pool = BufferPool::new(3, 8);
+            let mut held: Vec<superlip::transport::PooledBuf> = Vec::new();
+            for &op in ops {
+                if op < 4 {
+                    match pool.try_acquire() {
+                        Ok(mut b) => {
+                            // One owner per registered buffer, ever.
+                            if held.iter().any(|h| h.id() == b.id()) {
+                                return false;
+                            }
+                            // Recycled buffers come back zeroed through
+                            // reset_len — a stale payload must never leak
+                            // into the next descriptor.
+                            b.reset_len(8);
+                            if b.iter().any(|&x| x != 0.0) {
+                                return false;
+                            }
+                            b[op as usize % 8] = 7.0; // dirty it for the next cycle
+                            held.push(b);
+                        }
+                        Err(_) => {
+                            if pool.in_use() != 3 {
+                                return false; // exhausted only when all out
+                            }
+                        }
+                    }
+                } else if !held.is_empty() {
+                    held.remove((op as usize) % held.len());
+                }
+                if pool.in_use() != held.len() {
+                    return false;
+                }
+            }
+            drop(held);
+            pool.in_use() == 0
+        },
+    );
+}
+
+/// The headline soak: a hostile device (drops + duplicates + reorders +
+/// corruption) against the synchronous retry path. Every request resolves
+/// exactly once, duplicate completions are absorbed by the seq dedup, and
+/// teardown leaves the pool fully recycled — zero descriptor leaks.
+#[test]
+fn fault_soak_exactly_one_outcome_and_no_descriptor_leaks() {
+    let cfg = TransportConfig {
+        ring_capacity: 8,
+        pool_buffers: 4,
+        reap_timeout: Duration::from_millis(25),
+        max_retries: 12,
+        faults: Some(FaultPlan {
+            seed: 0xfa117,
+            drop: 0.10,
+            duplicate: 0.15,
+            reorder: 0.20,
+            corrupt: 0.10,
+            stall_after: None,
+        }),
+        ..TransportConfig::default()
+    };
+    let tb = TransportBackend::over_shim(cfg, stub_factory(Duration::ZERO)).unwrap();
+    let pool = tb.pool().clone(); // watch recycling past the drop below
+    let mut ok = 0u64;
+    let mut failed = 0u64;
+    for i in 0..60u32 {
+        let img = vec![i as f32; 8];
+        match tb.infer(&img, 2) {
+            Ok(logits) => {
+                // Exactly one verified outcome, with the right payload —
+                // a reordered or duplicated completion must never leak a
+                // different request's logits into this one.
+                assert_eq!(logits.len(), 4);
+                assert_eq!(logits[0], 4.0 * i as f32);
+                assert_eq!(logits[1], 4.0 * i as f32 + 1.0);
+                ok += 1;
+            }
+            Err(_) => failed += 1, // typed retry-budget exhaustion — allowed
+        }
+    }
+    assert_eq!(ok + failed, 60, "every request resolved exactly once");
+    assert!(ok >= 55, "retry budget should absorb nearly all faults ({ok})");
+    let stats = tb.stats();
+    assert!(
+        stats.ignored > 0 || stats.timeouts == 0,
+        "duplicates/stragglers are counted, not delivered: {stats:?}"
+    );
+    assert_eq!(tb.in_flight(), 0);
+    drop(tb);
+    assert_eq!(pool.in_use(), 0, "descriptor leak: pool not fully recycled");
+}
+
+/// Same hostility through the full server (pipelined worker loop):
+/// `completed + disconnected == sent`, nobody answered twice, and the
+/// router's outstanding books balance to zero — duplicate completions hit
+/// the transport dedup, not `PlanRouter::complete`.
+#[test]
+fn server_fault_soak_conserves_every_request() {
+    let cfg = TransportConfig {
+        ring_capacity: 8,
+        pipeline_depth: 3,
+        reap_timeout: Duration::from_millis(20),
+        max_retries: 8,
+        faults: Some(FaultPlan {
+            seed: 0x50a4 ^ 0x5eed,
+            drop: 0.05,
+            duplicate: 0.12,
+            reorder: 0.12,
+            corrupt: 0.05,
+            stall_after: None,
+        }),
+        ..TransportConfig::default()
+    };
+    let spec = LaneSpec {
+        model: "m".into(),
+        factories: vec![TransportBackend::shim_factory(
+            cfg,
+            stub_factory(Duration::ZERO),
+        )],
+        batcher: BatcherConfig::default(),
+    };
+    let srv = Arc::new(Server::start_plan(vec![spec], ServerConfig::default()));
+    const SENT: usize = 120;
+    let d = Duration::from_secs(30);
+    let rxs: Vec<_> = (0..SENT)
+        .map(|i| srv.submit_to("m", vec![i as f32, 0.0, 0.0, 0.0], d).unwrap())
+        .collect();
+    let mut completed = 0usize;
+    let mut disconnected = 0usize;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        match rx.recv_timeout(Duration::from_secs(20)) {
+            Ok(r) => {
+                assert_eq!(r.logits[0], i as f32, "cross-wired response");
+                assert!(rx.try_recv().is_err(), "request {i} answered twice");
+                completed += 1;
+            }
+            Err(_) => disconnected += 1, // typed fail-closed — allowed
+        }
+    }
+    assert_eq!(completed + disconnected, SENT);
+    assert!(completed >= SENT - 5, "faults should mostly be absorbed ({completed})");
+    assert_eq!(
+        srv.lane_load().iter().sum::<u64>(),
+        0,
+        "router books must balance — duplicates may not double-complete"
+    );
+    let m = srv.shutdown();
+    assert_eq!(m.arrivals(), SENT as u64);
+    assert_eq!(m.completed(), completed);
+}
+
+/// The stalled-device drill at the serving layer: a device that wedges
+/// after 0 descriptors converts every request into a bounded, typed
+/// disconnect — no hang, no panic, books balanced.
+#[test]
+fn stalled_device_fails_closed_without_hanging() {
+    let cfg = TransportConfig {
+        reap_timeout: Duration::from_millis(5),
+        max_retries: 0,
+        faults: Some(FaultPlan {
+            stall_after: Some(0),
+            ..FaultPlan::default()
+        }),
+        ..TransportConfig::default()
+    };
+    let spec = LaneSpec {
+        model: "m".into(),
+        factories: vec![TransportBackend::shim_factory(
+            cfg,
+            stub_factory(Duration::ZERO),
+        )],
+        batcher: BatcherConfig::default(),
+    };
+    let srv = Arc::new(Server::start_plan(vec![spec], ServerConfig::default()));
+    let rxs: Vec<_> = (0..10)
+        .map(|i| {
+            srv.submit_to("m", vec![i as f32, 0.0, 0.0, 0.0], Duration::from_secs(5))
+                .unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        // Fail-closed within the worker's submit patience — a stalled
+        // ring must never strand a client on an open channel.
+        assert!(
+            rx.recv_timeout(Duration::from_secs(10)).is_err(),
+            "stalled device cannot produce a completion"
+        );
+    }
+    assert_eq!(srv.lane_load().iter().sum::<u64>(), 0);
+    let m = srv.shutdown();
+    assert_eq!(m.arrivals(), 10);
+    assert_eq!(m.completed(), 0);
+}
+
+/// The migration exactly-one-response contract, now with every lane
+/// generation behind a faulty shim transport: make-before-break handoffs
+/// while the device drops/duplicates/reorders completions.
+#[test]
+fn migration_exactly_one_response_with_shim_lanes() {
+    fn shim_lane(tag_seed: u64) -> LaneSpec {
+        let cfg = TransportConfig {
+            reap_timeout: Duration::from_millis(20),
+            max_retries: 8,
+            faults: Some(FaultPlan {
+                seed: 0xd1f ^ tag_seed,
+                drop: 0.03,
+                duplicate: 0.10,
+                reorder: 0.10,
+                corrupt: 0.03,
+                stall_after: None,
+            }),
+            ..TransportConfig::default()
+        };
+        LaneSpec {
+            model: "m".into(),
+            factories: vec![TransportBackend::shim_factory(
+                cfg,
+                stub_factory(Duration::from_micros(200)),
+            )],
+            batcher: BatcherConfig {
+                max_batch: 4,
+                window: Duration::from_micros(300),
+                deadline_margin: Duration::from_micros(300),
+                ..BatcherConfig::default()
+            },
+        }
+    }
+
+    let srv = Arc::new(Server::start_plan(vec![shim_lane(0)], ServerConfig::default()));
+    let done = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let migrator = {
+        let srv = srv.clone();
+        let done = done.clone();
+        std::thread::spawn(move || {
+            let mut rng = SplitMix64::new(0x316);
+            let mut old = 0usize;
+            for gen in 1..=6u64 {
+                let fresh = srv.add_lane(shim_lane(gen));
+                srv.retire_lane(old).expect("old lane was live");
+                old = fresh;
+                std::thread::sleep(Duration::from_millis(5 + rng.below(10)));
+                if done.load(std::sync::atomic::Ordering::Relaxed) {
+                    break;
+                }
+            }
+        })
+    };
+    const SENT: usize = 150;
+    let d = Duration::from_secs(30);
+    let mut rxs = Vec::with_capacity(SENT);
+    for i in 0..SENT {
+        rxs.push((
+            i as f32,
+            srv.submit_to("m", vec![i as f32, 0.0, 0.0, 0.0], d).unwrap(),
+        ));
+        std::thread::sleep(Duration::from_micros(300));
+    }
+    done.store(true, std::sync::atomic::Ordering::Relaxed);
+    let mut completed = 0usize;
+    for (v, rx) in rxs {
+        match rx.recv_timeout(Duration::from_secs(20)) {
+            Ok(r) => {
+                assert_eq!(r.logits[0], v, "response routed to the wrong request");
+                assert!(rx.try_recv().is_err(), "request {v} answered twice");
+                completed += 1;
+            }
+            Err(_) => {} // typed fail-closed under fault injection — allowed
+        }
+    }
+    migrator.join().expect("migrator panicked");
+    assert!(
+        completed >= SENT - 8,
+        "migration + faults lost too many: {completed}/{SENT}"
+    );
+    assert_eq!(srv.lane_load().iter().sum::<u64>(), 0);
+    srv.shutdown();
+}
