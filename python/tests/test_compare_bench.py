@@ -155,6 +155,24 @@ def test_ns_per_request_gates_lower_is_worse(tmp_path):
     assert _run(base, fast).returncode == 0
 
 
+def test_us_per_replan_gates_lower_is_worse(tmp_path):
+    # The re-plan latency unit: 100 us at rel 0.10 → limit 100*1.1 + 50 =
+    # 160 us; 150 passes, 200 fails, and a faster re-plan never fails. The
+    # checked-in BENCH_replan.json seeds use a wide provisional rel, but
+    # the unit must gate at default rel like the other lower-better units.
+    base = _write(
+        tmp_path, "base.json", _doc({"replan": {"value": 100.0, "unit": "us/replan"}})
+    )
+    ok = _write(tmp_path, "ok.json", _doc({"replan": {"value": 150.0, "unit": "us/replan"}}))
+    bad = _write(tmp_path, "bad.json", _doc({"replan": {"value": 200.0, "unit": "us/replan"}}))
+    fast = _write(tmp_path, "fast.json", _doc({"replan": {"value": 5.0, "unit": "us/replan"}}))
+    assert _run(base, ok).returncode == 0
+    r = _run(base, bad)
+    assert r.returncode == 1
+    assert "exceeds baseline" in r.stdout
+    assert _run(base, fast).returncode == 0
+
+
 def test_rps_per_core_gates_higher_is_better(tmp_path):
     # 100k rps/core at rel 0.10 → floor 100000*0.9 - 1000 = 89000; a drop
     # to 95k passes, 80k fails (with a direction-aware message), and a

@@ -1,5 +1,5 @@
 //! Serving hot-path microbench (EXPERIMENTS.md §Hotpath): drive the full
-//! `try_submit_to` → route → batch → complete pipeline against a **null
+//! `submit_to_class` → route → batch → complete pipeline against a **null
 //! backend** (infer returns instantly) so the measured cost is the serving
 //! machinery itself — the lock-free route snapshot, the sharded per-class
 //! queues, the condvar handshake, the histogram metrics — not compute.
@@ -92,7 +92,7 @@ fn drive(server: &Server, per_submitter: usize) -> (u64, f64) {
                 let mut done = 0u64;
                 for _ in 0..per_submitter {
                     let rx = server
-                        .try_submit_to(MODEL, vec![0.0], deadline, class)
+                        .submit_to_class(MODEL, vec![0.0], deadline, class)
                         .expect("null lane accepts");
                     inflight.push_back(rx);
                     if inflight.len() >= PIPELINE {

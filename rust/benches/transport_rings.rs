@@ -129,7 +129,7 @@ fn drive(server: &Server, per_submitter: usize) -> (u64, f64) {
                 let mut done = 0u64;
                 for _ in 0..per_submitter {
                     let rx = server
-                        .try_submit_to(MODEL, vec![0.0], deadline, class)
+                        .submit_to_class(MODEL, vec![0.0], deadline, class)
                         .expect("shim lane accepts");
                     inflight.push_back(rx);
                     if inflight.len() >= PIPELINE {

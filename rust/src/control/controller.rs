@@ -63,6 +63,11 @@ pub struct ControlConfig {
     /// Telemetry-fallback death: a lane with arrivals but zero
     /// completions for this many consecutive windows is written off.
     pub dead_after: usize,
+    /// Relative tolerance band for the incremental re-planner's dirty
+    /// tracking: a model whose observed rate stays within ±band of its
+    /// planned rate is "clean" and keeps its cached sub-plan byte-for-byte
+    /// across a re-plan (`TelemetryHub::moved_models`).
+    pub replan_band: f64,
     /// Scenario wall-clock compression (1.0 = real time) — telemetry
     /// un-scales with it, and new lanes are built at the same scale.
     pub time_scale: f64,
@@ -92,6 +97,7 @@ impl Default for ControlConfig {
             drift: DriftConfig::default(),
             history: 3,
             dead_after: 2,
+            replan_band: 0.10,
             time_scale: 1.0,
             window: Duration::from_micros(200),
             health: None,
@@ -192,11 +198,15 @@ impl Controller {
         plan: FleetPlan,
         cfg: ControlConfig,
     ) -> Result<Self> {
+        let mut replanner = replanner;
         if replanner.fleet().len() != plan.allocation().iter().sum::<usize>() {
             return Err(Error::InvalidArg(
                 "replanner fleet does not match the plan's board count".into(),
             ));
         }
+        // Seed the incremental re-planner's plan memory from the bring-up
+        // plan, so the FIRST drift re-plan is already incremental.
+        replanner.adopt_plan(&plan);
         // One baseline mix entry per MODEL (replica deployments share one).
         let mix: Vec<WorkloadSpec> = plan
             .deployments
@@ -399,9 +409,19 @@ impl Controller {
             } else {
                 self.events.push(format!("drift: {reason}"));
                 let observed = self.hub.observed_mix(&self.mix);
-                match self.replanner.plan(&observed) {
-                    Ok(new_plan) => {
-                        migrated_to = Some(self.migrate_to(new_plan, observed));
+                let moved = self.hub.moved_models(&self.mix, self.cfg.replan_band);
+                match self.replanner.plan_incremental(&observed, &moved) {
+                    Ok(out) => {
+                        self.events.push(if out.incremental {
+                            format!(
+                                "incremental re-plan: re-scored {:?}, reused {} sub-plan(s)",
+                                out.rescored,
+                                out.reused.len()
+                            )
+                        } else {
+                            "full re-plan (no reusable plan memory)".into()
+                        });
+                        migrated_to = Some(self.migrate_to(out.plan, out.mix));
                     }
                     Err(e) => self.events.push(format!("re-plan failed: {e}")),
                 }
@@ -523,6 +543,10 @@ impl Controller {
     /// ~1.5× faster at lower accuracy), make-before-break on the same
     /// boards. Originals are kept for the exit swap.
     fn enter_degrade(&mut self) {
+        // Degrade swaps rewrite `self.plan` in place behind the
+        // re-planner's back — its plan memory no longer matches what the
+        // lanes serve, so the next drift re-plan must be a full search.
+        self.replanner.invalidate_plan();
         let victims: Vec<String> = self
             .mix
             .iter()
@@ -556,6 +580,7 @@ impl Controller {
 
     /// Rung 2 exit: swap every degraded lane back to its stored original.
     fn exit_degrade(&mut self) {
+        self.replanner.invalidate_plan(); // same in-place rewrite as entry
         let mut swapped_books: Vec<usize> = Vec::new();
         for orig in std::mem::take(&mut self.degraded_originals) {
             let Some(di) = self.plan.deployments.iter().position(|d| {
@@ -652,6 +677,9 @@ impl Controller {
                 let observed = self.hub.observed_mix(&self.mix);
                 match self.replanner.plan(&observed) {
                     Ok(new_plan) => {
+                        // Re-seed plan memory on the shrunken fleet so later
+                        // drift re-plans go back to the incremental path.
+                        self.replanner.adopt_plan(&new_plan);
                         self.migrate_to(new_plan, observed);
                     }
                     Err(e) => self
@@ -769,7 +797,13 @@ impl Controller {
         }
         let observed = self.hub.observed_mix(&self.mix);
         let out = match self.replanner.plan(&observed) {
-            Ok(new_plan) => Some(self.migrate_to(new_plan, observed)),
+            Ok(new_plan) => {
+                // Repair re-plans run the full search on the survivors;
+                // re-seed plan memory so the next drift re-plan is
+                // incremental again.
+                self.replanner.adopt_plan(&new_plan);
+                Some(self.migrate_to(new_plan, observed))
+            }
             Err(e) => {
                 self.events
                     .push(format!("repair re-plan failed ({e}); serving degraded"));
@@ -1358,7 +1392,7 @@ mod tests {
         // ...and rung 3 refuses best-effort at ingress with a typed shed,
         // while gold still flows.
         assert!(server
-            .try_submit_to(
+            .submit_to_class(
                 "squeezenet",
                 vec![0.2; 64],
                 d,
@@ -1366,7 +1400,7 @@ mod tests {
             )
             .is_err());
         let rx = server
-            .try_submit_to("alexnet", vec![0.2; 64], d, crate::fleet::SloClass::Gold)
+            .submit_to_class("alexnet", vec![0.2; 64], d, crate::fleet::SloClass::Gold)
             .unwrap();
         assert!(rx.recv_timeout(d).is_ok());
 

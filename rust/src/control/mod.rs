@@ -17,11 +17,16 @@
 //!    the planned `WorkloadSpec`s: a sustained rate-ratio breach or
 //!    miss-rate spike (hysteresis: `hysteresis` consecutive windows)
 //!    triggers a re-plan; a post-migration cooldown stops flapping.
-//! 3. **Re-plan** — [`Replanner`] re-runs the composition search on the
-//!    *observed* mix — on the surviving boards when a failure shrank the
-//!    fleet — and [`diff_plans`] reduces old vs new plan to the minimal
-//!    set of lane changes (sub-clusters whose shape did not change keep
-//!    serving untouched).
+//! 3. **Re-plan** — [`Replanner`] re-plans *incrementally*: per-model
+//!    rate flags from [`TelemetryHub::moved_models`] mark which models
+//!    left their tolerance band, only those are re-scored against the
+//!    planner's persistent plan cache, and clean models' deployments are
+//!    reused byte-for-byte from the previous plan ([`ReplanOutcome`]
+//!    reports the split). Structural mix changes, fleet shrink, or an
+//!    infeasible incremental result fall back to the full composition
+//!    search on the *observed* mix; [`diff_plans`] then reduces old vs
+//!    new plan to the minimal set of lane changes (sub-clusters whose
+//!    shape did not change keep serving untouched).
 //! 4. **Migrate** — [`Controller`] applies the delta to the live
 //!    `serving::Server` make-before-break: replacement lanes are added
 //!    and routed *before* the lanes they replace are derouted and
@@ -54,6 +59,6 @@ mod telemetry;
 pub use brownout::{BrownoutConfig, BrownoutLadder, BrownoutRung, BrownoutStep};
 pub use controller::{ControlConfig, Controller, TickReport};
 pub use drift::{DriftConfig, DriftDecision, DriftDetector};
-pub use replanner::{diff_plans, PlanDelta, Replanner};
+pub use replanner::{diff_plans, PlanDelta, ReplanOutcome, Replanner};
 pub use runner::{run_drift_scenario, KillSpec, OnlineConfig, OnlineOutcome, PowerGating};
 pub use telemetry::{LaneObs, ModelObs, TelemetryFrame, TelemetryHub};

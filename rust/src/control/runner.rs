@@ -301,7 +301,7 @@ pub fn run_drift_scenario(
                     .collect();
                 let checksum: f32 = img.iter().sum();
                 let w = &mix[entry];
-                match server.try_submit_to(&w.model, img, w.deadline.mul_f64(ts), w.class) {
+                match server.submit_to_class(&w.model, img, w.deadline.mul_f64(ts), w.class) {
                     Ok(rx) => pending[phase][entry].push((checksum, rx)),
                     // Brownout refusal (class quota, admission floor, or an
                     // exhausted re-route budget): an EXPLICIT rejection the

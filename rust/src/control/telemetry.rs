@@ -195,6 +195,32 @@ impl TelemetryHub {
             })
             .collect()
     }
+
+    /// Per-model drift flags, parallel to `planned`: `true` when the
+    /// model's effective observed rate (the same smoothed + floored value
+    /// `observed_mix` reports) left the ±`band` relative tolerance around
+    /// its last-planned rate. This is the incremental re-planner's dirty
+    /// signal: clean models keep their planned rate pinned — and their
+    /// cached deployments reused byte-for-byte — until the band trips.
+    /// A model with no telemetry at all (never appeared in any frame)
+    /// never moves.
+    pub fn moved_models(&self, planned: &[WorkloadSpec], band: f64) -> Vec<bool> {
+        assert!(band >= 0.0);
+        if self.history.is_empty() {
+            return vec![false; planned.len()];
+        }
+        planned
+            .iter()
+            .map(|w| match self.smoothed_rate(&w.model) {
+                None => false,
+                Some(r) => {
+                    let floor = w.rate_rps * 0.01;
+                    let eff = r.max(floor);
+                    (eff - w.rate_rps).abs() > band * w.rate_rps.abs().max(1e-12)
+                }
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -276,6 +302,11 @@ mod tests {
         assert!((obs[0].rate_rps - sm).abs() < 1e-9);
         assert!((obs[1].rate_rps - 0.5).abs() < 1e-9, "unseen model floors at 1%");
         assert_eq!(obs[1].deadline, planned[1].deadline);
+        // Dirty flags for the incremental re-planner: "a" is planned at
+        // 1000 rps but observed far below → moved; "zzz" never appeared
+        // in any frame → clean by definition; a huge band clears all.
+        assert_eq!(hub.moved_models(&planned, 0.10), vec![true, false]);
+        assert_eq!(hub.moved_models(&planned, 1e9), vec![false, false]);
         srv.shutdown();
     }
 

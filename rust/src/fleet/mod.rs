@@ -31,13 +31,14 @@ mod workload;
 
 pub use backend::{HealthGatedBackend, SimClusterBackend};
 pub use planner::{
-    equal_split, miss_risk, miss_risk_batched, service_at_batch, Deployment, FleetPlan, Planner,
-    PlannerConfig, PLAN_BATCH_CAP,
+    equal_split, miss_risk, miss_risk_batched, service_at_batch, CacheStats, Deployment,
+    FleetPlan, Planner, PlannerConfig, PLAN_BATCH_CAP,
 };
 pub use scenario::{
     lane_spec_for, piecewise_arrivals, run_scenario, stats_table, worst_miss_rate, worst_p99,
     FleetHealth, ModelStats, PhaseSpec, ScenarioConfig, SCENARIO_CLASSES, SCENARIO_IMAGE_ELEMS,
 };
 pub use workload::{
-    parse_mix, reference_design, FleetSpec, ReplicaPolicy, SloClass, WorkloadSpec, N_CLASSES,
+    parse_mix, reference_design, FleetSpec, ReplicaPolicy, SloClass, WorkloadEntry, WorkloadSpec,
+    N_CLASSES,
 };

@@ -44,6 +44,7 @@ use crate::report::{self, Table};
 use crate::sim::SimConfig;
 use crate::{Error, Result};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// Planner tuning.
@@ -116,6 +117,7 @@ struct SubPlan {
 }
 
 /// The replica split `best_split` chose for one model's board allocation.
+#[derive(Debug, Clone, Copy)]
 struct ReplicaSplit {
     n_replicas: usize,
     boards_each: usize,
@@ -396,12 +398,61 @@ struct CompositionScore {
     watts: f64,
 }
 
+/// Hit/miss counters of the planner's persistent plan cache, split by
+/// layer: **sub-plan** entries memoize the expensive per-(model, size,
+/// precision) design/partition search + batch-latency simulation;
+/// **split** entries memoize `best_split`'s replica-split evaluation per
+/// (model, size, scored rate, deadline, batch cap, policy). The
+/// incremental re-planner's tests assert cache behavior through these
+/// (e.g. a single-model rate drift on a 50-model fleet misses exactly
+/// once).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheStats {
+    pub subplan_hits: u64,
+    pub subplan_misses: u64,
+    pub split_hits: u64,
+    pub split_misses: u64,
+}
+
+impl CacheStats {
+    /// Fraction of all cache lookups served without recomputation
+    /// (1.0 when nothing was looked up).
+    pub fn hit_rate(&self) -> f64 {
+        let hits = self.subplan_hits + self.split_hits;
+        let total = hits + self.subplan_misses + self.split_misses;
+        if total == 0 {
+            1.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+}
+
+#[derive(Default)]
+struct CacheCounters {
+    subplan_hits: AtomicU64,
+    subplan_misses: AtomicU64,
+    split_hits: AtomicU64,
+    split_misses: AtomicU64,
+}
+
+/// Key of one memoized `best_split` evaluation: (model, normalized range
+/// start, boards, scored-rate bits, deadline-ms bits, batch cap, replica
+/// policy — `0` = auto, `r` = pinned). Rate and deadline enter as exact
+/// f64 bit patterns: any change re-evaluates, equality guarantees the
+/// cached split is byte-identical to a fresh computation.
+type SplitKey = (String, usize, usize, u64, u64, usize, usize);
+
 /// The fleet planner (memoizes sub-cluster plans across the composition
-/// search).
+/// search — and across *re-plans*: both cache layers persist for the
+/// planner's lifetime, which is what makes the control plane's
+/// incremental re-planning pure lookups + arithmetic).
 pub struct Planner {
     fleet: FleetSpec,
     cfg: PlannerConfig,
     cache: Mutex<HashMap<(String, usize, usize, Precision), SubPlan>>,
+    split_cache: Mutex<HashMap<SplitKey, Option<ReplicaSplit>>>,
+    counters: CacheCounters,
 }
 
 impl Planner {
@@ -411,6 +462,8 @@ impl Planner {
             fleet,
             cfg,
             cache: Mutex::new(HashMap::new()),
+            split_cache: Mutex::new(HashMap::new()),
+            counters: CacheCounters::default(),
         }
     }
 
@@ -437,13 +490,51 @@ impl Planner {
         {
             return;
         }
-        let src = other.cache.lock().unwrap();
-        let mut dst = self.cache.lock().unwrap();
-        for (k, v) in src.iter() {
-            if k.1 == 0 && k.2 <= self.fleet.len() {
-                dst.insert(k.clone(), v.clone());
+        {
+            let src = other.cache.lock().unwrap();
+            let mut dst = self.cache.lock().unwrap();
+            for (k, v) in src.iter() {
+                if k.1 == 0 && k.2 <= self.fleet.len() {
+                    dst.insert(k.clone(), v.clone());
+                }
             }
         }
+        // Split evaluations additionally bake in the risk/energy knobs
+        // (the scored rate is in the key, surge included) — carry them
+        // only when those match too. Entries larger than this fleet are
+        // dropped: that is the cache invalidation a fleet shrink fires.
+        if self.cfg.wait_inflation == other.cfg.wait_inflation
+            && self.cfg.energy_tolerance == other.cfg.energy_tolerance
+            && self.cfg.energy_risk_floor == other.cfg.energy_risk_floor
+        {
+            let src = other.split_cache.lock().unwrap();
+            let mut dst = self.split_cache.lock().unwrap();
+            for (k, v) in src.iter() {
+                if k.1 == 0 && k.2 <= self.fleet.len() {
+                    dst.insert(k.clone(), *v);
+                }
+            }
+        }
+    }
+
+    /// Cache hit/miss counters since construction (or the last
+    /// `reset_cache_stats`).
+    pub fn cache_stats(&self) -> CacheStats {
+        CacheStats {
+            subplan_hits: self.counters.subplan_hits.load(Ordering::Relaxed),
+            subplan_misses: self.counters.subplan_misses.load(Ordering::Relaxed),
+            split_hits: self.counters.split_hits.load(Ordering::Relaxed),
+            split_misses: self.counters.split_misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Zero the hit/miss counters (the cached entries stay) — tests and
+    /// benches scope their assertions to one re-plan this way.
+    pub fn reset_cache_stats(&self) {
+        self.counters.subplan_hits.store(0, Ordering::Relaxed);
+        self.counters.subplan_misses.store(0, Ordering::Relaxed);
+        self.counters.split_hits.store(0, Ordering::Relaxed);
+        self.counters.split_misses.store(0, Ordering::Relaxed);
     }
 
     /// Simulated batch-1 service latency (ms) of `model` on the first
@@ -581,57 +672,10 @@ impl Planner {
         let mut start = 0usize;
         let mut worst = 0.0f64;
         for (w, &n) in mix.iter().zip(counts) {
-            let split = self.best_split(w, start, n)?.ok_or_else(|| {
-                Error::InvalidArg(format!(
-                    "model `{}` wants {} replicas but its allocation is only {n} board(s)",
-                    w.model,
-                    match w.replicas {
-                        ReplicaPolicy::Fixed(r) => r,
-                        ReplicaPolicy::Auto => unreachable!("auto always splits"),
-                    }
-                ))
-            })?;
-            let (r_count, k) = (split.n_replicas, split.boards_each);
-            let share_rate = w.rate_rps / r_count as f64;
-            // Risk (and the batch it picks) scores at the surged rate for
-            // gold; `share_rate_rps` below stays the true traffic share.
-            let score_share = self.scoring_rate(w) / r_count as f64;
-            for r in 0..r_count {
-                let rep_start = start + r * k;
-                let sp = self.subplan(&w.model, rep_start, k)?;
-                let torus = Torus::for_factors(&sp.factors);
-                let (risk, planned_batch) = miss_risk_batched(
-                    &sp.service_ms_batch,
-                    w.deadline_ms(),
-                    score_share,
-                    self.cfg.wait_inflation,
-                    w.max_batch,
-                );
-                let s_b = service_at_batch(&sp.service_ms_batch, planned_batch);
-                let rho = share_rate * s_b / planned_batch as f64 / 1e3;
-                worst = worst.max(risk);
-                deployments.push(Deployment {
-                    workload: w.clone(),
-                    start: rep_start,
-                    n_boards: k,
-                    replica: r,
-                    n_replicas: r_count,
-                    model_boards: n,
-                    share_rate_rps: share_rate,
-                    fpga: sp.fpga,
-                    sim_cfg: sp.sim_cfg,
-                    design: sp.design,
-                    factors: sp.factors,
-                    torus: (torus.rows, torus.cols),
-                    service_cycles: sp.service_cycles,
-                    service_ms: sp.service_ms,
-                    service_ms_batch: sp.service_ms_batch.clone(),
-                    planned_batch,
-                    utilization: rho,
-                    risk,
-                    watts: sp.watts,
-                    hetero: sp.hetero,
-                });
+            let ds = self.model_deployments_at(w, start, n)?;
+            for d in ds {
+                worst = worst.max(d.risk);
+                deployments.push(d);
             }
             start += n;
         }
@@ -639,6 +683,74 @@ impl Planner {
             deployments,
             worst_risk: worst,
         })
+    }
+
+    /// All replica deployments of one workload on `n` boards at `start` —
+    /// the per-model unit of `plan_allocation`, exposed to the control
+    /// plane's incremental re-planner (which reuses clean models'
+    /// previous deployments byte-for-byte and calls this only for the
+    /// models whose observed mix moved). Deterministic arithmetic over
+    /// cached sub-plans: the same `(w, start, n)` always reproduces the
+    /// same deployments bit-for-bit.
+    pub fn model_deployments_at(
+        &self,
+        w: &WorkloadSpec,
+        start: usize,
+        n: usize,
+    ) -> Result<Vec<Deployment>> {
+        let split = self.best_split(w, start, n)?.ok_or_else(|| {
+            Error::InvalidArg(format!(
+                "model `{}` wants {} replicas but its allocation is only {n} board(s)",
+                w.model,
+                match w.replicas {
+                    ReplicaPolicy::Fixed(r) => r,
+                    ReplicaPolicy::Auto => unreachable!("auto always splits"),
+                }
+            ))
+        })?;
+        let (r_count, k) = (split.n_replicas, split.boards_each);
+        let share_rate = w.rate_rps / r_count as f64;
+        // Risk (and the batch it picks) scores at the surged rate for
+        // gold; `share_rate_rps` below stays the true traffic share.
+        let score_share = self.scoring_rate(w) / r_count as f64;
+        let mut deployments = Vec::with_capacity(r_count);
+        for r in 0..r_count {
+            let rep_start = start + r * k;
+            let sp = self.subplan(&w.model, rep_start, k)?;
+            let torus = Torus::for_factors(&sp.factors);
+            let (risk, planned_batch) = miss_risk_batched(
+                &sp.service_ms_batch,
+                w.deadline_ms(),
+                score_share,
+                self.cfg.wait_inflation,
+                w.max_batch,
+            );
+            let s_b = service_at_batch(&sp.service_ms_batch, planned_batch);
+            let rho = share_rate * s_b / planned_batch as f64 / 1e3;
+            deployments.push(Deployment {
+                workload: w.clone(),
+                start: rep_start,
+                n_boards: k,
+                replica: r,
+                n_replicas: r_count,
+                model_boards: n,
+                share_rate_rps: share_rate,
+                fpga: sp.fpga,
+                sim_cfg: sp.sim_cfg,
+                design: sp.design,
+                factors: sp.factors,
+                torus: (torus.rows, torus.cols),
+                service_cycles: sp.service_cycles,
+                service_ms: sp.service_ms,
+                service_ms_batch: sp.service_ms_batch.clone(),
+                planned_batch,
+                utilization: rho,
+                risk,
+                watts: sp.watts,
+                hetero: sp.hetero,
+            });
+        }
+        Ok(deployments)
     }
 
     /// Recursive composition search over `counts[idx..]`, distributing the
@@ -716,7 +828,37 @@ impl Planner {
     ///
     /// Heterogeneous ranges score every replica (sub-ranges differ);
     /// homogeneous fleets hit the sub-plan cache after the first.
+    ///
+    /// The whole evaluation is memoized per (model, range, scored rate,
+    /// deadline, batch cap, policy): a re-plan whose workload did not
+    /// move re-reads the split from the persistent cache instead of
+    /// re-enumerating candidates — `None` results (unconstructable pinned
+    /// counts) cache too.
     fn best_split(&self, w: &WorkloadSpec, start: usize, n: usize) -> Result<Option<ReplicaSplit>> {
+        let key_start = if self.fleet.is_homogeneous() { 0 } else { start };
+        let key: SplitKey = (
+            w.model.clone(),
+            key_start,
+            n,
+            self.scoring_rate(w).to_bits(),
+            w.deadline_ms().to_bits(),
+            w.max_batch,
+            match w.replicas {
+                ReplicaPolicy::Auto => 0,
+                ReplicaPolicy::Fixed(r) => r,
+            },
+        );
+        if let Some(hit) = self.split_cache.lock().unwrap().get(&key) {
+            self.counters.split_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(*hit);
+        }
+        self.counters.split_misses.fetch_add(1, Ordering::Relaxed);
+        let split = self.compute_split(w, start, n)?;
+        self.split_cache.lock().unwrap().insert(key, split);
+        Ok(split)
+    }
+
+    fn compute_split(&self, w: &WorkloadSpec, start: usize, n: usize) -> Result<Option<ReplicaSplit>> {
         let energy = self.cfg.energy_tolerance >= 0.0;
         let mut candidates: Vec<(usize, usize)> = Vec::new(); // (R, k)
         match w.replicas {
@@ -812,8 +954,10 @@ impl Planner {
         let key_start = if self.fleet.is_homogeneous() { 0 } else { start };
         let key = (model.to_string(), key_start, n, p);
         if let Some(sp) = self.cache.lock().unwrap().get(&key) {
+            self.counters.subplan_hits.fetch_add(1, Ordering::Relaxed);
             return Ok(sp.clone());
         }
+        self.counters.subplan_misses.fetch_add(1, Ordering::Relaxed);
         let sp = self.build_subplan(model, start, n, p)?;
         self.cache.lock().unwrap().insert(key, sp.clone());
         Ok(sp)
@@ -1070,6 +1214,45 @@ mod tests {
         let other = Planner::new(FleetSpec::homogeneous(2, weak), PlannerConfig::default());
         other.adopt_cache(&big);
         assert!(other.cache.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn split_memo_makes_repeat_plans_pure_cache_reads() {
+        let planner = Planner::new(fleet(3), PlannerConfig::default());
+        let mix = vec![w("alexnet", 10.0, 100.0), w("squeezenet", 20.0, 100.0)];
+        let a = planner.plan(&mix).unwrap();
+        planner.reset_cache_stats();
+        let b = planner.plan(&mix).unwrap();
+        let st = planner.cache_stats();
+        assert_eq!(st.split_misses, 0, "identical re-plan re-evaluates nothing: {st:?}");
+        assert_eq!(st.subplan_misses, 0, "and re-simulates nothing: {st:?}");
+        assert!(st.split_hits > 0);
+        assert!((st.hit_rate() - 1.0).abs() < 1e-12);
+        // Cached results are bit-identical to the first evaluation (f64
+        // Debug round-trips, so equal strings ⇒ equal bits).
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        // A rate move re-keys that model's split (cache miss) but still
+        // never re-simulates a sub-plan.
+        let mut moved = mix.clone();
+        moved[0].rate_rps *= 1.5;
+        planner.reset_cache_stats();
+        planner.plan(&moved).unwrap();
+        let st = planner.cache_stats();
+        assert!(st.split_misses > 0);
+        assert_eq!(st.subplan_misses, 0, "{st:?}");
+    }
+
+    #[test]
+    fn variant_tags_are_distinct_plannable_models() {
+        // `alexnet#a` / `alexnet#b` share the network but are independent
+        // mix entries with their own cache identity — the mechanism the
+        // simulated 50-model fleet is built from.
+        let planner = Planner::new(fleet(2), PlannerConfig::default());
+        let mix = vec![w("alexnet#a", 10.0, 100.0), w("alexnet#b", 10.0, 100.0)];
+        let plan = planner.plan(&mix).unwrap();
+        assert_eq!(plan.allocation(), vec![1, 1]);
+        assert_eq!(plan.deployments[0].workload.model, "alexnet#a");
+        assert!(plan.worst_risk.is_finite());
     }
 
     #[test]

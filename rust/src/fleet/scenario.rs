@@ -320,7 +320,7 @@ pub fn run_scenario(plan: &FleetPlan, cfg: &ScenarioConfig) -> Result<Vec<ModelS
             .collect();
         let checksum: f32 = img.iter().sum();
         let d = entries[si];
-        match server.try_submit_to(
+        match server.submit_to_class(
             &d.workload.model,
             img,
             d.workload.deadline.mul_f64(ts),

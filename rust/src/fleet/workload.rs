@@ -106,7 +106,7 @@ impl SloClass {
 }
 
 /// One model's serving requirement in a mixed-traffic scenario.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct WorkloadSpec {
     /// Zoo model name (`zoo::by_name`).
     pub model: String,
@@ -179,6 +179,73 @@ impl WorkloadSpec {
     }
 }
 
+/// Typed builder for one mix entry — the programmatic front door to the
+/// planner and serving stack. The string mix grammar (`parse_mix`) is a
+/// thin parser over this builder, pinned by golden tests: every grammar
+/// form constructs the identical `WorkloadSpec` byte-for-byte.
+///
+/// ```
+/// use std::time::Duration;
+/// use superlip::fleet::{SloClass, WorkloadEntry};
+///
+/// let w = WorkloadEntry::new("alexnet", 200.0, Duration::from_millis(20))
+///     .batch(4)
+///     .replicas(2)
+///     .class(SloClass::Gold)
+///     .build();
+/// assert_eq!(w.max_batch, 4);
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadEntry {
+    spec: WorkloadSpec,
+}
+
+impl WorkloadEntry {
+    pub fn new(model: impl Into<String>, rate_rps: f64, deadline: Duration) -> Self {
+        let model = model.into();
+        WorkloadEntry {
+            spec: WorkloadSpec::new(&model, rate_rps, deadline),
+        }
+    }
+
+    /// Lane batch cap (≥ 1; default 1 — real-time "low or no batching").
+    pub fn batch(mut self, max_batch: usize) -> Self {
+        self.spec = self.spec.with_max_batch(max_batch);
+        self
+    }
+
+    /// Pin the replica count (≥ 1). Without it the planner decides
+    /// (`ReplicaPolicy::Auto`).
+    pub fn replicas(mut self, replicas: usize) -> Self {
+        self.spec = self.spec.with_replicas(replicas);
+        self
+    }
+
+    /// Set the replica policy explicitly (`replica_policy(Auto)` undoes a
+    /// previous `replicas(..)`).
+    pub fn replica_policy(mut self, policy: ReplicaPolicy) -> Self {
+        self.spec = self.spec.with_replica_policy(policy);
+        self
+    }
+
+    /// Declare the SLO class, opting into its default queue quota (a
+    /// later `class_quota(..)` overrides it).
+    pub fn class(mut self, class: SloClass) -> Self {
+        self.spec = self.spec.with_class(class);
+        self
+    }
+
+    /// Override the per-class queue cap (0 = unlimited).
+    pub fn class_quota(mut self, quota: usize) -> Self {
+        self.spec = self.spec.with_class_quota(quota);
+        self
+    }
+
+    pub fn build(self) -> WorkloadSpec {
+        self.spec
+    }
+}
+
 /// Parse a traffic mix from
 /// `model:rate_rps:deadline_ms[:max_batch[:replicas[:class]]]` entries
 /// separated by commas, e.g.
@@ -187,6 +254,11 @@ impl WorkloadSpec {
 /// `class` is `gold`, `silver` or `best-effort`/`bronze`, optionally with
 /// an `@quota` queue-cap suffix (e.g. `best-effort@32`). A classless entry
 /// is `best-effort` with an unlimited queue — the pre-class behavior.
+///
+/// The parser is a thin front-end over [`WorkloadEntry`]: it validates
+/// each field with a typed error, then delegates construction to the
+/// builder, so a parsed entry and the equivalent builder chain produce
+/// the identical spec (golden-tested below).
 pub fn parse_mix(s: &str) -> Result<Vec<WorkloadSpec>> {
     let mut out = Vec::new();
     for entry in s.split(',').filter(|e| !e.trim().is_empty()) {
@@ -215,7 +287,7 @@ pub fn parse_mix(s: &str) -> Result<Vec<WorkloadSpec>> {
                 "mix entry `{entry}`: rate and deadline must be positive and finite"
             )));
         }
-        let mut w = WorkloadSpec::new(&model, rate, Duration::from_secs_f64(deadline_ms / 1e3));
+        let mut e = WorkloadEntry::new(&model, rate, Duration::from_secs_f64(deadline_ms / 1e3));
         if parts.len() >= 4 {
             let mb: usize = parts[3]
                 .parse()
@@ -225,7 +297,7 @@ pub fn parse_mix(s: &str) -> Result<Vec<WorkloadSpec>> {
                     "mix entry `{entry}`: max_batch must be ≥ 1"
                 )));
             }
-            w = w.with_max_batch(mb);
+            e = e.batch(mb);
         }
         if parts.len() >= 5 {
             let spec = parts[4].trim().to_ascii_lowercase();
@@ -240,7 +312,7 @@ pub fn parse_mix(s: &str) -> Result<Vec<WorkloadSpec>> {
                         "mix entry `{entry}`: replicas must be ≥ 1 (or `auto`)"
                     )));
                 }
-                w = w.with_replicas(r);
+                e = e.replicas(r);
             }
         }
         if parts.len() == 6 {
@@ -255,7 +327,7 @@ pub fn parse_mix(s: &str) -> Result<Vec<WorkloadSpec>> {
                      (choose gold, silver or best-effort, optionally with `@quota`)"
                 ))
             })?;
-            w = w.with_class(class);
+            e = e.class(class);
             if let Some(q) = quota {
                 let q: usize = q.parse().map_err(|e| {
                     Error::InvalidArg(format!("mix entry `{entry}`: class quota: {e}"))
@@ -265,10 +337,10 @@ pub fn parse_mix(s: &str) -> Result<Vec<WorkloadSpec>> {
                         "mix entry `{entry}`: class quota must be in 1..=1000000"
                     )));
                 }
-                w = w.with_class_quota(q);
+                e = e.class_quota(q);
             }
         }
-        out.push(w);
+        out.push(e.build());
     }
     if out.is_empty() {
         return Err(Error::InvalidArg("empty traffic mix".into()));
@@ -330,7 +402,9 @@ impl FleetSpec {
 /// (they are the published design points, already validated by the
 /// `fig15_scaling` bench); `None` falls back to the full cross-layer DSE.
 pub fn reference_design(model: &str, p: Precision) -> Option<Design> {
-    match (model.to_ascii_lowercase().as_str(), p) {
+    // `#variant` tags name independent streams of the same network
+    // (`zoo::base_name`) — they share the base model's pinned tiling.
+    match (zoo::base_name(model).to_ascii_lowercase().as_str(), p) {
         ("alexnet", Precision::Fixed16) => Some(Design::fixed16(128, 10, 7, 14)),
         ("squeezenet", Precision::Fixed16) => Some(Design::fixed16(64, 16, 7, 14)),
         ("vgg" | "vgg16", Precision::Fixed16) => Some(Design::fixed16(64, 25, 7, 14)),
@@ -404,6 +478,106 @@ mod tests {
         assert!(parse_mix("alexnet:10:10:1:auto:gold@-3").is_err());
         assert!(parse_mix("alexnet:10:10:1:auto:gold@1000001").is_err());
         assert!(parse_mix("alexnet:10:10:1:auto:gold@ten").is_err());
+    }
+
+    // Golden tests: every grammar form builds the IDENTICAL spec through
+    // the typed builder — the parser is a front-end, not a second
+    // construction path.
+    #[test]
+    fn every_grammar_form_matches_the_builder() {
+        let ms = |m: f64| Duration::from_secs_f64(m / 1e3);
+        let cases: Vec<(&str, WorkloadSpec)> = vec![
+            // 3-part: model:rate:deadline.
+            (
+                "alexnet:200:20",
+                WorkloadEntry::new("alexnet", 200.0, ms(20.0)).build(),
+            ),
+            // Case-insensitive model names normalize to lowercase.
+            (
+                "VGG16:25:100",
+                WorkloadEntry::new("vgg16", 25.0, ms(100.0)).build(),
+            ),
+            // 4-part: batch cap.
+            (
+                "squeezenet:60:60:4",
+                WorkloadEntry::new("squeezenet", 60.0, ms(60.0)).batch(4).build(),
+            ),
+            // 5-part: explicit `auto` replicas are the default policy.
+            (
+                "yolo:8:150:2:auto",
+                WorkloadEntry::new("yolo", 8.0, ms(150.0)).batch(2).build(),
+            ),
+            // 5-part: pinned replica count.
+            (
+                "alexnet:200:20:1:2",
+                WorkloadEntry::new("alexnet", 200.0, ms(20.0)).replicas(2).build(),
+            ),
+            // 6-part: class with its default quota.
+            (
+                "alexnet:200:20:1:auto:gold",
+                WorkloadEntry::new("alexnet", 200.0, ms(20.0))
+                    .class(SloClass::Gold)
+                    .build(),
+            ),
+            // 6-part: class with an explicit @quota.
+            (
+                "squeezenet:60:60:4:auto:best-effort@32",
+                WorkloadEntry::new("squeezenet", 60.0, ms(60.0))
+                    .batch(4)
+                    .class(SloClass::BestEffort)
+                    .class_quota(32)
+                    .build(),
+            ),
+            // Class aliases: bronze / besteffort / be ≡ best-effort.
+            (
+                "yolo:8:150:1:1:bronze",
+                WorkloadEntry::new("yolo", 8.0, ms(150.0))
+                    .replicas(1)
+                    .class(SloClass::BestEffort)
+                    .build(),
+            ),
+            (
+                "yolo:8:150:1:1:besteffort",
+                WorkloadEntry::new("yolo", 8.0, ms(150.0))
+                    .replicas(1)
+                    .class(SloClass::BestEffort)
+                    .build(),
+            ),
+            (
+                "yolo:8:150:1:1:be",
+                WorkloadEntry::new("yolo", 8.0, ms(150.0))
+                    .replicas(1)
+                    .class(SloClass::BestEffort)
+                    .build(),
+            ),
+            // Silver, with quota.
+            (
+                "vgg16:25:100:2:3:silver@500",
+                WorkloadEntry::new("vgg16", 25.0, ms(100.0))
+                    .batch(2)
+                    .replicas(3)
+                    .class(SloClass::Silver)
+                    .class_quota(500)
+                    .build(),
+            ),
+        ];
+        for (grammar, golden) in cases {
+            let parsed = parse_mix(grammar).unwrap();
+            assert_eq!(parsed.len(), 1, "{grammar}");
+            assert_eq!(parsed[0], golden, "grammar `{grammar}` diverged from the builder");
+        }
+        // Builder edge: replica_policy(Auto) undoes a pinned count.
+        let undone = WorkloadEntry::new("alexnet", 1.0, ms(10.0))
+            .replicas(4)
+            .replica_policy(ReplicaPolicy::Auto)
+            .build();
+        assert_eq!(undone.replicas, ReplicaPolicy::Auto);
+        // Builder edge: class_quota after class overrides the default.
+        let quota = WorkloadEntry::new("alexnet", 1.0, ms(10.0))
+            .class(SloClass::Gold)
+            .class_quota(7)
+            .build();
+        assert_eq!((quota.class, quota.class_quota), (SloClass::Gold, 7));
     }
 
     #[test]

@@ -494,7 +494,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })
         .collect();
     let image_elems = 3 * 32 * 32;
-    let server = Server::start(factories, ServerConfig::default());
+    // One-lane plan: the single documented server entry point.
+    let cfg = ServerConfig::default();
+    let server = Server::start_plan(
+        vec![superlip::serving::LaneSpec {
+            model: "cifar".into(),
+            factories,
+            batcher: cfg.batcher,
+        }],
+        cfg,
+    );
 
     // Warmup barrier: workers compile their executables lazily; wait until
     // one answers before starting the measured run (the paper likewise

@@ -13,9 +13,22 @@ pub use yolo::yolov1;
 
 use super::Network;
 
-/// Look a network up by (case-insensitive) name.
+/// Strip a `#variant` tag: `alexnet#07` names the same network as
+/// `alexnet` but is a distinct *model identity* everywhere above the zoo
+/// (mix entries, planner cache keys, serving routes). Large simulated
+/// fleets use tags to serve many independent model streams from the four
+/// evaluation networks (e.g. the 256-board / 50-model re-plan scenario).
+pub fn base_name(name: &str) -> &str {
+    match name.find('#') {
+        Some(i) => &name[..i],
+        None => name,
+    }
+}
+
+/// Look a network up by (case-insensitive) name, ignoring any `#variant`
+/// tag.
 pub fn by_name(name: &str) -> Option<Network> {
-    match name.to_ascii_lowercase().as_str() {
+    match base_name(name).to_ascii_lowercase().as_str() {
         "alexnet" => Some(alexnet()),
         "squeezenet" => Some(squeezenet()),
         "vgg" | "vgg16" => Some(vgg16()),
@@ -44,6 +57,15 @@ mod tests {
             assert!(by_name(n).is_some(), "{n}");
         }
         assert!(by_name("resnet").is_none());
+    }
+
+    #[test]
+    fn variant_tags_resolve_to_the_base_network() {
+        assert_eq!(base_name("alexnet#07"), "alexnet");
+        assert_eq!(base_name("vgg16"), "vgg16");
+        let tagged = by_name("alexnet#07").unwrap();
+        assert_eq!(tagged.name, alexnet().name);
+        assert!(by_name("resnet#1").is_none(), "tag does not widen the zoo");
     }
 
     #[test]

@@ -20,5 +20,5 @@ pub use metrics::{LatencyStats, Metrics, MetricsSnapshot};
 pub use request::{
     InferBackend, InferenceRequest, InferenceResponse, PipelineOutcome, PipelinedBackend,
 };
-pub use router::{PlanRouter, RoutePolicy, Router};
+pub use router::{PlanRouter, RoutePolicy};
 pub use server::{BackendFactory, LaneSpec, Server, ServerConfig, SubmitError};

@@ -24,8 +24,8 @@
 //! (publish is Release, load is Acquire) — a retired lane receives no new
 //! routes.
 //!
-//! The original single-model replica `Router` is retained as a thin wrapper
-//! over a one-entry `PlanRouter`, so pre-fleet callers keep working.
+//! A single-model replica set is just a one-entry table (the pre-fleet
+//! `Router` wrapper is gone — register the model under any name).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -252,70 +252,41 @@ impl PlanRouter {
     }
 }
 
-/// Replica router for a single anonymous model (e.g. two 2-FPGA XFER
-/// clusters serving the same network) — the pre-fleet API, now a wrapper
-/// over `PlanRouter`.
-pub struct Router {
-    inner: PlanRouter,
-}
-
-impl Router {
-    pub fn new(policy: RoutePolicy, replicas: usize) -> Self {
-        assert!(replicas >= 1);
-        let inner =
-            PlanRouter::with_routes(policy, replicas, [("", (0..replicas).collect::<Vec<_>>())]);
-        Router { inner }
-    }
-
-    pub fn replicas(&self) -> usize {
-        self.inner.n_lanes()
-    }
-
-    /// Choose a replica for the next request and account it outstanding.
-    pub fn route(&self) -> usize {
-        self.inner.route("").expect("anonymous route registered")
-    }
-
-    /// Mark a request complete on a replica.
-    pub fn complete(&self, replica: usize) {
-        self.inner.complete(replica);
-    }
-
-    /// Outstanding count per replica (diagnostics / tests).
-    pub fn load(&self) -> Vec<u64> {
-        self.inner.load()
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    /// A single-model replica set: one route table entry over all lanes
+    /// (what the retired `Router` wrapper used to spell).
+    fn replicas(policy: RoutePolicy, n: usize) -> PlanRouter {
+        PlanRouter::with_routes(policy, n, [("m", (0..n).collect::<Vec<_>>())])
+    }
+
     #[test]
     fn round_robin_cycles() {
-        let r = Router::new(RoutePolicy::RoundRobin, 3);
-        let picks: Vec<usize> = (0..6).map(|_| r.route()).collect();
+        let r = replicas(RoutePolicy::RoundRobin, 3);
+        let picks: Vec<usize> = (0..6).map(|_| r.route("m").unwrap()).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
     }
 
     #[test]
     fn least_outstanding_balances() {
-        let r = Router::new(RoutePolicy::LeastOutstanding, 2);
-        let a = r.route();
-        let b = r.route();
+        let r = replicas(RoutePolicy::LeastOutstanding, 2);
+        let a = r.route("m").unwrap();
+        let b = r.route("m").unwrap();
         assert_ne!(a, b, "second request goes to the idle replica");
         r.complete(a);
         // Now replica a is idle again; next goes there.
-        assert_eq!(r.route(), a);
+        assert_eq!(r.route("m"), Some(a));
     }
 
     #[test]
     fn conservation_of_outstanding() {
         // Property: total outstanding = routes − completes.
-        let r = Router::new(RoutePolicy::LeastOutstanding, 4);
+        let r = replicas(RoutePolicy::LeastOutstanding, 4);
         let mut routed = Vec::new();
         for _ in 0..100 {
-            routed.push(r.route());
+            routed.push(r.route("m").unwrap());
         }
         for &i in routed.iter().take(60) {
             r.complete(i);

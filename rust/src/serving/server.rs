@@ -1,14 +1,14 @@
 //! The serving server.
 //!
-//! Two entry points share one machinery:
-//!
-//! * `Server::start` — the original single-model path: one shared
-//!   deadline-aware batcher feeding a pool of worker threads, each owning
-//!   one compute backend (one simulated FPGA cluster / one PJRT executor).
-//! * `Server::start_plan` — the fleet path: one **lane** (batcher + workers
-//!   + per-lane metrics) per planned sub-cluster, with a `PlanRouter`
-//!   dispatching `submit_to(model, ...)` requests to the right lane (and
-//!   balancing across replica lanes of the same model).
+//! One entry point: `Server::start_plan` — one **lane** (batcher + workers
+//! + per-lane metrics) per planned sub-cluster, with a `PlanRouter`
+//! dispatching `submit_to(model, ...)` requests to the right lane (and
+//! balancing across replica lanes of the same model). A single-model
+//! server is just a one-lane plan. The submit surface is typed all the
+//! way down: `submit_to_class` (explicit SLO class) is the canonical
+//! call, `submit_to` is the classless shorthand — both return
+//! `SubmitError` on refusal — and `submit` is a convenience wrapper
+//! (first live lane's model, default deadline) for single-model setups.
 //!
 //! The lane set is **live**: the control plane (`control::Controller`)
 //! migrates a running server to a new fleet plan by standing up
@@ -109,7 +109,7 @@ struct Lane {
     workers: Vec<JoinHandle<()>>,
 }
 
-/// The submit-path view of a lane: everything `try_submit_to` needs,
+/// The submit-path view of a lane: everything `submit_to_class` needs,
 /// published in a lock-free snapshot so submits never touch the lane
 /// lifecycle `RwLock`. Indices mirror `Server::lanes`; `None` = reaped.
 #[derive(Clone)]
@@ -139,21 +139,13 @@ pub struct Server {
 }
 
 impl Server {
-    /// Single-model server: one worker thread per backend factory, all
-    /// sharing one batcher (the pre-fleet API).
-    pub fn start(factories: Vec<BackendFactory>, cfg: ServerConfig) -> Self {
-        Self::start_plan(
-            vec![LaneSpec {
-                model: "default".into(),
-                factories,
-                batcher: cfg.batcher,
-            }],
-            cfg,
-        )
-    }
-
-    /// Plan-driven server: one lane per planned sub-cluster, routed by
-    /// model name.
+    /// Plan-driven server — THE entry point: one lane per planned
+    /// sub-cluster, routed by model name. A single-model server is a
+    /// one-lane plan:
+    ///
+    /// ```ignore
+    /// Server::start_plan(vec![LaneSpec { model, factories, batcher }], cfg)
+    /// ```
     pub fn start_plan(specs: Vec<LaneSpec>, cfg: ServerConfig) -> Self {
         assert!(!specs.is_empty());
         let server = Server {
@@ -355,40 +347,32 @@ impl Server {
         self.lanes.write().unwrap_or_else(|e| e.into_inner())
     }
 
-    /// Submit one image to the first live lane's model; returns the
-    /// receiver for its response.
+    /// Convenience wrapper for single-model setups: submit one image to
+    /// the first live lane's model under the configured default deadline.
+    /// A thin front over [`Server::submit_to`] (`SubmitError` collapses
+    /// into `Error::Serving` via `From`).
     pub fn submit(&self, image: Vec<f32>) -> crate::Result<mpsc::Receiver<InferenceResponse>> {
-        self.submit_with_deadline(image, self.cfg.default_deadline)
-    }
-
-    /// Submit to the first live lane's model with an explicit relative
-    /// deadline.
-    pub fn submit_with_deadline(
-        &self,
-        image: Vec<f32>,
-        deadline: Duration,
-    ) -> crate::Result<mpsc::Receiver<InferenceResponse>> {
         let model = self
             .endpoints
             .load()
             .iter()
             .find_map(|s| s.as_ref().map(|e| e.model.clone()))
             .ok_or_else(|| crate::Error::Serving("no live lanes".into()))?;
-        self.submit_to(&model, image, deadline)
+        Ok(self.submit_to(&model, image, self.cfg.default_deadline)?)
     }
 
     /// Submit a request for `model`, routed by the plan router to one of
     /// the model's lanes (classless — `BestEffort`, the default class).
-    /// Typed refusals collapse into `Error::Serving`; class-aware callers
-    /// use `try_submit_to`.
+    /// A thin front over [`Server::submit_to_class`]; refusals are the
+    /// same typed [`SubmitError`]s (`?` still works in `crate::Result`
+    /// functions through `From<SubmitError> for Error`).
     pub fn submit_to(
         &self,
         model: &str,
         image: Vec<f32>,
         deadline: Duration,
-    ) -> crate::Result<mpsc::Receiver<InferenceResponse>> {
-        self.try_submit_to(model, image, deadline, SloClass::BestEffort)
-            .map_err(crate::Error::from)
+    ) -> std::result::Result<mpsc::Receiver<InferenceResponse>, SubmitError> {
+        self.submit_to_class(model, image, deadline, SloClass::BestEffort)
     }
 
     /// Set the admission floor (brownout rung 3): refuse classes below
@@ -411,12 +395,15 @@ impl Server {
     /// refused with `Shed` — the explicit rejection the brownout ladder
     /// promises (and counted in lane + aggregate shed metrics).
     ///
+    /// This is the canonical submit: `submit_to` and `submit` are thin
+    /// fronts over it.
+    ///
     /// **Lock-free.** The whole submit path — route, endpoint lookup,
     /// enqueue, metrics — takes no `RwLock`: routing and the endpoint
     /// table are snapshot loads, the queue insert is a short per-class
     /// mutex, and counters are atomics. Lane lifecycle writers can never
     /// stall ingress.
-    pub fn try_submit_to(
+    pub fn submit_to_class(
         &self,
         model: &str,
         image: Vec<f32>,
@@ -866,9 +853,22 @@ mod tests {
         }
     }
 
+    /// A single-model server is a one-lane plan (the retired
+    /// `Server::start` spelled exactly this).
+    fn single(factories: Vec<BackendFactory>, cfg: ServerConfig) -> Server {
+        Server::start_plan(
+            vec![LaneSpec {
+                model: "default".into(),
+                factories,
+                batcher: cfg.batcher,
+            }],
+            cfg,
+        )
+    }
+
     #[test]
     fn serves_correct_results() {
-        let srv = Server::start(vec![stub(0)], ServerConfig::default());
+        let srv = single(vec![stub(0)], ServerConfig::default());
         let rx = srv.submit(vec![1.0, 2.0, 3.0, 4.0]).unwrap();
         let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(resp.logits, vec![10.0, 11.0, 12.0]);
@@ -883,7 +883,7 @@ mod tests {
         let mut cfg = ServerConfig::default();
         cfg.batcher.window = Duration::from_millis(20);
         cfg.batcher.max_batch = 4;
-        let srv = Server::start(vec![stub(1)], cfg);
+        let srv = single(vec![stub(1)], cfg);
         let rxs: Vec<_> = (0..8)
             .map(|i| srv.submit(vec![i as f32; 4]).unwrap())
             .collect();
@@ -900,7 +900,7 @@ mod tests {
     fn multiple_workers_share_queue() {
         let mut cfg = ServerConfig::default();
         cfg.batcher.max_batch = 1; // force per-request dispatch
-        let srv = Server::start(vec![stub(5), stub(5)], cfg);
+        let srv = single(vec![stub(5), stub(5)], cfg);
         let t0 = Instant::now();
         let rxs: Vec<_> = (0..6).map(|_| srv.submit(vec![0.0; 4]).unwrap()).collect();
         for rx in rxs {
@@ -914,9 +914,9 @@ mod tests {
 
     #[test]
     fn deadline_miss_recorded() {
-        let srv = Server::start(vec![stub(20)], ServerConfig::default());
+        let srv = single(vec![stub(20)], ServerConfig::default());
         let rx = srv
-            .submit_with_deadline(vec![0.0; 4], Duration::from_millis(1))
+            .submit_to("default", vec![0.0; 4], Duration::from_millis(1))
             .unwrap();
         let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert!(!resp.deadline_met);
@@ -926,7 +926,7 @@ mod tests {
 
     #[test]
     fn shutdown_drains_queue() {
-        let srv = Server::start(vec![stub(1)], ServerConfig::default());
+        let srv = single(vec![stub(1)], ServerConfig::default());
         let rxs: Vec<_> = (0..5).map(|_| srv.submit(vec![0.0; 4]).unwrap()).collect();
         let m = srv.shutdown();
         assert_eq!(m.completed(), 5);
@@ -1032,7 +1032,7 @@ mod tests {
 
     #[test]
     fn outstanding_returns_to_zero() {
-        let srv = Server::start(vec![stub(1)], ServerConfig::default());
+        let srv = single(vec![stub(1)], ServerConfig::default());
         let rxs: Vec<_> = (0..6).map(|_| srv.submit(vec![0.0; 4]).unwrap()).collect();
         for rx in rxs {
             rx.recv_timeout(Duration::from_secs(5)).unwrap();
@@ -1110,18 +1110,18 @@ mod tests {
         let d = Duration::from_secs(5);
         srv.set_admission_floor(SloClass::Silver.index());
         // Best-effort is refused with a typed Shed...
-        match srv.try_submit_to("m", vec![0.0; 4], d, SloClass::BestEffort) {
+        match srv.submit_to_class("m", vec![0.0; 4], d, SloClass::BestEffort) {
             Err(SubmitError::Shed { class, .. }) => assert_eq!(class, SloClass::BestEffort),
             other => panic!("expected Shed, got {other:?}"),
         }
         // ...while silver and gold still flow.
         let rx = srv
-            .try_submit_to("m", vec![1.0; 4], d, SloClass::Gold)
+            .submit_to_class("m", vec![1.0; 4], d, SloClass::Gold)
             .unwrap();
         assert!(rx.recv_timeout(d).is_ok());
         srv.set_admission_floor(0);
         let rx = srv
-            .try_submit_to("m", vec![1.0; 4], d, SloClass::BestEffort)
+            .submit_to_class("m", vec![1.0; 4], d, SloClass::BestEffort)
             .unwrap();
         assert!(rx.recv_timeout(d).is_ok());
         let m = srv.shutdown();
@@ -1149,7 +1149,7 @@ mod tests {
         let mut rxs = Vec::new();
         let mut sheds = 0;
         for _ in 0..4 {
-            match srv.try_submit_to("m", vec![0.0; 4], d, SloClass::BestEffort) {
+            match srv.submit_to_class("m", vec![0.0; 4], d, SloClass::BestEffort) {
                 Ok(rx) => rxs.push(rx),
                 Err(SubmitError::Shed { .. }) => sheds += 1,
                 Err(e) => panic!("unexpected: {e:?}"),
@@ -1166,7 +1166,7 @@ mod tests {
 
     #[test]
     fn submit_path_does_not_block_on_lane_table_writers() {
-        let srv = Server::start(vec![stub(0)], ServerConfig::default());
+        let srv = single(vec![stub(0)], ServerConfig::default());
         let srv_ref = &srv;
         std::thread::scope(|s| {
             // Hold the lifecycle write lock (as a slow control-plane
@@ -1199,7 +1199,7 @@ mod tests {
         );
         let mut cfg = ServerConfig::default();
         cfg.batcher.window = Duration::from_millis(1);
-        let srv = Server::start(vec![factory], cfg);
+        let srv = single(vec![factory], cfg);
         let rxs: Vec<_> = (0..20)
             .map(|i| srv.submit(vec![i as f32; 4]).unwrap())
             .collect();

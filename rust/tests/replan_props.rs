@@ -1,0 +1,198 @@
+//! Property tests for incremental re-planning (`control::Replanner`):
+//!
+//! 1. **Bit-identity** — over randomized drift sequences, every
+//!    incremental plan equals the from-scratch arithmetic on the same
+//!    allocation and effective mix, byte for byte (f64 `Debug` round-trips,
+//!    so equal debug strings ⇔ equal bits).
+//! 2. **Zero churn for clean models** — a model the tolerance band calls
+//!    clean never appears in `diff_plans` retire/add sets.
+//! 3. **Invalidation** — fleet shrink (board death) and precision-degrade
+//!    swaps (the controller's `invalidate_plan` hook) force the next
+//!    re-plan through the full composition search.
+//! 4. **O(dirty) re-scoring** — on a 50-model fleet, a single-model drift
+//!    re-scores exactly that model; everything else is pure cache reads.
+
+use std::time::Duration;
+use superlip::control::{diff_plans, Replanner};
+use superlip::fleet::{FleetSpec, Planner, PlannerConfig, WorkloadSpec};
+use superlip::platform::FpgaSpec;
+use superlip::util::SplitMix64;
+
+fn fleet(n: usize) -> FleetSpec {
+    FleetSpec::homogeneous(n, FpgaSpec::zcu102())
+}
+
+fn w(model: &str, rate: f64, deadline_ms: f64) -> WorkloadSpec {
+    WorkloadSpec::new(model, rate, Duration::from_secs_f64(deadline_ms / 1e3))
+}
+
+fn dbg_plan(p: &superlip::fleet::FleetPlan) -> String {
+    format!("{p:?}")
+}
+
+#[test]
+fn random_drift_sequences_are_bit_identical_to_scratch() {
+    for seed in [11u64, 23, 47, 91] {
+        let mut rng = SplitMix64::new(seed);
+        let mut rp = Replanner::new(fleet(4), PlannerConfig::default());
+        // A COLD planner per comparison would re-derive everything; one
+        // warm scratch planner is fine — caching must not change results,
+        // which is exactly the property under test.
+        let scratch = Planner::new(fleet(4), PlannerConfig::default());
+        let base = vec![
+            w("alexnet", 40.0, 120.0),
+            w("squeezenet", 60.0, 120.0),
+            w("yolo", 1.0, 800.0),
+        ];
+        let mut rates: Vec<f64> = base.iter().map(|x| x.rate_rps).collect();
+        let mut prev = rp.plan_incremental(&base, &[false; 3]).unwrap();
+        assert!(!prev.incremental, "first call has no plan memory");
+        for round in 0..8 {
+            let mut observed = base.clone();
+            let mut moved = vec![false; 3];
+            for i in 0..3 {
+                if rng.below(2) == 0 {
+                    moved[i] = true;
+                    // Multiplier in [0.5, 2.0) of the base rate.
+                    let f = 0.5 + rng.below(1500) as f64 / 1000.0;
+                    rates[i] = base[i].rate_rps * f;
+                }
+                observed[i].rate_rps = rates[i];
+            }
+            let out = rp.plan_incremental(&observed, &moved).unwrap();
+            let ctx = format!("seed={seed} round={round} moved={moved:?}");
+            if out.incremental {
+                // Bit-identity: the reused-allocation arithmetic, from
+                // scratch, on the effective mix.
+                let sp = scratch
+                    .plan_allocation(&out.mix, &out.plan.allocation())
+                    .unwrap();
+                assert_eq!(dbg_plan(&out.plan), dbg_plan(&sp), "{ctx}");
+                // Zero churn for clean models.
+                let delta = diff_plans(&prev.plan, &out.plan);
+                for clean in &out.reused {
+                    assert!(
+                        !delta.retire.iter().any(|m| m == clean),
+                        "{ctx}: clean `{clean}` retired: {delta:?}"
+                    );
+                    assert!(
+                        !delta
+                            .add
+                            .iter()
+                            .any(|&i| out.plan.deployments[i].workload.model == *clean),
+                        "{ctx}: clean `{clean}` re-added: {delta:?}"
+                    );
+                }
+            } else {
+                // Fallback rounds equal the full search, bit for bit.
+                let sp = scratch.plan(&out.mix).unwrap();
+                assert_eq!(dbg_plan(&out.plan), dbg_plan(&sp), "{ctx}");
+            }
+            prev = out;
+        }
+    }
+}
+
+#[test]
+fn shrink_and_degrade_invalidate_the_plan_memory() {
+    let mut rp = Replanner::new(fleet(4), PlannerConfig::default());
+    let mix = vec![w("alexnet", 20.0, 150.0), w("squeezenet", 20.0, 150.0)];
+    rp.plan_incremental(&mix, &[false, false]).unwrap();
+    let warm = rp.plan_incremental(&mix, &[false, false]).unwrap();
+    assert!(warm.incremental);
+
+    // Board death: the next re-plan must re-search on the survivors.
+    rp.remove_board(3).unwrap();
+    let post = rp.plan_incremental(&mix, &[false, false]).unwrap();
+    assert!(!post.incremental, "shrink must invalidate the plan memory");
+    assert_eq!(post.plan.allocation().iter().sum::<usize>(), 3);
+
+    // Precision degrade (the controller swaps a lane down a rung, then
+    // calls invalidate_plan): the next re-plan must not resurrect the
+    // pre-degrade deployments.
+    let again = rp.plan_incremental(&mix, &[false, false]).unwrap();
+    assert!(again.incremental);
+    let victim = again.plan.deployments[0].clone();
+    if let Ok(deg) = rp.degraded_deployment(&victim) {
+        assert_ne!(
+            deg.design.precision, victim.design.precision,
+            "degrade must change the precision rung"
+        );
+    }
+    rp.invalidate_plan();
+    let after = rp.plan_incremental(&mix, &[false, false]).unwrap();
+    assert!(!after.incremental, "degrade swap must force a full search");
+}
+
+#[test]
+fn fifty_model_single_drift_rescores_only_that_model() {
+    // 50 variant-tagged models (`alexnet#NN`), one board each: the
+    // simulated big-fleet shape. A single model drifting must re-score
+    // exactly that model, with every other evaluation a pure cache read.
+    const M: usize = 50;
+    let planner = Planner::new(fleet(M), PlannerConfig::default());
+    let s1 = planner.service_ms("alexnet", 1).unwrap();
+    let rate = 0.3 / (s1 / 1e3);
+    let deadline_ms = 20.0 * s1;
+    let mix: Vec<WorkloadSpec> = (0..M)
+        .map(|i| w(&format!("alexnet#{i:02}"), rate, deadline_ms))
+        .collect();
+    let mut rp = Replanner::new(fleet(M), PlannerConfig::default());
+    let first = rp.plan_incremental(&mix, &[false; M]).unwrap();
+    assert!(!first.incremental);
+    assert_eq!(first.plan.allocation(), vec![1; M], "one board per model");
+    assert!(first.plan.worst_risk.is_finite());
+
+    // Idle round: everything reused, zero evaluations.
+    rp.reset_cache_stats();
+    let idle = rp.plan_incremental(&mix, &[false; M]).unwrap();
+    assert!(idle.incremental);
+    assert_eq!(idle.reused.len(), M);
+    let st = rp.cache_stats();
+    assert_eq!((st.split_misses, st.subplan_misses), (0, 0), "{st:?}");
+
+    // Single-model drift: only alexnet#07 re-scores.
+    let mut drifted = mix.clone();
+    drifted[7].rate_rps *= 1.8;
+    let mut moved = vec![false; M];
+    moved[7] = true;
+    rp.reset_cache_stats();
+    let out = rp.plan_incremental(&drifted, &moved).unwrap();
+    assert!(out.incremental);
+    assert_eq!(out.rescored, vec!["alexnet#07"]);
+    assert_eq!(out.reused.len(), M - 1);
+    let st = rp.cache_stats();
+    assert_eq!(st.subplan_misses, 0, "sub-plan layer fully warm: {st:?}");
+    assert!(
+        st.split_misses <= 1,
+        "at most the drifted model's new rate misses the split memo: {st:?}"
+    );
+    assert!(st.hit_rate() >= 0.5, "{st:?}");
+
+    // The 49 clean models' deployments are byte-identical and diff to
+    // zero churn.
+    let delta = diff_plans(&first.plan, &out.plan);
+    for (i, m) in mix.iter().enumerate() {
+        if i == 7 {
+            continue;
+        }
+        let old: Vec<String> = first
+            .plan
+            .model_deployments(&m.model)
+            .map(|d| format!("{d:?}"))
+            .collect();
+        let new: Vec<String> = out
+            .plan
+            .model_deployments(&m.model)
+            .map(|d| format!("{d:?}"))
+            .collect();
+        assert_eq!(old, new, "clean `{}` must be reused byte-for-byte", m.model);
+        assert!(!delta.retire.iter().any(|r| r == &m.model));
+    }
+
+    // Bit-identity of the whole incremental plan against from-scratch
+    // arithmetic on the same allocation and effective mix.
+    let scratch = Planner::new(fleet(M), PlannerConfig::default());
+    let sp = scratch.plan_allocation(&out.mix, &out.plan.allocation()).unwrap();
+    assert_eq!(dbg_plan(&out.plan), dbg_plan(&sp));
+}

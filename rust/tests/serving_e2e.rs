@@ -1,13 +1,14 @@
 //! Serving-path end-to-end tests with a stub backend: correctness under
 //! load, batching behaviour, deadline handling, plan-driven routing
-//! (multi-model lanes and replica sets), legacy single-backend routing,
-//! and failure injection.
+//! (multi-model lanes and replica sets), and failure injection. Every
+//! server here is a `start_plan` server — a single-model server is a
+//! one-lane plan.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 use superlip::serving::{
-    BackendFactory, BatcherConfig, InferBackend, LaneSpec, RoutePolicy, Router, Server,
+    BackendFactory, BatcherConfig, InferBackend, LaneSpec, PlanRouter, RoutePolicy, Server,
     ServerConfig,
 };
 use superlip::util::SplitMix64;
@@ -53,6 +54,18 @@ impl InferBackend for Stub {
     }
 }
 
+/// A single-model server as a one-lane plan (the single entry point).
+fn single(factories: Vec<BackendFactory>, cfg: ServerConfig) -> Server {
+    Server::start_plan(
+        vec![LaneSpec {
+            model: "default".into(),
+            factories,
+            batcher: cfg.batcher,
+        }],
+        cfg,
+    )
+}
+
 fn factory(
     delay_ms: u64,
     fail_every: Option<u64>,
@@ -74,7 +87,7 @@ fn factory(
 #[test]
 fn sustained_load_all_answers_correct() {
     let served = Arc::new(AtomicUsize::new(0));
-    let srv = Server::start(
+    let srv = single(
         vec![factory(0, None, served.clone()), factory(0, None, served.clone())],
         ServerConfig::default(),
     );
@@ -104,7 +117,7 @@ fn batching_reduces_backend_calls() {
     let mut cfg = ServerConfig::default();
     cfg.batcher.window = Duration::from_millis(30);
     cfg.batcher.max_batch = 4;
-    let srv = Server::start(vec![factory(2, None, served.clone())], cfg);
+    let srv = single(vec![factory(2, None, served.clone())], cfg);
     let rxs: Vec<_> = (0..16).map(|_| srv.submit(vec![1.0; 8]).unwrap()).collect();
     for rx in rxs {
         rx.recv_timeout(Duration::from_secs(10)).unwrap();
@@ -122,7 +135,7 @@ fn failure_injection_drops_only_affected_batch() {
     let served = Arc::new(AtomicUsize::new(0));
     let mut cfg = ServerConfig::default();
     cfg.batcher.max_batch = 1; // one call per request → failures isolate
-    let srv = Server::start(vec![factory(0, Some(5), served.clone())], cfg);
+    let srv = single(vec![factory(0, Some(5), served.clone())], cfg);
     let rxs: Vec<_> = (0..20).map(|_| srv.submit(vec![1.0; 8]).unwrap()).collect();
     let mut ok = 0;
     let mut dropped = 0;
@@ -141,12 +154,12 @@ fn failure_injection_drops_only_affected_batch() {
 #[test]
 fn deadlines_tracked_under_slow_backend() {
     let served = Arc::new(AtomicUsize::new(0));
-    let srv = Server::start(vec![factory(30, None, served)], ServerConfig::default());
+    let srv = single(vec![factory(30, None, served)], ServerConfig::default());
     let tight = srv
-        .submit_with_deadline(vec![0.0; 8], Duration::from_millis(1))
+        .submit_to("default", vec![0.0; 8], Duration::from_millis(1))
         .unwrap();
     let loose = srv
-        .submit_with_deadline(vec![0.0; 8], Duration::from_secs(30))
+        .submit_to("default", vec![0.0; 8], Duration::from_secs(30))
         .unwrap();
     assert!(!tight.recv_timeout(Duration::from_secs(10)).unwrap().deadline_met);
     assert!(loose.recv_timeout(Duration::from_secs(10)).unwrap().deadline_met);
@@ -249,17 +262,18 @@ fn plan_router_spreads_one_model_across_replica_lanes() {
 
 #[test]
 fn router_balances_two_clusters() {
-    // The Router abstraction over two independent servers (two simulated
-    // XFER clusters serving the same model).
+    // A standalone PlanRouter over two independent servers (two simulated
+    // XFER clusters serving the same model): one route-table entry whose
+    // lane set spans both clusters.
     let served_a = Arc::new(AtomicUsize::new(0));
     let served_b = Arc::new(AtomicUsize::new(0));
-    let srv_a = Server::start(vec![factory(1, None, served_a.clone())], ServerConfig::default());
-    let srv_b = Server::start(vec![factory(1, None, served_b.clone())], ServerConfig::default());
-    let router = Router::new(RoutePolicy::RoundRobin, 2);
+    let srv_a = single(vec![factory(1, None, served_a.clone())], ServerConfig::default());
+    let srv_b = single(vec![factory(1, None, served_b.clone())], ServerConfig::default());
+    let router = PlanRouter::with_routes(RoutePolicy::RoundRobin, 2, [("m", vec![0, 1])]);
 
     let mut rxs = Vec::new();
     for _ in 0..40 {
-        let replica = router.route();
+        let replica = router.route("m").unwrap();
         let srv = if replica == 0 { &srv_a } else { &srv_b };
         rxs.push((replica, srv.submit(vec![1.0; 8]).unwrap()));
     }
@@ -284,7 +298,7 @@ fn throughput_scales_with_workers() {
         let mut cfg = ServerConfig::default();
         cfg.batcher.max_batch = 1;
         cfg.batcher.window = Duration::from_micros(1);
-        let srv = Server::start(
+        let srv = single(
             (0..workers).map(|_| factory(4, None, served.clone())).collect(),
             cfg,
         );

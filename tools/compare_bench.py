@@ -15,6 +15,8 @@ Rules (per metric listed in the BASELINE):
       current > baseline * (1 + rel) + 0.5
 * unit "ns/req" (hot-path cost per request): FAIL when
       current > baseline * (1 + rel) + 50.0 ns
+* unit "us/replan" (control-plane re-plan latency): FAIL when
+      current > baseline * (1 + rel) + 50.0 us
 * unit "%" (miss rates): FAIL when
       current > baseline + max(2.0, rel * 100 * baseline / 100) points
   (i.e. an absolute 2-point floor so near-zero baselines are not
@@ -45,7 +47,7 @@ import os
 import sys
 
 # Lower-is-worse units gated multiplicatively, with their absolute slack.
-GATED_REL = {"ms": 1.0, "W": 0.5, "J/inf": 0.5, "ns/req": 50.0}
+GATED_REL = {"ms": 1.0, "W": 0.5, "J/inf": 0.5, "ns/req": 50.0, "us/replan": 50.0}
 # Higher-is-better units (throughputs): a DROP past rel fails, with an
 # absolute slack floor so tiny baselines are not infinitely strict.
 GATED_HIGHER = {"rps/core": 1000.0}
