@@ -237,6 +237,38 @@ def test_informational_units_never_gate(tmp_path):
     assert "hotpath" in r.stdout
 
 
+def test_checked_in_obs_baseline_gates_ns_per_req(tmp_path):
+    # The observability-overhead baseline (BENCH_obs.json) must actually
+    # gate: both recorder modes use the gated ns/req unit, in-envelope
+    # numbers pass, and a runaway traced path fails even against the wide
+    # provisional rel.
+    base = REPO_ROOT / "BENCH_obs.json"
+    doc = json.loads(base.read_text())
+    gated = {k: v for k, v in doc["metrics"].items() if not k.startswith("_")}
+    assert {"hot path untraced", "hot path traced (1/1024)"} <= set(gated)
+    assert all(v["unit"] == "ns/req" for v in gated.values())
+    ok = _write(
+        tmp_path,
+        "ok.json",
+        _doc(
+            {k: {"value": v["value"], "unit": v["unit"]} for k, v in gated.items()},
+            bench="obs_overhead",
+        ),
+    )
+    assert _run(base, ok).returncode == 0
+    bad = _write(
+        tmp_path,
+        "bad.json",
+        _doc(
+            {k: {"value": v["value"] * 100.0, "unit": v["unit"]} for k, v in gated.items()},
+            bench="obs_overhead",
+        ),
+    )
+    r = _run(base, bad)
+    assert r.returncode == 1
+    assert "PERF REGRESSION" in r.stdout
+
+
 def test_bad_usage_and_bad_json_exit_2(tmp_path):
     assert _run().returncode == 2
     garbage = tmp_path / "garbage.json"

@@ -1,0 +1,157 @@
+//! §Observability: flight-recorder overhead on the serving hot path
+//! (EXPERIMENTS.md §Observability). Drives the same closed-loop
+//! submit→route→batch→complete pipeline as `serving_hotpath` against a
+//! null backend, twice per round — recorder DETACHED, then recorder
+//! ATTACHED at 1/1024 id-sampling — and hard-asserts the tracing tax.
+//!
+//! Design notes:
+//!
+//! * Rounds are INTERLEAVED (untraced, traced, untraced, traced, ...) and
+//!   each mode takes its minimum across rounds, so a frequency ramp or a
+//!   noisy CI neighbor hits both modes alike instead of biasing one.
+//! * The recorder is attached post-hoc via `Server::set_recorder` — the
+//!   exact mechanism production uses — so the detached rounds also pay
+//!   the one atomic snapshot load per batch, which is the honest
+//!   "recorder compiled in but off" baseline.
+//! * The acceptance gate is the ISSUE contract: at 1/1024 sampling the
+//!   traced hot path must cost ≤ 5% more ns/request than the detached
+//!   one. The assert uses min-of-rounds for both sides.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+use superlip::bench::Harness;
+use superlip::fleet::SloClass;
+use superlip::obs::TraceRecorder;
+use superlip::serving::{
+    BackendFactory, BatcherConfig, InferBackend, LaneSpec, RoutePolicy, Server, ServerConfig,
+};
+
+struct NullBackend;
+
+impl InferBackend for NullBackend {
+    fn image_elems(&self) -> usize {
+        1
+    }
+    fn classes(&self) -> usize {
+        1
+    }
+    fn max_batch(&self) -> usize {
+        64
+    }
+    fn infer(&self, _images: &[f32], n: usize) -> superlip::Result<Vec<f32>> {
+        Ok(vec![0.0; n])
+    }
+}
+
+const MODEL: &str = "null";
+const LANES: usize = 2;
+const WORKERS_PER_LANE: usize = 2;
+const SUBMITTERS: usize = 3;
+const PIPELINE: usize = 64;
+const SAMPLE_EVERY: u64 = 1024;
+const ROUNDS: usize = 5;
+
+fn lane() -> LaneSpec {
+    LaneSpec {
+        model: MODEL.into(),
+        factories: (0..WORKERS_PER_LANE)
+            .map(|_| {
+                Box::new(|| Ok(Box::new(NullBackend) as Box<dyn InferBackend>)) as BackendFactory
+            })
+            .collect(),
+        batcher: BatcherConfig {
+            max_batch: 32,
+            window: Duration::from_millis(0),
+            ..BatcherConfig::default()
+        },
+    }
+}
+
+/// One saturated closed-loop run; returns ns per completed request.
+fn drive(server: &Server, per_submitter: usize) -> f64 {
+    let completed = AtomicU64::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..SUBMITTERS {
+            let completed = &completed;
+            s.spawn(move || {
+                let deadline = Duration::from_secs(5);
+                let class = match t % 3 {
+                    0 => SloClass::Gold,
+                    1 => SloClass::Silver,
+                    _ => SloClass::BestEffort,
+                };
+                let mut inflight = std::collections::VecDeque::with_capacity(PIPELINE);
+                let mut done = 0u64;
+                for _ in 0..per_submitter {
+                    let rx = server
+                        .submit_to_class(MODEL, vec![0.0], deadline, class)
+                        .expect("null lane accepts");
+                    inflight.push_back(rx);
+                    if inflight.len() >= PIPELINE {
+                        inflight.pop_front().unwrap().recv().expect("response");
+                        done += 1;
+                    }
+                }
+                for rx in inflight {
+                    rx.recv().expect("response");
+                    done += 1;
+                }
+                completed.fetch_add(done, Ordering::Relaxed);
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let n = completed.load(Ordering::Relaxed);
+    assert_eq!(n as usize, SUBMITTERS * per_submitter, "exactly-one-response");
+    wall * 1e9 / n as f64
+}
+
+fn main() {
+    let mut h = Harness::new("obs_overhead");
+    let per_submitter: usize = if h.is_quick() { 15_000 } else { 100_000 };
+
+    let server = Server::start_plan(
+        (0..LANES).map(|_| lane()).collect(),
+        ServerConfig {
+            policy: RoutePolicy::LeastOutstanding,
+            ..ServerConfig::default()
+        },
+    );
+    let recorder = TraceRecorder::new(SAMPLE_EVERY, 4096);
+
+    // Warmup both modes (compiles the pipeline, pages the recorder rings).
+    drive(&server, per_submitter / 10);
+    server.set_recorder(Some(recorder.clone()));
+    drive(&server, per_submitter / 10);
+    server.set_recorder(None);
+
+    let mut untraced = f64::INFINITY;
+    let mut traced = f64::INFINITY;
+    for _ in 0..ROUNDS {
+        server.set_recorder(None);
+        untraced = untraced.min(drive(&server, per_submitter));
+        server.set_recorder(Some(recorder.clone()));
+        traced = traced.min(drive(&server, per_submitter));
+        // Drain so the ring never saturates into pure overwrite mode —
+        // steady-state production drains periodically too.
+        let _ = recorder.take();
+    }
+    server.set_recorder(None);
+
+    let overhead_pct = (traced / untraced - 1.0) * 100.0;
+    h.record("hot path untraced", untraced, "ns/req");
+    h.record("hot path traced (1/1024)", traced, "ns/req");
+    h.record("recorder overhead", overhead_pct, "pct-info");
+    h.record("traces published", recorder.published() as f64, "records");
+
+    // The ISSUE contract: 1/1024 sampling costs ≤ 5% on the hot path.
+    assert!(
+        traced <= untraced * 1.05,
+        "recorder overhead {overhead_pct:.2}% exceeds the 5% budget \
+         (untraced {untraced:.1} ns/req, traced {traced:.1} ns/req)"
+    );
+
+    server.shutdown();
+    h.finish();
+}

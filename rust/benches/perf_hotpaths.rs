@@ -142,6 +142,7 @@ fn main() {
             enqueued: now,
             deadline: now + Duration::from_secs(3600),
             class: superlip::fleet::SloClass::BestEffort,
+            trace: Default::default(),
             reply: tx,
         })
         .unwrap();

@@ -185,6 +185,38 @@ pub fn parse_transport_faults(s: &str) -> Result<crate::transport::FaultPlan> {
     Ok(plan)
 }
 
+/// Parse and validate a `--trace-sample` value: the flight recorder
+/// captures every N-th request (N ≥ 1; deadline misses are always
+/// captured once the recorder is armed). Zero, negatives, and
+/// non-numeric values are typed errors — never a panic.
+pub fn parse_trace_sample(s: &str) -> Result<u64> {
+    let v: u64 = s
+        .parse()
+        .map_err(|e| Error::InvalidArg(format!("--trace-sample {s}: {e}")))?;
+    if v == 0 {
+        return Err(Error::InvalidArg(format!(
+            "--trace-sample {s}: must be ≥ 1 (omit the flag to disable tracing)"
+        )));
+    }
+    Ok(v)
+}
+
+/// Validate a `--trace-out` / `--metrics-out` path: non-empty, and not a
+/// directory (we append/overwrite a file there later — catching this at
+/// parse time turns an io error deep in a run into an upfront typed one).
+pub fn parse_out_path(flag: &str, s: &str) -> Result<std::path::PathBuf> {
+    if s.is_empty() {
+        return Err(Error::InvalidArg(format!("--{flag}: empty path")));
+    }
+    let p = std::path::PathBuf::from(s);
+    if p.is_dir() {
+        return Err(Error::InvalidArg(format!(
+            "--{flag} {s}: is a directory, need a file path"
+        )));
+    }
+    Ok(p)
+}
+
 /// Parse a precision flag value.
 pub fn parse_precision(s: &str) -> Result<crate::platform::Precision> {
     match s.to_ascii_lowercase().as_str() {
@@ -287,6 +319,27 @@ mod tests {
                 "{bad:?} must be rejected"
             );
         }
+    }
+
+    #[test]
+    fn trace_sample_validated_without_panicking() {
+        assert_eq!(parse_trace_sample("1").unwrap(), 1);
+        assert_eq!(parse_trace_sample("1024").unwrap(), 1024);
+        // Zero, negatives, floats, and junk all return typed errors —
+        // never a panic.
+        for bad in ["0", "-1", "1.5", "every", ""] {
+            assert!(parse_trace_sample(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn out_paths_validated_without_panicking() {
+        let p = parse_out_path("trace-out", "traces.jsonl").unwrap();
+        assert_eq!(p, std::path::PathBuf::from("traces.jsonl"));
+        assert!(parse_out_path("trace-out", "").is_err());
+        // A directory is rejected upfront rather than failing mid-run.
+        let dir = std::env::temp_dir();
+        assert!(parse_out_path("metrics-out", dir.to_str().unwrap()).is_err());
     }
 
     #[test]

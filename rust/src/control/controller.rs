@@ -45,7 +45,10 @@ use super::drift::{DriftConfig, DriftDecision, DriftDetector};
 use super::replanner::{diff_plans, Replanner};
 use super::telemetry::{TelemetryFrame, TelemetryHub};
 use crate::energy::BOARD_IDLE_W;
-use crate::fleet::{lane_spec_for, Deployment, FleetHealth, FleetPlan, SloClass, WorkloadSpec};
+use crate::fleet::{
+    lane_spec_for, CacheStats, Deployment, FleetHealth, FleetPlan, SloClass, WorkloadSpec,
+};
+use crate::obs::{ControlEvent, EventJournal};
 use crate::power::{FleetPower, PowerState};
 use crate::serving::Server;
 use crate::{Error, Result};
@@ -89,6 +92,11 @@ pub struct ControlConfig {
     /// in-process dispatch). Lanes the controller stands up mid-flight
     /// inherit this, so a migration never silently changes the data path.
     pub transport: Option<crate::transport::TransportConfig>,
+    /// Control-event journal depth: the newest `event_cap` events are
+    /// retained (older ones are evicted and counted, never silently
+    /// lost). Bounds a long-running controller's memory — the old
+    /// unbounded `Vec<String>` grew without limit.
+    pub event_cap: usize,
 }
 
 impl Default for ControlConfig {
@@ -104,6 +112,7 @@ impl Default for ControlConfig {
             power: None,
             brownout: None,
             transport: None,
+            event_cap: 256,
         }
     }
 }
@@ -182,8 +191,10 @@ pub struct Controller {
     /// Pre-degrade deployments of the victim lanes, for the rung-2 exit
     /// swap back to full precision.
     degraded_originals: Vec<Deployment>,
-    /// Human-readable event log (benches/CLI print it).
-    pub events: Vec<String>,
+    /// Typed, timestamped, bounded control-event journal. `events()`
+    /// renders the historical human-readable lines; `journal()` exposes
+    /// the typed records (JSONL export, kind filters).
+    journal: EventJournal,
     replans: usize,
 }
 
@@ -228,7 +239,7 @@ impl Controller {
         let fleet_ids: Vec<usize> = (0..replanner.fleet().len()).collect();
         let hub = TelemetryHub::new(server.clone(), cfg.time_scale, cfg.history.max(1));
         let detector = DriftDetector::new(cfg.drift);
-        let mut events = Vec::new();
+        let mut journal = EventJournal::new(cfg.event_cap);
         // Power gating: lane boards go Active; the plan's power-down
         // candidates (idle remainder) are gated off right away instead of
         // idling at ~20 W each.
@@ -249,10 +260,12 @@ impl Controller {
                 let _ = p.power_down_at(b, now);
             }
             if !down.is_empty() {
-                events.push(format!(
-                    "powered down idle remainder boards {down:?} ({:.0} W saved)",
-                    down.len() as f64 * BOARD_IDLE_W
-                ));
+                journal.push(ControlEvent::PowerDown {
+                    detail: format!(
+                        "powered down idle remainder boards {down:?} ({:.0} W saved)",
+                        down.len() as f64 * BOARD_IDLE_W
+                    ),
+                });
             }
         }
         // Arm the brownout ladder only for a genuinely multi-class mix.
@@ -270,7 +283,9 @@ impl Controller {
         let ladder = match &cfg.brownout {
             Some(bc) if n_classes >= 2 => Some(BrownoutLadder::new(*bc)),
             Some(_) => {
-                events.push("brownout ladder disarmed (single-class mix)".into());
+                journal.push(ControlEvent::Brownout {
+                    detail: "brownout ladder disarmed (single-class mix)".into(),
+                });
                 None
             }
             None => None,
@@ -292,13 +307,31 @@ impl Controller {
             ladder,
             victim_class,
             degraded_originals: Vec::new(),
-            events,
+            journal,
             replans: 0,
         })
     }
 
     pub fn replans(&self) -> usize {
         self.replans
+    }
+
+    /// The event log rendered to the historical human-readable lines
+    /// (byte-identical to what the old `Vec<String>` held, for the
+    /// newest `event_cap` events).
+    pub fn events(&self) -> Vec<String> {
+        self.journal.rendered()
+    }
+
+    /// The typed control-event journal (timestamps, kinds, drop count).
+    pub fn journal(&self) -> &EventJournal {
+        &self.journal
+    }
+
+    /// Plan-cache hit/miss counters from the re-planner beneath this
+    /// controller (the unified metrics registry snapshots these).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.replanner.cache_stats()
     }
 
     pub fn plan(&self) -> &FleetPlan {
@@ -402,28 +435,36 @@ impl Controller {
                 // drift migration would fight the rung actions (and the
                 // overload that tripped drift is exactly what the ladder
                 // is already digesting).
-                self.events.push(format!(
-                    "re-plan suppressed (brownout rung `{}`): {reason}",
-                    self.ladder.as_ref().map_or("?", |l| l.rung().name())
-                ));
+                self.journal.push(ControlEvent::Replan {
+                    detail: format!(
+                        "re-plan suppressed (brownout rung `{}`): {reason}",
+                        self.ladder.as_ref().map_or("?", |l| l.rung().name())
+                    ),
+                });
             } else {
-                self.events.push(format!("drift: {reason}"));
+                self.journal.push(ControlEvent::Drift {
+                    reason: reason.clone(),
+                });
                 let observed = self.hub.observed_mix(&self.mix);
                 let moved = self.hub.moved_models(&self.mix, self.cfg.replan_band);
                 match self.replanner.plan_incremental(&observed, &moved) {
                     Ok(out) => {
-                        self.events.push(if out.incremental {
-                            format!(
-                                "incremental re-plan: re-scored {:?}, reused {} sub-plan(s)",
-                                out.rescored,
-                                out.reused.len()
-                            )
-                        } else {
-                            "full re-plan (no reusable plan memory)".into()
+                        self.journal.push(ControlEvent::Replan {
+                            detail: if out.incremental {
+                                format!(
+                                    "incremental re-plan: re-scored {:?}, reused {} sub-plan(s)",
+                                    out.rescored,
+                                    out.reused.len()
+                                )
+                            } else {
+                                "full re-plan (no reusable plan memory)".into()
+                            },
                         });
                         migrated_to = Some(self.migrate_to(out.plan, out.mix));
                     }
-                    Err(e) => self.events.push(format!("re-plan failed: {e}")),
+                    Err(e) => self.journal.push(ControlEvent::Replan {
+                        detail: format!("re-plan failed: {e}"),
+                    }),
                 }
             }
         }
@@ -467,31 +508,37 @@ impl Controller {
         match step {
             BrownoutStep::Hold => {}
             BrownoutStep::Climb(r) => {
-                self.events
-                    .push(format!("brownout: climbed to rung `{}`", r.name()));
+                self.journal.push(ControlEvent::Brownout {
+                    detail: format!("brownout: climbed to rung `{}`", r.name()),
+                });
                 match r {
                     super::brownout::BrownoutRung::Shed => self.apply_victim_caps(true),
                     super::brownout::BrownoutRung::Degrade => self.enter_degrade(),
                     super::brownout::BrownoutRung::Admission => {
                         let floor = self.victim_class.index() + 1;
                         self.server.set_admission_floor(floor);
-                        self.events.push(format!(
-                            "brownout: admission floor raised — class `{}` refused at ingress",
-                            self.victim_class.name()
-                        ));
+                        self.journal.push(ControlEvent::Brownout {
+                            detail: format!(
+                                "brownout: admission floor raised — class `{}` refused at ingress",
+                                self.victim_class.name()
+                            ),
+                        });
                     }
                     super::brownout::BrownoutRung::Normal => unreachable!("never climbs to normal"),
                 }
             }
             BrownoutStep::Descend(r) => {
-                self.events
-                    .push(format!("brownout: descended to rung `{}`", r.name()));
+                self.journal.push(ControlEvent::Brownout {
+                    detail: format!("brownout: descended to rung `{}`", r.name()),
+                });
                 // Undo the action of the rung we just LEFT (one above `r`).
                 match r {
                     super::brownout::BrownoutRung::Degrade => {
                         self.server.set_admission_floor(0);
-                        self.events
-                            .push("brownout: admission floor lowered — all classes admitted".into());
+                        self.journal.push(ControlEvent::Brownout {
+                            detail: "brownout: admission floor lowered — all classes admitted"
+                                .into(),
+                        });
                     }
                     super::brownout::BrownoutRung::Shed => self.exit_degrade(),
                     super::brownout::BrownoutRung::Normal => self.apply_victim_caps(false),
@@ -528,13 +575,15 @@ impl Controller {
                     self.server.set_lane_class_cap(lane, self.victim_class, cap);
                 }
             }
-            self.events.push(format!(
-                "brownout: {} `{}` class-`{}` queue cap → {}",
-                if tighten { "tightened" } else { "restored" },
-                model,
-                self.victim_class.name(),
-                if cap == 0 { "unlimited".to_string() } else { cap.to_string() },
-            ));
+            self.journal.push(ControlEvent::Brownout {
+                detail: format!(
+                    "brownout: {} `{}` class-`{}` queue cap → {}",
+                    if tighten { "tightened" } else { "restored" },
+                    model,
+                    self.victim_class.name(),
+                    if cap == 0 { "unlimited".to_string() } else { cap.to_string() },
+                ),
+            });
         }
     }
 
@@ -562,8 +611,9 @@ impl Controller {
             let deg = match self.replanner.degraded_deployment(&d) {
                 Ok(deg) => deg,
                 Err(e) => {
-                    self.events
-                        .push(format!("brownout: cannot degrade `{}`: {e}", d.workload.model));
+                    self.journal.push(ControlEvent::Brownout {
+                        detail: format!("brownout: cannot degrade `{}`: {e}", d.workload.model),
+                    });
                     continue;
                 }
             };
@@ -638,13 +688,15 @@ impl Controller {
                 boards: old.boards,
             });
         }
-        self.events.push(format!(
-            "brownout: lane {} for `{}` swapped to {} (lane {lane}, {:.3} ms service)",
-            old.lane,
-            to.workload.model,
-            to.design.precision.name(),
-            to.service_ms
-        ));
+        self.journal.push(ControlEvent::Brownout {
+            detail: format!(
+                "brownout: lane {} for `{}` swapped to {} (lane {lane}, {:.3} ms service)",
+                old.lane,
+                to.workload.model,
+                to.design.precision.name(),
+                to.service_ms
+            ),
+        });
         Some(bi)
     }
 
@@ -658,12 +710,14 @@ impl Controller {
         let Some(pos) = self.fleet_ids.iter().position(|&b| b == board) else {
             return; // already written off
         };
-        self.events.push(format!("board {board} down"));
+        self.journal.push(ControlEvent::BoardDown { board });
         let victim = self.books.iter().position(|b| b.boards.contains(&board));
         // Shrink the replanner FIRST: if it refuses (last board), the
         // books must stay consistent — degraded, but coherent.
         if let Err(e) = self.replanner.remove_board(pos) {
-            self.events.push(format!("cannot shrink fleet: {e}"));
+            self.journal.push(ControlEvent::Note {
+                detail: format!("cannot shrink fleet: {e}"),
+            });
             return;
         }
         self.fleet_ids.remove(pos);
@@ -682,9 +736,9 @@ impl Controller {
                         self.replanner.adopt_plan(&new_plan);
                         self.migrate_to(new_plan, observed);
                     }
-                    Err(e) => self
-                        .events
-                        .push(format!("re-plan failed ({e}); serving degraded")),
+                    Err(e) => self.journal.push(ControlEvent::Replan {
+                        detail: format!("re-plan failed ({e}); serving degraded"),
+                    }),
                 }
                 self.detector.arm_cooldown();
             }
@@ -739,10 +793,12 @@ impl Controller {
         }
         if let Some(bi) = dead {
             let book = &self.books[bi];
-            self.events.push(format!(
-                "lane {} for {} dead (telemetry): writing off its boards {:?}",
-                book.lane, book.model, book.boards
-            ));
+            self.journal.push(ControlEvent::LaneDead {
+                detail: format!(
+                    "lane {} for {} dead (telemetry): writing off its boards {:?}",
+                    book.lane, book.model, book.boards
+                ),
+            });
             // Telemetry cannot tell WHICH member of the lock-step
             // sub-cluster died — write off that lane's whole board set
             // (but never a sibling replica's). Shrink the replanner first
@@ -752,9 +808,11 @@ impl Controller {
             for b in self.books[bi].boards.clone() {
                 if let Some(pos) = self.fleet_ids.iter().position(|&x| x == b) {
                     if let Err(e) = self.replanner.remove_board(pos) {
-                        self.events.push(format!(
-                            "cannot shrink fleet further ({e}); re-planning on what is left"
-                        ));
+                        self.journal.push(ControlEvent::Note {
+                            detail: format!(
+                                "cannot shrink fleet further ({e}); re-planning on what is left"
+                            ),
+                        });
                         break;
                     }
                     self.fleet_ids.remove(pos);
@@ -805,8 +863,9 @@ impl Controller {
                 Some(self.migrate_to(new_plan, observed))
             }
             Err(e) => {
-                self.events
-                    .push(format!("repair re-plan failed ({e}); serving degraded"));
+                self.journal.push(ControlEvent::Replan {
+                    detail: format!("repair re-plan failed ({e}); serving degraded"),
+                });
                 None
             }
         };
@@ -836,8 +895,9 @@ impl Controller {
             if !ok {
                 // Should be unreachable (the deadline passed), but never
                 // route to a board the machine refuses.
-                self.events
-                    .push(format!("woken boards {:?} refused activation", pa.boards));
+                self.journal.push(ControlEvent::Wake {
+                    detail: format!("woken boards {:?} refused activation", pa.boards),
+                });
                 continue;
             }
             let health = self.cfg.health.clone().map(|h| (h, pa.boards.clone()));
@@ -849,10 +909,12 @@ impl Controller {
                 self.cfg.transport.as_ref(),
             );
             let lane = self.server.add_lane(spec);
-            self.events.push(format!(
-                "boards {:?} awake — lane {lane} live for {}",
-                pa.boards, pa.dep.workload.model
-            ));
+            self.journal.push(ControlEvent::Wake {
+                detail: format!(
+                    "boards {:?} awake — lane {lane} live for {}",
+                    pa.boards, pa.dep.workload.model
+                ),
+            });
             self.books.push(LaneBook {
                 model: pa.dep.workload.model.clone(),
                 lane,
@@ -895,10 +957,12 @@ impl Controller {
             }
         }
         if !down.is_empty() {
-            self.events.push(format!(
-                "powered down boards {down:?} ({why}; {:.0} W saved)",
-                down.len() as f64 * BOARD_IDLE_W
-            ));
+            self.journal.push(ControlEvent::PowerDown {
+                detail: format!(
+                    "powered down boards {down:?} ({why}; {:.0} W saved)",
+                    down.len() as f64 * BOARD_IDLE_W
+                ),
+            });
         }
     }
 
@@ -933,10 +997,12 @@ impl Controller {
                 self.plan.deployments.remove(di);
             }
             abandoned.extend(pa.boards.iter().copied());
-            self.events.push(format!(
-                "abandoning pending lane for {} (superseded by a newer plan)",
-                pa.dep.workload.model
-            ));
+            self.journal.push(ControlEvent::Migrate {
+                detail: format!(
+                    "abandoning pending lane for {} (superseded by a newer plan)",
+                    pa.dep.workload.model
+                ),
+            });
         }
         let delta = diff_plans(&self.plan, &new_plan);
         if !delta.is_empty() {
@@ -993,11 +1059,13 @@ impl Controller {
                         .map(|&b| p.begin_wake_at(b, now))
                         .fold(now, f64::max);
                     if ready > now + 1e-9 {
-                        self.events.push(format!(
-                            "waking boards {ids:?} for {} (ready in {:.0} ms)",
-                            d.workload.model,
-                            (ready - now) * 1e3
-                        ));
+                        self.journal.push(ControlEvent::Wake {
+                            detail: format!(
+                                "waking boards {ids:?} for {} (ready in {:.0} ms)",
+                                d.workload.model,
+                                (ready - now) * 1e3
+                            ),
+                        });
                         self.pending_adds.push(PendingLane {
                             dep: d.clone(),
                             boards: ids,
@@ -1062,25 +1130,27 @@ impl Controller {
         // re-claim goes dark (a mid-wake board aborts straight to off).
         self.power_down_if_free(&abandoned, "abandoned wake");
         let alloc = new_plan.allocation();
-        self.events.push(format!(
-            "re-planned → {:?} over {} boards ({} lane change{})",
-            new_plan
-                .deployments
-                .iter()
-                .map(|d| {
-                    format!(
-                        "{}[{}/{}]:{}",
-                        d.workload.model,
-                        d.replica + 1,
-                        d.n_replicas,
-                        d.n_boards
-                    )
-                })
-                .collect::<Vec<_>>(),
-            self.fleet_ids.len(),
-            delta.add.len() + delta.retire.len(),
-            if delta.add.len() + delta.retire.len() == 1 { "" } else { "s" },
-        ));
+        self.journal.push(ControlEvent::Replan {
+            detail: format!(
+                "re-planned → {:?} over {} boards ({} lane change{})",
+                new_plan
+                    .deployments
+                    .iter()
+                    .map(|d| {
+                        format!(
+                            "{}[{}/{}]:{}",
+                            d.workload.model,
+                            d.replica + 1,
+                            d.n_replicas,
+                            d.n_boards
+                        )
+                    })
+                    .collect::<Vec<_>>(),
+                self.fleet_ids.len(),
+                delta.add.len() + delta.retire.len(),
+                if delta.add.len() + delta.retire.len() == 1 { "" } else { "s" },
+            ),
+        });
         self.plan = new_plan;
         self.mix = new_mix;
         self.replans += 1;
@@ -1098,6 +1168,13 @@ mod tests {
 
     /// Stand a controlled server up from a fresh 2-model plan.
     fn harness(n_boards: usize) -> (Arc<Server>, Controller, Vec<WorkloadSpec>) {
+        harness_cfg(n_boards, ControlConfig::default())
+    }
+
+    fn harness_cfg(
+        n_boards: usize,
+        ccfg: ControlConfig,
+    ) -> (Arc<Server>, Controller, Vec<WorkloadSpec>) {
         let fleet = FleetSpec::homogeneous(n_boards, FpgaSpec::zcu102());
         let pcfg = PlannerConfig::default();
         let planner = Planner::new(fleet.clone(), pcfg);
@@ -1121,9 +1198,43 @@ mod tests {
         let server = Arc::new(Server::start_plan(lanes, ServerConfig::default()));
         let replanner = Replanner::new(fleet, pcfg);
         replanner.adopt_cache(&planner);
-        let ctl = Controller::new(server.clone(), replanner, plan, ControlConfig::default())
-            .unwrap();
+        let ctl = Controller::new(server.clone(), replanner, plan, ccfg).unwrap();
         (server, ctl, mix)
+    }
+
+    /// Regression: the event log was an unbounded `Vec<String>` — a
+    /// long-running controller grew it forever. The journal must hold at
+    /// most `event_cap` entries across an arbitrarily long run, count
+    /// (never silently lose) evictions, and keep `events()` rendering in
+    /// lock-step with the typed records.
+    #[test]
+    fn event_journal_stays_bounded_over_long_runs() {
+        let mut ccfg = ControlConfig::default();
+        ccfg.event_cap = 4;
+        let (server, mut ctl, _mix) = harness_cfg(4, ccfg);
+        for _ in 0..10_000 {
+            ctl.tick();
+        }
+        assert!(ctl.events().len() <= 4, "{:?}", ctl.events());
+        assert_eq!(ctl.journal().capacity(), 4);
+        // A cascade of board deaths emits well past the cap (each repair
+        // logs the death plus its re-plan outcome).
+        for b in 0..4 {
+            ctl.board_down(b);
+        }
+        assert!(ctl.journal().len() <= 4);
+        assert_eq!(ctl.events().len(), ctl.journal().len());
+        assert!(
+            ctl.journal().dropped() >= 1,
+            "evictions must be counted: {:?}",
+            ctl.events()
+        );
+        // Rendered lines match the journal's Display, newest retained.
+        let rendered = ctl.events();
+        for (line, (_, ev)) in rendered.iter().zip(ctl.journal().iter()) {
+            assert_eq!(line, &ev.to_string());
+        }
+        server.shutdown();
     }
 
     #[test]
@@ -1142,7 +1253,7 @@ mod tests {
             // 3 arrivals per window sit below `min_arrivals`, and nothing
             // misses: sparse-but-healthy windows must never migrate.
             let tick = ctl.tick();
-            assert!(tick.migrated_to.is_none(), "{:?}", ctl.events);
+            assert!(tick.migrated_to.is_none(), "{:?}", ctl.events());
         }
         assert_eq!(ctl.replans(), 0);
         server.shutdown();
@@ -1195,7 +1306,7 @@ mod tests {
 
         // Kill a board inside alexnet's SECOND replica (boards 2..4).
         ctl.board_down(2);
-        assert_eq!(ctl.replans(), 1, "{:?}", ctl.events);
+        assert_eq!(ctl.replans(), 1, "{:?}", ctl.events());
         // The first replica's lane (lane 0, boards 0..2) was never
         // touched: still live, still serving alexnet.
         assert_eq!(server.lane_model(0).as_deref(), Some("alexnet"));
@@ -1203,7 +1314,7 @@ mod tests {
             ctl.lanes_for("alexnet"),
             2,
             "repair re-adds the lost replica: {:?}",
-            ctl.events
+            ctl.events()
         );
         assert_eq!(ctl.allocation_for("alexnet"), 4);
         // The model stayed routable throughout — a submit right after the
@@ -1215,8 +1326,8 @@ mod tests {
         // The dead replica's lane drains; the healthy replica's does NOT
         // (squeezenet's lane may churn — its allocation shrank — but the
         // surviving alexnet lane must never be quarantined).
-        assert!(ctl.retiring.iter().any(|r| r.lane == 1), "{:?}", ctl.events);
-        assert!(!ctl.retiring.iter().any(|r| r.lane == 0), "{:?}", ctl.events);
+        assert!(ctl.retiring.iter().any(|r| r.lane == 1), "{:?}", ctl.events());
+        assert!(!ctl.retiring.iter().any(|r| r.lane == 0), "{:?}", ctl.events());
         assert!(!ctl.fleet_ids.contains(&2));
         server.shutdown();
     }
@@ -1297,22 +1408,22 @@ mod tests {
                 break;
             }
         }
-        let convicted_at =
-            convicted_at.unwrap_or_else(|| panic!("stalled lane never convicted: {:?}", ctl.events));
+        let convicted_at = convicted_at
+            .unwrap_or_else(|| panic!("stalled lane never convicted: {:?}", ctl.events()));
         // Healthy switches held the plain fallback off through windows
         // 0..3 (streak < 2 * dead_after); the escape hatch fired on the
         // 4th starved window.
-        assert!(convicted_at >= 3, "convicted too early: {:?}", ctl.events);
-        assert_eq!(ctl.replans(), 1, "{:?}", ctl.events);
+        assert!(convicted_at >= 3, "convicted too early: {:?}", ctl.events());
+        assert_eq!(ctl.replans(), 1, "{:?}", ctl.events());
         assert!(
-            ctl.events.iter().any(|e| e.contains("dead (telemetry)")),
+            ctl.events().iter().any(|e| e.contains("dead (telemetry)")),
             "{:?}",
-            ctl.events
+            ctl.events()
         );
         // The wedged lane was quarantined (draining toward reap), and the
         // repair stood up a replacement — alexnet is routable again.
-        assert!(!ctl.retiring.is_empty(), "{:?}", ctl.events);
-        assert!(ctl.lanes_for("alexnet") >= 1, "{:?}", ctl.events);
+        assert!(!ctl.retiring.is_empty(), "{:?}", ctl.events());
+        assert!(ctl.lanes_for("alexnet") >= 1, "{:?}", ctl.events());
         let rx = server
             .submit_to("alexnet", vec![0.1; 64], Duration::from_secs(5))
             .unwrap();
@@ -1375,7 +1486,7 @@ mod tests {
                 let _ = rx.recv_timeout(d);
             }
             ctl.tick();
-            assert_eq!(ctl.brownout_rung(), expect_rung, "{:?}", ctl.events);
+            assert_eq!(ctl.brownout_rung(), expect_rung, "{:?}", ctl.events());
         }
         // Rung 2 swapped the best-effort lane one precision down...
         assert_eq!(
@@ -1387,7 +1498,7 @@ mod tests {
                 .precision,
             Precision::Fixed8,
             "{:?}",
-            ctl.events
+            ctl.events()
         );
         // ...and rung 3 refuses best-effort at ingress with a typed shed,
         // while gold still flows.
@@ -1413,7 +1524,7 @@ mod tests {
             std::thread::sleep(Duration::from_millis(5));
             ctl.tick();
         }
-        assert_eq!(ctl.brownout_rung(), 0, "{:?}", ctl.events);
+        assert_eq!(ctl.brownout_rung(), 0, "{:?}", ctl.events());
         assert_eq!(server.admission_floor(), 0);
         assert_eq!(
             ctl.plan()
@@ -1424,7 +1535,7 @@ mod tests {
                 .precision,
             Precision::Fixed16,
             "full recovery restores the lane: {:?}",
-            ctl.events
+            ctl.events()
         );
         let rx = server
             .submit_to("squeezenet", vec![0.2; 64], d)
@@ -1440,7 +1551,7 @@ mod tests {
         assert_eq!(lanes_before, 2);
         // Kill a board of the model that owns board 0.
         ctl.board_down(0);
-        assert_eq!(ctl.replans(), 1, "{:?}", ctl.events);
+        assert_eq!(ctl.replans(), 1, "{:?}", ctl.events());
         assert_eq!(ctl.fleet_ids.len(), 2);
         assert!(!ctl.fleet_ids.contains(&0));
         // Both models still routable after repair.

@@ -6,11 +6,16 @@
 use super::controller::{ControlConfig, Controller};
 use super::replanner::Replanner;
 use crate::fleet::{
-    lane_spec_for, piecewise_arrivals, FleetHealth, FleetSpec, ModelStats, PhaseSpec, Planner,
-    PlannerConfig, WorkloadSpec, SCENARIO_IMAGE_ELEMS,
+    lane_spec_for, piecewise_arrivals, CacheStats, FleetHealth, FleetSpec, ModelStats, PhaseSpec,
+    Planner, PlannerConfig, WorkloadSpec, SCENARIO_IMAGE_ELEMS,
+};
+use crate::obs::{
+    stats_delta, transport_sink, ControlSection, FleetView, ObsSection, PowerSection, TraceRecord,
+    TraceRecorder,
 };
 use crate::power::{EnergyLedger, FleetPower};
 use crate::serving::{InferenceResponse, Server, ServerConfig, SubmitError};
+use crate::transport::TransportStats;
 use crate::util::{SplitMix64, Summary};
 use crate::{Error, Result};
 use std::sync::{mpsc, Arc};
@@ -63,6 +68,13 @@ pub struct OnlineConfig {
     /// Queue-pair transport under every lane — initial AND
     /// controller-added (`None` = direct in-process dispatch).
     pub transport: Option<crate::transport::TransportConfig>,
+    /// Flight-recorder sampling: attach a [`TraceRecorder`] capturing
+    /// every `trace_sample`-th request (plus every deadline miss) when
+    /// `> 0`; `0` leaves the recorder detached (zero hot-path cost).
+    pub trace_sample: u64,
+    /// Snapshot a [`FleetView`] JSON line at every controller tick into
+    /// [`OnlineOutcome::views`] (the `--metrics-out` time series).
+    pub record_views: bool,
 }
 
 impl Default for OnlineConfig {
@@ -77,6 +89,8 @@ impl Default for OnlineConfig {
             power: None,
             recv_timeout: Duration::from_secs(60),
             transport: None,
+            trace_sample: 0,
+            record_views: false,
         }
     }
 }
@@ -105,6 +119,20 @@ pub struct OnlineOutcome {
     /// Brownout-ladder rung at run end (0 = fully recovered / never
     /// engaged). The overload bench pins this to 0 after the surge.
     pub final_rung: usize,
+    /// Control events evicted from the bounded journal (0 = nothing was
+    /// lost to retention).
+    pub events_dropped: u64,
+    /// Planner plan-cache counters at run end (zeros on static runs —
+    /// the frozen plan never re-plans).
+    pub cache: CacheStats,
+    /// Transport counter delta over this run (all zeros when
+    /// `cfg.transport` is `None`).
+    pub transport: TransportStats,
+    /// Flight-recorder captures (sampled + deadline-missed + slowest
+    /// exemplars, deduplicated by id). Empty when `trace_sample == 0`.
+    pub traces: Vec<TraceRecord>,
+    /// Per-tick [`FleetView`] JSON lines (when `cfg.record_views`).
+    pub views: Vec<String>,
 }
 
 impl OnlineOutcome {
@@ -200,6 +228,19 @@ pub fn run_drift_scenario(
         })
         .collect();
     let server = Arc::new(Server::start_plan(lanes, ServerConfig::default()));
+
+    // Observability: optional flight recorder (1/N sampling + always-on
+    // deadline-miss capture), and a baseline snapshot of the process-wide
+    // transport sink so the outcome reports THIS run's counter delta.
+    let recorder = if cfg.trace_sample > 0 {
+        let r = TraceRecorder::new(cfg.trace_sample, 4096);
+        server.set_recorder(Some(r.clone()));
+        Some(r)
+    } else {
+        None
+    };
+    let sink0 = transport_sink().snapshot();
+    let mut views: Vec<String> = Vec::new();
 
     let mut controller = if controlled {
         let replanner = Replanner::new(fleet.clone(), pcfg);
@@ -318,7 +359,41 @@ pub fn run_drift_scenario(
                 if let Some(c) = controller.as_mut() {
                     c.tick();
                 }
-                ledger.record(t, &watts_now(&controller));
+                let w = watts_now(&controller);
+                ledger.record(t, &w);
+                if cfg.record_views {
+                    let mut view = FleetView::at(t)
+                        .with_serving(server.metrics())
+                        .with_transport(stats_delta(&transport_sink().snapshot(), &sink0));
+                    if let Some(c) = &controller {
+                        view = view.with_cache(c.cache_stats()).with_control(ControlSection {
+                            rung: c.brownout_rung() as u64,
+                            replans: c.replans() as u64,
+                            events: c.journal().len() as u64,
+                            events_dropped: c.journal().dropped(),
+                        });
+                    }
+                    if let Some(r) = &recorder {
+                        view = view.with_obs(ObsSection {
+                            traces_published: r.published(),
+                            sample_every: r.sample_every(),
+                        });
+                    }
+                    if let Some(p) = &power {
+                        let (active, idle, off, waking) = p.counts();
+                        view = view.with_power(PowerSection {
+                            active,
+                            idle,
+                            powered_off: off,
+                            waking,
+                            watts: w[0],
+                            joules: 0.0, // totals land in the final outcome
+                            j_per_inf: 0.0,
+                            violations: p.violations(),
+                        });
+                    }
+                    views.push(view.to_json());
+                }
             }
             Ev::Kill { board, notify } => {
                 health.kill(board);
@@ -424,9 +499,29 @@ pub fn run_drift_scenario(
         }
         None => (0, 0),
     };
-    let (replans, events, final_rung) = match controller {
-        Some(c) => (c.replans(), c.events.clone(), c.brownout_rung()),
-        None => (0, Vec::new(), 0),
+    let (replans, events, final_rung, cache, events_dropped) = match &controller {
+        Some(c) => (
+            c.replans(),
+            c.events(),
+            c.brownout_rung(),
+            c.cache_stats(),
+            c.journal().dropped(),
+        ),
+        None => (0, Vec::new(), 0, CacheStats::default(), 0),
+    };
+    // Drain the recorder: published captures first, then any slowest
+    // exemplar not already among them.
+    let traces = match &recorder {
+        Some(r) => {
+            let mut v = r.take();
+            for ex in r.take_exemplars().into_iter().flatten() {
+                if !v.iter().any(|t| t.id == ex.id) {
+                    v.push(ex);
+                }
+            }
+            v
+        }
+        None => Vec::new(),
     };
     Ok(OnlineOutcome {
         phase_stats,
@@ -438,6 +533,11 @@ pub fn run_drift_scenario(
         powered_off,
         power_violations,
         final_rung,
+        events_dropped,
+        cache,
+        transport: stats_delta(&transport_sink().snapshot(), &sink0),
+        traces,
+        views,
     })
 }
 
@@ -487,10 +587,23 @@ mod tests {
                 notify: true,
             }),
             recv_timeout: Duration::from_secs(10),
+            trace_sample: 1,
+            record_views: true,
             ..OnlineConfig::default()
         };
         let ctl = run_drift_scenario(&fleet, pcfg, &mix, &phases, &cfg, true).unwrap();
         assert!(ctl.replans >= 1, "repair must re-plan: {:?}", ctl.events);
+        // Observability ride-alongs: the recorder captured spans, every
+        // tick snapshotted a FleetView line, and the repair re-plan shows
+        // up in the plan-cache counters.
+        assert!(!ctl.traces.is_empty(), "trace_sample=1 must capture spans");
+        assert!(!ctl.views.is_empty(), "record_views must emit tick views");
+        assert!(ctl.views[0].contains("\"serving\""), "{}", ctl.views[0]);
+        assert!(
+            ctl.cache.subplan_hits + ctl.cache.subplan_misses > 0,
+            "repair re-plan must touch the plan cache: {:?}",
+            ctl.cache
+        );
         assert_eq!(ctl.final_alloc.iter().sum::<usize>(), 2, "{:?}", ctl.events);
         assert!(ctl.final_alloc.iter().all(|&n| n == 1));
         let row = ctl.phase_stats[0]

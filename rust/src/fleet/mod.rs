@@ -35,7 +35,8 @@ pub use planner::{
     FleetPlan, Planner, PlannerConfig, PLAN_BATCH_CAP,
 };
 pub use scenario::{
-    lane_spec_for, piecewise_arrivals, run_scenario, stats_table, worst_miss_rate, worst_p99,
+    lane_spec_for, piecewise_arrivals, run_scenario, run_scenario_traced, stats_table,
+    worst_miss_rate, worst_p99,
     FleetHealth, ModelStats, PhaseSpec, ScenarioConfig, SCENARIO_CLASSES, SCENARIO_IMAGE_ELEMS,
 };
 pub use workload::{

@@ -245,6 +245,18 @@ pub fn worst_miss_rate(stats: &[ModelStats]) -> f64 {
 /// row per mix entry (mix order — a model's replica lanes are pooled into
 /// its single row).
 pub fn run_scenario(plan: &FleetPlan, cfg: &ScenarioConfig) -> Result<Vec<ModelStats>> {
+    run_scenario_traced(plan, cfg, None)
+}
+
+/// [`run_scenario`] with a flight recorder attached to the scenario's
+/// internal server (the `fleet --trace-out` path): sampled requests and
+/// every deadline miss land span traces in `recorder` for the caller to
+/// drain after the run.
+pub fn run_scenario_traced(
+    plan: &FleetPlan,
+    cfg: &ScenarioConfig,
+    recorder: Option<std::sync::Arc<crate::obs::TraceRecorder>>,
+) -> Result<Vec<ModelStats>> {
     if plan.deployments.is_empty() {
         return Err(Error::InvalidArg("empty fleet plan".into()));
     }
@@ -270,6 +282,9 @@ pub fn run_scenario(plan: &FleetPlan, cfg: &ScenarioConfig) -> Result<Vec<ModelS
         .map(|d| lane_spec_for(d, ts, cfg.window, None, cfg.transport.as_ref()))
         .collect();
     let server = Server::start_plan(lanes, ServerConfig::default());
+    if let Some(r) = &recorder {
+        server.set_recorder(Some(r.clone()));
+    }
 
     // One traffic stream and stats row per MODEL (first-replica
     // deployments, mix order) — the model's full rate, however many

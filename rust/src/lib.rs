@@ -32,6 +32,7 @@ pub mod dse;
 pub mod energy;
 pub mod fleet;
 pub mod model;
+pub mod obs;
 pub mod partition;
 pub mod platform;
 pub mod power;

@@ -12,11 +12,15 @@
 
 use std::time::{Duration, Instant};
 use superlip::analytic::{detect, Design, XferMode};
-use superlip::cli::{parse_precision, parse_surge_factor, parse_transport, parse_transport_faults, Args};
+use superlip::cli::{
+    parse_out_path, parse_precision, parse_surge_factor, parse_trace_sample, parse_transport,
+    parse_transport_faults, Args,
+};
 use superlip::control;
 use superlip::coordinator::SuperLip;
 use superlip::fleet::{self, FleetSpec, Planner, PlannerConfig, ScenarioConfig};
 use superlip::model::zoo;
+use superlip::obs::{stats_delta, transport_sink, FleetView, ObsSection, TraceRecord, TraceRecorder};
 use superlip::platform::{FpgaSpec, Precision};
 use superlip::report::{self, Table};
 use superlip::runtime::{ModelExecutor, PjrtRuntime};
@@ -95,11 +99,21 @@ COMMANDS:
              --transport-faults injects seeded device misbehavior: completion
              drops, duplicates, reorders, payload corruption, or a stall after
              N descriptors — the exactly-one-response drill)
+            [--trace-out FILE [--trace-sample N]] [--metrics-out FILE]
+            (--trace-out arms the flight recorder: per-request span traces —
+             admit, route, enqueue, batch-formed, ring-submit, device-complete,
+             reap, respond — written as JSONL; every N-th request is sampled
+             (--trace-sample, default 64) and every deadline miss is captured
+             regardless. --metrics-out snapshots the unified metrics registry:
+             a FleetView over serving/transport/plan-cache/power/control
+             counters, as Prometheus text when FILE ends in .prom, else JSON;
+             under --online it is a per-tick JSONL time series instead)
   dse       --net <name> --precision <f32|fx16>
   scale     --net <name> --max-fpgas N [--precision fx16]
   validate
   serve     --artifacts <dir> --requests N --rate RPS --replicas N
             [--transport shim[:lat_us[:gbps]]] [--transport-faults ...]
+            [--trace-out FILE [--trace-sample N]] [--metrics-out FILE]
   tables
 ";
 
@@ -123,6 +137,80 @@ fn transport_args(args: &Args) -> Result<Option<superlip::transport::TransportCo
             }
             Ok(None)
         }
+    }
+}
+
+/// Resolved observability flags (`--trace-out` / `--trace-sample` /
+/// `--metrics-out`).
+struct ObsArgs {
+    trace_out: Option<std::path::PathBuf>,
+    metrics_out: Option<std::path::PathBuf>,
+    /// 0 = recorder off. Invariant: `> 0` implies `trace_out` is set.
+    trace_sample: u64,
+}
+
+/// Resolve the observability flag trio with typed errors — mirrors
+/// `transport_args`: `--trace-sample` without `--trace-out` is rejected
+/// (the captures would have nowhere to go), and `--trace-out` alone
+/// defaults to 1-in-64 sampling.
+fn obs_args(args: &Args) -> Result<ObsArgs> {
+    let trace_out = args
+        .flag("trace-out")
+        .map(|s| parse_out_path("trace-out", s))
+        .transpose()?;
+    let metrics_out = args
+        .flag("metrics-out")
+        .map(|s| parse_out_path("metrics-out", s))
+        .transpose()?;
+    let trace_sample = match args.flag("trace-sample") {
+        Some(s) => {
+            if trace_out.is_none() {
+                return Err(Error::InvalidArg(
+                    "--trace-sample needs --trace-out (captures have nowhere to go)".into(),
+                ));
+            }
+            parse_trace_sample(s)?
+        }
+        None => {
+            if trace_out.is_some() {
+                64
+            } else {
+                0
+            }
+        }
+    };
+    Ok(ObsArgs {
+        trace_out,
+        metrics_out,
+        trace_sample,
+    })
+}
+
+/// Drain a recorder into one record list: published captures plus any
+/// slowest-exemplar not already among them.
+fn drain_recorder(r: &TraceRecorder) -> Vec<TraceRecord> {
+    let mut recs = r.take();
+    for ex in r.take_exemplars().into_iter().flatten() {
+        if !recs.iter().any(|t| t.id == ex.id) {
+            recs.push(ex);
+        }
+    }
+    recs
+}
+
+fn write_out(path: &std::path::Path, text: &str) -> Result<()> {
+    std::fs::write(path, text).map_err(Error::Io)
+}
+
+/// `.prom` extension selects Prometheus text exposition; anything else
+/// gets the one-line JSON object.
+fn metrics_text(path: &std::path::Path, view: &FleetView) -> String {
+    if path.extension().and_then(|e| e.to_str()) == Some("prom") {
+        view.to_prometheus()
+    } else {
+        let mut s = view.to_json();
+        s.push('\n');
+        s
     }
 }
 
@@ -193,6 +281,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     println!("{}", superlip::power::plan_power(&plan).summary());
 
     let transport = transport_args(args)?;
+    let obs = obs_args(args)?;
     if let Some(t) = &transport {
         println!(
             "transport: shim queue pairs under every lane (link {:.1} µs, {} Gbit/s{})",
@@ -206,10 +295,18 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         );
     }
     if args.has("online") {
-        return cmd_fleet_online(args, &mix, n, board, p, ts, surge, transport);
+        return cmd_fleet_online(args, &mix, n, board, p, ts, surge, transport, obs);
     }
 
     let requests = args.flag_u64("requests", 0)? as usize;
+    if requests == 0 && obs.trace_out.is_some() {
+        return Err(Error::InvalidArg(
+            "--trace-out needs --requests ≥ 1 (nothing is served otherwise)".into(),
+        ));
+    }
+    let sink0 = transport_sink().snapshot();
+    let recorder = (obs.trace_sample > 0).then(|| TraceRecorder::new(obs.trace_sample, 4096));
+    let mut stats = Vec::new();
     if requests > 0 {
         let scen = ScenarioConfig {
             requests_per_model: requests,
@@ -217,7 +314,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             transport,
             ..Default::default()
         };
-        let stats = fleet::run_scenario(&plan, &scen)?;
+        stats = fleet::run_scenario_traced(&plan, &scen, recorder.clone())?;
         println!("\nplanned split — served traffic:");
         println!("{}", fleet::stats_table(&stats));
         if args.has("naive") {
@@ -231,6 +328,25 @@ fn cmd_fleet(args: &Args) -> Result<()> {
                 report::ms(fleet::worst_p99(&nstats))
             );
         }
+    }
+    if let (Some(path), Some(r)) = (&obs.trace_out, &recorder) {
+        let recs = drain_recorder(r);
+        write_out(path, &TraceRecorder::to_jsonl(&recs))?;
+        println!("traces: {} span records -> {}", recs.len(), path.display());
+    }
+    if let Some(path) = &obs.metrics_out {
+        let mut view = FleetView::at(0.0)
+            .with_cache(planner.cache_stats())
+            .with_transport(stats_delta(&transport_sink().snapshot(), &sink0))
+            .with_models(&stats);
+        if let Some(r) = &recorder {
+            view = view.with_obs(ObsSection {
+                traces_published: r.published(),
+                sample_every: r.sample_every(),
+            });
+        }
+        write_out(path, &metrics_text(path, &view))?;
+        println!("metrics -> {}", path.display());
     }
     Ok(())
 }
@@ -249,6 +365,7 @@ fn cmd_fleet_online(
     ts: f64,
     surge: f64,
     transport: Option<superlip::transport::TransportConfig>,
+    obs: ObsArgs,
 ) -> Result<()> {
     if mix.len() < 2 {
         return Err(Error::InvalidArg(
@@ -314,6 +431,7 @@ fn cmd_fleet_online(
         brownout: Some(control::BrownoutConfig::default()),
         ..Default::default()
     };
+    let has_transport = transport.is_some();
     let cfg = control::OnlineConfig {
         time_scale: ts,
         tick_s: tick,
@@ -323,6 +441,8 @@ fn cmd_fleet_online(
             .has("power")
             .then_some(control::PowerGating { wake_latency_s: wake }),
         transport,
+        trace_sample: obs.trace_sample,
+        record_views: obs.metrics_out.is_some(),
         ..Default::default()
     };
     let fleet_spec = FleetSpec::homogeneous(n, board);
@@ -354,6 +474,41 @@ fn cmd_fleet_online(
             );
             for e in &out.events {
                 println!("  [control] {e}");
+            }
+            if out.events_dropped > 0 {
+                println!(
+                    "  [control] ({} earlier event(s) evicted from the journal)",
+                    out.events_dropped
+                );
+            }
+            println!(
+                "plan cache: {:.0}% hit (subplan {}/{}  split {}/{})",
+                out.cache.hit_rate() * 100.0,
+                out.cache.subplan_hits,
+                out.cache.subplan_hits + out.cache.subplan_misses,
+                out.cache.split_hits,
+                out.cache.split_hits + out.cache.split_misses,
+            );
+        }
+        if has_transport {
+            let t = &out.transport;
+            println!(
+                "transport: submitted {}  completed {}  timeouts {}  corrupt {}  ignored {}  retries {}",
+                t.submitted, t.completed, t.timeouts, t.corrupt, t.ignored, t.retries
+            );
+        }
+        if controlled {
+            if let Some(path) = &obs.trace_out {
+                write_out(path, &TraceRecorder::to_jsonl(&out.traces))?;
+                println!("traces: {} span records -> {}", out.traces.len(), path.display());
+            }
+            if let Some(path) = &obs.metrics_out {
+                let mut series = out.views.join("\n");
+                if !series.is_empty() {
+                    series.push('\n');
+                }
+                write_out(path, &series)?;
+                println!("metrics: {} tick snapshots -> {}", out.views.len(), path.display());
             }
         }
         println!(
@@ -467,6 +622,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // Probe the runtime + artifacts up front for a friendly error, then
     // hand each worker a factory (PJRT handles are not Send).
     let transport = transport_args(args)?;
+    let obs = obs_args(args)?;
     let rt = PjrtRuntime::cpu()?;
     println!("PJRT platform: {}", rt.platform());
     drop(ModelExecutor::load(&rt, &dir)?);
@@ -512,6 +668,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     warm.recv()
         .map_err(|e| Error::Serving(format!("warmup failed: {e}")))?;
     server.metrics().reset();
+    // Arm observability AFTER warmup so traces and counter deltas cover
+    // only the measured run.
+    let recorder = (obs.trace_sample > 0).then(|| TraceRecorder::new(obs.trace_sample, 4096));
+    if let Some(r) = &recorder {
+        server.set_recorder(Some(r.clone()));
+    }
+    let sink0 = transport_sink().snapshot();
     println!("warmup complete; starting measured run");
 
     let mut rng = SplitMix64::new(2026);
@@ -540,6 +703,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
         m.mean_batch(),
         m.deadline_misses()
     );
+    if let (Some(path), Some(r)) = (&obs.trace_out, &recorder) {
+        let recs = drain_recorder(r);
+        write_out(path, &TraceRecorder::to_jsonl(&recs))?;
+        println!("traces: {} span records -> {}", recs.len(), path.display());
+    }
+    if let Some(path) = &obs.metrics_out {
+        let mut view = FleetView::at(wall)
+            .with_serving(&m)
+            .with_transport(stats_delta(&transport_sink().snapshot(), &sink0));
+        if let Some(r) = &recorder {
+            view = view.with_obs(ObsSection {
+                traces_published: r.published(),
+                sample_every: r.sample_every(),
+            });
+        }
+        write_out(path, &metrics_text(path, &view))?;
+        println!("metrics -> {}", path.display());
+    }
     Ok(())
 }
 

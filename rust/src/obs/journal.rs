@@ -1,0 +1,223 @@
+//! Typed, bounded control-event journal.
+//!
+//! The controller used to narrate itself into a `Vec<String>` — fine for
+//! a bench printout, but (a) it grew without bound over long `--online`
+//! runs and (b) post-hoc analysis had to regex human prose. The journal
+//! replaces it: every event is a timestamped [`ControlEvent`] in a
+//! bounded ring (oldest dropped, drop count kept), serialized as JSONL
+//! with a stable `kind` taxonomy. The `Display` impl reproduces the
+//! exact human lines the CLI and several tests pin, so `events()`
+//! renders byte-compatible output.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::time::Instant;
+
+/// One control-plane event. Variants that today's pinned log lines
+/// assemble from many formats carry their pre-formatted `detail`; the
+/// variant itself is the machine-readable classification (`kind()`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ControlEvent {
+    /// Drift detector fired (`reason` names the model and direction).
+    Drift { reason: String },
+    /// Re-planning activity: incremental/full re-plans, their outcomes,
+    /// suppressions and failures.
+    Replan { detail: String },
+    /// Lane migration lifecycle (make-before-break swaps, abandoned
+    /// pending lanes).
+    Migrate { detail: String },
+    /// Board wake lifecycle (wake issued, awake, refused activation).
+    Wake { detail: String },
+    /// Boards powered down (consolidation or idle remainder).
+    PowerDown { detail: String },
+    /// Brownout ladder movement and its shed/degrade/floor actions.
+    Brownout { detail: String },
+    /// A board was reported dead by the fleet health oracle.
+    BoardDown { board: usize },
+    /// A lane was convicted through telemetry (covers the stalled
+    /// transport-ring conviction path — boards healthy, ring wedged).
+    LaneDead { detail: String },
+    /// Anything else the controller wants on the record.
+    Note { detail: String },
+}
+
+impl ControlEvent {
+    /// Stable machine-readable taxonomy key (the JSONL `kind` field).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ControlEvent::Drift { .. } => "drift",
+            ControlEvent::Replan { .. } => "replan",
+            ControlEvent::Migrate { .. } => "migrate",
+            ControlEvent::Wake { .. } => "wake",
+            ControlEvent::PowerDown { .. } => "power_down",
+            ControlEvent::Brownout { .. } => "brownout",
+            ControlEvent::BoardDown { .. } => "board_down",
+            ControlEvent::LaneDead { .. } => "lane_dead",
+            ControlEvent::Note { .. } => "note",
+        }
+    }
+}
+
+impl fmt::Display for ControlEvent {
+    /// Byte-compatible with the historical `Vec<String>` lines.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ControlEvent::Drift { reason } => write!(f, "drift: {reason}"),
+            ControlEvent::BoardDown { board } => write!(f, "board {board} down"),
+            ControlEvent::Replan { detail }
+            | ControlEvent::Migrate { detail }
+            | ControlEvent::Wake { detail }
+            | ControlEvent::PowerDown { detail }
+            | ControlEvent::Brownout { detail }
+            | ControlEvent::LaneDead { detail }
+            | ControlEvent::Note { detail } => f.write_str(detail),
+        }
+    }
+}
+
+/// Bounded event ring with wall-clock stamps relative to construction.
+/// Single-writer (the controller owns it mutably); readers get
+/// snapshots/renderings.
+#[derive(Debug, Clone)]
+pub struct EventJournal {
+    epoch: Instant,
+    cap: usize,
+    buf: VecDeque<(f64, ControlEvent)>,
+    dropped: u64,
+}
+
+impl EventJournal {
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        EventJournal {
+            epoch: Instant::now(),
+            cap,
+            buf: VecDeque::with_capacity(cap.min(1024)),
+            dropped: 0,
+        }
+    }
+
+    /// Append, stamped with seconds since the journal's construction;
+    /// evicts the oldest entry at capacity.
+    pub fn push(&mut self, ev: ControlEvent) {
+        let t = self.epoch.elapsed().as_secs_f64();
+        self.push_at(t, ev);
+    }
+
+    /// Append with an explicit timestamp (replay / deterministic tests).
+    pub fn push_at(&mut self, t_s: f64, ev: ControlEvent) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back((t_s, ev));
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Events evicted to stay within `capacity`.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Oldest-first iteration over retained `(t_s, event)` entries.
+    pub fn iter(&self) -> impl Iterator<Item = &(f64, ControlEvent)> {
+        self.buf.iter()
+    }
+
+    /// Human lines, oldest first — byte-compatible with the historical
+    /// `Controller::events` strings.
+    pub fn rendered(&self) -> Vec<String> {
+        self.buf.iter().map(|(_, e)| e.to_string()).collect()
+    }
+
+    /// JSONL: one `{"t_s":…,"kind":"…","msg":"…"}` object per line,
+    /// oldest first. Schema pinned by golden tests.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for (t, ev) in &self.buf {
+            out.push_str(&format!("{{\"t_s\":{:.6},\"kind\":\"{}\",\"msg\":\"", t, ev.kind()));
+            super::json_escape_into(&ev.to_string(), &mut out);
+            out.push_str("\"}\n");
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_historical_lines() {
+        let cases = [
+            (
+                ControlEvent::Drift { reason: "`alexnet` rate 2.1x".into() },
+                "drift: `alexnet` rate 2.1x",
+            ),
+            (ControlEvent::BoardDown { board: 7 }, "board 7 down"),
+            (
+                ControlEvent::Replan {
+                    detail: "full re-plan (no reusable plan memory)".into(),
+                },
+                "full re-plan (no reusable plan memory)",
+            ),
+            (
+                ControlEvent::Brownout {
+                    detail: "brownout: climbed to rung `shed`".into(),
+                },
+                "brownout: climbed to rung `shed`",
+            ),
+        ];
+        for (ev, want) in cases {
+            assert_eq!(ev.to_string(), want);
+        }
+    }
+
+    #[test]
+    fn ring_holds_cap_and_counts_drops_over_10k_pushes() {
+        let mut j = EventJournal::new(256);
+        for i in 0..10_000usize {
+            j.push(ControlEvent::Note { detail: format!("tick {i}") });
+        }
+        assert_eq!(j.len(), 256);
+        assert_eq!(j.capacity(), 256);
+        assert_eq!(j.dropped(), 10_000 - 256);
+        // Newest retained, oldest evicted.
+        let lines = j.rendered();
+        assert_eq!(lines.first().map(String::as_str), Some("tick 9744"));
+        assert_eq!(lines.last().map(String::as_str), Some("tick 9999"));
+    }
+
+    #[test]
+    fn jsonl_schema_is_pinned_and_escaped() {
+        let mut j = EventJournal::new(8);
+        j.push_at(0.25, ControlEvent::Drift { reason: "`m` rate \"hot\"".into() });
+        j.push_at(1.5, ControlEvent::BoardDown { board: 3 });
+        assert_eq!(
+            j.to_jsonl(),
+            "{\"t_s\":0.250000,\"kind\":\"drift\",\"msg\":\"drift: `m` rate \\\"hot\\\"\"}\n\
+             {\"t_s\":1.500000,\"kind\":\"board_down\",\"msg\":\"board 3 down\"}\n"
+        );
+    }
+
+    #[test]
+    fn zero_cap_is_clamped_to_one() {
+        let mut j = EventJournal::new(0);
+        j.push(ControlEvent::Note { detail: "a".into() });
+        j.push(ControlEvent::Note { detail: "b".into() });
+        assert_eq!(j.len(), 1);
+        assert_eq!(j.dropped(), 1);
+        assert_eq!(j.rendered(), vec!["b".to_string()]);
+    }
+}

@@ -1,0 +1,49 @@
+//! Observability substrate: flight recorder, unified metrics registry,
+//! and the typed control-event journal.
+//!
+//! The paper's methodology (Fig. 14: analytic model vs. measurement
+//! within ~2%) depends on per-stage latency attribution; this module is
+//! the serving stack's version of that discipline:
+//!
+//! * [`recorder`] — per-request span traces (admit → route → enqueue →
+//!   batch-formed → ring-submit → device-complete → reap → respond) in
+//!   lock-free per-lane rings; 1/N id-sampled on the hot path, always-on
+//!   for deadline misses, slowest-exemplar retention per SLO class.
+//! * [`registry`] — one [`FleetView`] over every existing counter family
+//!   (`serving::Metrics`, `TransportStats` via the process-wide
+//!   [`TransportSink`], planner `CacheStats`, power/energy, brownout and
+//!   replan posture) with Prometheus-text and JSON exporters.
+//! * [`journal`] — the controller's bounded, timestamped
+//!   [`ControlEvent`] ring (JSONL-serializable; `Display` keeps the
+//!   historical human lines byte-compatible).
+
+pub mod journal;
+pub mod recorder;
+pub mod registry;
+
+pub use journal::{ControlEvent, EventJournal};
+pub use recorder::{
+    SpanRing, Stage, Trace, TraceRecord, TraceRecorder, FLAG_MISS, FLAG_SAMPLED, FLAG_SHED,
+    N_STAGES,
+};
+pub use registry::{
+    stats_delta, transport_sink, CacheSection, ControlSection, FleetView, ModelSection,
+    ObsSection, PowerSection, ServingSection, TransportSink,
+};
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars) —
+/// shared by the JSONL serializers here; the crate stays dependency-free
+/// by design, so there is no serde to lean on.
+pub(crate) fn json_escape_into(s: &str, out: &mut String) {
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+}

@@ -1,0 +1,683 @@
+//! Unified metrics registry: one coherent fleet view over every counter
+//! family the stack already keeps — `serving::Metrics` (HDR tails),
+//! `TransportStats`, planner `CacheStats`, power state + energy ledger
+//! aggregates, brownout rung and replan counts — with Prometheus-text
+//! and JSON exporters behind `--metrics-out`.
+//!
+//! [`FleetView`] is plain data: builders snapshot the live sources, the
+//! exporters format. Sections are optional so `serve` (no planner, no
+//! power model) and `fleet --online` (everything) share one schema; both
+//! export formats are pinned by golden tests.
+//!
+//! [`TransportSink`] is the process-wide aggregation point for the
+//! per-worker `TransportBackend` counters: backends are thread-confined
+//! (`RefCell` stats), so each flushes monotone deltas into this sink and
+//! readers diff snapshots around the interval they care about — the same
+//! default-registry idiom Prometheus clients use.
+
+use crate::fleet::{CacheStats, ModelStats, SloClass, N_CLASSES};
+use crate::serving::{LatencyStats, Metrics};
+use crate::transport::TransportStats;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide transport counter sink (see module docs). All-atomic:
+/// add/snapshot from any thread.
+#[derive(Default)]
+pub struct TransportSink {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    timeouts: AtomicU64,
+    corrupt: AtomicU64,
+    ignored: AtomicU64,
+    retries: AtomicU64,
+}
+
+impl TransportSink {
+    /// Fold a monotone delta in (backends call this with
+    /// `stats_now - stats_last_flushed`).
+    pub fn add(&self, d: &TransportStats) {
+        // Relaxed: counters are independently monotone; readers only
+        // ever diff snapshots.
+        self.submitted.fetch_add(d.submitted, Ordering::Relaxed);
+        self.completed.fetch_add(d.completed, Ordering::Relaxed);
+        self.timeouts.fetch_add(d.timeouts, Ordering::Relaxed);
+        self.corrupt.fetch_add(d.corrupt, Ordering::Relaxed);
+        self.ignored.fetch_add(d.ignored, Ordering::Relaxed);
+        self.retries.fetch_add(d.retries, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> TransportStats {
+        TransportStats {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            timeouts: self.timeouts.load(Ordering::Relaxed),
+            corrupt: self.corrupt.load(Ordering::Relaxed),
+            ignored: self.ignored.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The process-wide sink every `TransportBackend` flushes into.
+pub fn transport_sink() -> &'static TransportSink {
+    static SINK: TransportSink = TransportSink {
+        submitted: AtomicU64::new(0),
+        completed: AtomicU64::new(0),
+        timeouts: AtomicU64::new(0),
+        corrupt: AtomicU64::new(0),
+        ignored: AtomicU64::new(0),
+        retries: AtomicU64::new(0),
+    };
+    &SINK
+}
+
+/// Counter-wise difference `now - start` (interval attribution around a
+/// run; saturating so a sink reset between snapshots cannot underflow).
+pub fn stats_delta(now: &TransportStats, start: &TransportStats) -> TransportStats {
+    TransportStats {
+        submitted: now.submitted.saturating_sub(start.submitted),
+        completed: now.completed.saturating_sub(start.completed),
+        timeouts: now.timeouts.saturating_sub(start.timeouts),
+        corrupt: now.corrupt.saturating_sub(start.corrupt),
+        ignored: now.ignored.saturating_sub(start.ignored),
+        retries: now.retries.saturating_sub(start.retries),
+    }
+}
+
+/// Serving-side counters + tails, from `serving::Metrics`.
+#[derive(Debug, Clone, Default)]
+pub struct ServingSection {
+    pub arrivals: u64,
+    pub completed: u64,
+    pub misses: u64,
+    pub shed: u64,
+    pub throughput_rps: f64,
+    pub mean_batch: f64,
+    pub latency: Option<LatencyStats>,
+    /// `(completed, misses, shed)` per class, indexed by `SloClass::index()`.
+    pub classes: [(u64, u64, u64); N_CLASSES],
+}
+
+impl ServingSection {
+    pub fn from_metrics(m: &Metrics) -> Self {
+        ServingSection {
+            arrivals: m.arrivals(),
+            completed: m.completed() as u64,
+            misses: m.deadline_misses(),
+            shed: m.shed(),
+            throughput_rps: m.throughput_rps(),
+            mean_batch: m.mean_batch(),
+            latency: m.latency_stats(),
+            classes: m.class_counters(),
+        }
+    }
+}
+
+/// Planner plan-cache counters (+ derived hit rate).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheSection {
+    pub stats: CacheStats,
+}
+
+/// Power/energy aggregates (board state census + ledger totals).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PowerSection {
+    pub active: usize,
+    pub idle: usize,
+    pub powered_off: usize,
+    pub waking: usize,
+    pub watts: f64,
+    pub joules: f64,
+    pub j_per_inf: f64,
+    pub violations: u64,
+}
+
+/// Control-plane posture.
+#[derive(Debug, Clone, Default)]
+pub struct ControlSection {
+    pub rung: u64,
+    pub replans: u64,
+    /// Events currently retained in the journal ring.
+    pub events: u64,
+    /// Events evicted from the ring (bounded-retention loss count).
+    pub events_dropped: u64,
+}
+
+/// Flight-recorder posture.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ObsSection {
+    pub traces_published: u64,
+    pub sample_every: u64,
+}
+
+/// One scenario row (from `fleet::ModelStats`) for per-model export.
+#[derive(Debug, Clone)]
+pub struct ModelSection {
+    pub model: String,
+    pub class: SloClass,
+    pub boards: usize,
+    pub sent: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+    pub mean_batch: f64,
+    pub miss_pct: f64,
+    pub watts: f64,
+    pub j_per_inf: f64,
+}
+
+impl ModelSection {
+    pub fn from_stats(s: &ModelStats) -> Self {
+        ModelSection {
+            model: s.model.clone(),
+            class: s.class,
+            boards: s.n_boards,
+            sent: s.sent as u64,
+            completed: s.completed as u64,
+            shed: s.shed as u64,
+            p50_ms: s.p50_ms,
+            p99_ms: s.p99_ms,
+            p999_ms: s.p999_ms,
+            mean_batch: s.mean_batch,
+            miss_pct: s.miss_rate * 100.0,
+            watts: s.avg_watts,
+            j_per_inf: s.j_per_inf,
+        }
+    }
+}
+
+/// One coherent snapshot of the fleet, sections present as their sources
+/// are. `ts_s` is seconds since whatever epoch the producer runs on
+/// (scenario clock for the online runner, process start for `serve`).
+#[derive(Debug, Clone, Default)]
+pub struct FleetView {
+    pub ts_s: f64,
+    pub serving: Option<ServingSection>,
+    pub transport: Option<TransportStats>,
+    pub cache: Option<CacheSection>,
+    pub power: Option<PowerSection>,
+    pub control: Option<ControlSection>,
+    pub obs: Option<ObsSection>,
+    pub models: Vec<ModelSection>,
+}
+
+impl FleetView {
+    pub fn at(ts_s: f64) -> Self {
+        FleetView { ts_s, ..FleetView::default() }
+    }
+
+    pub fn with_serving(mut self, m: &Metrics) -> Self {
+        self.serving = Some(ServingSection::from_metrics(m));
+        self
+    }
+
+    pub fn with_transport(mut self, t: TransportStats) -> Self {
+        self.transport = Some(t);
+        self
+    }
+
+    pub fn with_cache(mut self, stats: CacheStats) -> Self {
+        self.cache = Some(CacheSection { stats });
+        self
+    }
+
+    pub fn with_power(mut self, p: PowerSection) -> Self {
+        self.power = Some(p);
+        self
+    }
+
+    pub fn with_control(mut self, c: ControlSection) -> Self {
+        self.control = Some(c);
+        self
+    }
+
+    pub fn with_obs(mut self, o: ObsSection) -> Self {
+        self.obs = Some(o);
+        self
+    }
+
+    pub fn with_models(mut self, rows: &[ModelStats]) -> Self {
+        self.models = rows.iter().map(ModelSection::from_stats).collect();
+        self
+    }
+
+    /// Prometheus text exposition (`# TYPE` + samples, `superlip_`
+    /// namespace). Stable ordering; pinned by golden tests.
+    pub fn to_prometheus(&self) -> String {
+        let mut o = String::with_capacity(2048);
+        let num = fmt_num;
+        o.push_str("# TYPE superlip_snapshot_ts_seconds gauge\n");
+        o.push_str(&format!("superlip_snapshot_ts_seconds {}\n", num(self.ts_s)));
+        if let Some(s) = &self.serving {
+            o.push_str("# TYPE superlip_arrivals_total counter\n");
+            o.push_str(&format!("superlip_arrivals_total {}\n", s.arrivals));
+            o.push_str("# TYPE superlip_completed_total counter\n");
+            o.push_str(&format!("superlip_completed_total {}\n", s.completed));
+            o.push_str("# TYPE superlip_deadline_misses_total counter\n");
+            o.push_str(&format!("superlip_deadline_misses_total {}\n", s.misses));
+            o.push_str("# TYPE superlip_shed_total counter\n");
+            o.push_str(&format!("superlip_shed_total {}\n", s.shed));
+            o.push_str("# TYPE superlip_throughput_rps gauge\n");
+            o.push_str(&format!("superlip_throughput_rps {}\n", num(s.throughput_rps)));
+            o.push_str("# TYPE superlip_mean_batch gauge\n");
+            o.push_str(&format!("superlip_mean_batch {}\n", num(s.mean_batch)));
+            if let Some(l) = &s.latency {
+                o.push_str("# TYPE superlip_latency_ms gauge\n");
+                for (q, v) in [
+                    ("0.5", l.p50_ms),
+                    ("0.99", l.p99_ms),
+                    ("0.999", l.p999_ms),
+                    ("0.9999", l.p9999_ms),
+                ] {
+                    o.push_str(&format!(
+                        "superlip_latency_ms{{quantile=\"{}\"}} {}\n",
+                        q,
+                        num(v)
+                    ));
+                }
+            }
+            o.push_str("# TYPE superlip_class_requests_total counter\n");
+            for c in 0..N_CLASSES {
+                let name = SloClass::from_index(c).name();
+                let (done, miss, shed) = s.classes[c];
+                for (outcome, v) in
+                    [("completed", done), ("missed", miss), ("shed", shed)]
+                {
+                    o.push_str(&format!(
+                        "superlip_class_requests_total{{class=\"{}\",outcome=\"{}\"}} {}\n",
+                        name, outcome, v
+                    ));
+                }
+            }
+        }
+        if let Some(t) = &self.transport {
+            o.push_str("# TYPE superlip_transport_total counter\n");
+            for (op, v) in [
+                ("submitted", t.submitted),
+                ("completed", t.completed),
+                ("timeouts", t.timeouts),
+                ("corrupt", t.corrupt),
+                ("ignored", t.ignored),
+                ("retries", t.retries),
+            ] {
+                o.push_str(&format!(
+                    "superlip_transport_total{{op=\"{}\"}} {}\n",
+                    op, v
+                ));
+            }
+        }
+        if let Some(c) = &self.cache {
+            o.push_str("# TYPE superlip_plan_cache_total counter\n");
+            for (layer, outcome, v) in [
+                ("subplan", "hit", c.stats.subplan_hits),
+                ("subplan", "miss", c.stats.subplan_misses),
+                ("split", "hit", c.stats.split_hits),
+                ("split", "miss", c.stats.split_misses),
+            ] {
+                o.push_str(&format!(
+                    "superlip_plan_cache_total{{layer=\"{}\",outcome=\"{}\"}} {}\n",
+                    layer, outcome, v
+                ));
+            }
+            o.push_str("# TYPE superlip_plan_cache_hit_rate gauge\n");
+            o.push_str(&format!(
+                "superlip_plan_cache_hit_rate {}\n",
+                num(c.stats.hit_rate())
+            ));
+        }
+        if let Some(p) = &self.power {
+            o.push_str("# TYPE superlip_boards gauge\n");
+            for (state, v) in [
+                ("active", p.active),
+                ("idle", p.idle),
+                ("powered_off", p.powered_off),
+                ("waking", p.waking),
+            ] {
+                o.push_str(&format!("superlip_boards{{state=\"{}\"}} {}\n", state, v));
+            }
+            o.push_str("# TYPE superlip_fleet_watts gauge\n");
+            o.push_str(&format!("superlip_fleet_watts {}\n", num(p.watts)));
+            o.push_str("# TYPE superlip_fleet_joules_total counter\n");
+            o.push_str(&format!("superlip_fleet_joules_total {}\n", num(p.joules)));
+            o.push_str("# TYPE superlip_joules_per_inference gauge\n");
+            o.push_str(&format!("superlip_joules_per_inference {}\n", num(p.j_per_inf)));
+            o.push_str("# TYPE superlip_power_violations_total counter\n");
+            o.push_str(&format!("superlip_power_violations_total {}\n", p.violations));
+        }
+        if let Some(c) = &self.control {
+            o.push_str("# TYPE superlip_brownout_rung gauge\n");
+            o.push_str(&format!("superlip_brownout_rung {}\n", c.rung));
+            o.push_str("# TYPE superlip_replans_total counter\n");
+            o.push_str(&format!("superlip_replans_total {}\n", c.replans));
+            o.push_str("# TYPE superlip_control_events gauge\n");
+            o.push_str(&format!("superlip_control_events {}\n", c.events));
+            o.push_str("# TYPE superlip_control_events_dropped_total counter\n");
+            o.push_str(&format!("superlip_control_events_dropped_total {}\n", c.events_dropped));
+        }
+        if let Some(ob) = &self.obs {
+            o.push_str("# TYPE superlip_traces_published_total counter\n");
+            o.push_str(&format!("superlip_traces_published_total {}\n", ob.traces_published));
+            o.push_str("# TYPE superlip_trace_sample_every gauge\n");
+            o.push_str(&format!("superlip_trace_sample_every {}\n", ob.sample_every));
+        }
+        if !self.models.is_empty() {
+            o.push_str("# TYPE superlip_model_completed_total counter\n");
+            for m in &self.models {
+                o.push_str(&format!(
+                    "superlip_model_completed_total{{model=\"{}\",class=\"{}\"}} {}\n",
+                    m.model,
+                    m.class.name(),
+                    m.completed
+                ));
+            }
+            o.push_str("# TYPE superlip_model_p99_ms gauge\n");
+            for m in &self.models {
+                o.push_str(&format!(
+                    "superlip_model_p99_ms{{model=\"{}\"}} {}\n",
+                    m.model,
+                    num(m.p99_ms)
+                ));
+            }
+            o.push_str("# TYPE superlip_model_miss_pct gauge\n");
+            for m in &self.models {
+                o.push_str(&format!(
+                    "superlip_model_miss_pct{{model=\"{}\"}} {}\n",
+                    m.model,
+                    num(m.miss_pct)
+                ));
+            }
+        }
+        o
+    }
+
+    /// One-line JSON object (sections omitted when absent) — the
+    /// online runner appends one per tick for a JSONL time series.
+    pub fn to_json(&self) -> String {
+        let num = fmt_num;
+        let mut o = String::with_capacity(1024);
+        o.push_str(&format!("{{\"ts_s\":{}", num(self.ts_s)));
+        if let Some(s) = &self.serving {
+            o.push_str(&format!(
+                ",\"serving\":{{\"arrivals\":{},\"completed\":{},\"misses\":{},\"shed\":{},\
+                 \"throughput_rps\":{},\"mean_batch\":{}",
+                s.arrivals,
+                s.completed,
+                s.misses,
+                s.shed,
+                num(s.throughput_rps),
+                num(s.mean_batch)
+            ));
+            match &s.latency {
+                Some(l) => o.push_str(&format!(
+                    ",\"latency_ms\":{{\"count\":{},\"mean\":{},\"max\":{},\"p50\":{},\
+                     \"p99\":{},\"p999\":{},\"p9999\":{}}}",
+                    l.count,
+                    num(l.mean_ms),
+                    num(l.max_ms),
+                    num(l.p50_ms),
+                    num(l.p99_ms),
+                    num(l.p999_ms),
+                    num(l.p9999_ms)
+                )),
+                None => o.push_str(",\"latency_ms\":null"),
+            }
+            o.push_str(",\"classes\":[");
+            for c in 0..N_CLASSES {
+                if c > 0 {
+                    o.push(',');
+                }
+                let (done, miss, shed) = s.classes[c];
+                o.push_str(&format!(
+                    "{{\"class\":\"{}\",\"completed\":{},\"misses\":{},\"shed\":{}}}",
+                    SloClass::from_index(c).name(),
+                    done,
+                    miss,
+                    shed
+                ));
+            }
+            o.push_str("]}");
+        }
+        if let Some(t) = &self.transport {
+            o.push_str(&format!(
+                ",\"transport\":{{\"submitted\":{},\"completed\":{},\"timeouts\":{},\
+                 \"corrupt\":{},\"ignored\":{},\"retries\":{}}}",
+                t.submitted, t.completed, t.timeouts, t.corrupt, t.ignored, t.retries
+            ));
+        }
+        if let Some(c) = &self.cache {
+            o.push_str(&format!(
+                ",\"cache\":{{\"subplan_hits\":{},\"subplan_misses\":{},\"split_hits\":{},\
+                 \"split_misses\":{},\"hit_rate\":{}}}",
+                c.stats.subplan_hits,
+                c.stats.subplan_misses,
+                c.stats.split_hits,
+                c.stats.split_misses,
+                num(c.stats.hit_rate())
+            ));
+        }
+        if let Some(p) = &self.power {
+            o.push_str(&format!(
+                ",\"power\":{{\"active\":{},\"idle\":{},\"powered_off\":{},\"waking\":{},\
+                 \"watts\":{},\"joules\":{},\"j_per_inf\":{},\"violations\":{}}}",
+                p.active,
+                p.idle,
+                p.powered_off,
+                p.waking,
+                num(p.watts),
+                num(p.joules),
+                num(p.j_per_inf),
+                p.violations
+            ));
+        }
+        if let Some(c) = &self.control {
+            o.push_str(&format!(
+                ",\"control\":{{\"rung\":{},\"replans\":{},\"events\":{},\"events_dropped\":{}}}",
+                c.rung, c.replans, c.events, c.events_dropped
+            ));
+        }
+        if let Some(ob) = &self.obs {
+            o.push_str(&format!(
+                ",\"obs\":{{\"traces_published\":{},\"sample_every\":{}}}",
+                ob.traces_published, ob.sample_every
+            ));
+        }
+        if !self.models.is_empty() {
+            o.push_str(",\"models\":[");
+            for (i, m) in self.models.iter().enumerate() {
+                if i > 0 {
+                    o.push(',');
+                }
+                o.push_str(&format!(
+                    "{{\"model\":\"{}\",\"class\":\"{}\",\"boards\":{},\"sent\":{},\
+                     \"completed\":{},\"shed\":{},\"p50_ms\":{},\"p99_ms\":{},\"p999_ms\":{},\
+                     \"mean_batch\":{},\"miss_pct\":{},\"watts\":{},\"j_per_inf\":{}}}",
+                    json_escaped(&m.model),
+                    m.class.name(),
+                    m.boards,
+                    m.sent,
+                    m.completed,
+                    m.shed,
+                    num(m.p50_ms),
+                    num(m.p99_ms),
+                    num(m.p999_ms),
+                    num(m.mean_batch),
+                    num(m.miss_pct),
+                    num(m.watts),
+                    num(m.j_per_inf)
+                ));
+            }
+            o.push(']');
+        }
+        o.push('}');
+        o
+    }
+}
+
+/// JSON-safe number: finite values print via `{}` (shortest round-trip),
+/// NaN/inf become `null`.
+fn fmt_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn json_escaped(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    super::json_escape_into(s, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_view() -> FleetView {
+        FleetView::at(12.5)
+            .with_transport(TransportStats {
+                submitted: 100,
+                completed: 97,
+                timeouts: 2,
+                corrupt: 1,
+                ignored: 3,
+                retries: 3,
+            })
+            .with_cache(CacheStats {
+                subplan_hits: 30,
+                subplan_misses: 10,
+                split_hits: 5,
+                split_misses: 5,
+            })
+            .with_control(ControlSection {
+                rung: 1,
+                replans: 4,
+                events: 12,
+                events_dropped: 2,
+            })
+            .with_obs(ObsSection {
+                traces_published: 42,
+                sample_every: 1024,
+            })
+    }
+
+    #[test]
+    fn prometheus_text_is_pinned() {
+        let got = sample_view().to_prometheus();
+        let want = "\
+# TYPE superlip_snapshot_ts_seconds gauge
+superlip_snapshot_ts_seconds 12.5
+# TYPE superlip_transport_total counter
+superlip_transport_total{op=\"submitted\"} 100
+superlip_transport_total{op=\"completed\"} 97
+superlip_transport_total{op=\"timeouts\"} 2
+superlip_transport_total{op=\"corrupt\"} 1
+superlip_transport_total{op=\"ignored\"} 3
+superlip_transport_total{op=\"retries\"} 3
+# TYPE superlip_plan_cache_total counter
+superlip_plan_cache_total{layer=\"subplan\",outcome=\"hit\"} 30
+superlip_plan_cache_total{layer=\"subplan\",outcome=\"miss\"} 10
+superlip_plan_cache_total{layer=\"split\",outcome=\"hit\"} 5
+superlip_plan_cache_total{layer=\"split\",outcome=\"miss\"} 5
+# TYPE superlip_plan_cache_hit_rate gauge
+superlip_plan_cache_hit_rate 0.7
+# TYPE superlip_brownout_rung gauge
+superlip_brownout_rung 1
+# TYPE superlip_replans_total counter
+superlip_replans_total 4
+# TYPE superlip_control_events gauge
+superlip_control_events 12
+# TYPE superlip_control_events_dropped_total counter
+superlip_control_events_dropped_total 2
+# TYPE superlip_traces_published_total counter
+superlip_traces_published_total 42
+# TYPE superlip_trace_sample_every gauge
+superlip_trace_sample_every 1024
+";
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn json_is_pinned() {
+        let got = sample_view().to_json();
+        let want = "{\"ts_s\":12.5,\
+\"transport\":{\"submitted\":100,\"completed\":97,\"timeouts\":2,\"corrupt\":1,\"ignored\":3,\"retries\":3},\
+\"cache\":{\"subplan_hits\":30,\"subplan_misses\":10,\"split_hits\":5,\"split_misses\":5,\"hit_rate\":0.7},\
+\"control\":{\"rung\":1,\"replans\":4,\"events\":12,\"events_dropped\":2},\
+\"obs\":{\"traces_published\":42,\"sample_every\":1024}}";
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn serving_section_snapshots_live_metrics() {
+        use std::time::Duration;
+        let m = Metrics::new();
+        m.record_arrival();
+        m.record_arrival();
+        m.record_class(Duration::from_millis(3), 2, true, SloClass::Gold);
+        m.record_class(Duration::from_millis(9), 2, false, SloClass::Silver);
+        m.record_shed(SloClass::BestEffort);
+        let v = FleetView::at(1.0).with_serving(&m);
+        let s = v.serving.as_ref().unwrap();
+        assert_eq!(s.arrivals, 2);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.classes[SloClass::Gold.index()].0, 1);
+        assert_eq!(s.classes[SloClass::Silver.index()].1, 1);
+        assert_eq!(s.classes[SloClass::BestEffort.index()].2, 1);
+        let l = s.latency.as_ref().expect("two completions recorded");
+        assert_eq!(l.count, 2);
+        // Both exporters accept the populated section (schema smoke —
+        // exact bytes for dynamic latencies are not pinned here).
+        assert!(v.to_prometheus().contains("superlip_completed_total 2\n"));
+        assert!(v.to_json().contains("\"completed\":2"));
+        assert!(v.to_json().contains("\"latency_ms\":{\"count\":2,"));
+    }
+
+    #[test]
+    fn transport_sink_accumulates_and_diffs() {
+        let sink = TransportSink::default();
+        let before = sink.snapshot();
+        sink.add(&TransportStats {
+            submitted: 5,
+            completed: 4,
+            timeouts: 1,
+            corrupt: 0,
+            ignored: 2,
+            retries: 1,
+        });
+        sink.add(&TransportStats {
+            submitted: 3,
+            completed: 3,
+            timeouts: 0,
+            corrupt: 0,
+            ignored: 0,
+            retries: 0,
+        });
+        let d = stats_delta(&sink.snapshot(), &before);
+        assert_eq!(d.submitted, 8);
+        assert_eq!(d.completed, 7);
+        assert_eq!(d.timeouts, 1);
+        assert_eq!(d.ignored, 2);
+        assert_eq!(d.retries, 1);
+    }
+
+    #[test]
+    fn non_finite_numbers_export_as_null() {
+        let v = FleetView::at(0.0).with_power(PowerSection {
+            active: 1,
+            idle: 0,
+            powered_off: 0,
+            waking: 0,
+            watts: 25.0,
+            joules: 100.0,
+            j_per_inf: f64::NAN,
+            violations: 0,
+        });
+        assert!(v.to_json().contains("\"j_per_inf\":null"));
+        assert!(v.to_prometheus().contains("superlip_joules_per_inference null\n"));
+    }
+}

@@ -469,6 +469,7 @@ mod tests {
                 enqueued: now,
                 deadline: now + Duration::from_millis(deadline_ms),
                 class,
+                trace: Default::default(),
                 reply: tx,
             },
             rx,

@@ -1,6 +1,7 @@
 //! Request/response types and the compute-backend abstraction.
 
 use crate::fleet::SloClass;
+use crate::obs::Trace;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
@@ -18,6 +19,9 @@ pub struct InferenceRequest {
     /// Tenant/SLO class: higher classes strictly preempt in the batcher
     /// queue and survive the brownout ladder longest.
     pub class: SloClass,
+    /// Flight-recorder span stamps (all-zero unless a recorder is
+    /// attached; plain inline data, stamped by whoever owns the request).
+    pub trace: Trace,
     /// Where to deliver the response.
     pub reply: mpsc::Sender<InferenceResponse>,
 }

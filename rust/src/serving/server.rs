@@ -25,6 +25,7 @@ use super::{
     PipelineOutcome, PipelinedBackend, PlanRouter, RoutePolicy,
 };
 use crate::fleet::SloClass;
+use crate::obs::{Stage, TraceRecord, TraceRecorder, FLAG_MISS, FLAG_SAMPLED, FLAG_SHED};
 use crate::util::SnapCell;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
@@ -135,6 +136,11 @@ pub struct Server {
     /// `SloClass::index() < floor` are refused at submit with an explicit
     /// `SubmitError::Shed`. 0 (default) admits everything.
     admission_floor: AtomicU8,
+    /// Flight recorder (`None` = tracing off, the default). Attachable
+    /// post-hoc via `set_recorder`; the submit path and worker loops load
+    /// the snapshot per request/batch, so the only cost when detached is
+    /// one atomic load.
+    recorder: Arc<SnapCell<Option<Arc<TraceRecorder>>>>,
     cfg: ServerConfig,
 }
 
@@ -155,6 +161,7 @@ impl Server {
             metrics: Arc::new(Metrics::new()),
             next_id: AtomicU64::new(0),
             admission_floor: AtomicU8::new(0),
+            recorder: Arc::new(SnapCell::new(None)),
             cfg,
         };
         for spec in specs {
@@ -191,6 +198,7 @@ impl Server {
                 let lm = lane_metrics.clone();
                 let r = self.router.clone();
                 let live = live.clone();
+                let rec = self.recorder.clone();
                 workers.push(
                     std::thread::Builder::new()
                         .name(format!("superlip-lane{lane_idx}-worker{wid}"))
@@ -202,10 +210,10 @@ impl Server {
                                 // blocking loop bit-identically.
                                 if let Some(pipe) = backend.pipelined() {
                                     worker_loop_pipelined(
-                                        &*backend, pipe, &b, &g, &lm, &r, lane_idx,
+                                        &*backend, pipe, &b, &g, &lm, &r, &rec, lane_idx,
                                     );
                                 } else {
-                                    worker_loop(&*backend, &b, &g, &lm, &r, lane_idx);
+                                    worker_loop(&*backend, &b, &g, &lm, &r, &rec, lane_idx);
                                 }
                             }
                             Err(e) => {
@@ -422,8 +430,13 @@ impl Server {
             enqueued: now,
             deadline: now + deadline,
             class,
+            trace: Default::default(),
             reply: tx,
         };
+        let recorder = self.recorder.load();
+        if let Some(tr) = recorder.as_ref() {
+            req.trace.stamp(Stage::Admit, tr.to_ns(now));
+        }
         for _ in 0..MAX_REROUTES {
             let lane = self
                 .router
@@ -442,10 +455,22 @@ impl Server {
                 self.router.complete(lane);
                 lane_metrics.record_shed(class);
                 self.metrics.record_shed(class);
+                if let Some(tr) = recorder.as_ref() {
+                    req.trace.stamp(Stage::Route, tr.now_ns());
+                    publish_shed(tr, &req, lane);
+                }
                 return Err(SubmitError::Shed {
                     class,
                     reason: "below admission floor".into(),
                 });
+            }
+            if let Some(tr) = recorder.as_ref() {
+                // One clock read covers both: routing is a snapshot lookup,
+                // so Route→Enqueue is below timer resolution anyway. On a
+                // `Closed` re-route the next pass restamps both.
+                let t = tr.now_ns();
+                req.trace.stamp(Stage::Route, t);
+                req.trace.stamp(Stage::Enqueue, t);
             }
             match batcher.try_push(req) {
                 Ok(()) => {
@@ -453,13 +478,16 @@ impl Server {
                     self.metrics.record_arrival();
                     return Ok(rx);
                 }
-                Err(PushRefusal::Quota(_)) => {
+                Err(PushRefusal::Quota(back)) => {
                     // Class queue cap (rung 1): shed with an explicit
                     // rejection — the request is dropped here, its reply
                     // channel disconnects, and the shed is accounted.
                     self.router.complete(lane);
                     lane_metrics.record_shed(class);
                     self.metrics.record_shed(class);
+                    if let Some(tr) = recorder.as_ref() {
+                        publish_shed(tr, &back, lane);
+                    }
                     return Err(SubmitError::Shed {
                         class,
                         reason: "class queue cap reached".into(),
@@ -481,6 +509,18 @@ impl Server {
     /// Aggregate metrics across all lanes.
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
+    }
+
+    /// Attach (or detach, with `None`) a flight recorder. Takes effect
+    /// for requests submitted after the call; requests already in flight
+    /// keep whatever stamps they carry.
+    pub fn set_recorder(&self, rec: Option<Arc<TraceRecorder>>) {
+        self.recorder.update(move |_| (rec, ()));
+    }
+
+    /// The attached flight recorder, if any.
+    pub fn recorder(&self) -> Option<Arc<TraceRecorder>> {
+        self.recorder.load().clone()
     }
 
     /// Number of lane slots ever created (including retired tombstones —
@@ -560,12 +600,61 @@ impl Drop for Server {
     }
 }
 
+/// Publish a shed request's partial trace. Sheds obey the sampling rate —
+/// they are explicit rejections, not tail anomalies, so 1/N visibility is
+/// enough to audit the brownout ladder without flooding the rings.
+fn publish_shed(tr: &TraceRecorder, req: &InferenceRequest, lane: usize) {
+    if !tr.sampled(req.id) {
+        return;
+    }
+    tr.publish(&TraceRecord {
+        id: req.id,
+        lane,
+        class: req.class.index() as u8,
+        flags: FLAG_SHED | FLAG_SAMPLED,
+        deadline_ns: tr.to_ns(req.deadline),
+        trace: req.trace,
+    });
+}
+
+/// Completion-side recording shared by both worker loops: every completion
+/// feeds the per-class slowest-exemplar cells; the bounded rings get the
+/// 1/N sample plus EVERY deadline miss (always-on capture for the requests
+/// that matter most).
+fn record_completion(tr: &TraceRecorder, req: &InferenceRequest, lane: usize, deadline_met: bool) {
+    let sampled = tr.sampled(req.id);
+    let mut flags = 0u8;
+    if !deadline_met {
+        flags |= FLAG_MISS;
+    }
+    if sampled {
+        flags |= FLAG_SAMPLED;
+    }
+    let rec = TraceRecord {
+        id: req.id,
+        lane,
+        class: req.class.index() as u8,
+        flags,
+        deadline_ns: tr.to_ns(req.deadline),
+        trace: req.trace,
+    };
+    tr.note_exemplar(&rec);
+    if flags != 0 {
+        tr.publish(&rec);
+    }
+}
+
+/// The submit-path view of the recorder inside a worker loop: one snapshot
+/// load per batch (not per request), `None` when tracing is off.
+type RecorderCell = SnapCell<Option<Arc<TraceRecorder>>>;
+
 fn worker_loop(
     backend: &dyn InferBackend,
     batcher: &Batcher,
     metrics: &Metrics,
     lane_metrics: &Metrics,
     router: &PlanRouter,
+    recorder: &RecorderCell,
     lane: usize,
 ) {
     let elems = backend.image_elems();
@@ -573,11 +662,21 @@ fn worker_loop(
     let max_batch = backend.max_batch().max(1);
     // Reused batch buffer — no allocation in the steady state.
     let mut images: Vec<f32> = Vec::with_capacity(max_batch * elems);
-    while let Some(batch) = batcher.next_batch() {
+    while let Some(mut batch) = batcher.next_batch() {
+        let tr = recorder.load().as_ref();
         // Respect the backend's batch cap (batcher may be configured wider).
-        for chunk in batch.chunks(max_batch) {
+        for chunk in batch.chunks_mut(max_batch) {
+            if let Some(r) = tr {
+                // One clock read per chunk: this loop submits synchronously,
+                // so batch-formed and ring-submit collapse into one instant.
+                let t = r.now_ns();
+                for req in chunk.iter_mut() {
+                    req.trace.stamp(Stage::BatchFormed, t);
+                    req.trace.stamp(Stage::RingSubmit, t);
+                }
+            }
             images.clear();
-            for req in chunk {
+            for req in chunk.iter() {
                 debug_assert_eq!(req.image.len(), elems);
                 images.extend_from_slice(&req.image);
             }
@@ -585,11 +684,21 @@ fn worker_loop(
             match backend.infer(&images, n) {
                 Ok(logits) => {
                     let now = Instant::now();
-                    for (i, req) in chunk.iter().enumerate() {
+                    for (i, req) in chunk.iter_mut().enumerate() {
                         let latency = now - req.enqueued;
                         let deadline_met = now <= req.deadline;
                         metrics.record_class(latency, n, deadline_met, req.class);
                         lane_metrics.record_class(latency, n, deadline_met, req.class);
+                        if let Some(r) = tr {
+                            // The blocking loop completes, reaps, and
+                            // responds in the same breath — stamp all three
+                            // with the batch's completion instant.
+                            let t = r.to_ns(now);
+                            req.trace.stamp(Stage::DeviceComplete, t);
+                            req.trace.stamp(Stage::Reap, t);
+                            req.trace.stamp(Stage::Respond, t);
+                            record_completion(r, req, lane, deadline_met);
+                        }
                         // Un-account BEFORE replying: a client that has its
                         // response must never observe the request as still
                         // outstanding.
@@ -644,6 +753,7 @@ fn worker_loop_pipelined(
     metrics: &Metrics,
     lane_metrics: &Metrics,
     router: &PlanRouter,
+    recorder: &RecorderCell,
     lane: usize,
 ) {
     /// How long a chunk may wait out transport backpressure before it
@@ -675,6 +785,7 @@ fn worker_loop_pipelined(
     };
 
     loop {
+        let tr = recorder.load().as_ref();
         // 1) Reap finished tickets. Wait on the completion doorbell only
         //    when something is actually outstanding.
         let wait = if inflight.is_empty() {
@@ -694,11 +805,22 @@ fn worker_loop_pipelined(
                         continue;
                     }
                     let now = Instant::now();
-                    for (i, req) in fl.reqs.iter().enumerate() {
+                    for (i, req) in fl.reqs.iter_mut().enumerate() {
                         let latency = now - req.enqueued;
                         let deadline_met = now <= req.deadline;
                         metrics.record_class(latency, n, deadline_met, req.class);
                         lane_metrics.record_class(latency, n, deadline_met, req.class);
+                        if let Some(r) = tr {
+                            // Device completion and reap are one observation
+                            // point from the worker's side (the transport
+                            // dedups below this loop); respond follows in
+                            // the same breath.
+                            let t = r.to_ns(now);
+                            req.trace.stamp(Stage::DeviceComplete, t);
+                            req.trace.stamp(Stage::Reap, t);
+                            req.trace.stamp(Stage::Respond, t);
+                            record_completion(r, req, lane, deadline_met);
+                        }
                         // Un-account BEFORE replying (same invariant as the
                         // blocking loop).
                         router.complete(lane);
@@ -729,7 +851,7 @@ fn worker_loop_pipelined(
         //    while there is pipeline capacity. Typed backpressure leaves
         //    the chunk queued for after the next reap frees a buffer.
         while inflight.len() < depth {
-            let Some(fl) = pending.pop_front() else {
+            let Some(mut fl) = pending.pop_front() else {
                 break;
             };
             let n = fl.reqs.len();
@@ -747,6 +869,14 @@ fn worker_loop_pipelined(
             };
             match pipe.submit_batch(n, deadline, &mut fill) {
                 Ok(ticket) => {
+                    if let Some(r) = tr {
+                        // A resubmit restamps — the span then measures the
+                        // attempt that actually completed.
+                        let t = r.now_ns();
+                        for req in fl.reqs.iter_mut() {
+                            req.trace.stamp(Stage::RingSubmit, t);
+                        }
+                    }
                     inflight.insert(ticket, fl);
                 }
                 Err(crate::Error::Transport(
@@ -778,6 +908,12 @@ fn worker_loop_pipelined(
             };
             match batcher.poll_batch(poll) {
                 BatchPoll::Batch(mut batch) => {
+                    if let Some(r) = tr {
+                        let t = r.now_ns();
+                        for req in batch.iter_mut() {
+                            req.trace.stamp(Stage::BatchFormed, t);
+                        }
+                    }
                     while !batch.is_empty() {
                         let take = batch.len().min(max_batch);
                         let rest = batch.split_off(take);
@@ -1239,5 +1375,114 @@ mod tests {
         let rx = srv.submit_to("m", vec![1.0; 4], d).unwrap();
         assert!(rx.recv_timeout(Duration::from_secs(5)).is_ok());
         srv.shutdown();
+    }
+
+    #[test]
+    fn deadline_miss_trace_reconstructs_the_full_span_chain() {
+        // sample_every = 0: nothing is id-sampled, so the ONLY way this
+        // record reaches the ring is the always-on miss capture.
+        let tr = TraceRecorder::new(0, 64);
+        let srv = single(vec![stub(20)], ServerConfig::default());
+        srv.set_recorder(Some(tr.clone()));
+        let rx = srv
+            .submit_to("default", vec![0.0; 4], Duration::from_millis(1))
+            .unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(!resp.deadline_met);
+        srv.shutdown();
+
+        let recs = tr.take();
+        assert_eq!(recs.len(), 1, "exactly the miss is captured");
+        let rec = &recs[0];
+        assert!(rec.missed() && !rec.shed());
+        assert!(rec.trace.is_complete_chain(), "all 8 stages stamped, monotone");
+        // Per-stage durations telescope to the end-to-end figure, and that
+        // figure IS the latency the client saw (same clock reads).
+        let t = &rec.trace.t;
+        let sum: u64 = (1..crate::obs::N_STAGES).map(|i| t[i] - t[i - 1]).sum();
+        assert_eq!(Some(sum), rec.trace.e2e_ns());
+        assert_eq!(sum, resp.latency.as_nanos() as u64);
+    }
+
+    #[test]
+    fn recorder_samples_one_in_n_and_retains_exemplars() {
+        let tr = TraceRecorder::new(4, 64);
+        let srv = single(vec![stub(0)], ServerConfig::default());
+        srv.set_recorder(Some(tr.clone()));
+        let rxs: Vec<_> = (0..8)
+            .map(|_| srv.submit_to("default", vec![1.0; 4], Duration::from_secs(10)).unwrap())
+            .collect();
+        for rx in rxs {
+            assert!(rx.recv_timeout(Duration::from_secs(5)).unwrap().deadline_met);
+        }
+        srv.shutdown();
+
+        let mut ids: Vec<u64> = tr.take().iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 4], "1/4 sampling publishes ids 0 and 4 only");
+        // Exemplar cells see EVERY completion, sampled or not.
+        let ex = tr.take_exemplars();
+        let slowest = ex[SloClass::BestEffort.index()]
+            .as_ref()
+            .expect("best-effort exemplar retained");
+        assert!(slowest.trace.is_complete_chain());
+    }
+
+    #[test]
+    fn pipelined_lane_traces_carry_ring_submit_spans() {
+        let tr = TraceRecorder::new(1, 256); // trace everything
+        let inner = stub(0);
+        let factory = crate::transport::TransportBackend::shim_factory(
+            crate::transport::TransportConfig::default(),
+            inner,
+        );
+        let mut cfg = ServerConfig::default();
+        cfg.batcher.window = Duration::from_millis(1);
+        let srv = single(vec![factory], cfg);
+        srv.set_recorder(Some(tr.clone()));
+        let rxs: Vec<_> = (0..10)
+            .map(|_| srv.submit_to("default", vec![1.0; 4], Duration::from_secs(10)).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        }
+        srv.shutdown();
+
+        let recs = tr.take();
+        assert_eq!(recs.len(), 10, "every request traced at 1/1 sampling");
+        for rec in &recs {
+            assert!(
+                rec.trace.is_complete_chain(),
+                "pipelined path stamps all stages: {:?}",
+                rec.trace.t
+            );
+            // The queue-pair loop observes a real gap between batch
+            // formation and the ring doorbell — both must be present and
+            // ordered (is_complete_chain already proved monotonicity).
+            assert!(rec.trace.get(Stage::RingSubmit).is_some());
+            assert!(rec.trace.get(Stage::BatchFormed).is_some());
+        }
+    }
+
+    #[test]
+    fn shed_requests_publish_flagged_partial_traces() {
+        let tr = TraceRecorder::new(1, 64); // sample everything
+        let srv = single(vec![stub(0)], ServerConfig::default());
+        srv.set_recorder(Some(tr.clone()));
+        srv.set_admission_floor(SloClass::Gold.index());
+        let err = srv
+            .submit_to_class("default", vec![1.0; 4], Duration::from_secs(1), SloClass::BestEffort)
+            .unwrap_err();
+        assert!(matches!(err, SubmitError::Shed { .. }));
+        srv.shutdown();
+
+        let recs = tr.take();
+        assert_eq!(recs.len(), 1);
+        let rec = &recs[0];
+        assert!(rec.shed() && !rec.missed());
+        // The chain is intentionally short: admitted + routed, never run.
+        assert!(rec.trace.get(Stage::Admit).is_some());
+        assert!(rec.trace.get(Stage::Route).is_some());
+        assert!(rec.trace.get(Stage::Respond).is_none());
     }
 }

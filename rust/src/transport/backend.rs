@@ -53,6 +53,10 @@ pub struct TransportStats {
     /// Duplicate or post-timeout straggler completions discarded by the
     /// seq dedup (exactly-once enforcement).
     pub ignored: u64,
+    /// Timeout/corrupt outcomes that entered the retry path (an upper
+    /// bound on resubmissions — the last one may exhaust the budget
+    /// instead of resubmitting).
+    pub retries: u64,
 }
 
 struct Pending {
@@ -73,6 +77,10 @@ pub struct TransportBackend {
     cq_seen: Cell<u64>,
     inflight: RefCell<HashMap<u64, Pending>>,
     stats: RefCell<TransportStats>,
+    /// Counter values already flushed to the process-wide
+    /// `obs::transport_sink()` (backends are thread-confined, so fleet
+    /// aggregation happens by pushing monotone deltas).
+    flushed: Cell<TransportStats>,
 }
 
 impl TransportBackend {
@@ -97,6 +105,7 @@ impl TransportBackend {
             cq_seen: Cell::new(0),
             inflight: RefCell::new(HashMap::new()),
             stats: RefCell::new(TransportStats::default()),
+            flushed: Cell::new(TransportStats::default()),
         })
     }
 
@@ -192,7 +201,24 @@ impl TransportBackend {
             self.drain_cq(&mut out);
             self.check_timeouts(&mut out);
         }
+        self.flush_stats();
         out
+    }
+
+    /// Push the counter movement since the last flush into the
+    /// process-wide sink (no-op when nothing moved — the common idle-poll
+    /// case costs one struct compare).
+    fn flush_stats(&self) {
+        let now = *self.stats.borrow();
+        let last = self.flushed.get();
+        let delta = crate::obs::stats_delta(&now, &last);
+        if delta.submitted | delta.completed | delta.timeouts | delta.corrupt | delta.ignored
+            | delta.retries
+            != 0
+        {
+            crate::obs::transport_sink().add(&delta);
+            self.flushed.set(now);
+        }
     }
 
     fn drain_cq(&self, out: &mut Vec<(u64, ReapOutcome)>) {
@@ -281,6 +307,7 @@ impl TransportBackend {
 
 impl Drop for TransportBackend {
     fn drop(&mut self) {
+        self.flush_stats();
         self.qp.close();
         // Joining the device drains the submit ring; any completions it
         // pushed before exiting recycle here — the pool ends fully idle.
@@ -323,6 +350,7 @@ impl InferBackend for TransportBackend {
                             return Err(TransportError::Corrupt { seq: my }.into());
                         }
                         retries += 1;
+                        self.stats.borrow_mut().retries += 1;
                         my = self.submit_sync(n, &mut fill)?;
                     }
                     ReapOutcome::TimedOut => {
@@ -330,6 +358,7 @@ impl InferBackend for TransportBackend {
                             return Err(TransportError::Timeout { seq: my, retries }.into());
                         }
                         retries += 1;
+                        self.stats.borrow_mut().retries += 1;
                         my = self.submit_sync(n, &mut fill)?;
                     }
                     ReapOutcome::DeviceFailed(msg) => return Err(crate::Error::Runtime(msg)),
@@ -366,7 +395,10 @@ impl PipelinedBackend for TransportBackend {
             .map(|(seq, o)| {
                 let mapped = match o {
                     ReapOutcome::Ok(logits) => PipelineOutcome::Done(logits),
-                    ReapOutcome::Corrupt | ReapOutcome::TimedOut => PipelineOutcome::Retry,
+                    ReapOutcome::Corrupt | ReapOutcome::TimedOut => {
+                        self.stats.borrow_mut().retries += 1;
+                        PipelineOutcome::Retry
+                    }
                     ReapOutcome::DeviceFailed(m) => PipelineOutcome::Failed(m),
                 };
                 (seq, mapped)

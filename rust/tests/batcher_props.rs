@@ -34,6 +34,7 @@ fn req_class(
             enqueued: now,
             deadline: now + Duration::from_millis(deadline_ms),
             class,
+            trace: Default::default(),
             reply: tx,
         },
         rx,
